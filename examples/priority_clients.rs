@@ -1,0 +1,97 @@
+//! Priority scheduling demo, on both planes.
+//!
+//! Sim plane: reproduce the paper's Fig 16 — a high-priority client's
+//! latency is insulated under GDR (block-level stream priority) but
+//! erodes under RDMA (the copy engine interleaves at whole-request
+//! granularity and ignores priority).
+//!
+//! Live plane: the executor's priority queue serving a high-priority
+//! tiny_mobilenet client while low-priority tiny_resnet jobs saturate
+//! the single execution stream.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example priority_clients
+//! ```
+
+use std::sync::Arc;
+
+use accelserve::coordinator::{BatchCfg, Executor};
+use accelserve::models::zoo::PaperModel;
+use accelserve::net::params::Transport;
+use accelserve::runtime::TensorBuf;
+use accelserve::sim::world::{Scenario, World};
+
+fn main() -> anyhow::Result<()> {
+    // ---------------------------------------------------------- sim plane
+    println!("sim plane — YoloV4 preprocessed, 1 priority + N-1 normal clients\n");
+    println!(
+        "{:<6} {:>13} {:>13} {:>14} {:>14}",
+        "cl", "GDR prio ms", "GDR norm ms", "RDMA prio ms", "RDMA norm ms"
+    );
+    let yolo = PaperModel::by_name("YoloV4").unwrap();
+    for clients in [2usize, 4, 8, 16] {
+        let mut row = Vec::new();
+        for tr in [Transport::Gdr, Transport::Rdma] {
+            let s = World::run(
+                Scenario::direct(yolo, tr)
+                    .with_clients(clients)
+                    .with_requests(60)
+                    .with_raw(false)
+                    .with_priority_client(true),
+            );
+            row.push((s.priority.total.mean(), s.normal.total.mean()));
+        }
+        println!(
+            "{:<6} {:>13.1} {:>13.1} {:>14.1} {:>14.1}",
+            clients, row[0].0, row[0].1, row[1].0, row[1].1
+        );
+    }
+    println!("\n(GDR keeps the priority client flat; RDMA's copy queue erodes it — Fig 16)\n");
+
+    // --------------------------------------------------------- live plane
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        println!("live plane skipped: run `make artifacts` first");
+        return Ok(());
+    }
+    println!("live plane — priority queue on the PJRT executor (1 stream)\n");
+    let exec = Arc::new(Executor::start(
+        "artifacts",
+        1,
+        BatchCfg { max_batch: 1 },
+        &["tiny_mobilenet_b1", "tiny_resnet_b1"],
+    )?);
+
+    // Saturate with background jobs, then measure a priority job's
+    // queue time vs a normal job submitted at the same moment.
+    let bg: Vec<_> = (0..6)
+        .map(|_| exec.submit("tiny_resnet", false, 0, TensorBuf::F32(vec![0.5; 32 * 32 * 3])))
+        .collect();
+    let normal = exec.submit(
+        "tiny_mobilenet",
+        false,
+        0,
+        TensorBuf::F32(vec![0.5; 32 * 32 * 3]),
+    );
+    let prio = exec.submit(
+        "tiny_mobilenet",
+        false,
+        10,
+        TensorBuf::F32(vec![0.5; 32 * 32 * 3]),
+    );
+    let prio_done = prio.recv()??;
+    let normal_done = normal.recv()??;
+    for rx in bg {
+        rx.recv()??;
+    }
+    println!(
+        "priority job queue wait: {:.3} ms    normal job queue wait: {:.3} ms",
+        prio_done.stages.queue_ns as f64 / 1e6,
+        normal_done.stages.queue_ns as f64 / 1e6
+    );
+    assert!(
+        prio_done.stages.queue_ns < normal_done.stages.queue_ns,
+        "priority job must overtake the normal job"
+    );
+    println!("priority job overtook the backlog — live priority queue works");
+    Ok(())
+}

@@ -1,0 +1,63 @@
+//! Quickstart: load the AOT artifacts and run a single inference
+//! through the public API — no server, no sockets.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use accelserve::models::zoo::WorkloadData;
+use accelserve::runtime::{Engine, TensorBuf};
+
+fn main() -> anyhow::Result<()> {
+    let engine = Engine::load("artifacts")?;
+    println!("PJRT platform: {}", engine.platform());
+    println!("artifacts: {}", engine.manifest().artifacts.len());
+
+    // A raw 64x64 RGB camera frame (synthetic pixels).
+    let frame = WorkloadData::image(64 * 64 * 3, 7).bytes;
+
+    // Warm: first call compiles the HLO (the once-per-process cost).
+    let t_w = std::time::Instant::now();
+    engine.warm(&["preprocess", "tiny_resnet_b1", "tiny_resnet_raw"])?;
+    println!("compile (once per process): {:.1} ms", t_w.elapsed().as_secs_f64() * 1e3);
+
+    // Stage 1 — preprocessing (resize + ImageNet normalize), the
+    // server-side stage of the paper's pipeline, as its own executable.
+    let t0 = std::time::Instant::now();
+    let tensor = engine.infer("preprocess", &TensorBuf::U8(frame.clone()))?;
+    let t_pre = t0.elapsed();
+
+    // Stage 2 — classification on the preprocessed tensor.
+    let t1 = std::time::Instant::now();
+    let logits = engine.infer("tiny_resnet_b1", &TensorBuf::F32(tensor))?;
+    let t_inf = t1.elapsed();
+
+    let (argmax, max) = logits
+        .iter()
+        .enumerate()
+        .fold((0, f32::NEG_INFINITY), |acc, (i, &v)| {
+            if v > acc.1 {
+                (i, v)
+            } else {
+                acc
+            }
+        });
+    println!(
+        "preprocess: {:.3} ms   inference: {:.3} ms   top-1 class {} (logit {:.4})",
+        t_pre.as_secs_f64() * 1e3,
+        t_inf.as_secs_f64() * 1e3,
+        argmax,
+        max
+    );
+
+    // The fused raw-path executable must agree with the two-stage path.
+    let fused = engine.infer("tiny_resnet_raw", &TensorBuf::U8(frame))?;
+    let delta: f32 = fused
+        .iter()
+        .zip(&logits)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0, f32::max);
+    println!("fused raw path max |delta| = {delta:.2e} (expect < 1e-4)");
+    assert!(delta < 1e-4);
+    Ok(())
+}

@@ -1,0 +1,1 @@
+"""accelserve compile path: L1 Pallas kernels + L2 JAX models + AOT lowering."""

@@ -1,0 +1,122 @@
+"""AOT compile path: lower every live-plane serving executable to HLO
+*text* plus a JSON manifest consumed by the rust runtime.
+
+HLO text (NOT ``lowered.compile().serialize()`` / serialized
+HloModuleProto) is the interchange format: jax >= 0.5 emits protos with
+64-bit instruction ids which xla_extension 0.5.1 (the version behind the
+published ``xla`` 0.1.6 crate) rejects with ``proto.id() <= INT_MAX``;
+the HLO text parser reassigns ids and round-trips cleanly. See
+/opt/xla-example/gen_hlo.py and README gotchas.
+
+Run via ``make artifacts`` (from python/): python -m compile.aot --out-dir ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+# Every artifact the runtime may load: (artifact name, builder thunk).
+# Batched variants give the rust dynamic batcher one compiled executable
+# per (model, batch) pair — the PJRT analogue of TensorRT profiles.
+def _registry():
+    entries = {}
+    entries["preprocess"] = M.preprocess_fn
+    for name in M.MODEL_BUILDERS:
+        for batch in (1, 2, 4, 8):
+            entries[f"{name}_b{batch}"] = (
+                lambda name=name, batch=batch: M.serving_fn(name, batch)
+            )
+        entries[f"{name}_raw"] = lambda name=name: M.raw_serving_fn(name)
+    return entries
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True so the
+    rust side unwraps with to_tuple1())."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _dtype_name(dt) -> str:
+    return {"float32": "f32", "uint8": "u8", "int32": "i32"}.get(str(dt), str(dt))
+
+
+def lower_one(name: str, builder, out_dir: str) -> dict:
+    fn, specs, meta = builder()
+    lowered = jax.jit(fn).lower(*specs)
+    text = to_hlo_text(lowered)
+    path = os.path.join(out_dir, f"{name}.hlo.txt")
+    with open(path, "w") as f:
+        f.write(text)
+    out_aval = jax.eval_shape(fn, *specs)[0]
+    entry = {
+        "name": name,
+        "model": meta.name,
+        "task": meta.task,
+        "file": f"{name}.hlo.txt",
+        "inputs": [
+            {"shape": list(s.shape), "dtype": _dtype_name(s.dtype)} for s in specs
+        ],
+        "output": {
+            "shape": list(out_aval.shape),
+            "dtype": _dtype_name(out_aval.dtype),
+        },
+        "gflops": meta.gflops,
+        "params": meta.params,
+        "sha256": hashlib.sha256(text.encode()).hexdigest()[:16],
+        "hlo_bytes": len(text),
+    }
+    print(f"  {name}: {len(text)} chars -> {path}")
+    return entry
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--only",
+        default=None,
+        help="comma-separated artifact names (default: all)",
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    reg = _registry()
+    names = args.only.split(",") if args.only else list(reg)
+    unknown = [n for n in names if n not in reg]
+    if unknown:
+        print(f"unknown artifacts: {unknown}", file=sys.stderr)
+        sys.exit(2)
+
+    # With --only, merge into the existing manifest rather than dropping
+    # entries for artifacts we did not rebuild.
+    mpath = os.path.join(args.out_dir, "manifest.json")
+    manifest = {"format": 1, "jax": jax.__version__, "artifacts": []}
+    if args.only and os.path.exists(mpath):
+        with open(mpath) as f:
+            prev = json.load(f)
+        manifest["artifacts"] = [
+            a for a in prev.get("artifacts", []) if a["name"] not in names
+        ]
+    for name in names:
+        manifest["artifacts"].append(lower_one(name, reg[name], args.out_dir))
+    manifest["artifacts"].sort(key=lambda a: a["name"])
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {mpath} ({len(manifest['artifacts'])} artifacts)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,10 @@
+"""L1 Pallas kernels for the accelserve model family.
+
+Public surface:
+    matmul.matmul / matmul.linear — MXU-tiled matmul + fused linear
+    conv.conv2d                   — im2col conv over the Pallas matmul
+    preprocess.normalize          — streaming image normalize
+    ref                           — pure-jnp oracles for all of the above
+"""
+
+from . import conv, matmul, preprocess, ref  # noqa: F401

@@ -1,0 +1,49 @@
+"""L1: 2-D convolution lowered to the Pallas matmul (im2col / patch-matmul).
+
+TPU adaptation (DESIGN.md §Hardware-Adaptation): instead of porting a
+CUDA direct-conv threadblock kernel, the convolution is re-expressed so
+the MXU systolic array does the work — patches are extracted with
+``conv_general_dilated_patches`` (a data-movement op XLA lowers to
+gathers/reshapes that fuse with neighbours) and the arithmetic hot-spot
+(patches @ filters) runs in the tiled Pallas matmul kernel.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .matmul import matmul
+
+
+def conv2d(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    stride: int = 1,
+    padding: str = "SAME",
+) -> jax.Array:
+    """NHWC input, HWIO filter -> NHWC output, arithmetic in Pallas matmul."""
+    if x.ndim != 4 or w.ndim != 4:
+        raise ValueError(f"conv2d expects NHWC x HWIO, got {x.shape}, {w.shape}")
+    n, h, ww, cin = x.shape
+    kh, kw, wcin, cout = w.shape
+    if wcin != cin:
+        raise ValueError(f"channel mismatch: input {cin}, filter {wcin}")
+    # Patches in NHWC; feature dim is (cin, kh, kw) flattened (see
+    # conv_general_dilated_patches docs: spatial dims of the RHS become
+    # trailing, channel-major ordering C x KH x KW).
+    patches = jax.lax.conv_general_dilated_patches(
+        x.astype(jnp.float32),
+        filter_shape=(kh, kw),
+        window_strides=(stride, stride),
+        padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    _, oh, ow, feat = patches.shape
+    # Reorder the filter to the same (cin, kh, kw) feature layout.
+    wmat = jnp.transpose(w.astype(jnp.float32), (2, 0, 1, 3)).reshape(
+        cin * kh * kw, cout
+    )
+    out = matmul(patches.reshape(n * oh * ow, feat), wmat)
+    return out.reshape(n, oh, ow, cout)

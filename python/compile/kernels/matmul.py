@@ -1,0 +1,184 @@
+"""L1 Pallas kernels: tiled matmul and fused linear+bias+activation.
+
+TPU adaptation of the paper's CUDA/TensorRT compute hot-spot (see
+DESIGN.md §Hardware-Adaptation): the convolution / dense layers of the
+served CNNs are expressed as MXU-targeted tiled matmuls. BlockSpec
+expresses the HBM->VMEM schedule that CUDA did with threadblocks:
+
+  * grid = (M/bm, N/bn, K/bk); the K axis is innermost and sequential so
+    the (bm, bn) output tile stays resident in VMEM across the K loop
+    (revisiting-output accumulation pattern).
+  * default tile 128x128x128 matches the MXU systolic array; smaller
+    shapes fall back to the largest divisor tile <= the dimension.
+
+Kernels are lowered with interpret=True (CPU PJRT cannot execute Mosaic
+custom-calls); the structure is nevertheless the real-TPU structure and
+is what the VMEM/MXU estimates in DESIGN.md §Perf are computed from.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# MXU-native tile edge. On a real TPU the systolic array is 128x128; we
+# keep the same shape so the lowering story is unchanged on hardware.
+MXU_TILE = 128
+
+
+def _largest_tile(dim: int, cap: int = MXU_TILE) -> int:
+    """Largest divisor of ``dim`` that is <= cap.
+
+    Fewer grid steps beat power-of-two alignment for the interpret-mode
+    grid loop; on real TPU the 128 cap keeps tiles MXU-shaped.
+    """
+    if dim <= 0:
+        raise ValueError(f"dimension must be positive, got {dim}")
+    for d in range(min(dim, cap), 0, -1):
+        if dim % d == 0:
+            return d
+    return 1
+
+
+def _matmul_kernel(x_ref, y_ref, o_ref, *, nk: int):
+    """One (bm, bn) output tile; accumulates over the sequential K grid axis."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=jnp.float32
+    ).astype(o_ref.dtype)
+
+
+def _linear_kernel(x_ref, w_ref, b_ref, o_ref, *, nk: int, activation: str):
+    """Fused (bm, bn) tile of relu/identity(x @ w + b)."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    ).astype(o_ref.dtype)
+
+    @pl.when(pl.program_id(2) == nk - 1)
+    def _epilogue():
+        acc = o_ref[...] + b_ref[...]
+        if activation == "relu":
+            acc = jnp.maximum(acc, 0.0)
+        o_ref[...] = acc
+
+
+def matmul(
+    x: jax.Array,
+    y: jax.Array,
+    *,
+    bm: int | None = None,
+    bn: int | None = None,
+    bk: int | None = None,
+) -> jax.Array:
+    """Tiled Pallas matmul ``x @ y`` for f32 operands.
+
+    Shapes need not be tile-multiples; inputs are zero-padded up to the
+    chosen tile and the result is sliced back. Padding with zeros is
+    exact for matmul.
+    """
+    if x.ndim != 2 or y.ndim != 2:
+        raise ValueError(f"matmul expects rank-2 operands, got {x.shape} @ {y.shape}")
+    if x.shape[1] != y.shape[0]:
+        raise ValueError(f"contracting dims mismatch: {x.shape} @ {y.shape}")
+    m, k = x.shape
+    _, n = y.shape
+    bm = bm or _largest_tile(m)
+    bn = bn or _largest_tile(n)
+    bk = bk or _largest_tile(k)
+    mp, kp, np_ = _ceil_to(m, bm), _ceil_to(k, bk), _ceil_to(n, bn)
+    xp = _pad2(x.astype(jnp.float32), mp, kp)
+    yp = _pad2(y.astype(jnp.float32), kp, np_)
+    nk = kp // bk
+    out = pl.pallas_call(
+        functools.partial(_matmul_kernel, nk=nk),
+        grid=(mp // bm, np_ // bn, nk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,
+    )(xp, yp)
+    return out[:m, :n]
+
+
+def linear(
+    x: jax.Array,
+    w: jax.Array,
+    b: jax.Array,
+    *,
+    activation: str = "none",
+    bm: int | None = None,
+    bn: int | None = None,
+    bk: int | None = None,
+) -> jax.Array:
+    """Fused Pallas ``activation(x @ w + b)`` (activation in {none, relu})."""
+    if activation not in ("none", "relu"):
+        raise ValueError(f"unknown activation {activation!r}")
+    m, k = x.shape
+    kw, n = w.shape
+    if kw != k or b.shape != (n,):
+        raise ValueError(f"linear shape mismatch: x{x.shape} w{w.shape} b{b.shape}")
+    bm = bm or _largest_tile(m)
+    bn = bn or _largest_tile(n)
+    bk = bk or _largest_tile(k)
+    mp, kp, np_ = _ceil_to(m, bm), _ceil_to(k, bk), _ceil_to(n, bn)
+    xp = _pad2(x.astype(jnp.float32), mp, kp)
+    wp = _pad2(w.astype(jnp.float32), kp, np_)
+    bp = jnp.pad(b.astype(jnp.float32), (0, np_ - n)).reshape(1, np_)
+    nk = kp // bk
+    out = pl.pallas_call(
+        functools.partial(_linear_kernel, nk=nk, activation=activation),
+        grid=(mp // bm, np_ // bn, nk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,
+    )(xp, wp, bp)
+    return out[:m, :n]
+
+
+def vmem_bytes(bm: int, bn: int, bk: int, dtype_bytes: int = 4) -> int:
+    """VMEM working-set estimate for one grid step of the matmul kernel.
+
+    x tile (bm, bk) + y tile (bk, bn) + resident output tile (bm, bn).
+    Used by the §Perf roofline notes in DESIGN.md / EXPERIMENTS.md.
+    """
+    return dtype_bytes * (bm * bk + bk * bn + bm * bn)
+
+
+def mxu_utilization(m: int, n: int, k: int, bm: int, bn: int, bk: int) -> float:
+    """Fraction of MXU issue slots doing useful work, given padding waste."""
+    mp, np_, kp = _ceil_to(m, bm), _ceil_to(n, bn), _ceil_to(k, bk)
+    useful = m * n * k
+    issued = mp * np_ * kp
+    edge = (min(bm, MXU_TILE) / MXU_TILE) * (min(bn, MXU_TILE) / MXU_TILE)
+    return (useful / issued) * edge
+
+
+def _ceil_to(v: int, mult: int) -> int:
+    return ((v + mult - 1) // mult) * mult
+
+
+def _pad2(a: jax.Array, rows: int, cols: int) -> jax.Array:
+    r, c = a.shape
+    if r == rows and c == cols:
+        return a
+    return jnp.pad(a, ((0, rows - r), (0, cols - c)))

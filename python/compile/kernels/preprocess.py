@@ -1,0 +1,63 @@
+"""L1 Pallas kernel: image preprocessing (normalize) for the serving pipeline.
+
+The paper's model-serving pipeline has an explicit *preprocessing* stage
+executed on the GPU when the client submits raw data (uint8 camera
+frames): resize + scale + per-channel normalize. Here the bandwidth-bound
+normalize runs as a Pallas kernel whose BlockSpec expresses the
+HBM->VMEM streaming schedule (rows-of-pixels tiles); the nearest
+neighbour resize is a gather that XLA fuses around it (L2, see
+model.py:preprocess).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# ImageNet-style per-channel statistics, matching the paper's use of
+# torchvision-preprocessed classification inputs.
+MEAN = (0.485, 0.456, 0.406)
+STD = (0.229, 0.224, 0.225)
+
+
+def _normalize_kernel(x_ref, mean_ref, std_ref, o_ref):
+    """One (rows, W, C) stripe: o = (u8/255 - mean) / std in f32."""
+    x = x_ref[...].astype(jnp.float32) * (1.0 / 255.0)
+    o_ref[...] = (x - mean_ref[...]) / std_ref[...]
+
+
+def normalize(img_u8: jax.Array, *, block_rows: int | None = None) -> jax.Array:
+    """Normalize an HWC uint8 image to f32 with ImageNet statistics.
+
+    The grid streams ``block_rows`` image rows per step through VMEM —
+    the TPU analogue of the paper's CUDA elementwise preprocessing
+    kernels that stream through shared memory.
+    """
+    if img_u8.ndim != 3 or img_u8.shape[-1] != 3:
+        raise ValueError(f"expected HWC 3-channel image, got {img_u8.shape}")
+    h, w, c = img_u8.shape
+    br = block_rows or _largest_divisor(h, 32)
+    mean = jnp.asarray(MEAN, jnp.float32).reshape(1, 1, 3)
+    std = jnp.asarray(STD, jnp.float32).reshape(1, 1, 3)
+    return pl.pallas_call(
+        _normalize_kernel,
+        grid=(h // br,),
+        in_specs=[
+            pl.BlockSpec((br, w, c), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, 1, c), lambda i: (0, 0, 0)),
+            pl.BlockSpec((1, 1, c), lambda i: (0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((br, w, c), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, w, c), jnp.float32),
+        interpret=True,
+    )(img_u8, mean, std)
+
+
+def _largest_divisor(dim: int, cap: int) -> int:
+    for d in range(min(dim, cap), 0, -1):
+        if dim % d == 0:
+            return d
+    return 1

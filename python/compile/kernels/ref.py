@@ -1,0 +1,44 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+Every L1 kernel has an exact reference here; pytest asserts allclose
+between kernel and oracle across a hypothesis-driven shape/dtype sweep.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .preprocess import MEAN, STD
+
+
+def matmul_ref(x: jax.Array, y: jax.Array) -> jax.Array:
+    return jnp.dot(x.astype(jnp.float32), y.astype(jnp.float32))
+
+
+def linear_ref(
+    x: jax.Array, w: jax.Array, b: jax.Array, *, activation: str = "none"
+) -> jax.Array:
+    out = jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32)) + b.astype(jnp.float32)
+    if activation == "relu":
+        out = jnp.maximum(out, 0.0)
+    return out
+
+
+def normalize_ref(img_u8: jax.Array) -> jax.Array:
+    mean = jnp.asarray(MEAN, jnp.float32).reshape(1, 1, 3)
+    std = jnp.asarray(STD, jnp.float32).reshape(1, 1, 3)
+    return (img_u8.astype(jnp.float32) / 255.0 - mean) / std
+
+
+def conv2d_ref(
+    x: jax.Array, w: jax.Array, *, stride: int = 1, padding: str = "SAME"
+) -> jax.Array:
+    """NHWC x HWIO convolution oracle via lax.conv_general_dilated."""
+    return jax.lax.conv_general_dilated(
+        x.astype(jnp.float32),
+        w.astype(jnp.float32),
+        window_strides=(stride, stride),
+        padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )

@@ -1,0 +1,302 @@
+"""L2: the accelserve live-plane model family, written in JAX over the
+L1 Pallas kernels.
+
+The paper serves six TensorRT CNNs (Table II). The live plane cannot run
+those on a CPU-only PJRT client at serving latency, so it serves a
+*scaled-down family with the same I/O archetypes* (DESIGN.md §1):
+
+    tiny_mobilenet — small classifier, tiny compute, small I/O
+    tiny_resnet    — residual classifier, the mid-size workhorse
+    tiny_segnet    — encoder/decoder, per-pixel output => large response
+                     (the DeepLabV3 archetype whose response dominates)
+
+plus the standalone ``preprocess`` graph (raw uint8 camera frame ->
+normalized NHWC f32 tensor) that mirrors the paper's server-side
+preprocessing stage.
+
+Weights are initialized from a fixed seed and closed over, so they lower
+to HLO constants: each artifact is a self-contained serving executable.
+Python never runs on the request path; rust loads the lowered HLO text.
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import conv as kconv
+from .kernels import matmul as kmm
+from .kernels import preprocess as kpre
+
+# Raw camera frame submitted by clients (the paper's "raw images").
+RAW_H, RAW_W = 64, 64
+# Model input resolution after preprocessing.
+IN_H, IN_W = 32, 32
+NUM_CLASSES = 1000  # classification head, mirroring Table II
+SEG_CLASSES = 21  # DeepLabV3's COCO-21 head, mirroring Table II
+
+
+# --------------------------------------------------------------------------
+# Parameter initialization (deterministic; baked into the artifact)
+# --------------------------------------------------------------------------
+
+
+def _he_conv(key, kh, kw, cin, cout):
+    fan_in = kh * kw * cin
+    return jax.random.normal(key, (kh, kw, cin, cout), jnp.float32) * jnp.sqrt(
+        2.0 / fan_in
+    )
+
+
+def _he_dense(key, cin, cout):
+    return jax.random.normal(key, (cin, cout), jnp.float32) * jnp.sqrt(2.0 / cin)
+
+
+# --------------------------------------------------------------------------
+# Building blocks (all matmul arithmetic goes through the Pallas kernels)
+# --------------------------------------------------------------------------
+
+
+def _conv_relu(x, w, *, stride=1):
+    return jnp.maximum(kconv.conv2d(x, w, stride=stride), 0.0)
+
+
+def _global_avg_pool(x):
+    return jnp.mean(x, axis=(1, 2))
+
+
+def _upsample2(x):
+    """Nearest-neighbour 2x upsample, NHWC."""
+    n, h, w, c = x.shape
+    return jnp.broadcast_to(
+        x[:, :, None, :, None, :], (n, h, 2, w, 2, c)
+    ).reshape(n, 2 * h, 2 * w, c)
+
+
+def preprocess(raw_u8: jax.Array) -> jax.Array:
+    """Raw (RAW_H, RAW_W, 3) uint8 frame -> (1, IN_H, IN_W, 3) f32 tensor.
+
+    Nearest-neighbour resize (pure data movement, fused by XLA) followed
+    by the Pallas streaming normalize kernel — the server-side
+    preprocessing stage of the paper's pipeline.
+    """
+    ry = jnp.arange(IN_H) * RAW_H // IN_H
+    rx = jnp.arange(IN_W) * RAW_W // IN_W
+    resized = raw_u8[ry][:, rx]
+    return kpre.normalize(resized)[None]
+
+
+@dataclass(frozen=True)
+class ModelMeta:
+    """Static description of a live model, mirrored into the manifest."""
+
+    name: str
+    task: str
+    input_shape: tuple  # per-request (excludes batch)
+    output_shape: tuple  # per-request
+    gflops: float
+    params: int = 0
+    extra: dict = field(default_factory=dict)
+
+
+def _count_params(tree) -> int:
+    return sum(int(p.size) for p in jax.tree_util.tree_leaves(tree))
+
+
+def _conv_gflops(h, w, kh, kw, cin, cout, stride=1):
+    return 2.0 * (h // stride) * (w // stride) * kh * kw * cin * cout / 1e9
+
+
+# --------------------------------------------------------------------------
+# tiny_mobilenet — small classifier (MobileNetV3 archetype)
+# --------------------------------------------------------------------------
+
+
+def make_tiny_mobilenet(seed: int = 0):
+    keys = jax.random.split(jax.random.PRNGKey(seed), 4)
+    p = {
+        "c1": _he_conv(keys[0], 3, 3, 3, 8),
+        "c2": _he_conv(keys[1], 3, 3, 8, 16),
+        "w": _he_dense(keys[2], 16, NUM_CLASSES),
+        "b": jnp.zeros((NUM_CLASSES,), jnp.float32),
+    }
+
+    def fwd(x):  # x: (B, IN_H, IN_W, 3) f32
+        x = _conv_relu(x, p["c1"], stride=2)  # (B, 16, 16, 8)
+        x = _conv_relu(x, p["c2"], stride=2)  # (B, 8, 8, 16)
+        x = _global_avg_pool(x)  # (B, 16)
+        return kmm.linear(x, p["w"], p["b"])  # (B, 1000)
+
+    gflops = (
+        _conv_gflops(IN_H, IN_W, 3, 3, 3, 8, 2)
+        + _conv_gflops(16, 16, 3, 3, 8, 16, 2)
+        + 2 * 16 * NUM_CLASSES / 1e9
+    )
+    meta = ModelMeta(
+        name="tiny_mobilenet",
+        task="classification",
+        input_shape=(IN_H, IN_W, 3),
+        output_shape=(NUM_CLASSES,),
+        gflops=gflops,
+        params=_count_params(p),
+    )
+    return fwd, meta
+
+
+# --------------------------------------------------------------------------
+# tiny_resnet — residual classifier (ResNet50 archetype)
+# --------------------------------------------------------------------------
+
+
+def make_tiny_resnet(seed: int = 1):
+    keys = jax.random.split(jax.random.PRNGKey(seed), 8)
+    p = {
+        "stem": _he_conv(keys[0], 3, 3, 3, 16),
+        "b1a": _he_conv(keys[1], 3, 3, 16, 16),
+        "b1b": _he_conv(keys[2], 3, 3, 16, 16),
+        "down": _he_conv(keys[3], 3, 3, 16, 32),
+        "b2a": _he_conv(keys[4], 3, 3, 32, 32),
+        "b2b": _he_conv(keys[5], 3, 3, 32, 32),
+        "w": _he_dense(keys[6], 32, NUM_CLASSES),
+        "b": jnp.zeros((NUM_CLASSES,), jnp.float32),
+    }
+
+    def fwd(x):  # (B, IN_H, IN_W, 3)
+        x = _conv_relu(x, p["stem"], stride=2)  # (B,16,16,16)
+        h = _conv_relu(x, p["b1a"])
+        x = jnp.maximum(x + kconv.conv2d(h, p["b1b"]), 0.0)
+        x = _conv_relu(x, p["down"], stride=2)  # (B,8,8,32)
+        h = _conv_relu(x, p["b2a"])
+        x = jnp.maximum(x + kconv.conv2d(h, p["b2b"]), 0.0)
+        x = _global_avg_pool(x)  # (B,32)
+        return kmm.linear(x, p["w"], p["b"])
+
+    gflops = (
+        _conv_gflops(IN_H, IN_W, 3, 3, 3, 16, 2)
+        + 2 * _conv_gflops(16, 16, 3, 3, 16, 16)
+        + _conv_gflops(16, 16, 3, 3, 16, 32, 2)
+        + 2 * _conv_gflops(8, 8, 3, 3, 32, 32)
+        + 2 * 32 * NUM_CLASSES / 1e9
+    )
+    meta = ModelMeta(
+        name="tiny_resnet",
+        task="classification",
+        input_shape=(IN_H, IN_W, 3),
+        output_shape=(NUM_CLASSES,),
+        gflops=gflops,
+        params=_count_params(p),
+    )
+    return fwd, meta
+
+
+# --------------------------------------------------------------------------
+# tiny_segnet — encoder/decoder, per-pixel logits (DeepLabV3 archetype)
+# --------------------------------------------------------------------------
+
+
+def make_tiny_segnet(seed: int = 2):
+    keys = jax.random.split(jax.random.PRNGKey(seed), 6)
+    p = {
+        "e1": _he_conv(keys[0], 3, 3, 3, 16),
+        "e2": _he_conv(keys[1], 3, 3, 16, 32),
+        "mid": _he_conv(keys[2], 3, 3, 32, 32),
+        "d1": _he_conv(keys[3], 3, 3, 32, 32),
+        "d2": _he_conv(keys[4], 3, 3, 32, 16),
+        "head": _he_conv(keys[5], 1, 1, 16, SEG_CLASSES),
+    }
+
+    def fwd(x):  # (B, IN_H, IN_W, 3)
+        x = _conv_relu(x, p["e1"], stride=2)  # (B,16,16,16)
+        x = _conv_relu(x, p["e2"], stride=2)  # (B,8,8,32)
+        x = _conv_relu(x, p["mid"])  # (B,8,8,32)
+        x = _upsample2(x)  # (B,16,16,32)
+        x = _conv_relu(x, p["d1"])  # (B,16,16,32)
+        x = _conv_relu(x, p["d2"])  # (B,16,16,16)
+        x = _upsample2(x)  # (B,32,32,16)
+        return kconv.conv2d(x, p["head"])  # (B,32,32,21)
+
+    gflops = (
+        _conv_gflops(IN_H, IN_W, 3, 3, 3, 16, 2)
+        + _conv_gflops(16, 16, 3, 3, 16, 32, 2)
+        + _conv_gflops(8, 8, 3, 3, 32, 32)
+        + _conv_gflops(16, 16, 3, 3, 32, 32)
+        + _conv_gflops(16, 16, 3, 3, 32, 16)
+        + _conv_gflops(IN_H, IN_W, 1, 1, 16, SEG_CLASSES)
+    )
+    meta = ModelMeta(
+        name="tiny_segnet",
+        task="segmentation",
+        input_shape=(IN_H, IN_W, 3),
+        output_shape=(IN_H, IN_W, SEG_CLASSES),
+        gflops=gflops,
+        params=_count_params(p),
+    )
+    return fwd, meta
+
+
+# --------------------------------------------------------------------------
+# Registry + AOT entry points
+# --------------------------------------------------------------------------
+
+MODEL_BUILDERS: dict[str, Callable] = {
+    "tiny_mobilenet": make_tiny_mobilenet,
+    "tiny_resnet": make_tiny_resnet,
+    "tiny_segnet": make_tiny_segnet,
+}
+
+
+def serving_fn(name: str, batch: int):
+    """Return (jit-able fn, example input spec, meta) for a preprocessed-
+    input serving executable: (B, IN_H, IN_W, 3) f32 -> output tuple."""
+    fwd, meta = MODEL_BUILDERS[name]()
+
+    def fn(x):
+        return (fwd(x),)
+
+    spec = jax.ShapeDtypeStruct((batch, *meta.input_shape), jnp.float32)
+    return fn, (spec,), meta
+
+
+def preprocess_fn():
+    """Standalone preprocessing executable: raw u8 frame -> model input."""
+
+    def fn(raw):
+        return (preprocess(raw),)
+
+    spec = jax.ShapeDtypeStruct((RAW_H, RAW_W, 3), jnp.uint8)
+    meta = ModelMeta(
+        name="preprocess",
+        task="preprocess",
+        input_shape=(RAW_H, RAW_W, 3),
+        output_shape=(1, IN_H, IN_W, 3),
+        gflops=3 * IN_H * IN_W * 3 / 1e9,
+    )
+    return fn, (spec,), meta
+
+
+def raw_serving_fn(name: str):
+    """Fused raw-path executable: u8 frame -> preprocess -> model (B=1).
+
+    Mirrors the paper's "raw images" pipeline where the server performs
+    preprocessing on the accelerator before inference.
+    """
+    fwd, meta = MODEL_BUILDERS[name]()
+
+    def fn(raw):
+        return (fwd(preprocess(raw)),)
+
+    spec = jax.ShapeDtypeStruct((RAW_H, RAW_W, 3), jnp.uint8)
+    raw_meta = ModelMeta(
+        name=f"{name}_raw",
+        task=meta.task,
+        input_shape=(RAW_H, RAW_W, 3),
+        output_shape=meta.output_shape,
+        gflops=meta.gflops + 3 * IN_H * IN_W * 3 / 1e9,
+        params=meta.params,
+        extra={"fused_preprocess": True},
+    )
+    return fn, (spec,), raw_meta

@@ -1,0 +1,201 @@
+"""L1 kernel correctness: Pallas vs pure-jnp oracle (ref.py).
+
+Hypothesis sweeps shapes (and tiling configurations) so the padded /
+tile-boundary paths of the kernels are exercised, not just the happy
+multiples-of-128 case.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import conv as kconv
+from compile.kernels import matmul as kmm
+from compile.kernels import preprocess as kpre
+from compile.kernels import ref
+
+settings.register_profile("ci", deadline=None, max_examples=25)
+settings.load_profile("ci")
+
+dims = st.integers(min_value=1, max_value=70)
+
+
+def _rand(key, shape, dtype=jnp.float32):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, dtype)
+
+
+# ----------------------------------------------------------------- matmul
+
+
+@given(m=dims, k=dims, n=dims, seed=st.integers(0, 2**31 - 1))
+def test_matmul_matches_ref(m, k, n, seed):
+    kx, ky = jax.random.split(jax.random.PRNGKey(seed))
+    x = jax.random.normal(kx, (m, k))
+    y = jax.random.normal(ky, (k, n))
+    np.testing.assert_allclose(
+        kmm.matmul(x, y), ref.matmul_ref(x, y), rtol=1e-5, atol=1e-5
+    )
+
+
+@given(
+    m=st.integers(1, 40),
+    k=st.integers(1, 40),
+    n=st.integers(1, 40),
+    bm=st.integers(1, 16),
+    bn=st.integers(1, 16),
+    bk=st.integers(1, 16),
+)
+def test_matmul_any_tiling(m, k, n, bm, bn, bk):
+    """The kernel is exact for *every* tile choice, not just divisors."""
+    x = _rand(10, (m, k))
+    y = _rand(11, (k, n))
+    got = kmm.matmul(x, y, bm=min(bm, m), bn=min(bn, n), bk=min(bk, k))
+    np.testing.assert_allclose(got, ref.matmul_ref(x, y), rtol=1e-5, atol=1e-5)
+
+
+def test_matmul_large_tile_path():
+    x = _rand(0, (256, 256))
+    y = _rand(1, (256, 128))
+    np.testing.assert_allclose(
+        kmm.matmul(x, y), ref.matmul_ref(x, y), rtol=1e-4, atol=1e-4
+    )
+
+
+def test_matmul_rejects_bad_shapes():
+    with pytest.raises(ValueError):
+        kmm.matmul(jnp.ones((2, 3)), jnp.ones((4, 5)))
+    with pytest.raises(ValueError):
+        kmm.matmul(jnp.ones((2, 3, 4)), jnp.ones((4, 5)))
+
+
+def test_largest_tile_divides():
+    for dim in (1, 7, 64, 100, 1000, 1024, 129):
+        t = kmm._largest_tile(dim)
+        assert dim % t == 0 and 1 <= t <= 128
+
+
+# ----------------------------------------------------------------- linear
+
+
+@given(
+    m=st.integers(1, 32),
+    k=st.integers(1, 48),
+    n=st.integers(1, 48),
+    act=st.sampled_from(["none", "relu"]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_linear_matches_ref(m, k, n, act, seed):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    x = jax.random.normal(ks[0], (m, k))
+    w = jax.random.normal(ks[1], (k, n))
+    b = jax.random.normal(ks[2], (n,))
+    np.testing.assert_allclose(
+        kmm.linear(x, w, b, activation=act),
+        ref.linear_ref(x, w, b, activation=act),
+        rtol=1e-5,
+        atol=1e-5,
+    )
+
+
+def test_linear_relu_is_nonnegative():
+    x, w = _rand(3, (8, 8)), _rand(4, (8, 8))
+    out = kmm.linear(x, w, jnp.zeros((8,)), activation="relu")
+    assert (np.asarray(out) >= 0).all()
+
+
+def test_linear_rejects_unknown_activation():
+    with pytest.raises(ValueError):
+        kmm.linear(jnp.ones((2, 2)), jnp.ones((2, 2)), jnp.ones((2,)), activation="gelu")
+
+
+# ----------------------------------------------------------------- conv2d
+
+
+@given(
+    n=st.integers(1, 3),
+    h=st.integers(4, 20),
+    c_in=st.integers(1, 8),
+    c_out=st.integers(1, 8),
+    k=st.sampled_from([1, 3]),
+    stride=st.sampled_from([1, 2]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_conv2d_matches_ref(n, h, c_in, c_out, k, stride, seed):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 2)
+    x = jax.random.normal(ks[0], (n, h, h, c_in))
+    w = jax.random.normal(ks[1], (k, k, c_in, c_out))
+    np.testing.assert_allclose(
+        kconv.conv2d(x, w, stride=stride),
+        ref.conv2d_ref(x, w, stride=stride),
+        rtol=1e-4,
+        atol=1e-4,
+    )
+
+
+def test_conv2d_valid_padding():
+    x = _rand(5, (1, 8, 8, 4))
+    w = _rand(6, (3, 3, 4, 2))
+    np.testing.assert_allclose(
+        kconv.conv2d(x, w, padding="VALID"),
+        ref.conv2d_ref(x, w, padding="VALID"),
+        rtol=1e-4,
+        atol=1e-4,
+    )
+
+
+def test_conv2d_rejects_channel_mismatch():
+    with pytest.raises(ValueError):
+        kconv.conv2d(jnp.ones((1, 4, 4, 3)), jnp.ones((3, 3, 5, 2)))
+
+
+# ------------------------------------------------------------- preprocess
+
+
+@given(
+    h=st.sampled_from([8, 32, 64]),
+    w=st.sampled_from([8, 32, 64]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_normalize_matches_ref(h, w, seed):
+    img = jax.random.randint(jax.random.PRNGKey(seed), (h, w, 3), 0, 256).astype(
+        jnp.uint8
+    )
+    np.testing.assert_allclose(
+        kpre.normalize(img), ref.normalize_ref(img), rtol=1e-5, atol=1e-6
+    )
+
+
+def test_normalize_extremes():
+    lo = jnp.zeros((16, 16, 3), jnp.uint8)
+    hi = jnp.full((16, 16, 3), 255, jnp.uint8)
+    np.testing.assert_allclose(kpre.normalize(lo), ref.normalize_ref(lo), atol=1e-6)
+    np.testing.assert_allclose(kpre.normalize(hi), ref.normalize_ref(hi), atol=1e-6)
+
+
+def test_normalize_rejects_bad_shape():
+    with pytest.raises(ValueError):
+        kpre.normalize(jnp.zeros((16, 16), jnp.uint8))
+
+
+# -------------------------------------------------- perf-model estimators
+
+
+def test_vmem_bytes_fits_tpu_vmem():
+    # Default MXU tiles must fit comfortably in the ~16 MiB/core VMEM.
+    assert kmm.vmem_bytes(128, 128, 128) < 16 * 1024 * 1024 / 4
+
+
+def test_mxu_utilization_bounds():
+    for args in [(128, 128, 128), (100, 100, 100), (1, 1000, 64)]:
+        m, n, k = args
+        bm, bn, bk = (
+            kmm._largest_tile(m),
+            kmm._largest_tile(n),
+            kmm._largest_tile(k),
+        )
+        u = kmm.mxu_utilization(m, n, k, bm, bn, bk)
+        assert 0.0 < u <= 1.0
+    # Perfectly tiled full-MXU case is 100 % useful.
+    assert kmm.mxu_utilization(256, 256, 256, 128, 128, 128) == pytest.approx(1.0)

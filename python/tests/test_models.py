@@ -1,0 +1,89 @@
+"""L2 model checks: shapes, determinism, numeric sanity for the family
+the live plane serves."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+
+@pytest.fixture(scope="module")
+def rng_img():
+    return jax.random.randint(
+        jax.random.PRNGKey(7), (M.RAW_H, M.RAW_W, 3), 0, 256
+    ).astype(jnp.uint8)
+
+
+@pytest.mark.parametrize("name", list(M.MODEL_BUILDERS))
+@pytest.mark.parametrize("batch", [1, 2])
+def test_serving_shapes(name, batch):
+    fn, specs, meta = M.serving_fn(name, batch)
+    assert specs[0].shape == (batch, *meta.input_shape)
+    out = fn(jnp.zeros(specs[0].shape, jnp.float32))[0]
+    assert out.shape == (batch, *meta.output_shape)
+    assert out.dtype == jnp.float32
+
+
+@pytest.mark.parametrize("name", list(M.MODEL_BUILDERS))
+def test_outputs_finite_and_nonconstant(name):
+    fn, specs, _ = M.serving_fn(name, 1)
+    x = jax.random.normal(jax.random.PRNGKey(0), specs[0].shape)
+    out = np.asarray(fn(x)[0])
+    assert np.isfinite(out).all()
+    assert out.std() > 0, "degenerate constant output"
+
+
+@pytest.mark.parametrize("name", list(M.MODEL_BUILDERS))
+def test_weights_deterministic(name):
+    """Two builds bake identical weights — artifacts are reproducible."""
+    fn1, specs, _ = M.serving_fn(name, 1)
+    fn2, _, _ = M.serving_fn(name, 1)
+    x = jax.random.normal(jax.random.PRNGKey(1), specs[0].shape)
+    np.testing.assert_array_equal(np.asarray(fn1(x)[0]), np.asarray(fn2(x)[0]))
+
+
+def test_batch_consistency():
+    """A batched executable must equal per-item execution (batcher
+    correctness depends on this)."""
+    fn1, _, _ = M.serving_fn("tiny_resnet", 1)
+    fn4, _, _ = M.serving_fn("tiny_resnet", 4)
+    x = jax.random.normal(jax.random.PRNGKey(2), (4, M.IN_H, M.IN_W, 3))
+    batched = np.asarray(fn4(x)[0])
+    single = np.concatenate([np.asarray(fn1(x[i : i + 1])[0]) for i in range(4)])
+    np.testing.assert_allclose(batched, single, rtol=1e-4, atol=1e-5)
+
+
+def test_preprocess_shape_and_range(rng_img):
+    fn, specs, meta = M.preprocess_fn()
+    out = np.asarray(fn(rng_img)[0])
+    assert out.shape == (1, M.IN_H, M.IN_W, 3)
+    # ImageNet normalization of [0,1] pixels stays within ~[-3, 3].
+    assert out.min() > -4 and out.max() < 4
+
+
+def test_raw_path_equals_two_stage(rng_img):
+    """Fused raw executable == preprocess artifact + preprocessed model."""
+    raw_fn, _, _ = M.raw_serving_fn("tiny_mobilenet")
+    pre_fn, _, _ = M.preprocess_fn()
+    cls_fn, _, _ = M.serving_fn("tiny_mobilenet", 1)
+    fused = np.asarray(raw_fn(rng_img)[0])
+    staged = np.asarray(cls_fn(pre_fn(rng_img)[0])[0])
+    np.testing.assert_allclose(fused, staged, rtol=1e-5, atol=1e-6)
+
+
+def test_gflops_ordering():
+    """The family preserves Table II's compute ordering: mobilenet is the
+    smallest, segnet (per-pixel head) the largest."""
+    metas = {n: M.MODEL_BUILDERS[n]()[1] for n in M.MODEL_BUILDERS}
+    assert metas["tiny_mobilenet"].gflops < metas["tiny_resnet"].gflops
+    assert metas["tiny_resnet"].gflops < metas["tiny_segnet"].gflops
+
+
+def test_segnet_output_is_large_io():
+    """tiny_segnet mirrors DeepLabV3's response-dominated I/O profile."""
+    _, _, meta = M.serving_fn("tiny_segnet", 1)
+    out_bytes = int(np.prod(meta.output_shape)) * 4
+    in_bytes = int(np.prod(meta.input_shape)) * 4
+    assert out_bytes > in_bytes

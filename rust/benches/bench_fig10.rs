@@ -1,0 +1,18 @@
+//! `cargo bench` target regenerating Fig 10 (proxied connection, single client) at paper scale
+//! (closed-loop clients, 1000 requests each by default; override with
+//! ACCELSERVE_BENCH_REQS for a faster pass).
+
+use accelserve::experiments::figs;
+
+fn reqs(default: usize) -> usize {
+    std::env::var("ACCELSERVE_BENCH_REQS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    print!("{}", figs::fig10(reqs(1000)).render());
+    eprintln!("[{} done in {:.1}s]", "bench_fig10", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,25 @@
+//! `cargo bench` target regenerating Fig 11-13 (scalability + stage fractions) at paper scale
+//! (closed-loop clients, 1000 requests each by default; override with
+//! ACCELSERVE_BENCH_REQS for a faster pass).
+
+use accelserve::experiments::figs;
+
+fn reqs(default: usize) -> usize {
+    std::env::var("ACCELSERVE_BENCH_REQS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    print!("{}", figs::fig11("MobileNetV3", reqs(500)).render());
+    print!("{}", figs::fig11("DeepLabV3_ResNet50", reqs(500) / 3).render());
+    for tr in [accelserve::net::params::Transport::Tcp,
+               accelserve::net::params::Transport::Rdma,
+               accelserve::net::params::Transport::Gdr] {
+        print!("{}", figs::fig12_13("MobileNetV3", tr, reqs(500)).render());
+        print!("{}", figs::fig12_13("DeepLabV3_ResNet50", tr, reqs(500) / 3).render());
+    }
+    eprintln!("[{} done in {:.1}s]", "bench_fig11_12_13", t0.elapsed().as_secs_f64());
+}

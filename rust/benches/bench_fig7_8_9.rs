@@ -1,0 +1,22 @@
+//! `cargo bench` target regenerating Fig 7, 8, 9 (all Table II models, single client) at paper scale
+//! (closed-loop clients, 1000 requests each by default; override with
+//! ACCELSERVE_BENCH_REQS for a faster pass).
+
+use accelserve::experiments::figs;
+
+fn reqs(default: usize) -> usize {
+    std::env::var("ACCELSERVE_BENCH_REQS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    print!("{}", figs::fig7(reqs(600), true).render());
+    print!("{}", figs::fig7(reqs(600), false).render());
+    print!("{}", figs::fig8(reqs(600), true).render());
+    print!("{}", figs::fig8(reqs(600), false).render());
+    print!("{}", figs::fig9(reqs(600)).render());
+    eprintln!("[{} done in {:.1}s]", "bench_fig7_8_9", t0.elapsed().as_secs_f64());
+}

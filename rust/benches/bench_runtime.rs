@@ -1,0 +1,97 @@
+//! L3/L2 hot-path microbenchmarks (live plane): PJRT inference latency
+//! per artifact, executor round-trip overhead, and batching throughput.
+//! Hand-rolled harness (criterion is unavailable offline): warmup +
+//! timed loop + mean/p50/p99.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use accelserve::coordinator::{BatchCfg, Executor};
+use accelserve::metrics::stats::Series;
+use accelserve::runtime::{Engine, TensorBuf};
+
+fn bench(name: &str, iters: usize, mut f: impl FnMut()) -> f64 {
+    for _ in 0..(iters / 10).max(3) {
+        f(); // warmup
+    }
+    let mut s = Series::new();
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        s.push(t0.elapsed().as_secs_f64() * 1e3);
+    }
+    println!(
+        "{name:<42} {:>9.4} ms mean  {:>9.4} p50  {:>9.4} p99",
+        s.mean(),
+        s.quantile(0.5),
+        s.quantile(0.99)
+    );
+    s.mean()
+}
+
+fn main() {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("bench_runtime skipped: run `make artifacts` first");
+        return;
+    }
+    let iters: usize = std::env::var("ACCELSERVE_BENCH_REQS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(120);
+
+    println!("== bench_runtime: PJRT hot path ==");
+    let engine = Engine::load("artifacts").unwrap();
+    let f32_in = TensorBuf::F32(vec![0.25; 32 * 32 * 3]);
+    let u8_in = TensorBuf::U8(vec![128u8; 64 * 64 * 3]);
+
+    for name in [
+        "preprocess",
+        "tiny_mobilenet_b1",
+        "tiny_resnet_b1",
+        "tiny_segnet_b1",
+        "tiny_resnet_raw",
+    ] {
+        let input = if name == "preprocess" || name.ends_with("_raw") {
+            u8_in.clone()
+        } else {
+            f32_in.clone()
+        };
+        // compile outside the timed loop
+        let _ = engine.infer(name, &input).unwrap();
+        bench(&format!("engine.infer({name})"), iters, || {
+            let _ = std::hint::black_box(engine.infer(name, &input).unwrap());
+        });
+    }
+
+    // Batched throughput: items/sec at b=1 vs b=8.
+    for b in [1usize, 8] {
+        let name = format!("tiny_resnet_b{b}");
+        let input = TensorBuf::F32(vec![0.25; b * 32 * 32 * 3]);
+        let _ = engine.infer(&name, &input).unwrap();
+        let mean_ms = bench(&format!("engine.infer({name}) [batch {b}]"), iters, || {
+            let _ = std::hint::black_box(engine.infer(&name, &input).unwrap());
+        });
+        println!(
+            "{:<42} {:>9.1} items/s",
+            format!("  -> throughput b={b}"),
+            b as f64 / (mean_ms / 1e3)
+        );
+    }
+
+    // Executor round trip (queue + dispatch overhead over raw infer).
+    let exec = Arc::new(
+        Executor::start(
+            "artifacts",
+            1,
+            BatchCfg { max_batch: 1 },
+            &["tiny_mobilenet_b1"],
+        )
+        .unwrap(),
+    );
+    bench("executor.infer_sync(tiny_mobilenet)", iters, || {
+        let _ = std::hint::black_box(
+            exec.infer_sync("tiny_mobilenet", false, 0, f32_in.clone())
+                .unwrap(),
+        );
+    });
+}

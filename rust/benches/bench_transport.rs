@@ -1,0 +1,110 @@
+//! Live transport microbenchmarks: framed-TCP loopback vs SHM-verbs
+//! round-trip latency across payload sizes (the live-plane analogue of
+//! the paper's transport comparison), plus simulator throughput
+//! (events/sec) as the sim-plane §Perf metric.
+
+use std::time::Instant;
+
+use accelserve::metrics::stats::Series;
+use accelserve::models::zoo::PaperModel;
+use accelserve::net::params::Transport;
+use accelserve::sim::world::{Scenario, World};
+use accelserve::transport::shm::shm_pair;
+use accelserve::transport::tcp::TcpTransport;
+use accelserve::transport::MsgTransport;
+
+fn rtt(name: &str, iters: usize, mut send_recv: impl FnMut(&[u8]) -> usize, payload: &[u8]) {
+    for _ in 0..10 {
+        send_recv(payload);
+    }
+    let mut s = Series::new();
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        let n = send_recv(payload);
+        s.push(t0.elapsed().as_secs_f64() * 1e3);
+        assert_eq!(n, payload.len());
+    }
+    println!(
+        "{name:<40} {:>9.4} ms p50  {:>9.4} p99  ({:.1} MB/s rt)",
+        s.quantile(0.5),
+        s.quantile(0.99),
+        2.0 * payload.len() as f64 / (s.mean() / 1e3) / 1e6
+    );
+}
+
+fn main() {
+    let iters: usize = std::env::var("ACCELSERVE_BENCH_REQS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(300);
+
+    println!("== bench_transport: live transports (echo round trip) ==");
+    for &size in &[4_096usize, 602_112, 4 << 20] {
+        let payload: Vec<u8> = (0..size).map(|i| i as u8).collect();
+
+        // TCP loopback echo.
+        let listener = TcpTransport::listen("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let server = std::thread::spawn(move || {
+            let (s, _) = listener.accept().unwrap();
+            let mut t = TcpTransport::from_stream(s);
+            while let Ok(m) = t.recv() {
+                if t.send(&m).is_err() {
+                    break;
+                }
+            }
+        });
+        {
+            let mut c = TcpTransport::connect(addr).unwrap();
+            rtt(
+                &format!("tcp {:>8} B", size),
+                iters,
+                |p| {
+                    c.send(p).unwrap();
+                    c.recv().unwrap().len()
+                },
+                &payload,
+            );
+        }
+        server.join().ok();
+
+        // SHM-verbs echo.
+        let (mut cli, mut srv) = shm_pair(size + 64, true);
+        let server = std::thread::spawn(move || {
+            while let Ok(m) = srv.recv() {
+                if srv.send(&m).is_err() {
+                    break;
+                }
+            }
+        });
+        rtt(
+            &format!("shm-verbs {:>8} B", size),
+            iters,
+            |p| {
+                cli.send(p).unwrap();
+                cli.recv().unwrap().len()
+            },
+            &payload,
+        );
+        drop(cli);
+        server.join().ok();
+    }
+
+    println!("\n== simulator throughput (events/sec) ==");
+    for (model, clients, reqs) in [("MobileNetV3", 16usize, 400usize), ("DeepLabV3_ResNet50", 16, 100)] {
+        let m = PaperModel::by_name(model).unwrap();
+        let t0 = Instant::now();
+        let s = World::run(
+            Scenario::direct(m, Transport::Rdma)
+                .with_clients(clients)
+                .with_requests(reqs),
+        );
+        let dt = t0.elapsed().as_secs_f64();
+        println!(
+            "{model:<20} x{clients}: {:>10} events in {:.3}s = {:.2} M events/s",
+            s.events,
+            dt,
+            s.events as f64 / dt / 1e6
+        );
+    }
+}

@@ -1,0 +1,17 @@
+//! Calibration probe: render key figures quickly.
+use accelserve::experiments::figs as f;
+fn main() {
+    let n = 150;
+    print!("{}", f::fig5(n).render());
+    print!("{}", f::fig6(n).render());
+    print!("{}", f::fig7(n, true).render());
+    print!("{}", f::fig8(n, true).render());
+    print!("{}", f::fig11("MobileNetV3", n).render());
+    print!("{}", f::fig11("DeepLabV3_ResNet50", 60).render());
+    print!("{}", f::fig12_13("MobileNetV3", accelserve::net::params::Transport::Tcp, n).render());
+    print!("{}", f::fig12_13("DeepLabV3_ResNet50", accelserve::net::params::Transport::Tcp, 60).render());
+    print!("{}", f::fig15a(100).render());
+    print!("{}", f::fig15c(100).render());
+    print!("{}", f::fig16(60).render());
+    print!("{}", f::fig17(100).render());
+}

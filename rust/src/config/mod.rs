@@ -1,0 +1,7 @@
+//! Configuration: a dependency-free JSON parser plus scenario-file
+//! loading for the sim plane.
+
+pub mod json;
+pub mod scenario;
+
+pub use scenario::{load_scenario, parse_scenario};

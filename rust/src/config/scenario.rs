@@ -1,0 +1,171 @@
+//! Scenario config files: JSON descriptions of sim-plane experiments so
+//! deployments can be swept without recompiling (`accelserve sim
+//! --config scenario.json`).
+//!
+//! ```json
+//! {
+//!   "model": "DeepLabV3_ResNet50",
+//!   "transport": "rdma",
+//!   "client_hop": "tcp",
+//!   "clients": 16,
+//!   "requests": 500,
+//!   "raw": true,
+//!   "sharing": "mps",
+//!   "streams": 8,
+//!   "priority_client": true,
+//!   "seed": 7
+//! }
+//! ```
+
+use anyhow::{bail, Context, Result};
+
+use crate::gpu::Sharing;
+use crate::models::zoo::PaperModel;
+use crate::net::params::Transport;
+use crate::sim::world::Scenario;
+
+use super::json::Json;
+
+/// Parse a scenario from JSON text. Unknown keys are rejected so typos
+/// fail loudly instead of silently running the default.
+pub fn parse_scenario(text: &str) -> Result<Scenario> {
+    let v = Json::parse(text).context("scenario json")?;
+    let obj = match &v {
+        Json::Obj(m) => m,
+        _ => bail!("scenario must be a JSON object"),
+    };
+    const KNOWN: &[&str] = &[
+        "model",
+        "transport",
+        "client_hop",
+        "clients",
+        "requests",
+        "raw",
+        "sharing",
+        "streams",
+        "priority_client",
+        "seed",
+        "warmup_frac",
+    ];
+    for k in obj.keys() {
+        if !KNOWN.contains(&k.as_str()) {
+            bail!("unknown scenario key {k:?} (known: {KNOWN:?})");
+        }
+    }
+
+    let model_name = v
+        .get("model")
+        .and_then(Json::as_str)
+        .context("scenario needs \"model\"")?;
+    let model = PaperModel::by_name(model_name)
+        .with_context(|| format!("unknown model {model_name}"))?;
+    let transport = v
+        .get("transport")
+        .and_then(Json::as_str)
+        .and_then(Transport::by_name)
+        .context("scenario needs a valid \"transport\"")?;
+
+    let mut sc = Scenario::direct(model, transport);
+    if let Some(ch) = v.get("client_hop").and_then(Json::as_str) {
+        sc.client_hop =
+            Some(Transport::by_name(ch).with_context(|| format!("bad client_hop {ch}"))?);
+    }
+    if let Some(n) = v.get("clients").and_then(Json::as_u64) {
+        sc.n_clients = n.max(1) as usize;
+    }
+    if let Some(n) = v.get("requests").and_then(Json::as_u64) {
+        sc.requests_per_client = n.max(1) as usize;
+    }
+    if let Some(Json::Bool(b)) = v.get("raw") {
+        sc.raw_input = *b;
+    }
+    if let Some(s) = v.get("sharing").and_then(Json::as_str) {
+        sc.sharing = match s.to_ascii_lowercase().as_str() {
+            "multi-stream" | "multistream" => Sharing::MultiStream,
+            "multi-context" | "multicontext" => Sharing::MultiContext,
+            "mps" => Sharing::Mps,
+            other => bail!("unknown sharing {other:?}"),
+        };
+    }
+    if let Some(n) = v.get("streams").and_then(Json::as_u64) {
+        sc.n_streams = n as usize;
+    }
+    if let Some(Json::Bool(b)) = v.get("priority_client") {
+        sc.priority_client = *b;
+    }
+    if let Some(n) = v.get("seed").and_then(Json::as_u64) {
+        sc.seed = n;
+    }
+    if let Some(f) = v.get("warmup_frac").and_then(Json::as_f64) {
+        if !(0.0..1.0).contains(&f) {
+            bail!("warmup_frac must be in [0, 1)");
+        }
+        sc.warmup_frac = f;
+    }
+    Ok(sc)
+}
+
+/// Load a scenario file.
+pub fn load_scenario(path: &str) -> Result<Scenario> {
+    let text =
+        std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+    parse_scenario(&text)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_scenario_roundtrip() {
+        let sc = parse_scenario(
+            r#"{"model": "YoloV4", "transport": "rdma", "client_hop": "tcp",
+                "clients": 8, "requests": 50, "raw": false, "sharing": "mps",
+                "streams": 4, "priority_client": true, "seed": 9,
+                "warmup_frac": 0.2}"#,
+        )
+        .unwrap();
+        assert_eq!(sc.model.name, "YoloV4");
+        assert_eq!(sc.transport, Transport::Rdma);
+        assert_eq!(sc.client_hop, Some(Transport::Tcp));
+        assert_eq!(sc.n_clients, 8);
+        assert_eq!(sc.requests_per_client, 50);
+        assert!(!sc.raw_input);
+        assert_eq!(sc.sharing, Sharing::Mps);
+        assert_eq!(sc.n_streams, 4);
+        assert!(sc.priority_client);
+        assert_eq!(sc.seed, 9);
+        // And it runs.
+        let stats = crate::sim::world::World::run(sc);
+        assert!(stats.all.n() > 0);
+    }
+
+    #[test]
+    fn minimal_scenario_defaults() {
+        let sc =
+            parse_scenario(r#"{"model": "ResNet50", "transport": "gdr"}"#).unwrap();
+        assert_eq!(sc.n_clients, 1);
+        assert!(sc.raw_input);
+        assert_eq!(sc.client_hop, None);
+    }
+
+    #[test]
+    fn rejects_bad_configs() {
+        assert!(parse_scenario(r#"{"transport": "gdr"}"#).is_err());
+        assert!(parse_scenario(r#"{"model": "Nope", "transport": "gdr"}"#).is_err());
+        assert!(parse_scenario(r#"{"model": "ResNet50", "transport": "warp"}"#).is_err());
+        assert!(parse_scenario(
+            r#"{"model": "ResNet50", "transport": "gdr", "typo_key": 1}"#
+        )
+        .is_err());
+        assert!(parse_scenario(
+            r#"{"model": "ResNet50", "transport": "gdr", "sharing": "magic"}"#
+        )
+        .is_err());
+        assert!(parse_scenario(
+            r#"{"model": "ResNet50", "transport": "gdr", "warmup_frac": 1.5}"#
+        )
+        .is_err());
+        assert!(parse_scenario("[]").is_err());
+    }
+}

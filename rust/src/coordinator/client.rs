@@ -1,0 +1,147 @@
+//! Closed-loop load generator (the paper's client): N client threads,
+//! each sending `requests` back-to-back inference requests and
+//! recording the Table I latency breakdown from its own clock plus the
+//! server-reported stage timings.
+
+use std::net::SocketAddr;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::metrics::stats::{ReqRecord, StageAgg};
+use crate::models::zoo::WorkloadData;
+use crate::sim::time::Ns;
+use crate::transport::tcp::TcpTransport;
+use crate::transport::MsgTransport;
+
+use super::protocol::{Request, Response};
+
+/// Load-generation configuration.
+#[derive(Debug, Clone)]
+pub struct LoadCfg {
+    pub model: String,
+    /// Send raw uint8 frames (server preprocesses) or f32 tensors.
+    pub raw: bool,
+    pub n_clients: usize,
+    pub requests_per_client: usize,
+    /// Client 0 gets high priority.
+    pub priority_client: bool,
+    /// Payload element count (per-request input size).
+    pub payload_elems: usize,
+    /// Warmup requests discarded per client.
+    pub warmup: usize,
+}
+
+/// Aggregate results of one live run.
+#[derive(Debug, Default)]
+pub struct LiveStats {
+    pub all: StageAgg,
+    pub priority: StageAgg,
+    pub normal: StageAgg,
+    pub duration_s: f64,
+    pub throughput_rps: f64,
+    pub errors: usize,
+}
+
+/// Drive a closed loop over an arbitrary connected transport.
+pub fn run_client_loop(
+    t: &mut dyn MsgTransport,
+    cfg: &LoadCfg,
+    client_idx: usize,
+) -> Result<Vec<ReqRecord>> {
+    let prio = if cfg.priority_client && client_idx == 0 {
+        10
+    } else {
+        0
+    };
+    let payload = if cfg.raw {
+        WorkloadData::image(cfg.payload_elems, 42 + client_idx as u64).bytes
+    } else {
+        // Deterministic f32 tensor in [0, 1).
+        super::protocol::f32s_to_bytes(
+            &WorkloadData::image(cfg.payload_elems, 42 + client_idx as u64)
+                .bytes
+                .iter()
+                .map(|&b| b as f32 / 255.0)
+                .collect::<Vec<f32>>(),
+        )
+    };
+    let req = Request {
+        model: cfg.model.clone(),
+        raw: cfg.raw,
+        prio,
+        payload,
+    }
+    .encode();
+
+    let mut out = Vec::with_capacity(cfg.requests_per_client);
+    for i in 0..cfg.requests_per_client {
+        let t0 = Instant::now();
+        t.send(&req)?;
+        let frame = t.recv()?;
+        let total = t0.elapsed();
+        match Response::decode(&frame)? {
+            Response::Err(e) => bail!("server error: {e}"),
+            Response::Ok { stages, .. } => {
+                if i < cfg.warmup {
+                    continue;
+                }
+                let total_ns = total.as_nanos() as u64;
+                let server_ns = stages.total();
+                // Transport time = client-observed total minus server
+                // processing (the paper's ZeroMQ accounting, §III-B);
+                // split evenly between request and response paths.
+                let net_ns = total_ns.saturating_sub(server_ns);
+                out.push(ReqRecord {
+                    client: client_idx,
+                    total: Ns(total_ns),
+                    request: Ns(net_ns / 2),
+                    response: Ns(net_ns - net_ns / 2),
+                    copy_h2d: Ns(0),
+                    copy_d2h: Ns(0),
+                    preproc: Ns(stages.preproc_ns),
+                    infer: Ns(stages.queue_ns + stages.infer_ns),
+                    cpu_us: 0.0,
+                    priority: prio > 0,
+                });
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// Run the full TCP load test: spawns `n_clients` closed-loop threads.
+pub fn run_tcp(addr: SocketAddr, cfg: &LoadCfg) -> Result<LiveStats> {
+    let t_start = Instant::now();
+    let mut handles = Vec::new();
+    for c in 0..cfg.n_clients {
+        let cfg = cfg.clone();
+        handles.push(std::thread::spawn(move || -> Result<Vec<ReqRecord>> {
+            let mut t = TcpTransport::connect(addr)?;
+            run_client_loop(&mut t, &cfg, c)
+        }));
+    }
+    let mut stats = LiveStats::default();
+    for h in handles {
+        match h.join().map_err(|_| anyhow!("client thread panicked"))? {
+            Ok(records) => {
+                for r in &records {
+                    stats.all.push(r);
+                    if r.priority {
+                        stats.priority.push(r);
+                    } else {
+                        stats.normal.push(r);
+                    }
+                }
+            }
+            Err(e) => {
+                stats.errors += 1;
+                log::warn!("client failed: {e}");
+            }
+        }
+    }
+    stats.duration_s = t_start.elapsed().as_secs_f64();
+    let served = cfg.n_clients * cfg.requests_per_client;
+    stats.throughput_rps = served as f64 / stats.duration_s.max(1e-9);
+    Ok(stats)
+}

@@ -1,0 +1,358 @@
+//! The GPU-side execution service: a priority queue of inference jobs
+//! drained by a pool of execution streams, with optional dynamic
+//! batching onto the `_b{2,4,8}` artifacts.
+//!
+//! This is the live-plane mirror of the simulated stream scheduler:
+//! `streams` bounds execution concurrency (Fig 15's trade-off), the
+//! priority queue implements client priorities (Fig 16), and the
+//! batcher exploits the per-batch compiled executables.
+
+use std::collections::BinaryHeap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::time::Instant;
+
+use std::path::PathBuf;
+
+use anyhow::{anyhow, Result};
+
+use crate::runtime::{Engine, TensorBuf};
+
+use super::protocol::StageNs;
+
+/// One queued inference job.
+pub struct Job {
+    pub model: String,
+    pub raw: bool,
+    pub prio: u8,
+    pub payload: TensorBuf,
+    pub reply: mpsc::Sender<Result<Done>>,
+    enqueued: Instant,
+    seq: u64,
+}
+
+/// Completed job: output plus server-side stage timings.
+#[derive(Debug, Clone)]
+pub struct Done {
+    pub output: Vec<f32>,
+    pub stages: StageNs,
+}
+
+struct Queued(Job);
+
+impl PartialEq for Queued {
+    fn eq(&self, o: &Self) -> bool {
+        self.0.prio == o.0.prio && self.0.seq == o.0.seq
+    }
+}
+impl Eq for Queued {}
+impl PartialOrd for Queued {
+    fn partial_cmp(&self, o: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(o))
+    }
+}
+impl Ord for Queued {
+    fn cmp(&self, o: &Self) -> std::cmp::Ordering {
+        // Max-heap: higher priority first, then FIFO by sequence.
+        (self.0.prio, std::cmp::Reverse(self.0.seq))
+            .cmp(&(o.0.prio, std::cmp::Reverse(o.0.seq)))
+    }
+}
+
+struct Shared {
+    queue: Mutex<BinaryHeap<Queued>>,
+    cv: Condvar,
+    stop: AtomicBool,
+    seq: AtomicU64,
+}
+
+/// Handle to a running executor.
+///
+/// PJRT clients are thread-local (`Rc`-based in the xla crate), so each
+/// execution stream worker owns a full `Engine` — one PJRT "device
+/// context" per stream, like one CUDA stream + TensorRT context each.
+pub struct Executor {
+    shared: Arc<Shared>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+}
+
+/// Dynamic-batching configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct BatchCfg {
+    /// Largest batch artifact to use (1 disables batching).
+    pub max_batch: usize,
+}
+
+impl Executor {
+    /// Start `streams` execution workers over the artifact directory;
+    /// each worker eagerly compiles the artifacts in `warm`.
+    pub fn start(
+        artifact_dir: impl Into<PathBuf>,
+        streams: usize,
+        batch: BatchCfg,
+        warm: &[&str],
+    ) -> Result<Executor> {
+        assert!(streams >= 1);
+        let dir: PathBuf = artifact_dir.into();
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(BinaryHeap::new()),
+            cv: Condvar::new(),
+            stop: AtomicBool::new(false),
+            seq: AtomicU64::new(0),
+        });
+        let warm: Vec<String> = warm.iter().map(|s| s.to_string()).collect();
+        let mut workers = Vec::new();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        for _ in 0..streams {
+            let sh = shared.clone();
+            let dir = dir.clone();
+            let warm = warm.clone();
+            let ready = ready_tx.clone();
+            workers.push(std::thread::spawn(move || {
+                let engine = match Engine::load(&dir).and_then(|e| {
+                    let names: Vec<&str> = warm.iter().map(String::as_str).collect();
+                    e.warm(&names)?;
+                    Ok(e)
+                }) {
+                    Ok(e) => {
+                        let _ = ready.send(Ok(()));
+                        e
+                    }
+                    Err(e) => {
+                        let _ = ready.send(Err(e));
+                        return;
+                    }
+                };
+                worker_loop(sh, engine, batch)
+            }));
+        }
+        drop(ready_tx);
+        for _ in 0..streams {
+            ready_rx
+                .recv()
+                .map_err(|_| anyhow!("worker died during startup"))??;
+        }
+        Ok(Executor { shared, workers })
+    }
+
+    /// Submit a job; the reply arrives on the returned channel.
+    pub fn submit(
+        &self,
+        model: &str,
+        raw: bool,
+        prio: u8,
+        payload: TensorBuf,
+    ) -> mpsc::Receiver<Result<Done>> {
+        let (tx, rx) = mpsc::channel();
+        let job = Job {
+            model: model.to_string(),
+            raw,
+            prio,
+            payload,
+            reply: tx,
+            enqueued: Instant::now(),
+            seq: self.shared.seq.fetch_add(1, Ordering::Relaxed),
+        };
+        self.shared.queue.lock().unwrap().push(Queued(job));
+        self.shared.cv.notify_one();
+        rx
+    }
+
+    /// Convenience: submit and wait.
+    pub fn infer_sync(
+        &self,
+        model: &str,
+        raw: bool,
+        prio: u8,
+        payload: TensorBuf,
+    ) -> Result<Done> {
+        self.submit(model, raw, prio, payload)
+            .recv()
+            .map_err(|_| anyhow!("executor dropped the job"))?
+    }
+
+    pub fn queue_len(&self) -> usize {
+        self.shared.queue.lock().unwrap().len()
+    }
+
+    /// Stop workers and join them.
+    pub fn shutdown(mut self) {
+        self.shared.stop.store(true, Ordering::SeqCst);
+        self.shared.cv.notify_all();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+fn worker_loop(sh: Arc<Shared>, engine: Engine, batch: BatchCfg) {
+    loop {
+        // Pop the highest-priority job (blocking).
+        let head = {
+            let mut q = sh.queue.lock().unwrap();
+            loop {
+                if sh.stop.load(Ordering::SeqCst) {
+                    return;
+                }
+                if let Some(j) = q.pop() {
+                    break j.0;
+                }
+                q = sh.cv.wait(q).unwrap();
+            }
+        };
+        // Opportunistic batching: grab more queued jobs for the same
+        // model/mode without waiting (no added latency; exploits bursts).
+        let mut batch_jobs = vec![head];
+        if batch.max_batch > 1 && !batch_jobs[0].raw {
+            let mut q = sh.queue.lock().unwrap();
+            let mut rest: Vec<Queued> = Vec::new();
+            while batch_jobs.len() < batch.max_batch {
+                match q.pop() {
+                    None => break,
+                    Some(Queued(j))
+                        if j.model == batch_jobs[0].model
+                            && !j.raw
+                            && j.prio == batch_jobs[0].prio =>
+                    {
+                        batch_jobs.push(j)
+                    }
+                    Some(other) => rest.push(other),
+                }
+            }
+            for o in rest {
+                q.push(o);
+            }
+        }
+        run_jobs(&engine, batch_jobs);
+    }
+}
+
+/// Largest artifact batch size <= n among the compiled {1,2,4,8}.
+fn artifact_batch(n: usize) -> usize {
+    [8usize, 4, 2, 1].into_iter().find(|&b| b <= n).unwrap_or(1)
+}
+
+fn run_jobs(engine: &Engine, mut jobs: Vec<Job>) {
+    while !jobs.is_empty() {
+        let b = artifact_batch(jobs.len());
+        let chunk: Vec<Job> = jobs.drain(..b).collect();
+        run_chunk(engine, chunk);
+    }
+}
+
+fn run_chunk(engine: &Engine, jobs: Vec<Job>) {
+    let t_deq = Instant::now();
+    let queue_ns: Vec<u64> = jobs
+        .iter()
+        .map(|j| t_deq.duration_since(j.enqueued).as_nanos() as u64)
+        .collect();
+
+    if jobs.len() == 1 && jobs[0].raw {
+        // Two-stage raw pipeline: preprocess artifact, then batch-1 model
+        // (separately timed, like the paper's preprocessing stage).
+        let job = &jobs[0];
+        let t0 = Instant::now();
+        let pre = match &job.payload {
+            TensorBuf::U8(_) => engine.infer("preprocess", &job.payload),
+            _ => Err(anyhow!("raw job with non-u8 payload")),
+        };
+        match pre {
+            Err(e) => {
+                let _ = jobs[0].reply.send(Err(e));
+            }
+            Ok(pre) => {
+                let t1 = Instant::now();
+                let name = format!("{}_b1", job.model);
+                let out = engine.infer(&name, &TensorBuf::F32(pre));
+                let t2 = Instant::now();
+                let done = out.map(|output| Done {
+                    output,
+                    stages: StageNs {
+                        queue_ns: queue_ns[0],
+                        preproc_ns: (t1 - t0).as_nanos() as u64,
+                        infer_ns: (t2 - t1).as_nanos() as u64,
+                    },
+                });
+                let _ = jobs[0].reply.send(done);
+            }
+        }
+        return;
+    }
+
+    // Preprocessed path, possibly batched.
+    let b = jobs.len();
+    let name = format!("{}_b{}", jobs[0].model, b);
+    let mut flat: Vec<f32> = Vec::new();
+    for j in &jobs {
+        match &j.payload {
+            TensorBuf::F32(v) => flat.extend_from_slice(v),
+            TensorBuf::U8(_) => {
+                let _ = j.reply.send(Err(anyhow!("u8 payload without raw flag")));
+                return;
+            }
+        }
+    }
+    let t1 = Instant::now();
+    let res = engine.infer(&name, &TensorBuf::F32(flat));
+    let infer_ns = t1.elapsed().as_nanos() as u64;
+    match res {
+        Err(e) => {
+            let msg = format!("{e}");
+            for j in &jobs {
+                let _ = j.reply.send(Err(anyhow!("{msg}")));
+            }
+        }
+        Ok(out) => {
+            let per = out.len() / b;
+            for (i, j) in jobs.iter().enumerate() {
+                let _ = j.reply.send(Ok(Done {
+                    output: out[i * per..(i + 1) * per].to_vec(),
+                    stages: StageNs {
+                        queue_ns: queue_ns[i],
+                        preproc_ns: 0,
+                        infer_ns,
+                    },
+                }));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn artifact_batch_picks_largest_leq() {
+        assert_eq!(artifact_batch(1), 1);
+        assert_eq!(artifact_batch(3), 2);
+        assert_eq!(artifact_batch(5), 4);
+        assert_eq!(artifact_batch(8), 8);
+        assert_eq!(artifact_batch(100), 8);
+    }
+
+    #[test]
+    fn priority_queue_orders_jobs() {
+        let (tx, _rx) = mpsc::channel();
+        let mk = |prio: u8, seq: u64| {
+            Queued(Job {
+                model: "m".into(),
+                raw: false,
+                prio,
+                payload: TensorBuf::F32(vec![]),
+                reply: tx.clone(),
+                enqueued: Instant::now(),
+                seq,
+            })
+        };
+        let mut h = BinaryHeap::new();
+        h.push(mk(0, 0));
+        h.push(mk(5, 1));
+        h.push(mk(0, 2));
+        h.push(mk(5, 3));
+        let order: Vec<(u8, u64)> = std::iter::from_fn(|| h.pop())
+            .map(|q| (q.0.prio, q.0.seq))
+            .collect();
+        assert_eq!(order, vec![(5, 1), (5, 3), (0, 0), (0, 2)]);
+    }
+}

@@ -1,0 +1,90 @@
+//! Router–Dealer gateway: the frontend proxy of the paper's proxied
+//! connection mode (§IV-B). Clients connect to the gateway; the gateway
+//! opens one upstream (dealer) connection per client and forwards
+//! frames verbatim — the store-and-forward + protocol-translation hop.
+//! To isolate networking effects it always forwards to one fixed server
+//! (as the paper configures it).
+
+use std::net::SocketAddr;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::Result;
+
+use crate::transport::tcp::TcpTransport;
+use crate::transport::MsgTransport;
+
+/// A running gateway.
+pub struct GatewayHandle {
+    pub addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept_thread: Option<std::thread::JoinHandle<()>>,
+    /// Frames forwarded (both directions) — observability hook.
+    pub forwarded: Arc<AtomicU64>,
+}
+
+impl GatewayHandle {
+    pub fn stop(mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+/// Start a TCP-facing gateway forwarding every connection to
+/// `upstream_addr` over a dedicated dealer connection.
+pub fn gateway_tcp(addr: &str, upstream_addr: SocketAddr) -> Result<GatewayHandle> {
+    let listener = TcpTransport::listen(addr)?;
+    listener.set_nonblocking(true)?;
+    let local = listener.local_addr()?;
+    let stop = Arc::new(AtomicBool::new(false));
+    let stop2 = stop.clone();
+    let forwarded = Arc::new(AtomicU64::new(0));
+    let fwd2 = forwarded.clone();
+    let accept_thread = std::thread::spawn(move || {
+        while !stop2.load(Ordering::SeqCst) {
+            match listener.accept() {
+                Ok((stream, _)) => {
+                    stream.set_nonblocking(false).ok();
+                    let fwd = fwd2.clone();
+                    std::thread::spawn(move || {
+                        let client = TcpTransport::from_stream(stream);
+                        match TcpTransport::connect(upstream_addr) {
+                            Ok(upstream) => relay(client, upstream, &fwd),
+                            Err(_) => { /* upstream down: drop client */ }
+                        }
+                    });
+                }
+                Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(Duration::from_millis(2));
+                }
+                Err(_) => break,
+            }
+        }
+    });
+    Ok(GatewayHandle {
+        addr: local,
+        stop,
+        accept_thread: Some(accept_thread),
+        forwarded,
+    })
+}
+
+/// Synchronous request/response relay (closed-loop clients: one frame
+/// outstanding per connection, exactly the Router-Dealer pattern).
+fn relay(mut client: impl MsgTransport, mut upstream: impl MsgTransport, fwd: &AtomicU64) {
+    loop {
+        let Ok(req) = client.recv() else { return };
+        if upstream.send(&req).is_err() {
+            return;
+        }
+        fwd.fetch_add(1, Ordering::Relaxed);
+        let Ok(resp) = upstream.recv() else { return };
+        if client.send(&resp).is_err() {
+            return;
+        }
+        fwd.fetch_add(1, Ordering::Relaxed);
+    }
+}

@@ -1,0 +1,16 @@
+//! L3 coordinator (live plane): the model-serving framework — wire
+//! protocol, execution service (streams + priority + dynamic batching),
+//! server, router-dealer gateway, and the closed-loop load generator.
+//! Policies here mirror the simulated world so both planes exercise the
+//! same design (DESIGN.md §3).
+
+pub mod client;
+pub mod executor;
+pub mod gateway;
+pub mod protocol;
+pub mod server;
+
+pub use client::{run_tcp, LiveStats, LoadCfg};
+pub use executor::{BatchCfg, Done, Executor};
+pub use gateway::gateway_tcp;
+pub use server::{handle_conn, serve_tcp, ServerHandle};

@@ -1,0 +1,201 @@
+//! Wire protocol for the live serving plane.
+//!
+//! Framing is the transport's job; this module encodes the message
+//! *inside* a frame. Payloads are raw tensor bytes (no serialization —
+//! the homogeneity requirement of RDMA, §VII, kept for TCP too so the
+//! comparison stays fair, §III-A).
+//!
+//! Request:  [op u8][flags u8][prio u8][name_len u8][name][payload]
+//! Response: [status u8][queue_ns u64][preproc_ns u64][infer_ns u64][payload]
+
+use anyhow::{bail, Result};
+
+/// Request opcodes.
+pub const OP_INFER: u8 = 1;
+/// flags bit 0: payload is a raw uint8 camera frame (server preprocesses).
+pub const FLAG_RAW: u8 = 1;
+
+/// A parsed inference request.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Request {
+    pub model: String,
+    pub raw: bool,
+    pub prio: u8,
+    pub payload: Vec<u8>,
+}
+
+impl Request {
+    pub fn encode(&self) -> Vec<u8> {
+        let name = self.model.as_bytes();
+        assert!(name.len() <= u8::MAX as usize, "model name too long");
+        let mut buf = Vec::with_capacity(4 + name.len() + self.payload.len());
+        buf.push(OP_INFER);
+        buf.push(if self.raw { FLAG_RAW } else { 0 });
+        buf.push(self.prio);
+        buf.push(name.len() as u8);
+        buf.extend_from_slice(name);
+        buf.extend_from_slice(&self.payload);
+        buf
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<Request> {
+        if buf.len() < 4 {
+            bail!("short request frame: {} bytes", buf.len());
+        }
+        if buf[0] != OP_INFER {
+            bail!("unknown opcode {}", buf[0]);
+        }
+        let name_len = buf[3] as usize;
+        if buf.len() < 4 + name_len {
+            bail!("truncated model name");
+        }
+        let model = std::str::from_utf8(&buf[4..4 + name_len])?.to_string();
+        Ok(Request {
+            model,
+            raw: buf[1] & FLAG_RAW != 0,
+            prio: buf[2],
+            payload: buf[4 + name_len..].to_vec(),
+        })
+    }
+}
+
+/// Server-side stage timings reported with every response, the live
+/// analogue of the paper's fine-grained pipeline profiling (§III-B).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct StageNs {
+    /// Time queued before an execution stream picked the request up.
+    pub queue_ns: u64,
+    /// GPU/PJRT preprocessing time (raw inputs only).
+    pub preproc_ns: u64,
+    /// Inference execution time.
+    pub infer_ns: u64,
+}
+
+impl StageNs {
+    pub fn total(&self) -> u64 {
+        self.queue_ns + self.preproc_ns + self.infer_ns
+    }
+}
+
+/// A parsed response.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Response {
+    Ok { stages: StageNs, payload: Vec<u8> },
+    Err(String),
+}
+
+impl Response {
+    pub fn encode(&self) -> Vec<u8> {
+        match self {
+            Response::Ok { stages, payload } => {
+                let mut buf = Vec::with_capacity(25 + payload.len());
+                buf.push(0u8);
+                buf.extend_from_slice(&stages.queue_ns.to_le_bytes());
+                buf.extend_from_slice(&stages.preproc_ns.to_le_bytes());
+                buf.extend_from_slice(&stages.infer_ns.to_le_bytes());
+                buf.extend_from_slice(payload);
+                buf
+            }
+            Response::Err(msg) => {
+                let mut buf = Vec::with_capacity(1 + msg.len());
+                buf.push(1u8);
+                buf.extend_from_slice(msg.as_bytes());
+                buf
+            }
+        }
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<Response> {
+        if buf.is_empty() {
+            bail!("empty response frame");
+        }
+        match buf[0] {
+            0 => {
+                if buf.len() < 25 {
+                    bail!("short ok response");
+                }
+                let u = |i: usize| {
+                    u64::from_le_bytes(buf[i..i + 8].try_into().expect("8 bytes"))
+                };
+                Ok(Response::Ok {
+                    stages: StageNs {
+                        queue_ns: u(1),
+                        preproc_ns: u(9),
+                        infer_ns: u(17),
+                    },
+                    payload: buf[25..].to_vec(),
+                })
+            }
+            1 => Ok(Response::Err(
+                String::from_utf8_lossy(&buf[1..]).to_string(),
+            )),
+            s => bail!("unknown response status {s}"),
+        }
+    }
+}
+
+/// f32 slice -> LE bytes.
+pub fn f32s_to_bytes(v: &[f32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(v.len() * 4);
+    for x in v {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+    out
+}
+
+/// LE bytes -> f32 vec.
+pub fn bytes_to_f32s(b: &[u8]) -> Result<Vec<f32>> {
+    if b.len() % 4 != 0 {
+        bail!("payload not f32-aligned: {} bytes", b.len());
+    }
+    Ok(b.chunks_exact(4)
+        .map(|c| f32::from_le_bytes(c.try_into().expect("4 bytes")))
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_roundtrip() {
+        let r = Request {
+            model: "tiny_resnet".into(),
+            raw: true,
+            prio: 7,
+            payload: vec![1, 2, 3, 4, 5],
+        };
+        assert_eq!(Request::decode(&r.encode()).unwrap(), r);
+    }
+
+    #[test]
+    fn response_roundtrip() {
+        let r = Response::Ok {
+            stages: StageNs {
+                queue_ns: 123,
+                preproc_ns: 456,
+                infer_ns: 789,
+            },
+            payload: f32s_to_bytes(&[1.5, -2.25]),
+        };
+        let d = Response::decode(&r.encode()).unwrap();
+        assert_eq!(d, r);
+        if let Response::Ok { payload, stages } = d {
+            assert_eq!(bytes_to_f32s(&payload).unwrap(), vec![1.5, -2.25]);
+            assert_eq!(stages.total(), 123 + 456 + 789);
+        }
+        let e = Response::Err("boom".into());
+        assert_eq!(Response::decode(&e.encode()).unwrap(), e);
+    }
+
+    #[test]
+    fn decode_rejects_garbage() {
+        assert!(Request::decode(&[]).is_err());
+        assert!(Request::decode(&[9, 0, 0, 0]).is_err());
+        assert!(Request::decode(&[1, 0, 0, 200, 1, 2]).is_err());
+        assert!(Response::decode(&[]).is_err());
+        assert!(Response::decode(&[0, 1, 2]).is_err());
+        assert!(Response::decode(&[7]).is_err());
+        assert!(bytes_to_f32s(&[1, 2, 3]).is_err());
+    }
+}

@@ -1,0 +1,106 @@
+//! The model-serving server: transport-agnostic connection handler plus
+//! a TCP listener front-end. Thread-per-connection, mirroring the
+//! paper's design ("the server allocates the same number of threads as
+//! the number of clients", §III-A), with all GPU work funneled through
+//! the shared `Executor`.
+
+use std::net::SocketAddr;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::Result;
+
+use crate::runtime::TensorBuf;
+use crate::transport::tcp::TcpTransport;
+use crate::transport::MsgTransport;
+
+use super::executor::Executor;
+use super::protocol::{f32s_to_bytes, Request, Response};
+
+/// Serve one connection until the peer hangs up: the request-handling /
+/// preprocessing / inference / response-handling pipeline of Fig 3.
+pub fn handle_conn(mut t: impl MsgTransport, exec: &Executor) {
+    loop {
+        let frame = match t.recv() {
+            Ok(f) => f,
+            Err(_) => return, // peer closed
+        };
+        let resp = match Request::decode(&frame) {
+            Err(e) => Response::Err(format!("bad request: {e}")),
+            Ok(req) => {
+                let payload = if req.raw {
+                    TensorBuf::U8(req.payload)
+                } else {
+                    match super::protocol::bytes_to_f32s(&req.payload) {
+                        Ok(v) => TensorBuf::F32(v),
+                        Err(e) => {
+                            let _ = t.send(&Response::Err(e.to_string()).encode());
+                            continue;
+                        }
+                    }
+                };
+                match exec.infer_sync(&req.model, req.raw, req.prio, payload) {
+                    Ok(done) => Response::Ok {
+                        stages: done.stages,
+                        payload: f32s_to_bytes(&done.output),
+                    },
+                    Err(e) => Response::Err(e.to_string()),
+                }
+            }
+        };
+        if t.send(&resp.encode()).is_err() {
+            return;
+        }
+    }
+}
+
+/// A running TCP server.
+pub struct ServerHandle {
+    pub addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept_thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl ServerHandle {
+    /// Request shutdown (existing connections finish their in-flight
+    /// request loop on peer close).
+    pub fn stop(mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+/// Start a TCP server on `addr` (use port 0 for ephemeral), routing all
+/// work through `exec`.
+pub fn serve_tcp(addr: &str, exec: Arc<Executor>) -> Result<ServerHandle> {
+    let listener = TcpTransport::listen(addr)?;
+    listener.set_nonblocking(true)?;
+    let local = listener.local_addr()?;
+    let stop = Arc::new(AtomicBool::new(false));
+    let stop2 = stop.clone();
+    let accept_thread = std::thread::spawn(move || {
+        while !stop2.load(Ordering::SeqCst) {
+            match listener.accept() {
+                Ok((stream, _peer)) => {
+                    stream.set_nonblocking(false).ok();
+                    let exec = exec.clone();
+                    std::thread::spawn(move || {
+                        handle_conn(TcpTransport::from_stream(stream), &exec)
+                    });
+                }
+                Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(Duration::from_millis(2));
+                }
+                Err(_) => break,
+            }
+        }
+    });
+    Ok(ServerHandle {
+        addr: local,
+        stop,
+        accept_thread: Some(accept_thread),
+    })
+}

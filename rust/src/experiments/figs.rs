@@ -1,0 +1,504 @@
+//! One runner per figure/table of the paper's evaluation (§IV–§VI).
+//! Each returns a [`Table`] whose rows are the series the paper plots;
+//! the benches print them and EXPERIMENTS.md records paper-vs-measured.
+
+use crate::gpu::Sharing;
+use crate::models::zoo::{PaperModel, ZOO};
+use crate::net::params::Transport;
+use crate::sim::world::{RunStats, Scenario, World};
+
+use super::table::Table;
+
+/// Transports compared in the single-client / scalability figures.
+pub const TRANSPORTS: [Transport; 4] = [
+    Transport::Local,
+    Transport::Gdr,
+    Transport::Rdma,
+    Transport::Tcp,
+];
+
+/// The five proxied-connection configurations of Fig 10 / Fig 14
+/// (client-to-gateway / gateway-to-server).
+pub const PROXY_PAIRS: [(Transport, Transport); 5] = [
+    (Transport::Rdma, Transport::Gdr),
+    (Transport::Rdma, Transport::Rdma),
+    (Transport::Tcp, Transport::Gdr),
+    (Transport::Tcp, Transport::Rdma),
+    (Transport::Tcp, Transport::Tcp),
+];
+
+/// Client counts swept in the scalability figures.
+pub const CLIENT_SWEEP: [usize; 6] = [1, 2, 4, 8, 12, 16];
+
+fn m(name: &str) -> &'static PaperModel {
+    PaperModel::by_name(name).expect("model in zoo")
+}
+
+fn run(sc: Scenario) -> RunStats {
+    World::run(sc)
+}
+
+// ------------------------------------------------------------------ Fig 5
+
+/// Fig 5: single-client direct-connection total time for ResNet50,
+/// across transports, with (a) raw and (b) preprocessed images.
+pub fn fig5(reqs: usize) -> Table {
+    let mut t = Table::new(
+        "Fig 5: ResNet50 total time across mechanisms (direct, 1 client) [ms]",
+        &["raw", "preprocessed"],
+    );
+    for tr in TRANSPORTS {
+        let mut vals = Vec::new();
+        for raw in [true, false] {
+            let s = run(Scenario::direct(m("ResNet50"), tr)
+                .with_requests(reqs)
+                .with_raw(raw));
+            vals.push(s.all.total.mean());
+        }
+        t.row(tr.name(), vals);
+    }
+    t.note("paper: GDR/RDMA 20.3%/11.4% less than TCP (raw), 23.2%/15.2% (preprocessed)");
+    t.note("paper: GDR adds 0.27-0.53 ms over local; TCP adds 1.2-1.5 ms");
+    t
+}
+
+// ------------------------------------------------------------------ Fig 6
+
+/// Fig 6: per-stage latency breakdown for ResNet50 across mechanisms.
+pub fn fig6(reqs: usize) -> Table {
+    let mut t = Table::new(
+        "Fig 6: ResNet50 latency breakdown (direct, 1 client) [ms]",
+        &["request", "copy_h2d", "preproc", "infer", "copy_d2h", "response", "total"],
+    );
+    for raw in [true, false] {
+        for tr in TRANSPORTS {
+            let s = run(Scenario::direct(m("ResNet50"), tr)
+                .with_requests(reqs)
+                .with_raw(raw));
+            let a = &s.all;
+            t.row(
+                format!("{}/{}", tr.name(), if raw { "raw" } else { "pre" }),
+                vec![
+                    a.request.mean(),
+                    a.copy_h2d.mean(),
+                    a.preproc.mean(),
+                    a.infer.mean(),
+                    a.copy_d2h.mean(),
+                    a.response.mean(),
+                    a.total.mean(),
+                ],
+            );
+        }
+    }
+    t.note("paper: TCP sends raw/preproc 0.73/0.61 ms slower than GDR&RDMA;");
+    t.note("paper: GDR saves extra 0.3/0.2 ms of copies vs RDMA");
+    t
+}
+
+// -------------------------------------------------------------- Fig 7/8/9
+
+/// Fig 7: offloading latency overhead vs local processing, per model.
+/// Values are percentages: (offloaded - local) / local * 100.
+pub fn fig7(reqs: usize, raw: bool) -> Table {
+    let which = if raw { "(a) raw" } else { "(b) preprocessed" };
+    let mut t = Table::new(
+        format!("Fig 7{which}: latency overhead vs local [%]"),
+        &["GDR", "RDMA", "TCP"],
+    );
+    for model in ZOO {
+        let local = run(Scenario::direct(model, Transport::Local)
+            .with_requests(reqs)
+            .with_raw(raw))
+        .all
+        .total
+        .mean();
+        let mut vals = Vec::new();
+        for tr in [Transport::Gdr, Transport::Rdma, Transport::Tcp] {
+            let s = run(Scenario::direct(model, tr).with_requests(reqs).with_raw(raw));
+            vals.push((s.all.total.mean() - local) / local * 100.0);
+        }
+        t.row(model.name, vals);
+    }
+    t.note("paper: MobileNetV3 >= 80.8% (raw) / 48.1% (pre) overhead;");
+    t.note("paper: WideResNet101 ~4.5% / ~2%; large-I/O models highest with TCP");
+    t
+}
+
+/// Fig 8: fraction of time per pipeline stage, per model x transport.
+pub fn fig8(reqs: usize, raw: bool) -> Table {
+    let mut t = Table::new(
+        format!(
+            "Fig 8: stage fractions ({} images) [% of total]",
+            if raw { "raw" } else { "preprocessed" }
+        ),
+        &["net%", "copy%", "proc%"],
+    );
+    for model in ZOO {
+        for tr in [Transport::Gdr, Transport::Rdma, Transport::Tcp] {
+            let s = run(Scenario::direct(model, tr).with_requests(reqs).with_raw(raw));
+            let (net, copy, proc) = s.all.fractions();
+            t.row(
+                format!("{}/{}", model.name, tr.name()),
+                vec![net * 100.0, copy * 100.0, proc * 100.0],
+            );
+        }
+    }
+    t.note("paper: MobileNetV3 data movement 62/42/30% for TCP/RDMA/GDR;");
+    t.note("paper: DeepLabV3 raw: TCP 60%, RDMA 32%, GDR 23% in data movement");
+    t
+}
+
+/// Fig 9: CPU usage per request across models and transports [ms CPU].
+pub fn fig9(reqs: usize) -> Table {
+    let mut t = Table::new(
+        "Fig 9: CPU usage per request (raw images) [CPU-ms]",
+        &["GDR", "RDMA", "TCP"],
+    );
+    for model in ZOO {
+        let mut vals = Vec::new();
+        for tr in [Transport::Gdr, Transport::Rdma, Transport::Tcp] {
+            let s = run(Scenario::direct(model, tr).with_requests(reqs));
+            vals.push(s.all.cpu_us.mean() / 1_000.0);
+        }
+        t.row(model.name, vals);
+    }
+    t.note("paper: TCP highest CPU (stack per-byte work); DeepLabV3 TCP ~2x GDR;");
+    t.note("paper: RDMA's copy issuing adds only a minor effect vs GDR");
+    t
+}
+
+// ----------------------------------------------------------------- Fig 10
+
+/// Fig 10: proxied connection, single client, MobileNetV3 raw.
+pub fn fig10(reqs: usize) -> Table {
+    let mut t = Table::new(
+        "Fig 10: proxied connection, MobileNetV3 raw (1 client) [ms]",
+        &["total", "std"],
+    );
+    for (ch, sh) in PROXY_PAIRS {
+        let s = run(Scenario::proxied(m("MobileNetV3"), ch, sh).with_requests(reqs));
+        t.row(
+            format!("{}/{}", ch.name(), sh.name()),
+            vec![s.all.total.mean(), s.all.total.std()],
+        );
+    }
+    t.note("paper: TCP/RDMA saves 23% and TCP/GDR 57% vs TCP/TCP;");
+    t.note("paper: TCP shows the highest variation; HW transport damps it");
+    t
+}
+
+// ------------------------------------------------------------ Fig 11/12/13
+
+/// Fig 11: total time vs client count (raw images), for one model.
+pub fn fig11(model_name: &str, reqs: usize) -> Table {
+    let cols: Vec<String> = CLIENT_SWEEP.iter().map(|c| format!("{c}cl")).collect();
+    let cols_ref: Vec<&str> = cols.iter().map(String::as_str).collect();
+    let mut t = Table::new(
+        format!("Fig 11: {model_name} total time vs clients (raw) [ms]"),
+        &cols_ref,
+    );
+    for tr in [Transport::Gdr, Transport::Rdma, Transport::Tcp] {
+        let mut vals = Vec::new();
+        for &n in &CLIENT_SWEEP {
+            let s = run(Scenario::direct(m(model_name), tr)
+                .with_requests(reqs)
+                .with_clients(n));
+            vals.push(s.all.total.mean());
+        }
+        t.row(tr.name(), vals);
+    }
+    t.note("paper @16 clients: GDR saves 4.7 ms (MobileNetV3) / 160 ms (DeepLabV3) vs TCP;");
+    t.note("paper: RDMA's gain erodes to TCP levels as the copy engine saturates");
+    t
+}
+
+/// Fig 12/13: per-stage fraction vs client count for one model+transport.
+pub fn fig12_13(model_name: &str, tr: Transport, reqs: usize) -> Table {
+    let cols: Vec<String> = CLIENT_SWEEP.iter().map(|c| format!("{c}cl")).collect();
+    let cols_ref: Vec<&str> = cols.iter().map(String::as_str).collect();
+    let mut t = Table::new(
+        format!("Fig 12/13: {model_name}/{} stage fractions vs clients [%]", tr.name()),
+        &cols_ref,
+    );
+    let mut net_row = Vec::new();
+    let mut copy_row = Vec::new();
+    let mut proc_row = Vec::new();
+    for &n in &CLIENT_SWEEP {
+        let s = run(Scenario::direct(m(model_name), tr)
+            .with_requests(reqs)
+            .with_clients(n));
+        let (net, copy, proc) = s.all.fractions();
+        net_row.push(net * 100.0);
+        copy_row.push(copy * 100.0);
+        proc_row.push(proc * 100.0);
+    }
+    t.row("net%", net_row);
+    t.row("copy%", copy_row);
+    t.row("proc%", proc_row);
+    t.note("paper Fig12 (MobileNetV3): processing fraction rises 38->62% (TCP),");
+    t.note("  58->72% (RDMA), 70->92% (GDR); network I/O never the bottleneck");
+    t.note("paper Fig13 (DeepLabV3): copy 7->36% TCP (10-366 ms), 12->28% RDMA (9-264 ms)");
+    t
+}
+
+// ----------------------------------------------------------------- Fig 14
+
+/// Fig 14: proxied-connection scalability, MobileNetV3 raw.
+pub fn fig14(reqs: usize) -> Table {
+    let cols: Vec<String> = CLIENT_SWEEP.iter().map(|c| format!("{c}cl")).collect();
+    let cols_ref: Vec<&str> = cols.iter().map(String::as_str).collect();
+    let mut t = Table::new(
+        "Fig 14: proxied scalability, MobileNetV3 raw [ms]",
+        &cols_ref,
+    );
+    for (ch, sh) in PROXY_PAIRS {
+        let mut vals = Vec::new();
+        for &n in &CLIENT_SWEEP {
+            let s = run(Scenario::proxied(m("MobileNetV3"), ch, sh)
+                .with_requests(reqs)
+                .with_clients(n));
+            vals.push(s.all.total.mean());
+        }
+        t.row(format!("{}/{}", ch.name(), sh.name()), vals);
+    }
+    t.note("paper: last-hop GDR saves 27% vs TCP/TCP, only +4% over RDMA/GDR;");
+    t.note("paper: RDMA/RDMA ~ TCP/RDMA ~ TCP/TCP at scale (copy-engine bottleneck)");
+    t
+}
+
+// ----------------------------------------------------------------- Fig 15
+
+/// Fig 15(a): GDR scalability for ResNet50 with a limited stream pool.
+pub fn fig15a(reqs: usize) -> Table {
+    let cols: Vec<String> = CLIENT_SWEEP.iter().map(|c| format!("{c}cl")).collect();
+    let cols_ref: Vec<&str> = cols.iter().map(String::as_str).collect();
+    let mut t = Table::new(
+        "Fig 15(a): ResNet50/GDR total vs clients, limited streams [ms]",
+        &cols_ref,
+    );
+    for streams in [1usize, 4, 16] {
+        let mut vals = Vec::new();
+        for &n in &CLIENT_SWEEP {
+            let s = run(Scenario::direct(m("ResNet50"), Transport::Gdr)
+                .with_requests(reqs)
+                .with_clients(n)
+                .with_streams(streams.min(n.max(1))));
+            vals.push(s.all.total.mean());
+        }
+        t.row(format!("{streams} stream(s)"), vals);
+    }
+    t.note("paper: 1 shared stream is ~33% slower than stream-per-client at 16 clients");
+    t
+}
+
+/// Fig 15(b): total latency at 16 clients vs stream-pool size.
+pub fn fig15b(reqs: usize) -> Table {
+    let streams = [1usize, 2, 4, 8, 16];
+    let cols: Vec<String> = streams.iter().map(|s| format!("{s}str")).collect();
+    let cols_ref: Vec<&str> = cols.iter().map(String::as_str).collect();
+    let mut t = Table::new(
+        "Fig 15(b): ResNet50 total @16 clients vs streams [ms]",
+        &cols_ref,
+    );
+    for tr in [Transport::Gdr, Transport::Rdma] {
+        let mut vals = Vec::new();
+        for &s in &streams {
+            let st = run(Scenario::direct(m("ResNet50"), tr)
+                .with_requests(reqs)
+                .with_clients(16)
+                .with_streams(s));
+            vals.push(st.all.total.mean());
+        }
+        t.row(tr.name(), vals);
+    }
+    t.note("paper: latency falls with streams at a diminishing rate; GDR < RDMA");
+    t
+}
+
+/// Fig 15(c): CoV of GPU processing time vs stream-pool size.
+pub fn fig15c(reqs: usize) -> Table {
+    let streams = [1usize, 2, 4, 8, 16];
+    let cols: Vec<String> = streams.iter().map(|s| format!("{s}str")).collect();
+    let cols_ref: Vec<&str> = cols.iter().map(String::as_str).collect();
+    let mut t = Table::new(
+        "Fig 15(c): ResNet50 processing-time CoV @16 clients vs streams",
+        &cols_ref,
+    );
+    for tr in [Transport::Gdr, Transport::Rdma] {
+        let mut vals = Vec::new();
+        for &s in &streams {
+            let st = run(Scenario::direct(m("ResNet50"), tr)
+                .with_requests(reqs)
+                .with_clients(16)
+                .with_streams(s));
+            vals.push(st.all.processing.cov());
+        }
+        t.row(tr.name(), vals);
+    }
+    t.note("paper @16 streams: CoV 0.11 (GDR) vs 0.21 (RDMA) — copy/exec interference;");
+    t.note("paper: limiting concurrency reduces variability for both");
+    t
+}
+
+// ----------------------------------------------------------------- Fig 16
+
+/// Fig 16: one high-priority client among normal clients, YoloV4
+/// preprocessed. Rows: transport x {priority, normal}.
+pub fn fig16(reqs: usize) -> Table {
+    let clients = [2usize, 4, 8, 16];
+    let cols: Vec<String> = clients.iter().map(|c| format!("{c}cl")).collect();
+    let cols_ref: Vec<&str> = cols.iter().map(String::as_str).collect();
+    let mut t = Table::new(
+        "Fig 16: YoloV4 preprocessed, priority vs normal clients [ms]",
+        &cols_ref,
+    );
+    for tr in [Transport::Gdr, Transport::Rdma] {
+        let mut prio = Vec::new();
+        let mut norm = Vec::new();
+        for &n in &clients {
+            let s = run(Scenario::direct(m("YoloV4"), tr)
+                .with_requests(reqs)
+                .with_clients(n)
+                .with_raw(false)
+                .with_priority_client(true));
+            prio.push(s.priority.total.mean());
+            norm.push(s.normal.total.mean());
+        }
+        t.row(format!("{}/priority", tr.name()), prio);
+        t.row(format!("{}/normal", tr.name()), norm);
+    }
+    t.note("paper: GDR priority client stays ~54 ms; under RDMA the priority");
+    t.note("  client degrades to normal levels beyond 8 clients (coarse copy interleave)");
+    t
+}
+
+// ----------------------------------------------------------------- Fig 17
+
+/// Fig 17: GPU sharing methods for EfficientNetB0 (raw images).
+pub fn fig17(reqs: usize) -> Table {
+    let clients = [1usize, 4, 8, 16];
+    let cols: Vec<String> = clients.iter().map(|c| format!("{c}cl")).collect();
+    let cols_ref: Vec<&str> = cols.iter().map(String::as_str).collect();
+    let mut t = Table::new(
+        "Fig 17: EfficientNetB0 sharing methods (raw) [ms]",
+        &cols_ref,
+    );
+    for tr in [Transport::Gdr, Transport::Rdma] {
+        for sharing in [Sharing::MultiStream, Sharing::MultiContext, Sharing::Mps] {
+            let mut vals = Vec::new();
+            for &n in &clients {
+                let s = run(Scenario::direct(m("EfficientNetB0"), tr)
+                    .with_requests(reqs)
+                    .with_clients(n)
+                    .with_sharing(sharing));
+                vals.push(s.all.total.mean());
+            }
+            t.row(format!("{}/{}", tr.name(), sharing.name()), vals);
+        }
+    }
+    t.note("paper: MPS always beats multi-context; GDR multi-stream ~ MPS;");
+    t.note("paper: RDMA multi-stream worse than MPS (copy interleave differs across processes)");
+    t
+}
+
+// ------------------------------------------------------------- Tables I-III
+
+/// Table II: the DNN zoo.
+pub fn table2() -> Table {
+    let mut t = Table::new(
+        "Table II: DNN models (paper shapes, calibrated profiles)",
+        &["GFLOPS", "req_raw_KB", "req_pre_KB", "resp_KB", "infer_ms"],
+    );
+    for model in ZOO {
+        t.row(
+            model.name,
+            vec![
+                model.gflops,
+                model.raw_bytes() as f64 / 1024.0,
+                model.preprocessed_bytes() as f64 / 1024.0,
+                model.response_bytes() as f64 / 1024.0,
+                model.infer_ms,
+            ],
+        );
+    }
+    t
+}
+
+/// Table III: the simulated testbed configuration.
+pub fn table3() -> Table {
+    let cfg = crate::gpu::GpuConfig::default();
+    let mut t = Table::new(
+        "Table III: simulated testbed (S1 gateway, S2 GPU server)",
+        &["value"],
+    );
+    t.row("link_gbps", vec![crate::net::fabric::LINE_RATE_GBPS]);
+    t.row("gpu_exec_engines", vec![cfg.n_engines as f64]);
+    t.row("gpu_mem_gb", vec![(cfg.device_mem_bytes >> 30) as f64]);
+    t.row("copy_engines", vec![2.0]);
+    t.row("pcie_gbs_idle", vec![cfg.pcie_gbs]);
+    t.note("paper: Dell R740/R750, Xeon-G, NVIDIA A2, ConnectX-5 25GbE");
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const N: usize = 60; // small but stable sample for unit tests
+
+    #[test]
+    fn fig5_reproduces_ordering_and_overheads() {
+        let t = fig5(N);
+        for col in ["raw", "preprocessed"] {
+            let local = t.get("Local", col).unwrap();
+            let gdr = t.get("GDR", col).unwrap();
+            let rdma = t.get("RDMA", col).unwrap();
+            let tcp = t.get("TCP", col).unwrap();
+            assert!(local < gdr && gdr < rdma && rdma < tcp, "{col}");
+            // GDR adds 0.2-0.7 ms over local (paper: 0.27-0.53 ms).
+            assert!((0.1..0.9).contains(&(gdr - local)), "{col}: {}", gdr - local);
+            // TCP adds 0.8-2.2 ms over local (paper: 1.2-1.5 ms).
+            assert!((0.7..2.5).contains(&(tcp - local)), "{col}: {}", tcp - local);
+        }
+    }
+
+    #[test]
+    fn fig7_small_models_higher_overhead() {
+        let t = fig7(N, true);
+        for col in ["GDR", "RDMA", "TCP"] {
+            let mob = t.get("MobileNetV3", col).unwrap();
+            let wide = t.get("WideResNet101", col).unwrap();
+            assert!(mob > 5.0 * wide, "{col}: {mob} !>> {wide}");
+        }
+        // MobileNetV3/GDR raw overhead near the paper's 80.8 %.
+        let g = t.get("MobileNetV3", "GDR").unwrap();
+        assert!((40.0..160.0).contains(&g), "{g}");
+    }
+
+    #[test]
+    fn fig16_priority_effective_only_under_gdr() {
+        let t = fig16(40);
+        let gdr_p = t.get("GDR/priority", "16cl").unwrap();
+        let gdr_n = t.get("GDR/normal", "16cl").unwrap();
+        let rdma_p = t.get("RDMA/priority", "16cl").unwrap();
+        let rdma_n = t.get("RDMA/normal", "16cl").unwrap();
+        assert!(gdr_p < 0.35 * gdr_n, "GDR prio {gdr_p} vs normal {gdr_n}");
+        // Under RDMA the coarse copy-engine interleave erodes the
+        // priority advantage (the paper's effect is stronger still:
+        // priority ~ normal beyond 8 clients — see EXPERIMENTS.md):
+        // the GDR priority client is insulated from client count while
+        // the RDMA one degrades with it.
+        let gdr_p2 = t.get("GDR/priority", "2cl").unwrap();
+        let rdma_p2 = t.get("RDMA/priority", "2cl").unwrap();
+        assert!(gdr_p < 1.2 * gdr_p2, "GDR prio grew {gdr_p2} -> {gdr_p}");
+        assert!(rdma_p > 1.3 * rdma_p2, "RDMA prio flat {rdma_p2} -> {rdma_p}");
+        assert!(rdma_p > 1.5 * gdr_p, "rdma prio {rdma_p} vs gdr prio {gdr_p}");
+        let _ = (rdma_n, gdr_n);
+    }
+
+    #[test]
+    fn tables_render() {
+        assert!(table2().render().contains("DeepLabV3"));
+        assert!(table3().render().contains("gpu_exec_engines"));
+    }
+}

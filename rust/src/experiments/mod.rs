@@ -1,0 +1,7 @@
+//! Experiment harnesses: one runner per paper figure/table, shared by
+//! the benches and the CLI.
+
+pub mod figs;
+pub mod table;
+
+pub use table::Table;

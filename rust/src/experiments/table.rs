@@ -1,0 +1,132 @@
+//! Plain-text result tables for the figure/benchmark harnesses: aligned
+//! console output plus CSV export, one table per paper figure.
+
+use std::fmt::Write as _;
+
+/// One regenerated figure/table: rows of labeled numeric series.
+#[derive(Debug, Clone, Default)]
+pub struct Table {
+    pub title: String,
+    pub columns: Vec<String>,
+    pub rows: Vec<(String, Vec<f64>)>,
+    /// Paper-reported reference points, printed beneath the table.
+    pub notes: Vec<String>,
+}
+
+impl Table {
+    pub fn new(title: impl Into<String>, columns: &[&str]) -> Table {
+        Table {
+            title: title.into(),
+            columns: columns.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+            notes: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, label: impl Into<String>, values: Vec<f64>) -> &mut Self {
+        let label = label.into();
+        debug_assert_eq!(
+            values.len(),
+            self.columns.len(),
+            "row {label} width mismatch"
+        );
+        self.rows.push((label, values));
+        self
+    }
+
+    pub fn note(&mut self, s: impl Into<String>) -> &mut Self {
+        self.notes.push(s.into());
+        self
+    }
+
+    /// Look up a cell by row label and column name.
+    pub fn get(&self, row: &str, col: &str) -> Option<f64> {
+        let c = self.columns.iter().position(|x| x == col)?;
+        self.rows
+            .iter()
+            .find(|(l, _)| l == row)
+            .and_then(|(_, v)| v.get(c).copied())
+    }
+
+    /// Render aligned for the console.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(out, "== {} ==", self.title);
+        let label_w = self
+            .rows
+            .iter()
+            .map(|(l, _)| l.len())
+            .chain([5])
+            .max()
+            .unwrap_or(5)
+            .max(5);
+        let col_w: Vec<usize> = self.columns.iter().map(|c| c.len().max(9)).collect();
+        let _ = write!(out, "{:label_w$}", "");
+        for (c, w) in self.columns.iter().zip(&col_w) {
+            let _ = write!(out, "  {c:>w$}");
+        }
+        let _ = writeln!(out);
+        for (label, vals) in &self.rows {
+            let _ = write!(out, "{label:label_w$}");
+            for (v, w) in vals.iter().zip(&col_w) {
+                let _ = write!(out, "  {:>w$}", fmt_num(*v));
+            }
+            let _ = writeln!(out);
+        }
+        for n in &self.notes {
+            let _ = writeln!(out, "  # {n}");
+        }
+        out
+    }
+
+    /// CSV (label + columns header, one row per label).
+    pub fn to_csv(&self) -> String {
+        let mut out = String::new();
+        let _ = write!(out, "label");
+        for c in &self.columns {
+            let _ = write!(out, ",{c}");
+        }
+        let _ = writeln!(out);
+        for (label, vals) in &self.rows {
+            let _ = write!(out, "{label}");
+            for v in vals {
+                let _ = write!(out, ",{v}");
+            }
+            let _ = writeln!(out);
+        }
+        out
+    }
+}
+
+fn fmt_num(v: f64) -> String {
+    if v == 0.0 {
+        "0".into()
+    } else if v.abs() >= 100.0 {
+        format!("{v:.1}")
+    } else if v.abs() >= 1.0 {
+        format!("{v:.2}")
+    } else {
+        format!("{v:.4}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned_and_csv() {
+        let mut t = Table::new("Fig X", &["total_ms", "copy_ms"]);
+        t.row("GDR", vec![1.5, 0.0]);
+        t.row("TCP", vec![3.25, 0.5]);
+        t.note("paper: GDR < TCP");
+        let s = t.render();
+        assert!(s.contains("Fig X") && s.contains("GDR") && s.contains("3.25"));
+        let csv = t.to_csv();
+        assert!(csv.starts_with("label,total_ms,copy_ms"));
+        assert!(csv.contains("TCP,3.25,0.5"));
+        assert_eq!(t.get("TCP", "copy_ms"), Some(0.5));
+        assert_eq!(t.get("TCP", "nope"), None);
+        assert_eq!(t.get("nope", "copy_ms"), None);
+    }
+}

@@ -1,0 +1,253 @@
+//! GPU copy engines (H2D / D2H DMA over PCIe).
+//!
+//! The A2 has two copy engines; we dedicate one per direction (the common
+//! CUDA runtime assignment). The crucial behaviour from the paper:
+//!
+//! * within one process (multi-stream sharing), the engine interleaves at
+//!   the granularity of a whole request's copy — FCFS, no priority — so
+//!   a high-priority client's copy waits behind every queued bulk copy
+//!   (§VI-B, Fig 16);
+//! * across processes (multi-context / MPS), the engines interleave at a
+//!   finer chunk granularity, which changes how copy overhead is shared
+//!   (§VI-C, Fig 17).
+
+use std::collections::VecDeque;
+
+use crate::sim::time::Ns;
+
+use super::params::GpuConfig;
+
+/// Copy direction (engine selector).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CopyDir {
+    H2D,
+    D2H,
+}
+
+impl CopyDir {
+    pub fn index(self) -> usize {
+        match self {
+            CopyDir::H2D => 0,
+            CopyDir::D2H => 1,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            CopyDir::H2D => "H2D",
+            CopyDir::D2H => "D2H",
+        }
+    }
+}
+
+/// Interleaving granularity of the engine.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CopyDiscipline {
+    /// Whole-request FCFS: single-process (multi-stream) sharing.
+    RequestFcfs,
+    /// Chunked round-robin: cross-process (multi-context / MPS) sharing.
+    ChunkRr,
+}
+
+#[derive(Debug, Clone)]
+struct CopyJob {
+    req: usize,
+    remaining: u64,
+}
+
+/// One copy engine: a queue plus an in-service marker. The owner drives
+/// it with `start/step` and schedules the returned completion times.
+#[derive(Debug, Clone)]
+pub struct CopyEngine {
+    cfg_fixed_us: f64,
+    chunk: u64,
+    pub discipline: CopyDiscipline,
+    queue: VecDeque<CopyJob>,
+    busy: bool,
+    /// Invalidates stale scheduled steps after state changes.
+    pub epoch: u64,
+    /// Total busy time accumulated (utilization metric).
+    pub busy_ns: u64,
+}
+
+/// Result of one engine step.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StepOutcome {
+    /// A request's copy fully completed.
+    Done { req: usize },
+    /// A chunk completed but the copy continues (ChunkRr).
+    Continue,
+    /// Engine idle (nothing queued).
+    Idle,
+}
+
+impl CopyEngine {
+    pub fn new(cfg: &GpuConfig, discipline: CopyDiscipline) -> CopyEngine {
+        CopyEngine {
+            cfg_fixed_us: cfg.copy_fixed_us,
+            chunk: cfg.copy_chunk_bytes,
+            discipline,
+            queue: VecDeque::new(),
+            busy: false,
+            epoch: 0,
+            busy_ns: 0,
+        }
+    }
+
+    /// True if the engine has queued or in-flight work.
+    pub fn is_busy(&self) -> bool {
+        self.busy || !self.queue.is_empty()
+    }
+
+    pub fn queue_len(&self) -> usize {
+        self.queue.len() + usize::from(self.busy)
+    }
+
+    /// Enqueue a copy of `bytes` for `req`. If the engine was idle the
+    /// caller must schedule a step at the returned time. `bw_gbs` is the
+    /// *current* effective DMA bandwidth (degraded under execution-engine
+    /// and queue load — see `GpuSim::copy_bw_gbs`).
+    pub fn submit(&mut self, now: Ns, req: usize, bytes: u64, bw_gbs: f64) -> Option<(Ns, u64)> {
+        self.queue.push_back(CopyJob {
+            req,
+            remaining: bytes.max(1),
+        });
+        if self.busy {
+            None
+        } else {
+            Some(self.begin_service(now, bw_gbs))
+        }
+    }
+
+    /// Begin serving the head job (engine must be idle, queue non-empty).
+    fn begin_service(&mut self, now: Ns, bw_gbs: f64) -> (Ns, u64) {
+        debug_assert!(!self.busy && !self.queue.is_empty());
+        self.busy = true;
+        self.epoch += 1;
+        let head = self.queue.front().unwrap();
+        let serve_bytes = match self.discipline {
+            CopyDiscipline::RequestFcfs => head.remaining,
+            CopyDiscipline::ChunkRr => head.remaining.min(self.chunk),
+        };
+        // Fixed launch cost applies per cudaMemcpy call; chunked service
+        // pays a reduced per-chunk setup (DMA descriptor ring).
+        let fixed = match self.discipline {
+            CopyDiscipline::RequestFcfs => self.cfg_fixed_us,
+            CopyDiscipline::ChunkRr => self.cfg_fixed_us * 0.25,
+        };
+        let dur = Ns::from_us(fixed + serve_bytes as f64 / bw_gbs.max(0.05) / 1_000.0);
+        self.busy_ns += dur.0;
+        (now + dur, self.epoch)
+    }
+
+    /// A scheduled step fired. Returns what happened plus, if the engine
+    /// continues, the next step to schedule.
+    pub fn step(&mut self, now: Ns, epoch: u64, bw_gbs: f64) -> (StepOutcome, Option<(Ns, u64)>) {
+        if epoch != self.epoch || !self.busy {
+            return (StepOutcome::Idle, None); // stale event
+        }
+        self.busy = false;
+        let mut head = self.queue.pop_front().expect("busy engine with empty queue");
+        let outcome = match self.discipline {
+            CopyDiscipline::RequestFcfs => StepOutcome::Done { req: head.req },
+            CopyDiscipline::ChunkRr => {
+                let served = head.remaining.min(self.chunk);
+                head.remaining -= served;
+                if head.remaining == 0 {
+                    StepOutcome::Done { req: head.req }
+                } else {
+                    // Rotate: unfinished copy goes to the back (RR).
+                    self.queue.push_back(head);
+                    StepOutcome::Continue
+                }
+            }
+        };
+        let next = if self.queue.is_empty() {
+            None
+        } else {
+            Some(self.begin_service(now, bw_gbs))
+        };
+        (outcome, next)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> GpuConfig {
+        GpuConfig::default()
+    }
+
+    const BW: f64 = 4.0;
+
+    /// Drive an engine to completion, returning (req, finish) pairs.
+    fn drain(eng: &mut CopyEngine, submits: &[(usize, u64)]) -> Vec<(usize, Ns)> {
+        let mut done = Vec::new();
+        let mut pending: Option<(Ns, u64)> = None;
+        for &(req, bytes) in submits {
+            if let Some(p) = eng.submit(Ns::ZERO, req, bytes, BW) {
+                pending = Some(p);
+            }
+        }
+        while let Some((t, ep)) = pending.take() {
+            let (out, next) = eng.step(t, ep, BW);
+            if let StepOutcome::Done { req } = out {
+                done.push((req, t));
+            }
+            pending = next;
+        }
+        done
+    }
+
+    #[test]
+    fn fcfs_serves_whole_requests_in_order() {
+        let mut eng = CopyEngine::new(&cfg(), CopyDiscipline::RequestFcfs);
+        let done = drain(&mut eng, &[(1, 8_000_000), (2, 1_000), (3, 1_000)]);
+        let order: Vec<usize> = done.iter().map(|d| d.0).collect();
+        assert_eq!(order, vec![1, 2, 3]);
+        // Small copies wait behind the 8 MB head-of-line copy (~2 ms).
+        assert!(done[1].1.as_us() > 2_000.0);
+    }
+
+    #[test]
+    fn chunk_rr_lets_small_copies_overtake() {
+        let mut eng = CopyEngine::new(&cfg(), CopyDiscipline::ChunkRr);
+        let done = drain(&mut eng, &[(1, 8_000_000), (2, 1_000)]);
+        let pos1 = done.iter().position(|d| d.0 == 1).unwrap();
+        let pos2 = done.iter().position(|d| d.0 == 2).unwrap();
+        assert!(pos2 < pos1, "small copy must finish first under RR");
+    }
+
+    #[test]
+    fn completion_exactly_once() {
+        for disc in [CopyDiscipline::RequestFcfs, CopyDiscipline::ChunkRr] {
+            let mut eng = CopyEngine::new(&cfg(), disc);
+            let submits: Vec<(usize, u64)> =
+                (0..20).map(|i| (i, 100_000 + i as u64 * 777_777)).collect();
+            let done = drain(&mut eng, &submits);
+            let mut reqs: Vec<usize> = done.iter().map(|d| d.0).collect();
+            reqs.sort();
+            assert_eq!(reqs, (0..20).collect::<Vec<_>>(), "{disc:?}");
+        }
+    }
+
+    #[test]
+    fn stale_epoch_ignored() {
+        let mut eng = CopyEngine::new(&cfg(), CopyDiscipline::RequestFcfs);
+        let (t, ep) = eng.submit(Ns::ZERO, 1, 1_000, BW).unwrap();
+        let (out, _) = eng.step(t, ep + 99, BW);
+        assert_eq!(out, StepOutcome::Idle);
+        assert!(eng.is_busy());
+        let (out, _) = eng.step(t, ep, BW);
+        assert_eq!(out, StepOutcome::Done { req: 1 });
+    }
+
+    #[test]
+    fn busy_time_tracks_service() {
+        let mut eng = CopyEngine::new(&cfg(), CopyDiscipline::RequestFcfs);
+        drain(&mut eng, &[(1, 4_000_000)]);
+        let want_us = cfg().copy_fixed_us + 4_000_000.0 / BW / 1_000.0;
+        assert!((eng.busy_ns as f64 / 1_000.0 - want_us).abs() < 1.0);
+    }
+}

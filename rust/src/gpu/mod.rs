@@ -1,0 +1,23 @@
+//! GPU simulator: an event-level model of the NVIDIA A2 the paper serves
+//! on (10 execution engines, 2 copy engines, GigaThread dispatch).
+//!
+//! The paper's GPU findings are *scheduling* phenomena; this module
+//! reproduces them mechanistically:
+//!
+//! * blocks are dispatched FCFS onto free execution engines, streams are
+//!   interleaved round-robin with priority accommodation at **block**
+//!   granularity (Amert et al., RTSS'17 — paper refs [11], [12]);
+//! * the copy engines interleave at **request** granularity within a
+//!   process (the coarse interleave that defeats priorities, §VI-B) and
+//!   at chunk granularity across processes (MPS/multi-context, §VI-C);
+//! * issuing copies interferes with execution dispatch (the GigaThread
+//!   central-unit artifact the paper observes in Fig 15c);
+//! * contexts time-slice the execution engines; MPS packs contexts.
+
+pub mod copy_engine;
+pub mod device;
+pub mod params;
+
+pub use copy_engine::{CopyDir, CopyDiscipline, CopyEngine};
+pub use device::{GpuEv, GpuNotify, GpuSim, JobSpec, KernelSpec, Sharing};
+pub use params::GpuConfig;

@@ -1,0 +1,91 @@
+//! Calibrated configuration of the simulated NVIDIA A2 (Table III).
+
+/// GPU device + scheduling-model parameters.
+///
+/// Defaults model the A2 in server S2: 10 execution engines, 16 GB
+/// device memory, two copy engines on a PCIe Gen4 x8 link whose
+/// *effective* per-copy bandwidth (small-transfer interleave, pinned
+/// staging) is ~4 GB/s per direction — back-derived from the paper's
+/// §V copy-time ranges (10–366 ms for DeepLabV3 at 1..16 clients).
+#[derive(Debug, Clone)]
+pub struct GpuConfig {
+    /// Streaming-multiprocessor-like execution engines ("10 execution
+    /// engines" on the A2, §III-D).
+    pub n_engines: usize,
+    /// Device memory, bytes (16 GB on the A2). Bounds GDR session count.
+    pub device_mem_bytes: u64,
+    /// Nominal copy-engine bandwidth per direction (idle device), GB/s.
+    pub pcie_gbs: f64,
+    /// DMA bandwidth degradation per unit of execution-engine activity
+    /// (device-memory contention between kernels and the copy engines).
+    pub pcie_contention: f64,
+    /// Fixed per-copy launch cost (cudaMemcpy issue + DMA setup), us.
+    pub copy_fixed_us: f64,
+    /// Chunk size for cross-process copy-engine interleaving, bytes.
+    pub copy_chunk_bytes: u64,
+    /// Context time-slice quantum (multi-context sharing), us.
+    pub slice_us: f64,
+    /// Context switch penalty, us.
+    pub ctx_switch_us: f64,
+    /// Baseline per-request execution-time noise (CoV), dimensionless.
+    pub base_cov: f64,
+    /// Additional execution-time noise per unit of engine contention.
+    pub contention_cov: f64,
+    /// Execution slowdown/jitter coupling when same-context copies are in
+    /// flight (the GigaThread interference of Fig 15c / finding 3).
+    pub copy_interference: f64,
+}
+
+impl Default for GpuConfig {
+    fn default() -> Self {
+        GpuConfig {
+            n_engines: 10,
+            device_mem_bytes: 16 * 1024 * 1024 * 1024,
+            pcie_gbs: 5.0,
+            pcie_contention: 2.5,
+            copy_fixed_us: 15.0,
+            copy_chunk_bytes: 1 << 20,
+            slice_us: 500.0,
+            ctx_switch_us: 40.0,
+            base_cov: 0.03,
+            contention_cov: 0.30,
+            copy_interference: 0.55,
+        }
+    }
+}
+
+impl GpuConfig {
+    /// Copy duration for `bytes` through one copy engine, us (excluding
+    /// queueing).
+    pub fn copy_us(&self, bytes: u64) -> f64 {
+        self.copy_fixed_us + bytes as f64 / self.pcie_gbs / 1_000.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn a2_shape() {
+        let c = GpuConfig::default();
+        assert_eq!(c.n_engines, 10);
+        assert_eq!(c.device_mem_bytes, 16 << 30);
+    }
+
+    #[test]
+    fn copy_time_matches_paper_scale() {
+        // DeepLabV3 response (45.4 MB) must take ~10 ms per D2H copy so
+        // that 16 closed-loop clients queue into the paper's 264-366 ms
+        // copy-time range.
+        let c = GpuConfig::default();
+        let dl_resp = 2 * 21 * 520 * 520 * 4u64;
+        // Idle device: ~9 ms (paper single-client copy-time ~9-10 ms).
+        let t = c.copy_us(dl_resp) / 1_000.0;
+        assert!((7.0..12.0).contains(&t), "idle copy {t} ms");
+        // Fully busy execution engines: DMA degrades heavily (the §V
+        // mechanism behind 264-366 ms copy times at 16 clients).
+        let loaded = dl_resp as f64 / (c.pcie_gbs / (1.0 + c.pcie_contention)) / 1e6;
+        assert!((20.0..120.0).contains(&loaded), "loaded copy {loaded} ms");
+    }
+}

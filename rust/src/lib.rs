@@ -1,0 +1,22 @@
+//! accelserve — a model-serving framework with hardware-accelerated
+//! communication (TCP / RDMA / GPUDirect RDMA), reproducing Hanafy et
+//! al., "Understanding the Benefits of Hardware-Accelerated
+//! Communication in Model-Serving Applications".
+//!
+//! Two execution planes share the coordinator code (DESIGN.md §3):
+//! a deterministic discrete-event **sim plane** that regenerates every
+//! figure of the paper on a modeled A2 + 25 GbE testbed, and a **live
+//! plane** that serves real AOT-compiled JAX/Pallas models through PJRT
+//! over real sockets.
+
+pub mod config;
+pub mod coordinator;
+pub mod experiments;
+pub mod gpu;
+pub mod metrics;
+pub mod models;
+pub mod net;
+pub mod rdmasim;
+pub mod runtime;
+pub mod sim;
+pub mod transport;

@@ -1,0 +1,269 @@
+//! accelserve CLI: the launcher for both planes.
+//!
+//! ```text
+//! accelserve serve   --addr 0.0.0.0:7007 --streams 4 --batch 8   # live server
+//! accelserve gateway --addr 0.0.0.0:7008 --upstream host:7007    # live proxy
+//! accelserve client  --addr host:7007 --model tiny_resnet -n 100 -c 4
+//! accelserve sim     --model ResNet50 --transport gdr -c 16 -n 300
+//! accelserve fig     --which 5 [--requests 300] [--csv]          # regen a figure
+//! accelserve tables  --which 2|3                                 # paper tables
+//! ```
+
+use std::sync::Arc;
+
+use accelserve::coordinator::{gateway_tcp, run_tcp, serve_tcp, BatchCfg, Executor, LoadCfg};
+use accelserve::experiments::figs;
+use accelserve::gpu::Sharing;
+use accelserve::models::zoo::PaperModel;
+use accelserve::net::params::Transport;
+use accelserve::sim::world::{Scenario, World};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let code = match args.first().map(String::as_str) {
+        Some("serve") => cmd_serve(&args[1..]),
+        Some("gateway") => cmd_gateway(&args[1..]),
+        Some("client") => cmd_client(&args[1..]),
+        Some("sim") => cmd_sim(&args[1..]),
+        Some("fig") => cmd_fig(&args[1..]),
+        Some("tables") => cmd_tables(&args[1..]),
+        _ => {
+            eprintln!("{}", HELP);
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+const HELP: &str = "accelserve — model serving with hardware-accelerated communication
+subcommands: serve | gateway | client | sim | fig | tables (see README.md)";
+
+/// Tiny flag parser: --key value pairs.
+fn flag<'a>(args: &'a [String], key: &str) -> Option<&'a str> {
+    args.iter()
+        .position(|a| a == key)
+        .and_then(|i| args.get(i + 1))
+        .map(String::as_str)
+}
+
+fn flag_or<'a>(args: &'a [String], key: &str, default: &'a str) -> &'a str {
+    flag(args, key).unwrap_or(default)
+}
+
+fn cmd_serve(a: &[String]) -> i32 {
+    let addr = flag_or(a, "--addr", "127.0.0.1:7007");
+    let streams: usize = flag_or(a, "--streams", "4").parse().unwrap_or(4);
+    let batch: usize = flag_or(a, "--batch", "1").parse().unwrap_or(1);
+    let dir = flag_or(a, "--artifacts", "artifacts");
+    let exec = match Executor::start(dir, streams, BatchCfg { max_batch: batch }, &[]) {
+        Ok(e) => Arc::new(e),
+        Err(e) => {
+            eprintln!("executor: {e:#}");
+            return 1;
+        }
+    };
+    match serve_tcp(addr, exec) {
+        Ok(h) => {
+            println!("serving on {} ({streams} streams, batch<={batch})", h.addr);
+            loop {
+                std::thread::sleep(std::time::Duration::from_secs(3600));
+            }
+        }
+        Err(e) => {
+            eprintln!("serve: {e:#}");
+            1
+        }
+    }
+}
+
+fn cmd_gateway(a: &[String]) -> i32 {
+    let addr = flag_or(a, "--addr", "127.0.0.1:7008");
+    let upstream = flag_or(a, "--upstream", "127.0.0.1:7007");
+    let up: std::net::SocketAddr = match upstream.parse() {
+        Ok(u) => u,
+        Err(e) => {
+            eprintln!("bad upstream {upstream}: {e}");
+            return 2;
+        }
+    };
+    match gateway_tcp(addr, up) {
+        Ok(h) => {
+            println!("gateway on {} -> {up}", h.addr);
+            loop {
+                std::thread::sleep(std::time::Duration::from_secs(3600));
+            }
+        }
+        Err(e) => {
+            eprintln!("gateway: {e:#}");
+            1
+        }
+    }
+}
+
+fn cmd_client(a: &[String]) -> i32 {
+    let addr = flag_or(a, "--addr", "127.0.0.1:7007");
+    let model = flag_or(a, "--model", "tiny_resnet").to_string();
+    let raw = flag(a, "--raw").map(|v| v == "true").unwrap_or(false);
+    let n: usize = flag_or(a, "-n", "100").parse().unwrap_or(100);
+    let c: usize = flag_or(a, "-c", "1").parse().unwrap_or(1);
+    let sock: std::net::SocketAddr = match addr.parse() {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("bad addr {addr}: {e}");
+            return 2;
+        }
+    };
+    let cfg = LoadCfg {
+        model,
+        raw,
+        n_clients: c,
+        requests_per_client: n,
+        priority_client: false,
+        payload_elems: if raw { 64 * 64 * 3 } else { 32 * 32 * 3 },
+        warmup: (n / 20).max(1),
+    };
+    match run_tcp(sock, &cfg) {
+        Ok(s) => {
+            let mut t = s.all.total.clone();
+            println!(
+                "requests={} throughput={:.1} rps  total p50={:.3} ms mean={:.3} ms  infer={:.3} ms  preproc={:.3} ms  net={:.3} ms",
+                s.all.n(),
+                s.throughput_rps,
+                t.quantile(0.5),
+                s.all.total.mean(),
+                s.all.infer.mean(),
+                s.all.preproc.mean(),
+                s.all.request.mean() + s.all.response.mean(),
+            );
+            0
+        }
+        Err(e) => {
+            eprintln!("client: {e:#}");
+            1
+        }
+    }
+}
+
+fn cmd_sim(a: &[String]) -> i32 {
+    if let Some(path) = flag(a, "--config") {
+        return match accelserve::config::load_scenario(path) {
+            Ok(sc) => {
+                let s = World::run(sc);
+                let (net, copy, proc) = s.all.fractions();
+                println!(
+                    "total={:.3} ms  net={:.1}% copy={:.1}% proc={:.1}%  thr={:.1} rps",
+                    s.all.total.mean(),
+                    net * 100.0,
+                    copy * 100.0,
+                    proc * 100.0,
+                    s.throughput_rps
+                );
+                0
+            }
+            Err(e) => {
+                eprintln!("config: {e:#}");
+                2
+            }
+        };
+    }
+    let model = flag_or(a, "--model", "ResNet50");
+    let Some(model) = PaperModel::by_name(model) else {
+        eprintln!("unknown model {model}; see `accelserve tables --which 2`");
+        return 2;
+    };
+    let Some(tr) = Transport::by_name(flag_or(a, "--transport", "gdr")) else {
+        eprintln!("unknown transport (local|tcp|rdma|gdr)");
+        return 2;
+    };
+    let c: usize = flag_or(a, "-c", "1").parse().unwrap_or(1);
+    let n: usize = flag_or(a, "-n", "300").parse().unwrap_or(300);
+    let sharing = match flag_or(a, "--sharing", "multi-stream") {
+        "multi-context" => Sharing::MultiContext,
+        "mps" => Sharing::Mps,
+        _ => Sharing::MultiStream,
+    };
+    let mut sc = Scenario::direct(model, tr)
+        .with_clients(c)
+        .with_requests(n)
+        .with_sharing(sharing)
+        .with_raw(flag_or(a, "--raw", "true") == "true");
+    if let Some(ch) = flag(a, "--client-hop").and_then(Transport::by_name) {
+        sc.client_hop = Some(ch);
+    }
+    if let Some(streams) = flag(a, "--streams").and_then(|s| s.parse().ok()) {
+        sc = sc.with_streams(streams);
+    }
+    let s = World::run(sc);
+    let (net, copy, proc) = s.all.fractions();
+    let mut t = s.all.total.clone();
+    println!(
+        "{} over {} x{}: total={:.3} ms (p99={:.3})  net={:.1}% copy={:.1}% proc={:.1}%  thr={:.1} rps  gpu_util={:.2}",
+        model.name,
+        tr.name(),
+        c,
+        s.all.total.mean(),
+        t.quantile(0.99),
+        net * 100.0,
+        copy * 100.0,
+        proc * 100.0,
+        s.throughput_rps,
+        s.gpu_util,
+    );
+    0
+}
+
+fn cmd_fig(a: &[String]) -> i32 {
+    let which = flag_or(a, "--which", "5");
+    let n: usize = flag_or(a, "--requests", "300").parse().unwrap_or(300);
+    let csv = a.iter().any(|x| x == "--csv");
+    let tables = match which {
+        "5" => vec![figs::fig5(n)],
+        "6" => vec![figs::fig6(n)],
+        "7" => vec![figs::fig7(n, true), figs::fig7(n, false)],
+        "8" => vec![figs::fig8(n, true), figs::fig8(n, false)],
+        "9" => vec![figs::fig9(n)],
+        "10" => vec![figs::fig10(n)],
+        "11" => vec![
+            figs::fig11("MobileNetV3", n),
+            figs::fig11("DeepLabV3_ResNet50", n / 3 + 1),
+        ],
+        "12" => vec![
+            figs::fig12_13("MobileNetV3", Transport::Tcp, n),
+            figs::fig12_13("MobileNetV3", Transport::Rdma, n),
+            figs::fig12_13("MobileNetV3", Transport::Gdr, n),
+        ],
+        "13" => vec![
+            figs::fig12_13("DeepLabV3_ResNet50", Transport::Tcp, n / 3 + 1),
+            figs::fig12_13("DeepLabV3_ResNet50", Transport::Rdma, n / 3 + 1),
+            figs::fig12_13("DeepLabV3_ResNet50", Transport::Gdr, n / 3 + 1),
+        ],
+        "14" => vec![figs::fig14(n / 2 + 1)],
+        "15" => vec![figs::fig15a(n), figs::fig15b(n), figs::fig15c(n)],
+        "16" => vec![figs::fig16(n / 2 + 1)],
+        "17" => vec![figs::fig17(n)],
+        _ => {
+            eprintln!("--which must be 5..17");
+            return 2;
+        }
+    };
+    for t in tables {
+        if csv {
+            print!("{}", t.to_csv());
+        } else {
+            print!("{}", t.render());
+        }
+    }
+    0
+}
+
+fn cmd_tables(a: &[String]) -> i32 {
+    match flag_or(a, "--which", "2") {
+        "2" => print!("{}", figs::table2().render()),
+        "3" => print!("{}", figs::table3().render()),
+        other => {
+            eprintln!("no table {other} (2 or 3; Table I is metrics/mod.rs docs)");
+            return 2;
+        }
+    }
+    0
+}

@@ -1,0 +1,92 @@
+//! CPU and memory usage sampling for the live plane, via the Linux
+//! /proc filesystem (the paper's §III-B uses /proc plus nvidia-smi).
+
+use std::fs;
+use std::time::Instant;
+
+/// One CPU-time sample of the current process (user+system jiffies).
+#[derive(Debug, Clone, Copy)]
+pub struct CpuSample {
+    pub utime_ticks: u64,
+    pub stime_ticks: u64,
+    pub wall: Instant,
+}
+
+/// RSS memory sample, bytes.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct MemSample {
+    pub rss_bytes: u64,
+    pub vsz_bytes: u64,
+}
+
+/// Reads /proc/self/stat. Returns None off-Linux or on parse failure.
+pub fn sample_cpu() -> Option<CpuSample> {
+    let stat = fs::read_to_string("/proc/self/stat").ok()?;
+    // Field 14 = utime, 15 = stime (1-indexed, after the comm field which
+    // may contain spaces — skip past the closing paren).
+    let rest = stat.rsplit_once(')')?.1;
+    let fields: Vec<&str> = rest.split_whitespace().collect();
+    Some(CpuSample {
+        utime_ticks: fields.get(11)?.parse().ok()?,
+        stime_ticks: fields.get(12)?.parse().ok()?,
+        wall: Instant::now(),
+    })
+}
+
+/// Reads /proc/self/statm.
+pub fn sample_mem() -> Option<MemSample> {
+    let statm = fs::read_to_string("/proc/self/statm").ok()?;
+    let mut it = statm.split_whitespace();
+    let page = 4096u64;
+    let vsz: u64 = it.next()?.parse().ok()?;
+    let rss: u64 = it.next()?.parse().ok()?;
+    Some(MemSample {
+        rss_bytes: rss * page,
+        vsz_bytes: vsz * page,
+    })
+}
+
+/// CPU seconds burned between two samples (user + system).
+pub fn cpu_secs_between(a: &CpuSample, b: &CpuSample) -> f64 {
+    let hz = ticks_per_second();
+    let du = b.utime_ticks.saturating_sub(a.utime_ticks);
+    let ds = b.stime_ticks.saturating_sub(a.stime_ticks);
+    (du + ds) as f64 / hz
+}
+
+fn ticks_per_second() -> f64 {
+    // SC_CLK_TCK; 100 on every mainstream Linux.
+    let v = unsafe { libc::sysconf(libc::_SC_CLK_TCK) };
+    if v > 0 {
+        v as f64
+    } else {
+        100.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cpu_sampling_works_on_linux() {
+        let a = sample_cpu().expect("proc stat");
+        // Burn a little CPU.
+        let mut acc = 0u64;
+        for i in 0..20_000_000u64 {
+            acc = acc.wrapping_add(i * i);
+        }
+        std::hint::black_box(acc);
+        let b = sample_cpu().expect("proc stat");
+        let secs = cpu_secs_between(&a, &b);
+        assert!(secs >= 0.0);
+        assert!(b.utime_ticks >= a.utime_ticks);
+    }
+
+    #[test]
+    fn mem_sampling_positive() {
+        let m = sample_mem().expect("proc statm");
+        assert!(m.rss_bytes > 1024 * 1024);
+        assert!(m.vsz_bytes >= m.rss_bytes);
+    }
+}

@@ -1,0 +1,17 @@
+//! Performance metrics (Table I) and their aggregation.
+//!
+//! | Category  | Metric             | Where                         |
+//! |-----------|--------------------|-------------------------------|
+//! | —         | total-time         | `ReqRecord::total`            |
+//! | Transport | request-time       | `ReqRecord::request`          |
+//! | Transport | response-time      | `ReqRecord::response`         |
+//! | GPU       | copy-time          | `ReqRecord::copy_h2d + d2h`   |
+//! | GPU       | preprocessing-time | `ReqRecord::preproc`          |
+//! | GPU       | inference-time     | `ReqRecord::infer`            |
+//! | CPU       | cpu-usage          | `ReqRecord::cpu_us` / `cpu`   |
+//! | Memory    | memory-usage       | `cpu::MemSample`              |
+
+pub mod cpu;
+pub mod stats;
+
+pub use stats::{ReqRecord, Series, StageAgg};

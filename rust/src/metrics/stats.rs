@@ -1,0 +1,273 @@
+//! Per-request records and streaming aggregation (mean / percentiles /
+//! CoV) for the Table I metrics.
+
+use crate::sim::time::Ns;
+
+/// Fine-grained latency breakdown of one model-serving request, the
+/// direct analogue of the CUDA-event/WR-timestamp profiling in §III-B.
+/// All stage durations include the queueing the request experienced in
+/// that stage (exactly as bracketing events would measure).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ReqRecord {
+    pub client: usize,
+    /// End-to-end model-serving latency.
+    pub total: Ns,
+    /// Client-to-server transport (incl. gateway hops in proxied mode).
+    pub request: Ns,
+    /// Server-to-client transport.
+    pub response: Ns,
+    /// Host-to-device staging copy (zero for GDR/local).
+    pub copy_h2d: Ns,
+    /// Device-to-host staging copy (zero for GDR/local).
+    pub copy_d2h: Ns,
+    /// GPU preprocessing stage (zero when serving preprocessed tensors).
+    pub preproc: Ns,
+    /// GPU inference stage (incl. stream-slot queueing).
+    pub infer: Ns,
+    /// CPU time consumed serving this request (client+gateway+server).
+    pub cpu_us: f64,
+    /// High-priority client flag (Fig 16).
+    pub priority: bool,
+}
+
+impl ReqRecord {
+    /// copy-time of Table I: H2D + D2H.
+    pub fn copy(&self) -> Ns {
+        self.copy_h2d + self.copy_d2h
+    }
+
+    /// GPU processing time (preprocessing + inference), the quantity
+    /// whose CoV Fig 15(c) reports.
+    pub fn processing(&self) -> Ns {
+        self.preproc + self.infer
+    }
+
+    /// Total data-movement time (copy + request + response), the
+    /// "communication fraction" of Fig 8.
+    pub fn data_movement(&self) -> Ns {
+        self.copy() + self.request + self.response
+    }
+}
+
+/// Streaming aggregate over a set of duration samples (ms domain).
+#[derive(Debug, Clone, Default)]
+pub struct Series {
+    samples: Vec<f64>,
+    sorted: bool,
+}
+
+impl Series {
+    pub fn new() -> Series {
+        Series::default()
+    }
+
+    pub fn push(&mut self, v_ms: f64) {
+        self.samples.push(v_ms);
+        self.sorted = false;
+    }
+
+    pub fn push_ns(&mut self, v: Ns) {
+        self.push(v.as_ms());
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        self.samples.iter().sum::<f64>() / self.samples.len() as f64
+    }
+
+    pub fn std(&self) -> f64 {
+        let n = self.samples.len();
+        if n < 2 {
+            return 0.0;
+        }
+        let m = self.mean();
+        (self.samples.iter().map(|v| (v - m) * (v - m)).sum::<f64>() / (n - 1) as f64)
+            .sqrt()
+    }
+
+    /// Coefficient of variation sigma/mu (Fig 15c).
+    pub fn cov(&self) -> f64 {
+        let m = self.mean();
+        if m == 0.0 {
+            0.0
+        } else {
+            self.std() / m
+        }
+    }
+
+    /// Quantile in [0, 1] by nearest-rank on the sorted samples.
+    pub fn quantile(&mut self, q: f64) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        if !self.sorted {
+            self.samples
+                .sort_by(|a, b| a.partial_cmp(b).expect("NaN sample"));
+            self.sorted = true;
+        }
+        let idx = ((self.samples.len() as f64 - 1.0) * q.clamp(0.0, 1.0)).round() as usize;
+        self.samples[idx]
+    }
+
+    pub fn min(&mut self) -> f64 {
+        self.quantile(0.0)
+    }
+
+    pub fn max(&mut self) -> f64 {
+        self.quantile(1.0)
+    }
+}
+
+/// Aggregated per-stage breakdown over a run (the Fig 6/8/12/13 rows).
+#[derive(Debug, Clone, Default)]
+pub struct StageAgg {
+    pub total: Series,
+    pub request: Series,
+    pub response: Series,
+    pub copy_h2d: Series,
+    pub copy_d2h: Series,
+    pub preproc: Series,
+    pub infer: Series,
+    pub processing: Series,
+    pub cpu_us: Series,
+}
+
+impl StageAgg {
+    pub fn new() -> StageAgg {
+        StageAgg::default()
+    }
+
+    pub fn push(&mut self, r: &ReqRecord) {
+        self.total.push_ns(r.total);
+        self.request.push_ns(r.request);
+        self.response.push_ns(r.response);
+        self.copy_h2d.push_ns(r.copy_h2d);
+        self.copy_d2h.push_ns(r.copy_d2h);
+        self.preproc.push_ns(r.preproc);
+        self.infer.push_ns(r.infer);
+        self.processing.push_ns(r.processing());
+        self.cpu_us.push(r.cpu_us);
+    }
+
+    pub fn n(&self) -> usize {
+        self.total.len()
+    }
+
+    /// Mean copy-time (H2D + D2H), ms.
+    pub fn copy_mean(&self) -> f64 {
+        self.copy_h2d.mean() + self.copy_d2h.mean()
+    }
+
+    /// Mean data-movement time (Fig 8's communication share), ms.
+    pub fn data_movement_mean(&self) -> f64 {
+        self.copy_mean() + self.request.mean() + self.response.mean()
+    }
+
+    /// Fraction of mean total time spent in each stage:
+    /// (request+response, copy, preproc+infer). Sums to ~1.
+    pub fn fractions(&self) -> (f64, f64, f64) {
+        let t = self.total.mean();
+        if t == 0.0 {
+            return (0.0, 0.0, 0.0);
+        }
+        let net = (self.request.mean() + self.response.mean()) / t;
+        let copy = self.copy_mean() / t;
+        let proc = (self.preproc.mean() + self.infer.mean()) / t;
+        (net, copy, proc)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(total_ms: f64) -> ReqRecord {
+        ReqRecord {
+            total: Ns::from_ms(total_ms),
+            request: Ns::from_ms(total_ms * 0.1),
+            response: Ns::from_ms(total_ms * 0.1),
+            copy_h2d: Ns::from_ms(total_ms * 0.05),
+            copy_d2h: Ns::from_ms(total_ms * 0.05),
+            preproc: Ns::from_ms(total_ms * 0.1),
+            infer: Ns::from_ms(total_ms * 0.6),
+            cpu_us: total_ms * 100.0,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn series_moments() {
+        let mut s = Series::new();
+        for v in [1.0, 2.0, 3.0, 4.0, 5.0] {
+            s.push(v);
+        }
+        assert_eq!(s.mean(), 3.0);
+        assert!((s.std() - 1.5811).abs() < 1e-3);
+        assert!((s.cov() - 0.527).abs() < 1e-2);
+        assert_eq!(s.quantile(0.5), 3.0);
+        assert_eq!(s.min(), 1.0);
+        assert_eq!(s.max(), 5.0);
+    }
+
+    #[test]
+    fn series_empty_and_single() {
+        let mut s = Series::new();
+        assert_eq!(s.mean(), 0.0);
+        assert_eq!(s.quantile(0.5), 0.0);
+        s.push(7.0);
+        assert_eq!(s.std(), 0.0);
+        assert_eq!(s.cov(), 0.0);
+        assert_eq!(s.quantile(0.99), 7.0);
+    }
+
+    #[test]
+    fn quantile_bounds_property() {
+        // For any sample set and q, min <= quantile(q) <= max, monotone in q.
+        let mut rng = crate::sim::rng::Rng::new(5);
+        for _ in 0..50 {
+            let mut s = Series::new();
+            let n = 1 + rng.below(200);
+            for _ in 0..n {
+                s.push(rng.uniform(-100.0, 100.0));
+            }
+            let mut prev = f64::NEG_INFINITY;
+            for q in [0.0, 0.1, 0.5, 0.9, 0.99, 1.0] {
+                let v = s.quantile(q);
+                assert!(v >= prev - 1e-12);
+                prev = v;
+            }
+            let lo = s.min();
+            let hi = s.max();
+            assert!(lo <= hi);
+        }
+    }
+
+    #[test]
+    fn record_derived_metrics() {
+        let r = rec(10.0);
+        assert!((r.copy().as_ms() - 1.0).abs() < 1e-9);
+        assert!((r.processing().as_ms() - 7.0).abs() < 1e-9);
+        assert!((r.data_movement().as_ms() - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn stage_fractions_sum_to_one() {
+        let mut agg = StageAgg::new();
+        for i in 0..100 {
+            agg.push(&rec(5.0 + i as f64 * 0.1));
+        }
+        let (net, copy, proc) = agg.fractions();
+        assert!(((net + copy + proc) - 1.0).abs() < 1e-6);
+        assert!(proc > net && proc > copy);
+    }
+}

@@ -1,0 +1,193 @@
+//! Live-plane artifact manifest: the JSON index `python -m compile.aot`
+//! writes next to the HLO text artifacts.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::json::Json;
+
+/// One AOT-compiled serving executable.
+#[derive(Debug, Clone)]
+pub struct ArtifactEntry {
+    pub name: String,
+    /// Source model name (e.g. "tiny_resnet").
+    pub model: String,
+    pub task: String,
+    /// HLO text file, relative to the manifest directory.
+    pub file: String,
+    /// Input shapes/dtypes, in parameter order.
+    pub inputs: Vec<TensorSpec>,
+    pub output: TensorSpec,
+    pub gflops: f64,
+}
+
+/// Shape + dtype of one tensor.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn byte_len(&self) -> usize {
+        let per = match self.dtype.as_str() {
+            "f32" | "i32" => 4,
+            "u8" => 1,
+            "f16" | "bf16" => 2,
+            _ => 4,
+        };
+        self.elems() * per
+    }
+
+    fn from_json(v: &Json) -> Result<TensorSpec> {
+        let shape = v
+            .get("shape")
+            .and_then(Json::as_arr)
+            .context("tensor missing shape")?
+            .iter()
+            .map(|d| d.as_u64().map(|u| u as usize).context("bad dim"))
+            .collect::<Result<Vec<_>>>()?;
+        let dtype = v
+            .get("dtype")
+            .and_then(Json::as_str)
+            .context("tensor missing dtype")?
+            .to_string();
+        Ok(TensorSpec { shape, dtype })
+    }
+}
+
+/// The parsed manifest plus its directory (for resolving artifact paths).
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: Vec<ArtifactEntry>,
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&text, dir)
+    }
+
+    pub fn parse(text: &str, dir: PathBuf) -> Result<Manifest> {
+        let root = Json::parse(text).context("parsing manifest.json")?;
+        let format = root.get("format").and_then(Json::as_u64).unwrap_or(0);
+        if format != 1 {
+            bail!("unsupported manifest format {format}");
+        }
+        let mut artifacts = Vec::new();
+        for a in root
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .context("manifest missing artifacts")?
+        {
+            let inputs = a
+                .get("inputs")
+                .and_then(Json::as_arr)
+                .context("artifact missing inputs")?
+                .iter()
+                .map(TensorSpec::from_json)
+                .collect::<Result<Vec<_>>>()?;
+            artifacts.push(ArtifactEntry {
+                name: req_str(a, "name")?,
+                model: req_str(a, "model")?,
+                task: req_str(a, "task")?,
+                file: req_str(a, "file")?,
+                inputs,
+                output: TensorSpec::from_json(
+                    a.get("output").context("artifact missing output")?,
+                )?,
+                gflops: a.get("gflops").and_then(Json::as_f64).unwrap_or(0.0),
+            });
+        }
+        Ok(Manifest { dir, artifacts })
+    }
+
+    pub fn get(&self, name: &str) -> Option<&ArtifactEntry> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+
+    /// Absolute path of an artifact's HLO text.
+    pub fn hlo_path(&self, entry: &ArtifactEntry) -> PathBuf {
+        self.dir.join(&entry.file)
+    }
+
+    /// Batched variants available for a model, sorted ascending.
+    pub fn batch_sizes(&self, model: &str) -> Vec<usize> {
+        let mut v: Vec<usize> = self
+            .artifacts
+            .iter()
+            .filter(|a| a.model == model)
+            .filter_map(|a| {
+                a.name
+                    .rsplit_once("_b")
+                    .and_then(|(_, b)| b.parse::<usize>().ok())
+            })
+            .collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+}
+
+fn req_str(v: &Json, key: &str) -> Result<String> {
+    Ok(v.get(key)
+        .and_then(Json::as_str)
+        .with_context(|| format!("artifact missing {key}"))?
+        .to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "format": 1, "jax": "0.8.2",
+      "artifacts": [
+        {"name": "m_b1", "model": "m", "task": "classification",
+         "file": "m_b1.hlo.txt",
+         "inputs": [{"shape": [1, 32, 32, 3], "dtype": "f32"}],
+         "output": {"shape": [1, 1000], "dtype": "f32"},
+         "gflops": 0.005, "params": 10, "sha256": "ab", "hlo_bytes": 2},
+        {"name": "m_b4", "model": "m", "task": "classification",
+         "file": "m_b4.hlo.txt",
+         "inputs": [{"shape": [4, 32, 32, 3], "dtype": "f32"}],
+         "output": {"shape": [4, 1000], "dtype": "f32"},
+         "gflops": 0.02, "params": 10, "sha256": "cd", "hlo_bytes": 2}
+      ]}"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/tmp")).unwrap();
+        assert_eq!(m.artifacts.len(), 2);
+        let a = m.get("m_b1").unwrap();
+        assert_eq!(a.inputs[0].shape, vec![1, 32, 32, 3]);
+        assert_eq!(a.inputs[0].byte_len(), 32 * 32 * 3 * 4);
+        assert_eq!(a.output.shape, vec![1, 1000]);
+        assert_eq!(m.hlo_path(a), PathBuf::from("/tmp/m_b1.hlo.txt"));
+        assert_eq!(m.batch_sizes("m"), vec![1, 4]);
+    }
+
+    #[test]
+    fn rejects_bad_format() {
+        assert!(Manifest::parse(r#"{"format": 2, "artifacts": []}"#, "/".into()).is_err());
+        assert!(Manifest::parse("{}", "/".into()).is_err());
+    }
+
+    #[test]
+    fn real_manifest_loads_if_present() {
+        // Integration hook: when `make artifacts` has run, validate it.
+        if let Ok(m) = Manifest::load(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts")) {
+            assert!(m.get("tiny_resnet_b1").is_some());
+            assert!(!m.batch_sizes("tiny_resnet").is_empty());
+        }
+    }
+}

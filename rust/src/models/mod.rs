@@ -1,0 +1,8 @@
+//! Model zoo: the paper's Table II DNNs (sim plane) and the live-plane
+//! artifact manifest.
+
+pub mod manifest;
+pub mod zoo;
+
+pub use manifest::{ArtifactEntry, Manifest};
+pub use zoo::{PaperModel, WorkloadData, ZOO};

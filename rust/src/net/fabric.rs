@@ -1,0 +1,130 @@
+//! Shared-link fabric state: serializes concurrent transfers on each
+//! 25 GbE direction so that many-client, large-payload workloads (e.g.
+//! DeepLabV3's 45 MB responses) contend for wire bandwidth like they do
+//! on the paper's testbed.
+
+use crate::net::params::TransportParams;
+use crate::sim::rng::Rng;
+use crate::sim::time::Ns;
+
+/// Line rate of the facility fabric (Table III: ConnectX-5 25 GbE).
+pub const LINE_RATE_GBPS: f64 = 25.0;
+
+/// Direction / hop of a transfer, used to pick the serialized link.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TransferKind {
+    /// Client (or gateway) -> GPU server.
+    Request,
+    /// GPU server -> client (or gateway).
+    Response,
+    /// Client -> gateway (proxied mode, first hop).
+    ProxyIn,
+    /// Gateway -> client (proxied mode, return hop).
+    ProxyOut,
+}
+
+impl TransferKind {
+    fn index(self) -> usize {
+        match self {
+            TransferKind::Request => 0,
+            TransferKind::Response => 1,
+            TransferKind::ProxyIn => 2,
+            TransferKind::ProxyOut => 3,
+        }
+    }
+}
+
+/// FIFO wire occupancy per link direction + per-message latency sampling.
+#[derive(Debug, Clone)]
+pub struct Fabric {
+    busy_until: [Ns; 4],
+}
+
+impl Default for Fabric {
+    fn default() -> Self {
+        Fabric {
+            busy_until: [Ns::ZERO; 4],
+        }
+    }
+}
+
+impl Fabric {
+    pub fn new() -> Fabric {
+        Fabric::default()
+    }
+
+    /// Wire occupancy of `bytes` at line rate.
+    pub fn occupancy(bytes: u64) -> Ns {
+        Ns::from_us(bytes as f64 * 8.0 / LINE_RATE_GBPS / 1_000.0)
+    }
+
+    /// Begin a transfer at `now`; returns its completion time.
+    ///
+    /// The payload occupies the link serially at line rate (FIFO among
+    /// concurrent senders); the message additionally pays the transport's
+    /// per-message latency (stack/WR fixed cost + sub-line-rate latency
+    /// bandwidth + jitter), of which the occupancy is a lower bound.
+    pub fn transfer(
+        &mut self,
+        kind: TransferKind,
+        bytes: u64,
+        params: &TransportParams,
+        now: Ns,
+        rng: &mut Rng,
+    ) -> Ns {
+        let idx = kind.index();
+        let start = now.max(self.busy_until[idx]);
+        self.busy_until[idx] = start + Self::occupancy(bytes);
+        let hop = params.sample_hop(bytes, rng).max(Self::occupancy(bytes));
+        start + hop
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::params::{GDR_PARAMS, TCP_PARAMS};
+
+    #[test]
+    fn occupancy_at_line_rate() {
+        // 25 Gbit/s => 1 MB takes 320 us on the wire.
+        let t = Fabric::occupancy(1_000_000);
+        assert!((t.as_us() - 320.0).abs() < 1.0, "{t}");
+    }
+
+    #[test]
+    fn concurrent_transfers_serialize() {
+        let mut f = Fabric::new();
+        let mut rng = Rng::new(1);
+        let a = f.transfer(TransferKind::Response, 10_000_000, &GDR_PARAMS, Ns::ZERO, &mut rng);
+        let b = f.transfer(TransferKind::Response, 10_000_000, &GDR_PARAMS, Ns::ZERO, &mut rng);
+        // Second transfer starts only after the first's wire occupancy.
+        assert!(b.as_us() > a.as_us() * 1.5, "a={a} b={b}");
+    }
+
+    #[test]
+    fn directions_independent() {
+        let mut f = Fabric::new();
+        let mut rng = Rng::new(2);
+        let _ = f.transfer(TransferKind::Request, 50_000_000, &TCP_PARAMS, Ns::ZERO, &mut rng);
+        let b = f.transfer(TransferKind::Response, 1_000, &TCP_PARAMS, Ns::ZERO, &mut rng);
+        // A huge request transfer must not delay the response link.
+        assert!(b.as_us() < 1_000.0, "{b}");
+    }
+
+    #[test]
+    fn hop_never_faster_than_wire() {
+        let mut f = Fabric::new();
+        let mut rng = Rng::new(3);
+        for _ in 0..100 {
+            let done = f.transfer(
+                TransferKind::ProxyIn,
+                2_000_000,
+                &GDR_PARAMS,
+                Ns::ZERO,
+                &mut rng,
+            );
+            assert!(done >= Fabric::occupancy(2_000_000));
+        }
+    }
+}

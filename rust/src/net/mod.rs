@@ -1,0 +1,9 @@
+//! Network fabric models: the edge facility's internal 25 GbE fabric under
+//! TCP (ZeroMQ), RDMA (RoCEv2) and GPUDirect RDMA, plus the proxied
+//! (gateway) connection mode.
+
+pub mod fabric;
+pub mod params;
+
+pub use fabric::{Fabric, TransferKind};
+pub use params::{Transport, TransportParams, PROXY_PARAMS};

@@ -1,0 +1,248 @@
+//! Transport mechanisms and their calibrated fabric parameters.
+//!
+//! The facility fabric is 25 GbE with ConnectX-5 RNICs (Table III). Per
+//! transport we model the **per-message latency path** an offloaded
+//! request experiences:
+//!
+//! * TCP (ZeroMQ): sender memcpy into the socket, kernel protocol stack,
+//!   wire, receiver stack + delivery. CPU does per-byte work on both
+//!   sides; per-message *latency* bandwidth is far below link line rate
+//!   (single closed-loop message, no pipelining) and jittery.
+//! * RDMA: WR posted to the RNIC; NIC DMAs payload host-RAM-to-host-RAM.
+//!   Near-line-rate, microsecond fixed cost, very low jitter. Server
+//!   still needs H2D/D2H copies through the GPU copy engines.
+//! * GDR: identical wire behaviour to RDMA but the RNIC DMAs directly
+//!   into/out of GPU memory: the copy-engine stages disappear.
+//!
+//! Values are calibrated against the paper's own single-client deltas
+//! (§IV-A: TCP sends raw/preproc 0.73/0.61 ms slower than GDR; GDR adds
+//! 0.27–0.53 ms over local) — see EXPERIMENTS.md §Calibration.
+
+use crate::sim::rng::Rng;
+use crate::sim::time::Ns;
+
+/// Transport mechanism for one hop (Experimental Scenarios, §III-C).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Transport {
+    /// On-device processing: no data movement at all (lower bound).
+    Local,
+    /// TCP-based ZeroMQ transport (no serialization, Router-Dealer).
+    Tcp,
+    /// RDMA_WRITE into host RAM; GPU copies via copy engines.
+    Rdma,
+    /// GPUDirect RDMA: RNIC DMA straight to/from GPU memory.
+    Gdr,
+}
+
+impl Transport {
+    pub fn name(self) -> &'static str {
+        match self {
+            Transport::Local => "Local",
+            Transport::Tcp => "TCP",
+            Transport::Rdma => "RDMA",
+            Transport::Gdr => "GDR",
+        }
+    }
+
+    /// Does the server need H2D/D2H staging copies through the GPU copy
+    /// engines for this transport? (Fig 2a vs 2b.)
+    pub fn needs_gpu_copies(self) -> bool {
+        matches!(self, Transport::Tcp | Transport::Rdma)
+    }
+
+    pub fn params(self) -> &'static TransportParams {
+        match self {
+            Transport::Local => &LOCAL_PARAMS,
+            Transport::Tcp => &TCP_PARAMS,
+            Transport::Rdma => &RDMA_PARAMS,
+            Transport::Gdr => &GDR_PARAMS,
+        }
+    }
+
+    pub fn by_name(s: &str) -> Option<Transport> {
+        match s.to_ascii_lowercase().as_str() {
+            "local" => Some(Transport::Local),
+            "tcp" | "zeromq" | "zmq" => Some(Transport::Tcp),
+            "rdma" => Some(Transport::Rdma),
+            "gdr" | "gpudirect" => Some(Transport::Gdr),
+            _ => None,
+        }
+    }
+}
+
+/// Latency/CPU model of one transport hop.
+#[derive(Debug, Clone)]
+pub struct TransportParams {
+    /// Fixed per-message overhead (stack traversal / WR post + WC poll), us.
+    pub fixed_us: f64,
+    /// Effective per-message payload rate, Gbit/s (latency bandwidth of a
+    /// single closed-loop message, not streaming goodput).
+    pub goodput_gbps: f64,
+    /// Coefficient of variation of the sampled hop latency.
+    pub jitter_cov: f64,
+    /// Fixed CPU time consumed per message (send+recv handling), us.
+    pub cpu_fixed_us: f64,
+    /// CPU time per payload byte (stack copies / checksums), ns per byte.
+    pub cpu_ns_per_byte: f64,
+}
+
+impl TransportParams {
+    /// Wire/stack time for `bytes` through this hop (mean, us).
+    pub fn hop_mean_us(&self, bytes: u64) -> f64 {
+        self.fixed_us + bytes as f64 * 8.0 / self.goodput_gbps / 1_000.0
+    }
+
+    /// Sampled hop latency.
+    pub fn sample_hop(&self, bytes: u64, rng: &mut Rng) -> Ns {
+        Ns::from_us(self.hop_mean_us(bytes) * rng.noise(self.jitter_cov))
+    }
+
+    /// CPU time charged for moving `bytes` through this hop (us).
+    pub fn cpu_us(&self, bytes: u64) -> f64 {
+        self.cpu_fixed_us + bytes as f64 * self.cpu_ns_per_byte / 1_000.0
+    }
+}
+
+/// TCP/ZeroMQ: two socket copies + stack each side; single in-flight
+/// message sees ~6.5 Gbit/s latency bandwidth on the 25 GbE link.
+pub static TCP_PARAMS: TransportParams = TransportParams {
+    fixed_us: 60.0,
+    goodput_gbps: 6.5,
+    jitter_cov: 0.18,
+    cpu_fixed_us: 25.0,
+    cpu_ns_per_byte: 0.8,
+};
+
+/// RDMA (RoCEv2 on ConnectX-5): RNIC DMA at near line rate.
+pub static RDMA_PARAMS: TransportParams = TransportParams {
+    fixed_us: 8.0,
+    goodput_gbps: 24.2,
+    jitter_cov: 0.03,
+    cpu_fixed_us: 3.0,
+    cpu_ns_per_byte: 0.0,
+};
+
+/// GDR: identical wire path to RDMA (the difference is on the GPU side).
+pub static GDR_PARAMS: TransportParams = TransportParams {
+    fixed_us: 8.0,
+    goodput_gbps: 24.2,
+    jitter_cov: 0.03,
+    cpu_fixed_us: 3.0,
+    cpu_ns_per_byte: 0.0,
+};
+
+/// Local processing: no hop.
+pub static LOCAL_PARAMS: TransportParams = TransportParams {
+    fixed_us: 0.0,
+    goodput_gbps: f64::INFINITY,
+    jitter_cov: 0.0,
+    cpu_fixed_us: 0.0,
+    cpu_ns_per_byte: 0.0,
+};
+
+/// Gateway (Router-Dealer proxy) costs: store-and-forward plus protocol
+/// translation when the two hops use different mechanisms (a buffer
+/// re-registration / copy between the TCP socket and the RDMA MR).
+#[derive(Debug, Clone)]
+pub struct ProxyParams {
+    /// Fixed forwarding decision + queue handoff, us.
+    pub forward_fixed_us: f64,
+    /// Translation cost per byte when hop protocols differ, ns/B (one
+    /// memcpy between transport buffers at gateway memory bandwidth).
+    pub translate_ns_per_byte: f64,
+}
+
+pub static PROXY_PARAMS: ProxyParams = ProxyParams {
+    forward_fixed_us: 15.0,
+    translate_ns_per_byte: 0.08,
+};
+
+impl ProxyParams {
+    /// Gateway residence time for a message of `bytes`, given whether the
+    /// ingress and egress protocols differ.
+    pub fn residence_us(&self, bytes: u64, translated: bool) -> f64 {
+        let t = if translated {
+            bytes as f64 * self.translate_ns_per_byte / 1_000.0
+        } else {
+            0.0
+        };
+        self.forward_fixed_us + t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn copy_requirements_follow_fig2() {
+        assert!(Transport::Tcp.needs_gpu_copies());
+        assert!(Transport::Rdma.needs_gpu_copies());
+        assert!(!Transport::Gdr.needs_gpu_copies());
+        assert!(!Transport::Local.needs_gpu_copies());
+    }
+
+    #[test]
+    fn single_flow_ordering_gdr_leq_rdma_leq_tcp() {
+        // Property: for any payload, mean hop latency orders GDR = RDMA < TCP.
+        for bytes in [1u64, 4_000, 602_112, 3_932_160, 45_000_000] {
+            let t = TCP_PARAMS.hop_mean_us(bytes);
+            let r = RDMA_PARAMS.hop_mean_us(bytes);
+            let g = GDR_PARAMS.hop_mean_us(bytes);
+            assert_eq!(r, g);
+            assert!(g < t, "bytes={bytes}: gdr {g} !< tcp {t}");
+        }
+    }
+
+    #[test]
+    fn latency_monotone_in_bytes() {
+        let mut prev = 0.0;
+        for bytes in [0u64, 1_000, 10_000, 100_000, 1_000_000] {
+            let t = TCP_PARAMS.hop_mean_us(bytes);
+            assert!(t >= prev);
+            prev = t;
+        }
+    }
+
+    #[test]
+    fn paper_send_deltas_approximated() {
+        // §IV-A: TCP sends raw images ~0.73 ms slower and preprocessed
+        // tensors ~0.61 ms slower than GDR (ResNet50, 224x224).
+        let raw = crate::models::zoo::PaperModel::by_name("ResNet50")
+            .unwrap()
+            .raw_bytes();
+        let pre = 3 * 224 * 224 * 4u64;
+        let d_raw = TCP_PARAMS.hop_mean_us(raw) - GDR_PARAMS.hop_mean_us(raw);
+        let d_pre = TCP_PARAMS.hop_mean_us(pre) - GDR_PARAMS.hop_mean_us(pre);
+        assert!((0.45..1.1).contains(&(d_raw / 1_000.0)), "raw delta {d_raw}us");
+        assert!((0.35..0.9).contains(&(d_pre / 1_000.0)), "pre delta {d_pre}us");
+        assert!(d_raw > d_pre);
+    }
+
+    #[test]
+    fn tcp_burns_cpu_rdma_does_not() {
+        let b = 1_000_000;
+        assert!(TCP_PARAMS.cpu_us(b) > 100.0 * RDMA_PARAMS.cpu_us(b) / 10.0);
+        assert_eq!(RDMA_PARAMS.cpu_us(b), GDR_PARAMS.cpu_us(b));
+    }
+
+    #[test]
+    fn sampling_deterministic_and_near_mean() {
+        let mut rng = Rng::new(11);
+        let mut sum = 0.0;
+        let n = 5_000;
+        for _ in 0..n {
+            sum += TCP_PARAMS.sample_hop(602_112, &mut rng).as_us();
+        }
+        let mean = sum / n as f64;
+        let want = TCP_PARAMS.hop_mean_us(602_112);
+        assert!((mean - want).abs() / want < 0.03, "{mean} vs {want}");
+    }
+
+    #[test]
+    fn proxy_translation_costs_extra() {
+        let same = PROXY_PARAMS.residence_us(1_000_000, false);
+        let diff = PROXY_PARAMS.residence_us(1_000_000, true);
+        assert!(diff > same);
+    }
+}

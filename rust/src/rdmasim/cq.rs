@@ -1,0 +1,153 @@
+//! Completion queues: where work completions (WC) land after the
+//! "NIC" finishes a one-sided write. The paper's client blocks on WC
+//! events for its request and the corresponding response (§III-A).
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::Duration;
+
+/// One work completion event.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct WorkCompletion {
+    /// Caller-chosen work-request id (correlates request/response).
+    pub wr_id: u64,
+    /// Payload length of the completed write.
+    pub byte_len: usize,
+    /// Offset within the target MR that was written.
+    pub offset: usize,
+}
+
+/// A multi-producer completion queue with blocking poll.
+#[derive(Debug, Default)]
+pub struct CompletionQueue {
+    q: Mutex<VecDeque<WorkCompletion>>,
+    cv: Condvar,
+    capacity: usize,
+}
+
+impl CompletionQueue {
+    pub fn with_capacity(capacity: usize) -> CompletionQueue {
+        CompletionQueue {
+            q: Mutex::new(VecDeque::with_capacity(capacity)),
+            cv: Condvar::new(),
+            capacity,
+        }
+    }
+
+    /// Push a completion (the "NIC" side). Returns false when the CQ
+    /// overflows — a fatal connection error on real hardware.
+    pub fn push(&self, wc: WorkCompletion) -> bool {
+        let mut q = self.q.lock().expect("cq poisoned");
+        if self.capacity > 0 && q.len() >= self.capacity {
+            return false;
+        }
+        q.push_back(wc);
+        self.cv.notify_one();
+        true
+    }
+
+    /// Non-blocking poll.
+    pub fn poll(&self) -> Option<WorkCompletion> {
+        self.q.lock().expect("cq poisoned").pop_front()
+    }
+
+    /// Blocking poll (busy clients in the paper block on WC events).
+    pub fn poll_blocking(&self) -> WorkCompletion {
+        let mut q = self.q.lock().expect("cq poisoned");
+        loop {
+            if let Some(wc) = q.pop_front() {
+                return wc;
+            }
+            q = self.cv.wait(q).expect("cq poisoned");
+        }
+    }
+
+    /// Blocking poll with timeout; None on expiry.
+    pub fn poll_timeout(&self, dur: Duration) -> Option<WorkCompletion> {
+        let deadline = std::time::Instant::now() + dur;
+        let mut q = self.q.lock().expect("cq poisoned");
+        loop {
+            if let Some(wc) = q.pop_front() {
+                return Some(wc);
+            }
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                return None;
+            }
+            let (guard, res) = self
+                .cv
+                .wait_timeout(q, deadline - now)
+                .expect("cq poisoned");
+            q = guard;
+            if res.timed_out() && q.is_empty() {
+                return None;
+            }
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.q.lock().expect("cq poisoned").len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    fn wc(id: u64) -> WorkCompletion {
+        WorkCompletion {
+            wr_id: id,
+            byte_len: 0,
+            offset: 0,
+        }
+    }
+
+    #[test]
+    fn fifo_order() {
+        let cq = CompletionQueue::with_capacity(8);
+        for i in 0..5 {
+            assert!(cq.push(wc(i)));
+        }
+        for i in 0..5 {
+            assert_eq!(cq.poll().unwrap().wr_id, i);
+        }
+        assert!(cq.poll().is_none());
+    }
+
+    #[test]
+    fn capacity_overflow_detected() {
+        let cq = CompletionQueue::with_capacity(2);
+        assert!(cq.push(wc(1)));
+        assert!(cq.push(wc(2)));
+        assert!(!cq.push(wc(3)), "overflow must be reported");
+        assert_eq!(cq.len(), 2);
+    }
+
+    #[test]
+    fn blocking_poll_wakes_on_push() {
+        let cq = Arc::new(CompletionQueue::with_capacity(4));
+        let cq2 = cq.clone();
+        let h = std::thread::spawn(move || cq2.poll_blocking().wr_id);
+        std::thread::sleep(Duration::from_millis(20));
+        cq.push(wc(99));
+        assert_eq!(h.join().unwrap(), 99);
+    }
+
+    #[test]
+    fn poll_timeout_expires() {
+        let cq = CompletionQueue::with_capacity(4);
+        let t0 = std::time::Instant::now();
+        assert!(cq.poll_timeout(Duration::from_millis(30)).is_none());
+        assert!(t0.elapsed() >= Duration::from_millis(25));
+        cq.push(wc(1));
+        assert_eq!(
+            cq.poll_timeout(Duration::from_millis(30)).unwrap().wr_id,
+            1
+        );
+    }
+}

@@ -1,0 +1,122 @@
+//! Registered memory regions: the pinned buffers RDMA peers expose.
+//!
+//! A region is a fixed-size byte buffer a remote QP may write into
+//! ("RDMA target memory", §II-B). In GDR mode the same abstraction
+//! stands for GPU device memory (the paper's point is precisely that
+//! GDR makes device memory a first-class RDMA target).
+
+use std::sync::atomic::{AtomicU32, Ordering};
+use std::sync::Mutex;
+
+static NEXT_RKEY: AtomicU32 = AtomicU32::new(1);
+
+/// A registered (conceptually pinned) memory region.
+#[derive(Debug)]
+pub struct MemoryRegion {
+    buf: Mutex<Vec<u8>>,
+    len: usize,
+    rkey: u32,
+}
+
+impl MemoryRegion {
+    /// Register a region of `len` bytes (zero-initialized).
+    pub fn register(len: usize) -> MemoryRegion {
+        MemoryRegion {
+            buf: Mutex::new(vec![0u8; len]),
+            len,
+            rkey: NEXT_RKEY.fetch_add(1, Ordering::Relaxed),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// The remote key peers use to address this region.
+    pub fn rkey(&self) -> u32 {
+        self.rkey
+    }
+
+    /// DMA write into the region. Errors on out-of-bounds access —
+    /// mirroring an RNIC's protection-domain check.
+    pub fn write(&self, offset: usize, data: &[u8]) -> Result<(), MrError> {
+        if offset + data.len() > self.len {
+            return Err(MrError::OutOfBounds {
+                offset,
+                len: data.len(),
+                region: self.len,
+            });
+        }
+        let mut buf = self.buf.lock().expect("mr poisoned");
+        buf[offset..offset + data.len()].copy_from_slice(data);
+        Ok(())
+    }
+
+    /// Read a slice of the region (the local owner's view).
+    pub fn read(&self, offset: usize, len: usize) -> Vec<u8> {
+        let buf = self.buf.lock().expect("mr poisoned");
+        buf[offset..offset + len].to_vec()
+    }
+
+    /// Run `f` over the region contents without copying out.
+    pub fn with<R>(&self, offset: usize, len: usize, f: impl FnOnce(&[u8]) -> R) -> R {
+        let buf = self.buf.lock().expect("mr poisoned");
+        f(&buf[offset..offset + len])
+    }
+}
+
+/// MR access violations.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum MrError {
+    OutOfBounds {
+        offset: usize,
+        len: usize,
+        region: usize,
+    },
+}
+
+impl std::fmt::Display for MrError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            MrError::OutOfBounds { offset, len, region } => write!(
+                f,
+                "RDMA access out of bounds: [{offset}, {}) beyond region {region}",
+                offset + len
+            ),
+        }
+    }
+}
+
+impl std::error::Error for MrError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rkeys_unique() {
+        let a = MemoryRegion::register(8);
+        let b = MemoryRegion::register(8);
+        assert_ne!(a.rkey(), b.rkey());
+    }
+
+    #[test]
+    fn write_read_roundtrip() {
+        let mr = MemoryRegion::register(32);
+        mr.write(4, b"hello").unwrap();
+        assert_eq!(mr.read(4, 5), b"hello");
+        mr.with(4, 5, |s| assert_eq!(s, b"hello"));
+    }
+
+    #[test]
+    fn bounds_enforced() {
+        let mr = MemoryRegion::register(8);
+        assert!(mr.write(0, &[0; 9]).is_err());
+        assert!(mr.write(8, &[0; 1]).is_err());
+        assert!(mr.write(7, &[0; 1]).is_ok());
+    }
+}

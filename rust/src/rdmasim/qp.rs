@@ -1,0 +1,173 @@
+//! Queue pairs: connected endpoints supporting one-sided RDMA_WRITE.
+//!
+//! `connect_pair` mirrors the paper's connection setup (§III-A): both
+//! sides allocate buffers (MRs), create send/receive queues and a CQ,
+//! and exchange metadata. After that, `post_write` is the only data-path
+//! operation — a zero-copy write into the peer's registered region plus
+//! a completion on both CQs (send completion locally, write notification
+//! remotely, as with RDMA_WRITE_WITH_IMM).
+
+use std::sync::Arc;
+
+use super::cq::{CompletionQueue, WorkCompletion};
+use super::mr::{MemoryRegion, MrError};
+
+/// Sentinel wr_id signalling a graceful disconnect (QP teardown event).
+pub const WR_ID_CLOSE: u64 = u64::MAX;
+
+/// One endpoint of a connected queue pair.
+pub struct QueuePair {
+    /// The peer's registered region this endpoint writes into.
+    remote_mr: Arc<MemoryRegion>,
+    /// Our own region the peer writes into (kept for convenience).
+    local_mr: Arc<MemoryRegion>,
+    /// Our completion queue (receives remote-write notifications).
+    local_cq: Arc<CompletionQueue>,
+    /// Peer's CQ (we push write notifications there).
+    remote_cq: Arc<CompletionQueue>,
+}
+
+/// Create a connected pair of endpoints.
+///
+/// `a_mr` is endpoint A's local region (B writes into it), `b_mr` is
+/// endpoint B's. `cq_depth` bounds both completion queues.
+pub fn connect_pair(
+    a_mr: Arc<MemoryRegion>,
+    b_mr: Arc<MemoryRegion>,
+    cq_depth: usize,
+) -> (QueuePair, QueuePair) {
+    let a_cq = Arc::new(CompletionQueue::with_capacity(cq_depth));
+    let b_cq = Arc::new(CompletionQueue::with_capacity(cq_depth));
+    let a = QueuePair {
+        remote_mr: b_mr.clone(),
+        local_mr: a_mr.clone(),
+        local_cq: a_cq.clone(),
+        remote_cq: b_cq.clone(),
+    };
+    let b = QueuePair {
+        remote_mr: a_mr,
+        local_mr: b_mr,
+        local_cq: b_cq,
+        remote_cq: a_cq,
+    };
+    (a, b)
+}
+
+/// QP errors.
+#[derive(Debug)]
+pub enum QpError {
+    Mr(MrError),
+    CqOverflow,
+}
+
+impl From<MrError> for QpError {
+    fn from(e: MrError) -> Self {
+        QpError::Mr(e)
+    }
+}
+
+impl std::fmt::Display for QpError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            QpError::Mr(e) => write!(f, "{e}"),
+            QpError::CqOverflow => write!(f, "completion queue overflow"),
+        }
+    }
+}
+
+impl std::error::Error for QpError {}
+
+impl QueuePair {
+    /// One-sided write of `data` into the peer's MR at `offset`;
+    /// notifies the peer's CQ with `wr_id`.
+    pub fn post_write(&self, data: &[u8], offset: usize, wr_id: u64) -> Result<(), QpError> {
+        self.remote_mr.write(offset, data)?;
+        let ok = self.remote_cq.push(WorkCompletion {
+            wr_id,
+            byte_len: data.len(),
+            offset,
+        });
+        if ok {
+            Ok(())
+        } else {
+            Err(QpError::CqOverflow)
+        }
+    }
+
+    /// This endpoint's completion queue.
+    pub fn cq(&self) -> &CompletionQueue {
+        &self.local_cq
+    }
+
+    /// The region the peer writes into (our receive buffer).
+    pub fn local_mr(&self) -> &Arc<MemoryRegion> {
+        &self.local_mr
+    }
+
+    /// The peer's region (our write target). For a server endpoint this
+    /// is where request payloads land from its own perspective — named
+    /// from the writer's side.
+    pub fn remote_mr(&self) -> &Arc<MemoryRegion> {
+        &self.local_mr
+    }
+
+    /// The region this endpoint writes into on the peer.
+    pub fn peer_mr(&self) -> &Arc<MemoryRegion> {
+        &self.remote_mr
+    }
+
+    /// One-sided write with *no* completion (RDMA_WRITE without
+    /// immediate): used for in-band headers so the peer wakes once per
+    /// message instead of once per write.
+    pub fn post_write_silent(&self, data: &[u8], offset: usize) -> Result<(), QpError> {
+        self.remote_mr.write(offset, data)?;
+        Ok(())
+    }
+
+    /// Signal a graceful disconnect to the peer (its next poll observes
+    /// `WR_ID_CLOSE`, like a QP-error completion on teardown).
+    pub fn post_close(&self) {
+        let _ = self.remote_cq.push(WorkCompletion {
+            wr_id: WR_ID_CLOSE,
+            byte_len: 0,
+            offset: 0,
+        });
+    }
+}
+
+impl Drop for QueuePair {
+    fn drop(&mut self) {
+        self.post_close();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cq_overflow_propagates() {
+        let a = Arc::new(MemoryRegion::register(64));
+        let b = Arc::new(MemoryRegion::register(64));
+        let (cli, _srv) = connect_pair(a, b, 2);
+        assert!(cli.post_write(b"x", 0, 1).is_ok());
+        assert!(cli.post_write(b"x", 0, 2).is_ok());
+        assert!(matches!(
+            cli.post_write(b"x", 0, 3),
+            Err(QpError::CqOverflow)
+        ));
+    }
+
+    #[test]
+    fn both_directions_work() {
+        let a = Arc::new(MemoryRegion::register(64));
+        let b = Arc::new(MemoryRegion::register(64));
+        let (qa, qb) = connect_pair(a.clone(), b.clone(), 8);
+        qa.post_write(b"to-b", 0, 1).unwrap();
+        qb.post_write(b"to-a", 0, 2).unwrap();
+        assert_eq!(qb.cq().poll_blocking().wr_id, 1);
+        assert_eq!(qa.cq().poll_blocking().wr_id, 2);
+        assert_eq!(b.read(0, 4), b"to-b");
+        assert_eq!(a.read(0, 4), b"to-a");
+    }
+}

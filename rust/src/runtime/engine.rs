@@ -1,0 +1,259 @@
+//! The inference engine: one PJRT CPU client + one compiled executable
+//! per artifact (the PJRT analogue of a TensorRT engine per profile).
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Mutex;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::models::manifest::{ArtifactEntry, Manifest};
+
+/// An input tensor for inference, carried as raw host bytes plus dtype
+/// tag — the homogeneous raw-byte interchange RDMA requires (§VII).
+#[derive(Debug, Clone)]
+pub enum TensorBuf {
+    F32(Vec<f32>),
+    U8(Vec<u8>),
+}
+
+impl TensorBuf {
+    pub fn len(&self) -> usize {
+        match self {
+            TensorBuf::F32(v) => v.len(),
+            TensorBuf::U8(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn byte_len(&self) -> usize {
+        match self {
+            TensorBuf::F32(v) => v.len() * 4,
+            TensorBuf::U8(v) => v.len(),
+        }
+    }
+}
+
+struct Compiled {
+    exe: xla::PjRtLoadedExecutable,
+    entry: ArtifactEntry,
+}
+
+/// Loads artifacts once, compiles each HLO module once, then serves
+/// inference calls. Interior mutability: the executable cache fills
+/// lazily; PJRT execution itself is routed through a mutex because the
+/// CPU client is a single "device" (the A2 analogue).
+pub struct Engine {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    compiled: Mutex<HashMap<String, &'static Compiled>>,
+}
+
+impl Engine {
+    /// Create an engine over an artifact directory (with manifest.json).
+    pub fn load(dir: impl AsRef<Path>) -> Result<Engine> {
+        let manifest = Manifest::load(&dir)?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow!("PJRT CPU client: {e}"))?;
+        Ok(Engine {
+            client,
+            manifest,
+            compiled: Mutex::new(HashMap::new()),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (and cache) one artifact. Compilation is done once per
+    /// process; leaked intentionally — executables live for the process
+    /// lifetime, exactly like preloaded TensorRT engines.
+    fn get(&self, name: &str) -> Result<&'static Compiled> {
+        if let Some(c) = self.compiled.lock().unwrap().get(name) {
+            return Ok(c);
+        }
+        let entry = self
+            .manifest
+            .get(name)
+            .with_context(|| format!("unknown artifact {name}"))?
+            .clone();
+        let path = self.manifest.hlo_path(&entry);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?,
+        )
+        .map_err(|e| anyhow!("parsing {}: {e}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {name}: {e}"))?;
+        let boxed: &'static Compiled = Box::leak(Box::new(Compiled { exe, entry }));
+        self.compiled.lock().unwrap().insert(name.to_string(), boxed);
+        Ok(boxed)
+    }
+
+    /// Eagerly compile a set of artifacts (server warm-up).
+    pub fn warm(&self, names: &[&str]) -> Result<()> {
+        for n in names {
+            self.get(n)?;
+        }
+        Ok(())
+    }
+
+    /// Execute artifact `name` on `input`; returns the flat f32 output.
+    pub fn infer(&self, name: &str, input: &TensorBuf) -> Result<Vec<f32>> {
+        let c = self.get(name)?;
+        let spec = &c.entry.inputs[0];
+        if input.len() != spec.elems() {
+            bail!(
+                "{name}: input has {} elements, artifact expects {:?}",
+                input.len(),
+                spec.shape
+            );
+        }
+        let dims: Vec<usize> = spec.shape.clone();
+        let lit = match (input, spec.dtype.as_str()) {
+            (TensorBuf::F32(v), "f32") => {
+                let bytes: &[u8] = unsafe {
+                    std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4)
+                };
+                xla::Literal::create_from_shape_and_untyped_data(
+                    xla::ElementType::F32,
+                    &dims,
+                    bytes,
+                )
+                .map_err(|e| anyhow!("literal: {e}"))?
+            }
+            (TensorBuf::U8(v), "u8") => xla::Literal::create_from_shape_and_untyped_data(
+                xla::ElementType::U8,
+                &dims,
+                v,
+            )
+            .map_err(|e| anyhow!("literal: {e}"))?,
+            (got, want) => bail!(
+                "{name}: dtype mismatch (got {}, want {want})",
+                match got {
+                    TensorBuf::F32(_) => "f32",
+                    TensorBuf::U8(_) => "u8",
+                }
+            ),
+        };
+        let result = c
+            .exe
+            .execute::<xla::Literal>(&[lit])
+            .map_err(|e| anyhow!("execute {name}: {e}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result: {e}"))?;
+        // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
+        let out = result
+            .to_tuple1()
+            .map_err(|e| anyhow!("untuple: {e}"))?;
+        out.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e}"))
+    }
+
+    /// Output element count of an artifact (for buffer pre-allocation).
+    pub fn output_elems(&self, name: &str) -> Result<usize> {
+        Ok(self
+            .manifest
+            .get(name)
+            .with_context(|| format!("unknown artifact {name}"))?
+            .output
+            .elems())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> &'static str {
+        concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts")
+    }
+
+    fn have_artifacts() -> bool {
+        std::path::Path::new(artifacts_dir()).join("manifest.json").exists()
+    }
+
+    #[test]
+    fn engine_loads_and_infers() {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let eng = Engine::load(artifacts_dir()).unwrap();
+        let plat = eng.platform().to_lowercase();
+        assert!(plat == "host" || plat == "cpu", "platform {plat}");
+        let n_in = eng.manifest().get("tiny_mobilenet_b1").unwrap().inputs[0].elems();
+        let out = eng
+            .infer("tiny_mobilenet_b1", &TensorBuf::F32(vec![0.1; n_in]))
+            .unwrap();
+        assert_eq!(out.len(), 1000);
+        assert!(out.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn preprocess_then_classify_matches_fused_raw() {
+        if !have_artifacts() {
+            return;
+        }
+        let eng = Engine::load(artifacts_dir()).unwrap();
+        let raw = crate::models::zoo::WorkloadData::image(64 * 64 * 3, 9).bytes;
+        let pre = eng.infer("preprocess", &TensorBuf::U8(raw.clone())).unwrap();
+        let staged = eng
+            .infer("tiny_mobilenet_b1", &TensorBuf::F32(pre))
+            .unwrap();
+        let fused = eng
+            .infer("tiny_mobilenet_raw", &TensorBuf::U8(raw))
+            .unwrap();
+        for (a, b) in staged.iter().zip(&fused) {
+            assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn batched_equals_singles() {
+        if !have_artifacts() {
+            return;
+        }
+        let eng = Engine::load(artifacts_dir()).unwrap();
+        let n_in = 32 * 32 * 3;
+        let a: Vec<f32> = (0..n_in).map(|i| (i % 17) as f32 / 17.0).collect();
+        let b: Vec<f32> = (0..n_in).map(|i| (i % 29) as f32 / 29.0).collect();
+        let mut batch = a.clone();
+        batch.extend_from_slice(&b);
+        let out2 = eng
+            .infer("tiny_resnet_b2", &TensorBuf::F32(batch))
+            .unwrap();
+        let o_a = eng.infer("tiny_resnet_b1", &TensorBuf::F32(a)).unwrap();
+        let o_b = eng.infer("tiny_resnet_b1", &TensorBuf::F32(b)).unwrap();
+        for (x, y) in out2[..1000].iter().zip(&o_a) {
+            assert!((x - y).abs() < 1e-3);
+        }
+        for (x, y) in out2[1000..].iter().zip(&o_b) {
+            assert!((x - y).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn rejects_bad_inputs() {
+        if !have_artifacts() {
+            return;
+        }
+        let eng = Engine::load(artifacts_dir()).unwrap();
+        assert!(eng.infer("no_such_model", &TensorBuf::F32(vec![0.0])).is_err());
+        assert!(eng
+            .infer("tiny_mobilenet_b1", &TensorBuf::F32(vec![0.0; 3]))
+            .is_err());
+        assert!(eng
+            .infer("tiny_mobilenet_b1", &TensorBuf::U8(vec![0; 32 * 32 * 3]))
+            .is_err());
+    }
+}

@@ -1,0 +1,10 @@
+//! PJRT runtime: loads the AOT artifacts (`artifacts/*.hlo.txt`) and
+//! executes them from the rust request path. Python never runs here.
+//!
+//! Interchange is HLO *text*: jax >= 0.5 emits HloModuleProto with
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see python/compile/aot.py and DESIGN.md §3).
+
+pub mod engine;
+
+pub use engine::{Engine, TensorBuf};

@@ -1,0 +1,10 @@
+//! Discrete-event simulation core: deterministic time, PRNG, and the
+//! serving-pipeline world that composes the GPU and fabric models.
+
+pub mod rng;
+pub mod time;
+pub mod world;
+
+pub use rng::Rng;
+pub use time::Ns;
+pub use world::{RunStats, Scenario, World};

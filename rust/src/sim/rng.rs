@@ -1,0 +1,130 @@
+//! Deterministic PRNG for the simulator (and the mini property-test
+//! framework in `testutil`).
+//!
+//! SplitMix64: tiny, fast, passes BigCrush for our purposes, and keeps
+//! every simulation run exactly reproducible from a seed — a requirement
+//! for the figure benches (the paper's runs are averaged over 1000
+//! closed-loop requests; ours must be re-runnable bit-for-bit).
+
+/// SplitMix64 PRNG.
+#[derive(Debug, Clone)]
+pub struct Rng {
+    state: u64,
+}
+
+impl Rng {
+    pub fn new(seed: u64) -> Rng {
+        Rng {
+            state: seed.wrapping_add(0x9E37_79B9_7F4A_7C15),
+        }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+
+    /// Uniform in [0, 1).
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in [lo, hi).
+    #[inline]
+    pub fn uniform(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.f64()
+    }
+
+    /// Uniform integer in [0, n).
+    #[inline]
+    pub fn below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        (self.next_u64() % n as u64) as usize
+    }
+
+    /// Standard normal via Box–Muller.
+    pub fn normal(&mut self) -> f64 {
+        let u1 = self.f64().max(1e-12);
+        let u2 = self.f64();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+
+    /// Multiplicative noise factor: lognormal-ish with coefficient of
+    /// variation ~`cov`, clamped to stay positive and bounded. Mean ~1.
+    pub fn noise(&mut self, cov: f64) -> f64 {
+        if cov <= 0.0 {
+            return 1.0;
+        }
+        (1.0 + cov * self.normal()).clamp(0.25, 4.0)
+    }
+
+    /// Fork an independent stream (for per-client RNGs).
+    pub fn fork(&mut self) -> Rng {
+        Rng::new(self.next_u64())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_from_seed() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut r = Rng::new(1);
+        for _ in 0..10_000 {
+            let x = r.f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(7);
+        let n = 50_000;
+        let (mut s, mut s2) = (0.0, 0.0);
+        for _ in 0..n {
+            let x = r.normal();
+            s += x;
+            s2 += x * x;
+        }
+        let mean = s / n as f64;
+        let var = s2 / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.05, "var {var}");
+    }
+
+    #[test]
+    fn noise_is_positive_and_near_one() {
+        let mut r = Rng::new(3);
+        let mut sum = 0.0;
+        for _ in 0..10_000 {
+            let f = r.noise(0.1);
+            assert!(f > 0.0 && f <= 4.0);
+            sum += f;
+        }
+        assert!((sum / 10_000.0 - 1.0).abs() < 0.02);
+        assert_eq!(r.noise(0.0), 1.0);
+    }
+
+    #[test]
+    fn forked_streams_differ() {
+        let mut a = Rng::new(9);
+        let mut b = a.fork();
+        let mut c = a.fork();
+        assert_ne!(b.next_u64(), c.next_u64());
+    }
+}

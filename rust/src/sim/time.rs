@@ -1,0 +1,111 @@
+//! Simulation time: integer nanoseconds since scenario start.
+//!
+//! All simulator arithmetic is done on `Ns` (u64 nanoseconds) to keep the
+//! event queue totally ordered and deterministic; conversion helpers to
+//! f64 micro/milliseconds exist only at the metrics boundary.
+
+use std::fmt;
+use std::ops::{Add, AddAssign, Sub};
+
+/// A point in (or duration of) simulated time, in nanoseconds.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub struct Ns(pub u64);
+
+impl Ns {
+    pub const ZERO: Ns = Ns(0);
+
+    #[inline]
+    pub fn from_us(us: f64) -> Ns {
+        debug_assert!(us >= 0.0, "negative duration: {us}");
+        Ns((us * 1_000.0).round() as u64)
+    }
+
+    #[inline]
+    pub fn from_ms(ms: f64) -> Ns {
+        Ns::from_us(ms * 1_000.0)
+    }
+
+    #[inline]
+    pub fn as_us(self) -> f64 {
+        self.0 as f64 / 1_000.0
+    }
+
+    #[inline]
+    pub fn as_ms(self) -> f64 {
+        self.0 as f64 / 1_000_000.0
+    }
+
+    #[inline]
+    pub fn as_secs(self) -> f64 {
+        self.0 as f64 / 1_000_000_000.0
+    }
+
+    /// Saturating subtraction (durations never go negative).
+    #[inline]
+    pub fn saturating_sub(self, rhs: Ns) -> Ns {
+        Ns(self.0.saturating_sub(rhs.0))
+    }
+
+    #[inline]
+    pub fn max(self, rhs: Ns) -> Ns {
+        Ns(self.0.max(rhs.0))
+    }
+}
+
+impl Add for Ns {
+    type Output = Ns;
+    #[inline]
+    fn add(self, rhs: Ns) -> Ns {
+        Ns(self.0 + rhs.0)
+    }
+}
+
+impl AddAssign for Ns {
+    #[inline]
+    fn add_assign(&mut self, rhs: Ns) {
+        self.0 += rhs.0;
+    }
+}
+
+impl Sub for Ns {
+    type Output = Ns;
+    #[inline]
+    fn sub(self, rhs: Ns) -> Ns {
+        debug_assert!(self.0 >= rhs.0, "time went backwards: {self} - {rhs}");
+        Ns(self.0 - rhs.0)
+    }
+}
+
+impl fmt::Display for Ns {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{:.3}ms", self.as_ms())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conversions_roundtrip() {
+        assert_eq!(Ns::from_us(1.5).0, 1_500);
+        assert_eq!(Ns::from_ms(2.0).0, 2_000_000);
+        assert!((Ns(2_500_000).as_ms() - 2.5).abs() < 1e-12);
+        assert!((Ns(1_500).as_us() - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn arithmetic() {
+        assert_eq!(Ns(5) + Ns(7), Ns(12));
+        assert_eq!(Ns(7) - Ns(5), Ns(2));
+        assert_eq!(Ns(5).saturating_sub(Ns(7)), Ns::ZERO);
+        assert_eq!(Ns(5).max(Ns(7)), Ns(7));
+    }
+
+    #[test]
+    fn ordering_is_total() {
+        let mut v = vec![Ns(3), Ns(1), Ns(2)];
+        v.sort();
+        assert_eq!(v, vec![Ns(1), Ns(2), Ns(3)]);
+    }
+}

@@ -1,0 +1,704 @@
+//! The serving-pipeline world: composes the fabric model, the GPU
+//! simulator and closed-loop clients into the paper's model-serving
+//! pipeline (Fig 3), for both direct and proxied connection modes.
+//!
+//! Pipeline per request (Fig 2/3):
+//!
+//! ```text
+//!   client --(request hop[s])--> server
+//!     [H2D copy]            (TCP/RDMA only)
+//!     preprocessing          (raw-input mode only)
+//!     inference
+//!     [D2H copy]            (TCP/RDMA only)
+//!   server --(response hop[s])--> client
+//! ```
+//!
+//! Each stage duration is recorded exactly as the paper measures it:
+//! by bracketing timestamps, so queueing (copy-engine queues, stream
+//! slots, link serialization) lands in the stage where it occurred.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+use std::sync::Arc;
+
+use crate::gpu::{CopyDir, GpuConfig, GpuEv, GpuNotify, GpuSim, JobSpec, KernelSpec, Sharing};
+use crate::metrics::stats::{ReqRecord, StageAgg};
+use crate::models::zoo::{PaperModel, KERNEL_GAP_US};
+use crate::net::fabric::{Fabric, TransferKind};
+use crate::net::params::{Transport, PROXY_PARAMS};
+use crate::sim::rng::Rng;
+use crate::sim::time::Ns;
+
+/// One experiment configuration (§III-C experimental scenarios).
+#[derive(Debug, Clone)]
+pub struct Scenario {
+    pub model: &'static PaperModel,
+    /// Gateway-to-server (or direct client-to-server) transport.
+    pub transport: Transport,
+    /// Proxied mode: the client-to-gateway hop transport. `None` = direct.
+    pub client_hop: Option<Transport>,
+    pub n_clients: usize,
+    pub requests_per_client: usize,
+    /// Clients submit raw camera frames (server preprocesses on GPU).
+    pub raw_input: bool,
+    pub sharing: Sharing,
+    /// Stream/context pool size. 0 = one per client.
+    pub n_streams: usize,
+    /// Client 0 runs at high CUDA stream priority (Fig 16).
+    pub priority_client: bool,
+    pub seed: u64,
+    /// Leading fraction of each client's requests dropped from stats.
+    pub warmup_frac: f64,
+}
+
+impl Scenario {
+    /// Single-client direct-connection baseline for `model`/`transport`.
+    pub fn direct(model: &'static PaperModel, transport: Transport) -> Scenario {
+        Scenario {
+            model,
+            transport,
+            client_hop: None,
+            n_clients: 1,
+            requests_per_client: 1000,
+            raw_input: true,
+            sharing: Sharing::MultiStream,
+            n_streams: 0,
+            priority_client: false,
+            seed: 1,
+            warmup_frac: 0.05,
+        }
+    }
+
+    /// Proxied mode: `client_hop` to the gateway, `server_hop` onwards.
+    pub fn proxied(
+        model: &'static PaperModel,
+        client_hop: Transport,
+        server_hop: Transport,
+    ) -> Scenario {
+        Scenario {
+            client_hop: Some(client_hop),
+            ..Scenario::direct(model, server_hop)
+        }
+    }
+
+    pub fn with_clients(mut self, n: usize) -> Scenario {
+        self.n_clients = n;
+        self
+    }
+
+    pub fn with_requests(mut self, n: usize) -> Scenario {
+        self.requests_per_client = n;
+        self
+    }
+
+    pub fn with_raw(mut self, raw: bool) -> Scenario {
+        self.raw_input = raw;
+        self
+    }
+
+    pub fn with_sharing(mut self, s: Sharing) -> Scenario {
+        self.sharing = s;
+        self
+    }
+
+    pub fn with_streams(mut self, n: usize) -> Scenario {
+        self.n_streams = n;
+        self
+    }
+
+    pub fn with_priority_client(mut self, p: bool) -> Scenario {
+        self.priority_client = p;
+        self
+    }
+
+    pub fn with_seed(mut self, s: u64) -> Scenario {
+        self.seed = s;
+        self
+    }
+
+    fn effective_streams(&self) -> usize {
+        if self.n_streams == 0 {
+            self.n_clients
+        } else {
+            self.n_streams
+        }
+    }
+
+    /// Do the two proxy hops require protocol translation at the gateway?
+    /// (TCP <-> verbs are different wire protocols; RDMA->GDR is the same
+    /// verbs protocol targeting different memory.)
+    fn translated(&self) -> bool {
+        match self.client_hop {
+            None => false,
+            Some(ch) => {
+                let verbs =
+                    |t: Transport| matches!(t, Transport::Rdma | Transport::Gdr);
+                verbs(ch) != verbs(self.transport)
+            }
+        }
+    }
+}
+
+/// Aggregated outcome of one scenario run.
+#[derive(Debug, Default)]
+pub struct RunStats {
+    /// All measured requests.
+    pub all: StageAgg,
+    /// Only the high-priority client's requests (Fig 16).
+    pub priority: StageAgg,
+    /// Only normal clients' requests.
+    pub normal: StageAgg,
+    /// Makespan of the measured portion, seconds.
+    pub duration_s: f64,
+    /// Served requests/second across all clients.
+    pub throughput_rps: f64,
+    /// Execution-engine utilization in [0, 1].
+    pub gpu_util: f64,
+    /// Copy-engine busy seconds (both engines).
+    pub copy_busy_s: f64,
+    /// Events processed (simulator throughput metric for §Perf).
+    pub events: u64,
+}
+
+#[derive(Debug, Clone, Copy)]
+enum Ev {
+    /// Client issues its next request.
+    Send { client: usize },
+    /// Request arrived at the gateway (proxied mode).
+    ReqAtGw { req: usize },
+    /// Request fully arrived at the GPU server.
+    ReqAtServer { req: usize },
+    /// GPU-internal event.
+    Gpu(GpuEv),
+    /// Response arrived back at the gateway (proxied mode).
+    RespAtGw { req: usize },
+    /// Response arrived at the client: request complete.
+    RespAtClient { req: usize },
+}
+
+#[derive(Debug, Clone, Copy, Default)]
+struct Req {
+    client: usize,
+    measured: bool,
+    t_sent: Ns,
+    t_at_server: Ns,
+    t_h2d_done: Ns,
+    t_preproc_done: Ns,
+    t_infer_done: Ns,
+    t_d2h_done: Ns,
+    cpu_us: f64,
+}
+
+struct HeapEntry {
+    t: Ns,
+    seq: u64,
+    ev: Ev,
+}
+
+impl PartialEq for HeapEntry {
+    fn eq(&self, o: &Self) -> bool {
+        self.t == o.t && self.seq == o.seq
+    }
+}
+impl Eq for HeapEntry {}
+impl PartialOrd for HeapEntry {
+    fn partial_cmp(&self, o: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(o))
+    }
+}
+impl Ord for HeapEntry {
+    fn cmp(&self, o: &Self) -> std::cmp::Ordering {
+        (self.t, self.seq).cmp(&(o.t, o.seq))
+    }
+}
+
+/// The discrete-event serving world. Construct with a `Scenario`, call
+/// [`World::run`].
+pub struct World {
+    sc: Scenario,
+    now: Ns,
+    seq: u64,
+    heap: BinaryHeap<Reverse<HeapEntry>>,
+    rng: Rng,
+    fabric: Fabric,
+    gpu: GpuSim,
+    reqs: Vec<Req>,
+    sent_per_client: Vec<usize>,
+    /// Shared per-scenario GPU job shape (perf: one allocation total).
+    job_spec: Arc<JobSpec>,
+    stats: RunStats,
+    events: u64,
+}
+
+impl World {
+    pub fn new(sc: Scenario) -> World {
+        let gpu = GpuSim::new(
+            GpuConfig::default(),
+            sc.sharing,
+            sc.effective_streams(),
+            sc.seed,
+        );
+        let job_spec = Arc::new(Self::build_job_spec(&sc));
+        World {
+            job_spec,
+            rng: Rng::new(sc.seed),
+            gpu,
+            now: Ns::ZERO,
+            seq: 0,
+            heap: BinaryHeap::new(),
+            fabric: Fabric::new(),
+            reqs: Vec::new(),
+            sent_per_client: vec![0; sc.n_clients],
+            stats: RunStats::default(),
+            events: 0,
+            sc,
+        }
+    }
+
+    /// Run the scenario to completion and aggregate the Table I metrics.
+    pub fn run(sc: Scenario) -> RunStats {
+        let mut w = World::new(sc);
+        w.start();
+        w.event_loop();
+        w.finish()
+    }
+
+    fn start(&mut self) {
+        for c in 0..self.sc.n_clients {
+            // Small start stagger to desynchronize the closed loops.
+            let jitter = Ns::from_us(self.rng.uniform(0.0, 200.0));
+            self.push(jitter, Ev::Send { client: c });
+        }
+    }
+
+    fn push(&mut self, t: Ns, ev: Ev) {
+        self.seq += 1;
+        self.heap.push(Reverse(HeapEntry {
+            t,
+            seq: self.seq,
+            ev,
+        }));
+    }
+
+    fn pump_gpu(&mut self) {
+        for (t, ev) in self.gpu.drain() {
+            self.push(t, Ev::Gpu(ev));
+        }
+    }
+
+    fn event_loop(&mut self) {
+        while let Some(Reverse(HeapEntry { t, ev, .. })) = self.heap.pop() {
+            debug_assert!(t >= self.now, "causality violation");
+            self.now = t;
+            self.events += 1;
+            self.handle(ev);
+            self.pump_gpu();
+        }
+    }
+
+    fn prio_of(&self, client: usize) -> i32 {
+        if self.sc.priority_client && client == 0 {
+            10
+        } else {
+            0
+        }
+    }
+
+    fn build_job_spec(sc: &Scenario) -> JobSpec {
+        let m = sc.model;
+        let mut kernels = Vec::new();
+        let mut boundary = 0;
+        if sc.raw_input {
+            for _ in 0..m.preproc_kernels() {
+                kernels.push(KernelSpec {
+                    // Resize/normalize saturate the device (bandwidth-bound).
+                    blocks: 20,
+                    block_us: m.preproc_block_time_us(),
+                });
+            }
+            boundary = kernels.len();
+        }
+        for _ in 0..m.n_kernels {
+            kernels.push(KernelSpec {
+                blocks: m.blocks_per_kernel(),
+                block_us: m.block_time_us(),
+            });
+        }
+        JobSpec {
+            kernels,
+            preproc_boundary: boundary,
+            gap_us: KERNEL_GAP_US,
+        }
+    }
+
+    fn handle(&mut self, ev: Ev) {
+        match ev {
+            Ev::Send { client } => self.on_send(client),
+            Ev::ReqAtGw { req } => self.on_req_at_gw(req),
+            Ev::ReqAtServer { req } => self.on_req_at_server(req),
+            Ev::Gpu(gev) => {
+                let notifies = self.gpu.handle(self.now, gev);
+                for n in notifies {
+                    self.on_gpu_notify(n);
+                }
+            }
+            Ev::RespAtGw { req } => self.on_resp_at_gw(req),
+            Ev::RespAtClient { req } => self.on_resp_at_client(req),
+        }
+    }
+
+    fn on_send(&mut self, client: usize) {
+        let idx = self.sent_per_client[client];
+        if idx >= self.sc.requests_per_client {
+            return; // this client is done
+        }
+        self.sent_per_client[client] = idx + 1;
+        let warmup = (self.sc.requests_per_client as f64 * self.sc.warmup_frac) as usize;
+        let req = self.reqs.len();
+        self.reqs.push(Req {
+            client,
+            measured: idx >= warmup,
+            t_sent: self.now,
+            ..Default::default()
+        });
+
+        let m = self.sc.model;
+        let bytes = m.request_bytes(self.sc.raw_input);
+        match (self.sc.transport, self.sc.client_hop) {
+            (Transport::Local, _) => {
+                // On-device: no transport, no copies (lower bound).
+                self.reqs[req].t_at_server = self.now;
+                self.reqs[req].t_h2d_done = self.now;
+                let prio = self.prio_of(client);
+                self.gpu
+                    .submit_job(self.now, req, prio, self.job_spec.clone());
+            }
+            (_, None) => {
+                // Direct connection: client -> server on the fabric.
+                let p = self.sc.transport.params();
+                let done =
+                    self.fabric
+                        .transfer(TransferKind::Request, bytes, p, self.now, &mut self.rng);
+                self.reqs[req].cpu_us += 2.0 * p.cpu_us(bytes); // send + recv sides
+                self.push(done, Ev::ReqAtServer { req });
+            }
+            (_, Some(ch)) => {
+                // Proxied: first hop to the gateway.
+                let p = ch.params();
+                let done =
+                    self.fabric
+                        .transfer(TransferKind::ProxyIn, bytes, p, self.now, &mut self.rng);
+                self.reqs[req].cpu_us += 2.0 * p.cpu_us(bytes);
+                self.push(done, Ev::ReqAtGw { req });
+            }
+        }
+    }
+
+    fn on_req_at_gw(&mut self, req: usize) {
+        // Gateway residence (forwarding decision + optional protocol
+        // translation), then the gateway -> server hop.
+        let m = self.sc.model;
+        let bytes = m.request_bytes(self.sc.raw_input);
+        let res = PROXY_PARAMS.residence_us(bytes, self.sc.translated());
+        self.reqs[req].cpu_us += res; // gateway CPU is busy for residence
+        let t = self.now + Ns::from_us(res);
+        let p = self.sc.transport.params();
+        let done = self
+            .fabric
+            .transfer(TransferKind::Request, bytes, p, t, &mut self.rng);
+        self.reqs[req].cpu_us += 2.0 * p.cpu_us(bytes);
+        self.push(done, Ev::ReqAtServer { req });
+    }
+
+    fn on_req_at_server(&mut self, req: usize) {
+        self.reqs[req].t_at_server = self.now;
+        let m = self.sc.model;
+        if self.sc.transport.needs_gpu_copies() {
+            // Fig 2(a) steps 3: stage into GPU memory via the copy engine.
+            let bytes = m.request_bytes(self.sc.raw_input);
+            self.gpu.submit_copy(self.now, req, CopyDir::H2D, bytes);
+            self.reqs[req].cpu_us += 5.0; // cudaMemcpyAsync issue
+        } else {
+            // GDR: payload already in GPU memory (Fig 2(b)).
+            self.reqs[req].t_h2d_done = self.now;
+            self.submit_job(req);
+        }
+    }
+
+    fn submit_job(&mut self, req: usize) {
+        let client = self.reqs[req].client;
+        let prio = self.prio_of(client);
+        self.gpu
+            .submit_job(self.now, req, prio, self.job_spec.clone());
+    }
+
+    fn on_gpu_notify(&mut self, n: GpuNotify) {
+        match n {
+            GpuNotify::CopyDone { req, dir: CopyDir::H2D } => {
+                self.reqs[req].t_h2d_done = self.now;
+                self.submit_job(req);
+            }
+            GpuNotify::PreprocDone { req } => {
+                self.reqs[req].t_preproc_done = self.now;
+            }
+            GpuNotify::InferDone { req } => {
+                self.reqs[req].t_infer_done = self.now;
+                if !self.sc.raw_input {
+                    self.reqs[req].t_preproc_done = self.reqs[req].t_h2d_done;
+                }
+                if self.sc.transport.needs_gpu_copies() {
+                    let bytes = self.sc.model.response_bytes();
+                    self.gpu.submit_copy(self.now, req, CopyDir::D2H, bytes);
+                    self.reqs[req].cpu_us += 5.0;
+                } else {
+                    self.reqs[req].t_d2h_done = self.now;
+                    self.send_response(req);
+                }
+            }
+            GpuNotify::CopyDone { req, dir: CopyDir::D2H } => {
+                self.reqs[req].t_d2h_done = self.now;
+                self.send_response(req);
+            }
+        }
+    }
+
+    fn send_response(&mut self, req: usize) {
+        let bytes = self.sc.model.response_bytes();
+        if self.sc.transport == Transport::Local {
+            self.push(self.now, Ev::RespAtClient { req });
+            return;
+        }
+        let p = self.sc.transport.params();
+        let done = self
+            .fabric
+            .transfer(TransferKind::Response, bytes, p, self.now, &mut self.rng);
+        self.reqs[req].cpu_us += 2.0 * p.cpu_us(bytes);
+        if self.sc.client_hop.is_some() {
+            self.push(done, Ev::RespAtGw { req });
+        } else {
+            self.push(done, Ev::RespAtClient { req });
+        }
+    }
+
+    fn on_resp_at_gw(&mut self, req: usize) {
+        let bytes = self.sc.model.response_bytes();
+        let res = PROXY_PARAMS.residence_us(bytes, self.sc.translated());
+        self.reqs[req].cpu_us += res;
+        let t = self.now + Ns::from_us(res);
+        let ch = self.sc.client_hop.expect("resp at gw without proxy");
+        let p = ch.params();
+        let done = self
+            .fabric
+            .transfer(TransferKind::ProxyOut, bytes, p, t, &mut self.rng);
+        self.reqs[req].cpu_us += 2.0 * p.cpu_us(bytes);
+        self.push(done, Ev::RespAtClient { req });
+    }
+
+    fn on_resp_at_client(&mut self, req: usize) {
+        let r = self.reqs[req];
+        let total = self.now - r.t_sent;
+        // Busy-poll / event-loop CPU while the request is outstanding
+        // (client thread + server worker thread, §III-B cpu-usage).
+        let poll_cpu = 0.9 * total.as_us();
+        let rec = ReqRecord {
+            client: r.client,
+            total,
+            request: r.t_at_server.saturating_sub(r.t_sent),
+            response: self.now.saturating_sub(r.t_d2h_done),
+            copy_h2d: r.t_h2d_done.saturating_sub(r.t_at_server),
+            copy_d2h: r.t_d2h_done.saturating_sub(r.t_infer_done),
+            preproc: r.t_preproc_done.saturating_sub(r.t_h2d_done),
+            infer: if self.sc.raw_input {
+                r.t_infer_done.saturating_sub(r.t_preproc_done)
+            } else {
+                r.t_infer_done.saturating_sub(r.t_h2d_done)
+            },
+            cpu_us: r.cpu_us + poll_cpu,
+            priority: self.sc.priority_client && r.client == 0,
+        };
+        if r.measured {
+            self.stats.all.push(&rec);
+            if rec.priority {
+                self.stats.priority.push(&rec);
+            } else {
+                self.stats.normal.push(&rec);
+            }
+        }
+        // Closed loop: next request immediately.
+        self.push(self.now, Ev::Send { client: r.client });
+    }
+
+    fn finish(mut self) -> RunStats {
+        let dur = self.now.as_secs().max(1e-9);
+        let served: usize = self.sent_per_client.iter().sum();
+        self.stats.duration_s = dur;
+        self.stats.throughput_rps = served as f64 / dur;
+        self.stats.gpu_util = self.gpu.engine_busy_ns as f64
+            / (self.now.0.max(1) as f64 * self.gpu.cfg.n_engines as f64);
+        self.stats.copy_busy_s = self.gpu.copy_busy_ns() as f64 / 1e9;
+        self.stats.events = self.events;
+        self.stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::zoo::PaperModel;
+
+    fn model(name: &str) -> &'static PaperModel {
+        PaperModel::by_name(name).unwrap()
+    }
+
+    fn quick(sc: Scenario) -> RunStats {
+        World::run(sc.with_requests(120))
+    }
+
+    #[test]
+    fn local_has_no_data_movement() {
+        let s = quick(Scenario::direct(model("ResNet50"), Transport::Local));
+        assert!(s.all.n() > 0);
+        assert_eq!(s.all.request.mean(), 0.0);
+        assert_eq!(s.all.response.mean(), 0.0);
+        assert_eq!(s.all.copy_mean(), 0.0);
+        assert!(s.all.infer.mean() > 0.0);
+    }
+
+    #[test]
+    fn fig5_ordering_single_client() {
+        // Paper Fig 5: Local < GDR < RDMA < TCP for ResNet50.
+        let mut totals = Vec::new();
+        for t in [Transport::Local, Transport::Gdr, Transport::Rdma, Transport::Tcp] {
+            let s = quick(Scenario::direct(model("ResNet50"), t));
+            totals.push((t.name(), s.all.total.mean()));
+        }
+        for w in totals.windows(2) {
+            assert!(
+                w[0].1 < w[1].1,
+                "expected {} < {} but {:?}",
+                w[0].0,
+                w[1].0,
+                totals
+            );
+        }
+    }
+
+    #[test]
+    fn gdr_has_no_copies_rdma_does() {
+        let g = quick(Scenario::direct(model("ResNet50"), Transport::Gdr));
+        let r = quick(Scenario::direct(model("ResNet50"), Transport::Rdma));
+        assert_eq!(g.all.copy_mean(), 0.0);
+        assert!(r.all.copy_mean() > 0.0);
+    }
+
+    #[test]
+    fn stage_sum_matches_total() {
+        // Invariant: the stage decomposition covers the whole latency.
+        for t in [Transport::Gdr, Transport::Rdma, Transport::Tcp] {
+            let s = quick(Scenario::direct(model("MobileNetV3"), t));
+            let sum = s.all.request.mean()
+                + s.all.copy_mean()
+                + s.all.preproc.mean()
+                + s.all.infer.mean()
+                + s.all.response.mean();
+            let total = s.all.total.mean();
+            assert!(
+                (sum - total).abs() / total < 0.02,
+                "{}: stages {sum} vs total {total}",
+                t.name()
+            );
+        }
+    }
+
+    #[test]
+    fn all_requests_complete() {
+        let sc = Scenario::direct(model("MobileNetV3"), Transport::Rdma)
+            .with_clients(4)
+            .with_requests(50);
+        let warmup = (50.0 * sc.warmup_frac) as usize;
+        let s = World::run(sc);
+        assert_eq!(s.all.n(), 4 * (50 - warmup));
+    }
+
+    #[test]
+    fn copy_bottleneck_grows_with_clients() {
+        // §V: the copy engine becomes the bottleneck with concurrency —
+        // copy-time fraction must grow sharply for RDMA on DeepLabV3.
+        let one = World::run(
+            Scenario::direct(model("DeepLabV3_ResNet50"), Transport::Rdma).with_requests(40),
+        );
+        let many = World::run(
+            Scenario::direct(model("DeepLabV3_ResNet50"), Transport::Rdma)
+                .with_clients(16)
+                .with_requests(40),
+        );
+        let f1 = one.all.copy_mean() / one.all.total.mean();
+        let f16 = many.all.copy_mean() / many.all.total.mean();
+        assert!(f16 > 2.0 * f1, "copy fraction {f1} -> {f16}");
+    }
+
+    #[test]
+    fn proxied_slower_than_direct() {
+        let d = quick(Scenario::direct(model("MobileNetV3"), Transport::Gdr));
+        let p = quick(Scenario::proxied(
+            model("MobileNetV3"),
+            Transport::Rdma,
+            Transport::Gdr,
+        ));
+        assert!(p.all.total.mean() > d.all.total.mean());
+    }
+
+    #[test]
+    fn fig10_proxied_ordering() {
+        // TCP/TCP must be the slowest proxied pair; RDMA/GDR the fastest.
+        let pairs = [
+            (Transport::Rdma, Transport::Gdr),
+            (Transport::Tcp, Transport::Gdr),
+            (Transport::Tcp, Transport::Tcp),
+        ];
+        let mut res = Vec::new();
+        for (ch, sh) in pairs {
+            let s = quick(Scenario::proxied(model("MobileNetV3"), ch, sh));
+            res.push(s.all.total.mean());
+        }
+        assert!(res[0] < res[2], "RDMA/GDR {} !< TCP/TCP {}", res[0], res[2]);
+        assert!(res[1] < res[2], "TCP/GDR {} !< TCP/TCP {}", res[1], res[2]);
+    }
+
+    #[test]
+    fn priority_client_protected_under_gdr() {
+        let s = World::run(
+            Scenario::direct(model("YoloV4"), Transport::Gdr)
+                .with_clients(8)
+                .with_requests(40)
+                .with_raw(false)
+                .with_priority_client(true),
+        );
+        assert!(s.priority.n() > 0 && s.normal.n() > 0);
+        assert!(
+            s.priority.total.mean() < 0.5 * s.normal.total.mean(),
+            "priority {} vs normal {}",
+            s.priority.total.mean(),
+            s.normal.total.mean()
+        );
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = quick(Scenario::direct(model("ResNet50"), Transport::Tcp).with_seed(7));
+        let b = quick(Scenario::direct(model("ResNet50"), Transport::Tcp).with_seed(7));
+        assert_eq!(a.all.total.mean(), b.all.total.mean());
+        assert_eq!(a.events, b.events);
+    }
+
+    #[test]
+    fn gpu_util_bounded() {
+        let s = World::run(
+            Scenario::direct(model("WideResNet101"), Transport::Gdr)
+                .with_clients(16)
+                .with_requests(30),
+        );
+        assert!(s.gpu_util > 0.3, "util {}", s.gpu_util);
+        assert!(s.gpu_util <= 1.01, "util {}", s.gpu_util);
+    }
+}

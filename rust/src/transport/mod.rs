@@ -1,0 +1,17 @@
+//! Live-plane transports: message-oriented, zero-serialization (raw
+//! tensor bytes, like the paper's ZeroMQ/RDMA choice in §III-A).
+
+pub mod shm;
+pub mod tcp;
+
+use anyhow::Result;
+
+/// A blocking, message-oriented bidirectional transport.
+pub trait MsgTransport: Send {
+    /// Send one message (framing is the transport's concern).
+    fn send(&mut self, payload: &[u8]) -> Result<()>;
+    /// Receive one message, blocking.
+    fn recv(&mut self) -> Result<Vec<u8>>;
+    /// Mechanism name for metrics/labels.
+    fn kind(&self) -> &'static str;
+}

@@ -1,0 +1,105 @@
+//! TCP transport: length-prefixed frames over `std::net::TcpStream`,
+//! Nagle disabled. No payload serialization — raw tensor bytes, making
+//! latency comparable with the verbs transport (the paper's reason for
+//! choosing ZeroMQ over HTTP/GRPC, §III-A).
+
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream, ToSocketAddrs};
+
+use anyhow::{bail, Context, Result};
+
+use super::MsgTransport;
+
+/// Hard cap on a single frame (64 MiB covers tiny_segnet_b8 responses).
+pub const MAX_FRAME: usize = 64 << 20;
+
+/// One framed TCP connection.
+pub struct TcpTransport {
+    stream: TcpStream,
+}
+
+impl TcpTransport {
+    pub fn connect(addr: impl ToSocketAddrs) -> Result<TcpTransport> {
+        let stream = TcpStream::connect(addr).context("tcp connect")?;
+        stream.set_nodelay(true).ok();
+        Ok(TcpTransport { stream })
+    }
+
+    pub fn from_stream(stream: TcpStream) -> TcpTransport {
+        stream.set_nodelay(true).ok();
+        TcpTransport { stream }
+    }
+
+    /// Bind a listener on an ephemeral (or given) port.
+    pub fn listen(addr: &str) -> Result<TcpListener> {
+        TcpListener::bind(addr).with_context(|| format!("bind {addr}"))
+    }
+}
+
+impl MsgTransport for TcpTransport {
+    fn send(&mut self, payload: &[u8]) -> Result<()> {
+        if payload.len() > MAX_FRAME {
+            bail!("frame too large: {}", payload.len());
+        }
+        let len = (payload.len() as u32).to_le_bytes();
+        self.stream.write_all(&len)?;
+        self.stream.write_all(payload)?;
+        Ok(())
+    }
+
+    fn recv(&mut self) -> Result<Vec<u8>> {
+        let mut len = [0u8; 4];
+        self.stream.read_exact(&mut len).context("frame header")?;
+        let n = u32::from_le_bytes(len) as usize;
+        if n > MAX_FRAME {
+            bail!("oversized frame: {n}");
+        }
+        let mut buf = vec![0u8; n];
+        self.stream.read_exact(&mut buf).context("frame body")?;
+        Ok(buf)
+    }
+
+    fn kind(&self) -> &'static str {
+        "tcp"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+
+    #[test]
+    fn frames_roundtrip() {
+        let listener = TcpTransport::listen("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let server = thread::spawn(move || {
+            let (s, _) = listener.accept().unwrap();
+            let mut t = TcpTransport::from_stream(s);
+            for _ in 0..3 {
+                let msg = t.recv().unwrap();
+                let echoed: Vec<u8> = msg.iter().rev().copied().collect();
+                t.send(&echoed).unwrap();
+            }
+        });
+        let mut c = TcpTransport::connect(addr).unwrap();
+        for size in [0usize, 5, 100_000] {
+            let msg: Vec<u8> = (0..size).map(|i| (i % 251) as u8).collect();
+            c.send(&msg).unwrap();
+            let back = c.recv().unwrap();
+            let want: Vec<u8> = msg.iter().rev().copied().collect();
+            assert_eq!(back, want, "size {size}");
+        }
+        server.join().unwrap();
+    }
+
+    #[test]
+    fn rejects_oversized_send() {
+        let listener = TcpTransport::listen("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let _keep = thread::spawn(move || listener.accept().map(|_| ()).ok());
+        let mut c = TcpTransport::connect(addr).unwrap();
+        let huge = vec![0u8; MAX_FRAME + 1];
+        assert!(c.send(&huge).is_err());
+    }
+}
