@@ -1,14 +1,17 @@
-//! Live transport microbenchmarks: framed-TCP loopback vs SHM-verbs
-//! round-trip latency across payload sizes (the live-plane analogue of
-//! the paper's transport comparison), plus simulator throughput
+//! Live transport microbenchmarks: framed-TCP loopback vs shared-memory
+//! queue vs RDMA-verbs ring vs GDR round-trip latency across payload
+//! sizes (the live-plane analogue of the paper's transport comparison),
+//! the per-stage transport-matrix table, plus simulator throughput
 //! (events/sec) as the sim-plane §Perf metric.
 
 use std::time::Instant;
 
+use accelserve::experiments::{run_matrix, MatrixCfg};
 use accelserve::metrics::stats::Series;
 use accelserve::models::zoo::PaperModel;
 use accelserve::net::params::Transport;
 use accelserve::sim::world::{Scenario, World};
+use accelserve::transport::rdma::{rdma_pair, RingCfg};
 use accelserve::transport::shm::shm_pair;
 use accelserve::transport::tcp::TcpTransport;
 use accelserve::transport::MsgTransport;
@@ -30,6 +33,37 @@ fn rtt(name: &str, iters: usize, mut send_recv: impl FnMut(&[u8]) -> usize, payl
         s.quantile(0.99),
         2.0 * payload.len() as f64 / (s.mean() / 1e3) / 1e6
     );
+}
+
+/// Echo benchmark over an already-connected transport pair. An echo by
+/// definition bounces the payload back through host memory, so GDR's
+/// zero-copy receive cannot show up here — the per-stage matrix table
+/// below is where that effect is measured.
+fn echo_pair<T: MsgTransport + 'static>(
+    label: &str,
+    iters: usize,
+    payload: &[u8],
+    pair: (T, T),
+) {
+    let (mut cli, mut srv) = pair;
+    let server = std::thread::spawn(move || {
+        while let Ok(m) = srv.recv() {
+            if srv.send(&m).is_err() {
+                break;
+            }
+        }
+    });
+    rtt(
+        label,
+        iters,
+        |p| {
+            cli.send(p).unwrap();
+            cli.recv().unwrap().len()
+        },
+        payload,
+    );
+    drop(cli);
+    server.join().ok();
 }
 
 fn main() {
@@ -68,27 +102,40 @@ fn main() {
         }
         server.join().ok();
 
-        // SHM-verbs echo.
-        let (mut cli, mut srv) = shm_pair(size + 64, true);
-        let server = std::thread::spawn(move || {
-            while let Ok(m) = srv.recv() {
-                if srv.send(&m).is_err() {
-                    break;
-                }
-            }
-        });
-        rtt(
-            &format!("shm-verbs {:>8} B", size),
+        // Shared-memory queue echo.
+        echo_pair(&format!("shm {:>8} B", size), iters, &payload, shm_pair(8));
+
+        // RDMA-verbs ring echo (single-slot payloads). The GDR variant
+        // is deliberately absent: its receive-side saving is invisible
+        // to an echo loop (see the matrix table below for it).
+        echo_pair(
+            &format!("rdma {:>8} B", size),
             iters,
-            |p| {
-                cli.send(p).unwrap();
-                cli.recv().unwrap().len()
-            },
             &payload,
+            rdma_pair(RingCfg::for_payload(size), false),
         );
-        drop(cli);
-        server.join().ok();
+
+        // Chunked framing: the same payload through a small-slot ring.
+        echo_pair(
+            &format!("rdma/64KiB-slots {:>8} B", size),
+            iters,
+            &payload,
+            rdma_pair(
+                RingCfg {
+                    slots: 8,
+                    slot_bytes: 64 << 10,
+                },
+                false,
+            ),
+        );
     }
+
+    println!("\n== transport matrix (per-stage breakdown, 1 MiB raw frames) ==");
+    let cfg = MatrixCfg {
+        requests: iters.min(160),
+        ..MatrixCfg::default()
+    };
+    print!("{}", run_matrix(&cfg).render());
 
     println!("\n== simulator throughput (events/sec) ==");
     for (model, clients, reqs) in [("MobileNetV3", 16usize, 400usize), ("DeepLabV3_ResNet50", 16, 100)] {

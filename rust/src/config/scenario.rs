@@ -23,6 +23,7 @@ use crate::gpu::Sharing;
 use crate::models::zoo::PaperModel;
 use crate::net::params::Transport;
 use crate::sim::world::Scenario;
+use crate::transport::TransportKind;
 
 use super::json::Json;
 
@@ -46,6 +47,7 @@ pub fn parse_scenario(text: &str) -> Result<Scenario> {
         "priority_client",
         "seed",
         "warmup_frac",
+        "live_transport",
     ];
     for k in obj.keys() {
         if !KNOWN.contains(&k.as_str()) {
@@ -102,6 +104,12 @@ pub fn parse_scenario(text: &str) -> Result<Scenario> {
         }
         sc.warmup_frac = f;
     }
+    if let Some(lt) = v.get("live_transport").and_then(Json::as_str) {
+        sc.live_transport = Some(
+            TransportKind::by_name(lt)
+                .with_context(|| format!("bad live_transport {lt} (tcp|shm|rdma|gdr)"))?,
+        );
+    }
     Ok(sc)
 }
 
@@ -122,7 +130,7 @@ mod tests {
             r#"{"model": "YoloV4", "transport": "rdma", "client_hop": "tcp",
                 "clients": 8, "requests": 50, "raw": false, "sharing": "mps",
                 "streams": 4, "priority_client": true, "seed": 9,
-                "warmup_frac": 0.2}"#,
+                "warmup_frac": 0.2, "live_transport": "gdr"}"#,
         )
         .unwrap();
         assert_eq!(sc.model.name, "YoloV4");
@@ -135,6 +143,7 @@ mod tests {
         assert_eq!(sc.n_streams, 4);
         assert!(sc.priority_client);
         assert_eq!(sc.seed, 9);
+        assert_eq!(sc.live_transport, Some(TransportKind::Gdr));
         // And it runs.
         let stats = crate::sim::world::World::run(sc);
         assert!(stats.all.n() > 0);
@@ -147,6 +156,7 @@ mod tests {
         assert_eq!(sc.n_clients, 1);
         assert!(sc.raw_input);
         assert_eq!(sc.client_hop, None);
+        assert_eq!(sc.live_transport, None);
     }
 
     #[test]
@@ -164,6 +174,10 @@ mod tests {
         .is_err());
         assert!(parse_scenario(
             r#"{"model": "ResNet50", "transport": "gdr", "warmup_frac": 1.5}"#
+        )
+        .is_err());
+        assert!(parse_scenario(
+            r#"{"model": "ResNet50", "transport": "gdr", "live_transport": "warp"}"#
         )
         .is_err());
         assert!(parse_scenario("[]").is_err());

@@ -110,21 +110,41 @@ pub fn run_client_loop(
     Ok(out)
 }
 
-/// Run the full TCP load test: spawns `n_clients` closed-loop threads.
-pub fn run_tcp(addr: SocketAddr, cfg: &LoadCfg) -> Result<LiveStats> {
+/// Run the full load test over any transport: spawns `n_clients`
+/// closed-loop threads, each dialing its own connection through the
+/// `connect` closure (client index passed in, e.g. for per-client
+/// rings or priority addressing).
+pub fn run_on<T, F>(connect: F, cfg: &LoadCfg) -> Result<LiveStats>
+where
+    T: MsgTransport,
+    F: Fn(usize) -> Result<T> + Sync,
+{
     let t_start = Instant::now();
-    let mut handles = Vec::new();
-    for c in 0..cfg.n_clients {
-        let cfg = cfg.clone();
-        handles.push(std::thread::spawn(move || -> Result<Vec<ReqRecord>> {
-            let mut t = TcpTransport::connect(addr)?;
-            run_client_loop(&mut t, &cfg, c)
-        }));
-    }
+    let results: Vec<Result<Vec<ReqRecord>>> = std::thread::scope(|s| {
+        let mut handles = Vec::new();
+        for c in 0..cfg.n_clients {
+            let connect = &connect;
+            handles.push(s.spawn(move || -> Result<Vec<ReqRecord>> {
+                let mut t = connect(c)?;
+                run_client_loop(&mut t, cfg, c)
+            }));
+        }
+        handles
+            .into_iter()
+            .map(|h| {
+                h.join()
+                    .unwrap_or_else(|_| Err(anyhow!("client thread panicked")))
+            })
+            .collect()
+    });
     let mut stats = LiveStats::default();
-    for h in handles {
-        match h.join().map_err(|_| anyhow!("client thread panicked"))? {
+    let mut served = 0usize;
+    for res in results {
+        match res {
             Ok(records) => {
+                // A successful client completed its whole closed loop
+                // (warmup requests were served even though unrecorded).
+                served += cfg.requests_per_client;
                 for r in &records {
                     stats.all.push(r);
                     if r.priority {
@@ -141,7 +161,11 @@ pub fn run_tcp(addr: SocketAddr, cfg: &LoadCfg) -> Result<LiveStats> {
         }
     }
     stats.duration_s = t_start.elapsed().as_secs_f64();
-    let served = cfg.n_clients * cfg.requests_per_client;
     stats.throughput_rps = served as f64 / stats.duration_s.max(1e-9);
     Ok(stats)
+}
+
+/// Run the full TCP load test: spawns `n_clients` closed-loop threads.
+pub fn run_tcp(addr: SocketAddr, cfg: &LoadCfg) -> Result<LiveStats> {
+    run_on(|_client| TcpTransport::connect(addr), cfg)
 }

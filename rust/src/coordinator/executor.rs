@@ -253,8 +253,12 @@ fn run_chunk(engine: &Engine, jobs: Vec<Job>) {
         let job = &jobs[0];
         let t0 = Instant::now();
         let pre = match &job.payload {
-            TensorBuf::U8(_) => engine.infer("preprocess", &job.payload),
-            _ => Err(anyhow!("raw job with non-u8 payload")),
+            // U8Region is the GDR zero-copy case: the preprocess
+            // artifact reads straight out of the registered region.
+            TensorBuf::U8(_) | TensorBuf::U8Region(_) => {
+                engine.infer("preprocess", &job.payload)
+            }
+            TensorBuf::F32(_) => Err(anyhow!("raw job with non-u8 payload")),
         };
         match pre {
             Err(e) => {
@@ -286,7 +290,7 @@ fn run_chunk(engine: &Engine, jobs: Vec<Job>) {
     for j in &jobs {
         match &j.payload {
             TensorBuf::F32(v) => flat.extend_from_slice(v),
-            TensorBuf::U8(_) => {
+            TensorBuf::U8(_) | TensorBuf::U8Region(_) => {
                 let _ = j.reply.send(Err(anyhow!("u8 payload without raw flag")));
                 return;
             }

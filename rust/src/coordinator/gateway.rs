@@ -2,8 +2,13 @@
 //! connection mode (§IV-B). Clients connect to the gateway; the gateway
 //! opens one upstream (dealer) connection per client and forwards
 //! frames verbatim — the store-and-forward + protocol-translation hop.
-//! To isolate networking effects it always forwards to one fixed server
-//! (as the paper configures it).
+//! To isolate networking effects it always forwards to one fixed
+//! upstream (as the paper configures it).
+//!
+//! `gateway_on` is transport-generic on both faces: any [`Acceptor`]
+//! downstream, any connector closure upstream — so a TCP-facing
+//! gateway can dealer into an RDMA/GDR fabric, the paper's
+//! "accelerate the last hop" deployment (§V-B).
 
 use std::net::SocketAddr;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -12,19 +17,18 @@ use std::time::Duration;
 
 use anyhow::Result;
 
-use crate::transport::tcp::TcpTransport;
-use crate::transport::MsgTransport;
+use crate::transport::tcp::{TcpAcceptor, TcpTransport};
+use crate::transport::{Acceptor, MsgTransport};
 
-/// A running gateway.
-pub struct GatewayHandle {
-    pub addr: SocketAddr,
+/// A running transport-generic gateway loop.
+pub struct GatewayLoop {
     stop: Arc<AtomicBool>,
     accept_thread: Option<std::thread::JoinHandle<()>>,
     /// Frames forwarded (both directions) — observability hook.
     pub forwarded: Arc<AtomicU64>,
 }
 
-impl GatewayHandle {
+impl GatewayLoop {
     pub fn stop(mut self) {
         self.stop.store(true, Ordering::SeqCst);
         if let Some(t) = self.accept_thread.take() {
@@ -33,43 +37,66 @@ impl GatewayHandle {
     }
 }
 
-/// Start a TCP-facing gateway forwarding every connection to
-/// `upstream_addr` over a dedicated dealer connection.
-pub fn gateway_tcp(addr: &str, upstream_addr: SocketAddr) -> Result<GatewayHandle> {
-    let listener = TcpTransport::listen(addr)?;
-    listener.set_nonblocking(true)?;
-    let local = listener.local_addr()?;
+/// Start a gateway: every connection accepted from `acceptor` gets a
+/// dedicated upstream dealer connection from `connect_upstream` and a
+/// relay thread.
+pub fn gateway_on<A, U, F>(mut acceptor: A, connect_upstream: F) -> GatewayLoop
+where
+    A: Acceptor,
+    U: MsgTransport + 'static,
+    F: Fn() -> Result<U> + Send + 'static,
+{
     let stop = Arc::new(AtomicBool::new(false));
     let stop2 = stop.clone();
     let forwarded = Arc::new(AtomicU64::new(0));
     let fwd2 = forwarded.clone();
     let accept_thread = std::thread::spawn(move || {
         while !stop2.load(Ordering::SeqCst) {
-            match listener.accept() {
-                Ok((stream, _)) => {
-                    stream.set_nonblocking(false).ok();
-                    let fwd = fwd2.clone();
-                    std::thread::spawn(move || {
-                        let client = TcpTransport::from_stream(stream);
-                        match TcpTransport::connect(upstream_addr) {
-                            Ok(upstream) => relay(client, upstream, &fwd),
-                            Err(_) => { /* upstream down: drop client */ }
-                        }
-                    });
-                }
-                Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                    std::thread::sleep(Duration::from_millis(2));
-                }
+            match acceptor.poll_accept() {
+                Ok(Some(client)) => match connect_upstream() {
+                    Ok(upstream) => {
+                        let fwd = fwd2.clone();
+                        std::thread::spawn(move || relay(client, upstream, &fwd));
+                    }
+                    Err(_) => { /* upstream down: drop client */ }
+                },
+                Ok(None) => std::thread::sleep(Duration::from_millis(2)),
                 Err(_) => break,
             }
         }
     });
-    Ok(GatewayHandle {
-        addr: local,
+    GatewayLoop {
         stop,
         accept_thread: Some(accept_thread),
         forwarded,
-    })
+    }
+}
+
+/// A running TCP-facing gateway.
+pub struct GatewayHandle {
+    pub addr: SocketAddr,
+    inner: GatewayLoop,
+}
+
+impl GatewayHandle {
+    /// Frames forwarded (both directions) — observability hook.
+    pub fn forwarded(&self) -> &Arc<AtomicU64> {
+        &self.inner.forwarded
+    }
+
+    pub fn stop(self) {
+        self.inner.stop();
+    }
+}
+
+/// Start a TCP-facing gateway forwarding every connection to
+/// `upstream_addr` over a dedicated dealer connection.
+pub fn gateway_tcp(addr: &str, upstream_addr: SocketAddr) -> Result<GatewayHandle> {
+    let listener = TcpTransport::listen(addr)?;
+    let acceptor = TcpAcceptor::new(listener)?;
+    let local = acceptor.local_addr()?;
+    let inner = gateway_on(acceptor, move || TcpTransport::connect(upstream_addr));
+    Ok(GatewayHandle { addr: local, inner })
 }
 
 /// Synchronous request/response relay (closed-loop clients: one frame

@@ -10,7 +10,7 @@ pub mod gateway;
 pub mod protocol;
 pub mod server;
 
-pub use client::{run_tcp, LiveStats, LoadCfg};
+pub use client::{run_on, run_tcp, LiveStats, LoadCfg};
 pub use executor::{BatchCfg, Done, Executor};
-pub use gateway::gateway_tcp;
-pub use server::{handle_conn, serve_tcp, ServerHandle};
+pub use gateway::{gateway_on, gateway_tcp, GatewayHandle, GatewayLoop};
+pub use server::{handle_conn, serve_on, serve_tcp, ServeLoop, ServerHandle};

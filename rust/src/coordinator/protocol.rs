@@ -24,6 +24,40 @@ pub struct Request {
     pub payload: Vec<u8>,
 }
 
+/// Request header fields without the payload: what the zero-copy
+/// receive path parses in place, leaving the payload bytes untouched
+/// inside the transport's registered region.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RequestMeta {
+    pub model: String,
+    pub raw: bool,
+    pub prio: u8,
+}
+
+/// Parse the request header from a frame, returning the metadata and
+/// the byte offset where the payload starts.
+pub fn split_header(buf: &[u8]) -> Result<(RequestMeta, usize)> {
+    if buf.len() < 4 {
+        bail!("short request frame: {} bytes", buf.len());
+    }
+    if buf[0] != OP_INFER {
+        bail!("unknown opcode {}", buf[0]);
+    }
+    let name_len = buf[3] as usize;
+    if buf.len() < 4 + name_len {
+        bail!("truncated model name");
+    }
+    let model = std::str::from_utf8(&buf[4..4 + name_len])?.to_string();
+    Ok((
+        RequestMeta {
+            model,
+            raw: buf[1] & FLAG_RAW != 0,
+            prio: buf[2],
+        },
+        4 + name_len,
+    ))
+}
+
 impl Request {
     pub fn encode(&self) -> Vec<u8> {
         let name = self.model.as_bytes();
@@ -39,22 +73,12 @@ impl Request {
     }
 
     pub fn decode(buf: &[u8]) -> Result<Request> {
-        if buf.len() < 4 {
-            bail!("short request frame: {} bytes", buf.len());
-        }
-        if buf[0] != OP_INFER {
-            bail!("unknown opcode {}", buf[0]);
-        }
-        let name_len = buf[3] as usize;
-        if buf.len() < 4 + name_len {
-            bail!("truncated model name");
-        }
-        let model = std::str::from_utf8(&buf[4..4 + name_len])?.to_string();
+        let (meta, payload_off) = split_header(buf)?;
         Ok(Request {
-            model,
-            raw: buf[1] & FLAG_RAW != 0,
-            prio: buf[2],
-            payload: buf[4 + name_len..].to_vec(),
+            model: meta.model,
+            raw: meta.raw,
+            prio: meta.prio,
+            payload: buf[payload_off..].to_vec(),
         })
     }
 }
@@ -166,6 +190,23 @@ mod tests {
             payload: vec![1, 2, 3, 4, 5],
         };
         assert_eq!(Request::decode(&r.encode()).unwrap(), r);
+    }
+
+    #[test]
+    fn split_header_matches_decode() {
+        let r = Request {
+            model: "tiny_mobilenet".into(),
+            raw: false,
+            prio: 3,
+            payload: vec![9; 12],
+        };
+        let frame = r.encode();
+        let (meta, off) = split_header(&frame).unwrap();
+        assert_eq!(meta.model, "tiny_mobilenet");
+        assert!(!meta.raw);
+        assert_eq!(meta.prio, 3);
+        assert_eq!(&frame[off..], &r.payload[..]);
+        assert!(split_header(&[]).is_err());
     }
 
     #[test]

@@ -1,8 +1,16 @@
-//! The model-serving server: transport-agnostic connection handler plus
-//! a TCP listener front-end. Thread-per-connection, mirroring the
+//! The model-serving server: a transport-agnostic connection handler
+//! plus a transport-generic accept loop (`serve_on`) with a TCP
+//! front-end (`serve_tcp`). Thread-per-connection, mirroring the
 //! paper's design ("the server allocates the same number of threads as
 //! the number of clients", §III-A), with all GPU work funneled through
 //! the shared `Executor`.
+//!
+//! The receive path is zero-copy aware: `handle_conn` asks the
+//! transport for a [`RecvMsg`], and when a GDR transport hands back a
+//! registered-region view of a raw frame, the payload reaches the
+//! `Executor` as a `TensorBuf::U8Region` — no host bounce copy between
+//! the NIC ring and the GPU staging buffer (the live-plane analogue of
+//! the paper's GPUDirect path, Fig 2b).
 
 use std::net::SocketAddr;
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -12,35 +20,54 @@ use std::time::Duration;
 use anyhow::Result;
 
 use crate::runtime::TensorBuf;
-use crate::transport::tcp::TcpTransport;
-use crate::transport::MsgTransport;
+use crate::transport::tcp::{TcpAcceptor, TcpTransport};
+use crate::transport::{Acceptor, MsgTransport, RecvMsg};
 
 use super::executor::Executor;
-use super::protocol::{f32s_to_bytes, Request, Response};
+use super::protocol::{self, f32s_to_bytes, RequestMeta, Response};
+
+/// Decode one received message into request metadata plus the payload
+/// tensor, preserving a region view for raw GDR payloads.
+fn request_from_msg(msg: RecvMsg) -> Result<(RequestMeta, TensorBuf)> {
+    match msg {
+        RecvMsg::Host(frame) => {
+            let (meta, off) = protocol::split_header(&frame)?;
+            let payload = if meta.raw {
+                TensorBuf::U8(frame[off..].to_vec())
+            } else {
+                TensorBuf::F32(protocol::bytes_to_f32s(&frame[off..])?)
+            };
+            Ok((meta, payload))
+        }
+        RecvMsg::Region(slice) => {
+            let (meta, off) = slice.with(protocol::split_header)?;
+            let len = slice.len() - off;
+            let payload = if meta.raw {
+                // Zero-copy: the raw frame stays in the registered
+                // (device-staging) region all the way to the engine.
+                TensorBuf::U8Region(slice.sub(off, len))
+            } else {
+                // f32 tensors need host-side reinterpretation anyway;
+                // decode straight out of the region (one copy, not two).
+                TensorBuf::F32(slice.sub(off, len).with(protocol::bytes_to_f32s)?)
+            };
+            Ok((meta, payload))
+        }
+    }
+}
 
 /// Serve one connection until the peer hangs up: the request-handling /
 /// preprocessing / inference / response-handling pipeline of Fig 3.
 pub fn handle_conn(mut t: impl MsgTransport, exec: &Executor) {
     loop {
-        let frame = match t.recv() {
-            Ok(f) => f,
+        let msg = match t.recv_msg() {
+            Ok(m) => m,
             Err(_) => return, // peer closed
         };
-        let resp = match Request::decode(&frame) {
+        let resp = match request_from_msg(msg) {
             Err(e) => Response::Err(format!("bad request: {e}")),
-            Ok(req) => {
-                let payload = if req.raw {
-                    TensorBuf::U8(req.payload)
-                } else {
-                    match super::protocol::bytes_to_f32s(&req.payload) {
-                        Ok(v) => TensorBuf::F32(v),
-                        Err(e) => {
-                            let _ = t.send(&Response::Err(e.to_string()).encode());
-                            continue;
-                        }
-                    }
-                };
-                match exec.infer_sync(&req.model, req.raw, req.prio, payload) {
+            Ok((meta, payload)) => {
+                match exec.infer_sync(&meta.model, meta.raw, meta.prio, payload) {
                     Ok(done) => Response::Ok {
                         stages: done.stages,
                         payload: f32s_to_bytes(&done.output),
@@ -55,14 +82,13 @@ pub fn handle_conn(mut t: impl MsgTransport, exec: &Executor) {
     }
 }
 
-/// A running TCP server.
-pub struct ServerHandle {
-    pub addr: SocketAddr,
+/// A running transport-generic accept loop.
+pub struct ServeLoop {
     stop: Arc<AtomicBool>,
     accept_thread: Option<std::thread::JoinHandle<()>>,
 }
 
-impl ServerHandle {
+impl ServeLoop {
     /// Request shutdown (existing connections finish their in-flight
     /// request loop on peer close).
     pub fn stop(mut self) {
@@ -73,34 +99,50 @@ impl ServerHandle {
     }
 }
 
-/// Start a TCP server on `addr` (use port 0 for ephemeral), routing all
-/// work through `exec`.
-pub fn serve_tcp(addr: &str, exec: Arc<Executor>) -> Result<ServerHandle> {
-    let listener = TcpTransport::listen(addr)?;
-    listener.set_nonblocking(true)?;
-    let local = listener.local_addr()?;
+/// Start a server over any transport listener: every accepted
+/// connection gets a handler thread running `handle_conn` against the
+/// shared executor.
+pub fn serve_on<A: Acceptor>(mut acceptor: A, exec: Arc<Executor>) -> ServeLoop {
     let stop = Arc::new(AtomicBool::new(false));
     let stop2 = stop.clone();
     let accept_thread = std::thread::spawn(move || {
         while !stop2.load(Ordering::SeqCst) {
-            match listener.accept() {
-                Ok((stream, _peer)) => {
-                    stream.set_nonblocking(false).ok();
+            match acceptor.poll_accept() {
+                Ok(Some(conn)) => {
                     let exec = exec.clone();
-                    std::thread::spawn(move || {
-                        handle_conn(TcpTransport::from_stream(stream), &exec)
-                    });
+                    std::thread::spawn(move || handle_conn(conn, &exec));
                 }
-                Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                    std::thread::sleep(Duration::from_millis(2));
-                }
+                Ok(None) => std::thread::sleep(Duration::from_millis(2)),
                 Err(_) => break,
             }
         }
     });
-    Ok(ServerHandle {
-        addr: local,
+    ServeLoop {
         stop,
         accept_thread: Some(accept_thread),
+    }
+}
+
+/// A running TCP server.
+pub struct ServerHandle {
+    pub addr: SocketAddr,
+    inner: ServeLoop,
+}
+
+impl ServerHandle {
+    pub fn stop(self) {
+        self.inner.stop();
+    }
+}
+
+/// Start a TCP server on `addr` (use port 0 for ephemeral), routing all
+/// work through `exec`.
+pub fn serve_tcp(addr: &str, exec: Arc<Executor>) -> Result<ServerHandle> {
+    let listener = TcpTransport::listen(addr)?;
+    let acceptor = TcpAcceptor::new(listener)?;
+    let local = acceptor.local_addr()?;
+    Ok(ServerHandle {
+        addr: local,
+        inner: serve_on(acceptor, exec),
     })
 }

@@ -1,7 +1,10 @@
-//! Experiment harnesses: one runner per paper figure/table, shared by
-//! the benches and the CLI.
+//! Experiment harnesses: one runner per paper figure/table (sim plane)
+//! plus the live-plane transport matrix, shared by the benches and the
+//! CLI.
 
 pub mod figs;
 pub mod table;
+pub mod transport_matrix;
 
 pub use table::Table;
+pub use transport_matrix::{run_matrix, MatrixCfg};

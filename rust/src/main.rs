@@ -4,6 +4,7 @@
 //! accelserve serve   --addr 0.0.0.0:7007 --streams 4 --batch 8   # live server
 //! accelserve gateway --addr 0.0.0.0:7008 --upstream host:7007    # live proxy
 //! accelserve client  --addr host:7007 --model tiny_resnet -n 100 -c 4
+//! accelserve matrix  --payload-kb 1024 --requests 160            # live transport matrix
 //! accelserve sim     --model ResNet50 --transport gdr -c 16 -n 300
 //! accelserve fig     --which 5 [--requests 300] [--csv]          # regen a figure
 //! accelserve tables  --which 2|3                                 # paper tables
@@ -24,6 +25,7 @@ fn main() {
         Some("serve") => cmd_serve(&args[1..]),
         Some("gateway") => cmd_gateway(&args[1..]),
         Some("client") => cmd_client(&args[1..]),
+        Some("matrix") => cmd_matrix(&args[1..]),
         Some("sim") => cmd_sim(&args[1..]),
         Some("fig") => cmd_fig(&args[1..]),
         Some("tables") => cmd_tables(&args[1..]),
@@ -36,7 +38,7 @@ fn main() {
 }
 
 const HELP: &str = "accelserve — model serving with hardware-accelerated communication
-subcommands: serve | gateway | client | sim | fig | tables (see README.md)";
+subcommands: serve | gateway | client | matrix | sim | fig | tables (see README.md)";
 
 /// Tiny flag parser: --key value pairs.
 fn flag<'a>(args: &'a [String], key: &str) -> Option<&'a str> {
@@ -50,8 +52,76 @@ fn flag_or<'a>(args: &'a [String], key: &str, default: &'a str) -> &'a str {
     flag(args, key).unwrap_or(default)
 }
 
+/// Live transport matrix: per-stage latency over tcp/shm/rdma/gdr.
+fn cmd_matrix(a: &[String]) -> i32 {
+    let mut cfg = accelserve::experiments::MatrixCfg::default();
+    // A scenario file sets the baseline workload (payload size from the
+    // model's raw frame, transport from "live_transport"); explicit
+    // flags below override it.
+    if let Some(path) = flag(a, "--config") {
+        match accelserve::config::load_scenario(path) {
+            Ok(sc) => {
+                cfg.payload_bytes = sc.model.request_bytes(sc.raw_input) as usize;
+                if let Some(lt) = sc.live_transport {
+                    cfg.transports = vec![lt];
+                }
+            }
+            Err(e) => {
+                eprintln!("config: {e:#}");
+                return 2;
+            }
+        }
+    }
+    if let Some(kb) = flag(a, "--payload-kb").and_then(|v| v.parse::<usize>().ok()) {
+        cfg.payload_bytes = kb.max(1) << 10;
+    }
+    if let Some(n) = flag(a, "--requests").and_then(|v| v.parse::<usize>().ok()) {
+        cfg.requests = n.max(1);
+        cfg.warmup = (n / 10).max(2);
+    }
+    if let Some(list) = flag(a, "--transports") {
+        let mut kinds = Vec::new();
+        for name in list.split(',') {
+            match accelserve::transport::TransportKind::by_name(name) {
+                Some(k) => kinds.push(k),
+                None => {
+                    eprintln!("unknown transport {name} (tcp|shm|rdma|gdr)");
+                    return 2;
+                }
+            }
+        }
+        cfg.transports = kinds;
+    }
+    let csv = a.iter().any(|x| x == "--csv");
+    let t = accelserve::experiments::run_matrix(&cfg);
+    if csv {
+        print!("{}", t.to_csv());
+    } else {
+        print!("{}", t.render());
+    }
+    0
+}
+
 fn cmd_serve(a: &[String]) -> i32 {
     let addr = flag_or(a, "--addr", "127.0.0.1:7007");
+    if let Some(tr) = flag(a, "--transport") {
+        match accelserve::transport::TransportKind::by_name(tr) {
+            Some(accelserve::transport::TransportKind::Tcp) => {}
+            Some(other) => {
+                eprintln!(
+                    "serve: {} is an intra-process transport; use `accelserve matrix \
+                     --transports {}` to exercise it",
+                    other.name(),
+                    other.name()
+                );
+                return 2;
+            }
+            None => {
+                eprintln!("unknown transport {tr} (tcp|shm|rdma|gdr)");
+                return 2;
+            }
+        }
+    }
     let streams: usize = flag_or(a, "--streams", "4").parse().unwrap_or(4);
     let batch: usize = flag_or(a, "--batch", "1").parse().unwrap_or(1);
     let dir = flag_or(a, "--artifacts", "artifacts");

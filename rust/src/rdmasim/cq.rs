@@ -85,6 +85,17 @@ impl CompletionQueue {
         }
     }
 
+    /// Scan for a queued completion with `wr_id` without consuming
+    /// anything (e.g. spotting a teardown sentinel from a send path
+    /// that must not steal the receive path's completions).
+    pub fn contains(&self, wr_id: u64) -> bool {
+        self.q
+            .lock()
+            .expect("cq poisoned")
+            .iter()
+            .any(|wc| wc.wr_id == wr_id)
+    }
+
     pub fn len(&self) -> usize {
         self.q.lock().expect("cq poisoned").len()
     }

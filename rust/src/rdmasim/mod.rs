@@ -22,7 +22,7 @@ pub mod mr;
 pub mod qp;
 
 pub use cq::{CompletionQueue, WorkCompletion};
-pub use mr::MemoryRegion;
+pub use mr::{MemoryRegion, RegionSlice};
 pub use qp::{connect_pair, QueuePair};
 
 #[cfg(test)]

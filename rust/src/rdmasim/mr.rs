@@ -6,7 +6,7 @@
 //! GDR makes device memory a first-class RDMA target).
 
 use std::sync::atomic::{AtomicU32, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 static NEXT_RKEY: AtomicU32 = AtomicU32::new(1);
 
@@ -69,6 +69,60 @@ impl MemoryRegion {
     }
 }
 
+/// A borrowed window into a registered region: the zero-copy handle the
+/// GDR receive path hands downstream (the payload stays in the
+/// registered — conceptually device — memory; consumers read it in
+/// place instead of bouncing it through a host buffer).
+///
+/// The underlying ring slot may be reused by the peer once the
+/// transport has returned its flow-control credit, so a slice is only
+/// valid until the next `recv` on the owning transport — the same
+/// reuse discipline as the paper's per-client pinned buffers (§VII).
+#[derive(Debug, Clone)]
+pub struct RegionSlice {
+    mr: Arc<MemoryRegion>,
+    offset: usize,
+    len: usize,
+}
+
+impl RegionSlice {
+    /// Window `[offset, offset + len)` of `mr`. Panics when out of
+    /// bounds — the transport computes offsets from its own ring math.
+    pub fn new(mr: Arc<MemoryRegion>, offset: usize, len: usize) -> RegionSlice {
+        assert!(offset + len <= mr.len(), "region slice out of bounds");
+        RegionSlice { mr, offset, len }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Narrow the window (relative to this slice's start).
+    pub fn sub(&self, offset: usize, len: usize) -> RegionSlice {
+        assert!(offset + len <= self.len, "sub-slice out of bounds");
+        RegionSlice {
+            mr: self.mr.clone(),
+            offset: self.offset + offset,
+            len,
+        }
+    }
+
+    /// Run `f` over the window without copying out.
+    pub fn with<R>(&self, f: impl FnOnce(&[u8]) -> R) -> R {
+        self.mr.with(self.offset, self.len, f)
+    }
+
+    /// Copy the window out to a host buffer (the bounce the GDR path
+    /// exists to avoid; used by fallbacks and tests).
+    pub fn to_vec(&self) -> Vec<u8> {
+        self.mr.read(self.offset, self.len)
+    }
+}
+
 /// MR access violations.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum MrError {
@@ -110,6 +164,20 @@ mod tests {
         mr.write(4, b"hello").unwrap();
         assert_eq!(mr.read(4, 5), b"hello");
         mr.with(4, 5, |s| assert_eq!(s, b"hello"));
+    }
+
+    #[test]
+    fn region_slice_windows() {
+        let mr = Arc::new(MemoryRegion::register(64));
+        mr.write(8, b"abcdefgh").unwrap();
+        let s = RegionSlice::new(mr.clone(), 8, 8);
+        assert_eq!(s.len(), 8);
+        assert_eq!(s.to_vec(), b"abcdefgh");
+        let inner = s.sub(2, 3);
+        assert_eq!(inner.to_vec(), b"cde");
+        inner.with(|b| assert_eq!(b, b"cde"));
+        assert!(!s.is_empty());
+        assert!(s.sub(8, 0).is_empty());
     }
 
     #[test]

@@ -8,13 +8,19 @@ use std::sync::Mutex;
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::models::manifest::{ArtifactEntry, Manifest};
+use crate::rdmasim::RegionSlice;
 
 /// An input tensor for inference, carried as raw host bytes plus dtype
 /// tag — the homogeneous raw-byte interchange RDMA requires (§VII).
+///
+/// `U8Region` is the GPUDirect variant: the bytes still live in the
+/// transport's registered (device-staging) region and are consumed in
+/// place, skipping the host bounce copy the `U8` path implies.
 #[derive(Debug, Clone)]
 pub enum TensorBuf {
     F32(Vec<f32>),
     U8(Vec<u8>),
+    U8Region(RegionSlice),
 }
 
 impl TensorBuf {
@@ -22,6 +28,7 @@ impl TensorBuf {
         match self {
             TensorBuf::F32(v) => v.len(),
             TensorBuf::U8(v) => v.len(),
+            TensorBuf::U8Region(s) => s.len(),
         }
     }
 
@@ -33,6 +40,15 @@ impl TensorBuf {
         match self {
             TensorBuf::F32(v) => v.len() * 4,
             TensorBuf::U8(v) => v.len(),
+            TensorBuf::U8Region(s) => s.len(),
+        }
+    }
+
+    /// Dtype tag for diagnostics.
+    pub fn dtype(&self) -> &'static str {
+        match self {
+            TensorBuf::F32(_) => "f32",
+            TensorBuf::U8(_) | TensorBuf::U8Region(_) => "u8",
         }
     }
 }
@@ -138,12 +154,21 @@ impl Engine {
                 v,
             )
             .map_err(|e| anyhow!("literal: {e}"))?,
+            // GDR path: materialize the literal straight from the
+            // registered (device-staging) region — no host bounce
+            // buffer between the transport and the runtime.
+            (TensorBuf::U8Region(s), "u8") => s
+                .with(|bytes| {
+                    xla::Literal::create_from_shape_and_untyped_data(
+                        xla::ElementType::U8,
+                        &dims,
+                        bytes,
+                    )
+                })
+                .map_err(|e| anyhow!("literal: {e}"))?,
             (got, want) => bail!(
                 "{name}: dtype mismatch (got {}, want {want})",
-                match got {
-                    TensorBuf::F32(_) => "f32",
-                    TensorBuf::U8(_) => "u8",
-                }
+                got.dtype()
             ),
         };
         let result = c

@@ -49,6 +49,11 @@ pub struct Scenario {
     pub seed: u64,
     /// Leading fraction of each client's requests dropped from stats.
     pub warmup_frac: f64,
+    /// Which *live-plane* transport a runner should use when replaying
+    /// this scenario against the real coordinator (`accelserve matrix
+    /// --config`). The sim plane itself models `transport` above and
+    /// ignores this knob.
+    pub live_transport: Option<crate::transport::TransportKind>,
 }
 
 impl Scenario {
@@ -66,6 +71,7 @@ impl Scenario {
             priority_client: false,
             seed: 1,
             warmup_frac: 0.05,
+            live_transport: None,
         }
     }
 

@@ -1,17 +1,175 @@
 //! Live-plane transports: message-oriented, zero-serialization (raw
 //! tensor bytes, like the paper's ZeroMQ/RDMA choice in §III-A).
+//!
+//! # The transport matrix
+//!
+//! The live serving plane speaks one [`MsgTransport`] trait over four
+//! mechanisms, mirroring the paper's experimental axis (§III-C):
+//!
+//! | kind   | module  | data path                                                |
+//! |--------|---------|----------------------------------------------------------|
+//! | `tcp`  | [`tcp`] | length-prefixed frames over loopback/network sockets      |
+//! | `shm`  | [`shm`] | bounded shared-memory message queue (ZeroMQ `ipc://`-like)|
+//! | `rdma` | [`rdma`]| verbs-style one-sided writes into pre-registered MR rings; the receiver still bounces the payload into a host buffer |
+//! | `gdr`  | [`rdma`]| same wire path as `rdma`, but the registered ring stands for GPU device memory: [`MsgTransport::recv_msg`] returns a [`RecvMsg::Region`] view and the host bounce copy disappears |
+//!
+//! Servers, clients and the gateway are transport-generic: they are
+//! built from an [`Acceptor`] (listener side) or a connector closure
+//! (dialer side), so the same coordinator code serves any cell of the
+//! matrix — see `coordinator::{serve_on, run_on, gateway_on}`. The
+//! per-stage latency effect of each mechanism is measured by
+//! `experiments::transport_matrix` (`accelserve matrix`).
 
+pub mod rdma;
 pub mod shm;
 pub mod tcp;
 
 use anyhow::Result;
 
+use crate::rdmasim::RegionSlice;
+
+/// Hard cap on a single message, shared by all transports (64 MiB
+/// covers tiny_segnet_b8 responses).
+pub const MAX_MSG: usize = 64 << 20;
+
+/// One received message: either copied to a host buffer (the classic
+/// path) or still resident in a registered region (the GDR path).
+#[derive(Debug)]
+pub enum RecvMsg {
+    /// Payload copied into host memory.
+    Host(Vec<u8>),
+    /// Zero-copy view into the transport's registered receive region
+    /// (device-staging memory in GDR mode). Valid until the next `recv`
+    /// on the same transport — see [`RegionSlice`].
+    Region(RegionSlice),
+}
+
+impl RecvMsg {
+    pub fn len(&self) -> usize {
+        match self {
+            RecvMsg::Host(v) => v.len(),
+            RecvMsg::Region(s) => s.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Materialize to host bytes (copies for the `Region` arm).
+    pub fn into_vec(self) -> Vec<u8> {
+        match self {
+            RecvMsg::Host(v) => v,
+            RecvMsg::Region(s) => s.to_vec(),
+        }
+    }
+}
+
 /// A blocking, message-oriented bidirectional transport.
 pub trait MsgTransport: Send {
     /// Send one message (framing is the transport's concern).
     fn send(&mut self, payload: &[u8]) -> Result<()>;
-    /// Receive one message, blocking.
+    /// Receive one message into a host buffer, blocking.
     fn recv(&mut self) -> Result<Vec<u8>>;
+    /// Receive one message, letting zero-copy-capable transports hand
+    /// back a registered-region view instead of a host copy. The
+    /// default just wraps [`MsgTransport::recv`].
+    fn recv_msg(&mut self) -> Result<RecvMsg> {
+        Ok(RecvMsg::Host(self.recv()?))
+    }
     /// Mechanism name for metrics/labels.
     fn kind(&self) -> &'static str;
+}
+
+impl<T: MsgTransport + ?Sized> MsgTransport for Box<T> {
+    fn send(&mut self, payload: &[u8]) -> Result<()> {
+        (**self).send(payload)
+    }
+
+    fn recv(&mut self) -> Result<Vec<u8>> {
+        (**self).recv()
+    }
+
+    fn recv_msg(&mut self) -> Result<RecvMsg> {
+        (**self).recv_msg()
+    }
+
+    fn kind(&self) -> &'static str {
+        (**self).kind()
+    }
+}
+
+/// Listener half of a transport: the server accept loop polls it.
+pub trait Acceptor: Send + 'static {
+    type Conn: MsgTransport + 'static;
+    /// Non-blocking accept: `Ok(Some)` is a new connection, `Ok(None)`
+    /// means nothing pending (the loop sleeps briefly), `Err` is fatal.
+    fn poll_accept(&mut self) -> Result<Option<Self::Conn>>;
+}
+
+/// Which live-plane transport to use: the knob `config/scenario.rs`
+/// and the CLI expose (`--transport`, `"live_transport"`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum TransportKind {
+    Tcp,
+    Shm,
+    Rdma,
+    Gdr,
+}
+
+impl TransportKind {
+    pub const ALL: [TransportKind; 4] = [
+        TransportKind::Tcp,
+        TransportKind::Shm,
+        TransportKind::Rdma,
+        TransportKind::Gdr,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            TransportKind::Tcp => "tcp",
+            TransportKind::Shm => "shm",
+            TransportKind::Rdma => "rdma",
+            TransportKind::Gdr => "gdr",
+        }
+    }
+
+    pub fn by_name(s: &str) -> Option<TransportKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "tcp" => Some(TransportKind::Tcp),
+            "shm" => Some(TransportKind::Shm),
+            "rdma" => Some(TransportKind::Rdma),
+            "gdr" | "gpudirect" => Some(TransportKind::Gdr),
+            _ => None,
+        }
+    }
+
+    /// Does this transport's receive path skip the host bounce copy?
+    pub fn zero_copy_recv(self) -> bool {
+        matches!(self, TransportKind::Gdr)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_names_roundtrip() {
+        for k in TransportKind::ALL {
+            assert_eq!(TransportKind::by_name(k.name()), Some(k));
+        }
+        assert_eq!(TransportKind::by_name("GPUDirect"), Some(TransportKind::Gdr));
+        assert_eq!(TransportKind::by_name("warp"), None);
+        assert!(TransportKind::Gdr.zero_copy_recv());
+        assert!(!TransportKind::Rdma.zero_copy_recv());
+    }
+
+    #[test]
+    fn recv_msg_materializes() {
+        let m = RecvMsg::Host(vec![1, 2, 3]);
+        assert_eq!(m.len(), 3);
+        assert!(!m.is_empty());
+        assert_eq!(m.into_vec(), vec![1, 2, 3]);
+    }
 }

@@ -1,88 +1,53 @@
-//! SHM-verbs transport: the `MsgTransport` face of the rdmasim layer.
+//! SHM transport: a bounded shared-memory message queue per direction,
+//! modeling an intra-host IPC transport (ZeroMQ `ipc://`): the sender
+//! copies the message into shared memory, the receiver copies it out —
+//! one hop cheaper than TCP (no protocol stack), but without the
+//! registered-buffer semantics of the verbs path in `transport::rdma`.
 //!
-//! Messages are RDMA_WRITEs into the peer's pre-registered region
-//! followed by a work completion — one buffer per direction, sized at
-//! connection setup exactly as the paper's per-client pinned buffers
-//! (§III-A; the memory-overhead limitation of §VII falls out of this:
-//! buffers are reserved per client for the connection's lifetime).
+//! The queue is bounded (`depth` messages), so a fast producer blocks
+//! instead of ballooning memory — the flow-control analogue of a full
+//! socket buffer.
 
-use std::sync::Arc;
+use std::sync::mpsc;
 
 use anyhow::{anyhow, bail, Result};
 
-use crate::rdmasim::qp::WR_ID_CLOSE;
-use crate::rdmasim::{connect_pair, MemoryRegion, QueuePair};
+use super::{MsgTransport, MAX_MSG};
 
-use super::MsgTransport;
-
-/// One endpoint of a verbs-style connection.
+/// One endpoint of a bidirectional shared-memory connection.
 pub struct ShmTransport {
-    qp: QueuePair,
-    /// GDR mode: the target region stands for GPU device memory, so the
-    /// receiving server reads payloads with no staging copy.
-    pub gdr: bool,
-    next_wr: u64,
+    tx: mpsc::SyncSender<Vec<u8>>,
+    rx: mpsc::Receiver<Vec<u8>>,
 }
 
-/// Create a connected client/server pair with `buf_len`-byte regions.
-pub fn shm_pair(buf_len: usize, gdr: bool) -> (ShmTransport, ShmTransport) {
-    let client_mr = Arc::new(MemoryRegion::register(buf_len));
-    let server_mr = Arc::new(MemoryRegion::register(buf_len));
-    let (cq, sq) = connect_pair(client_mr, server_mr, 64);
+/// Create a connected pair whose per-direction queues hold up to
+/// `depth` in-flight messages.
+pub fn shm_pair(depth: usize) -> (ShmTransport, ShmTransport) {
+    let depth = depth.max(1);
+    let (a_tx, b_rx) = mpsc::sync_channel(depth);
+    let (b_tx, a_rx) = mpsc::sync_channel(depth);
     (
-        ShmTransport {
-            qp: cq,
-            gdr,
-            next_wr: 0,
-        },
-        ShmTransport {
-            qp: sq,
-            gdr,
-            next_wr: 0,
-        },
+        ShmTransport { tx: a_tx, rx: a_rx },
+        ShmTransport { tx: b_tx, rx: b_rx },
     )
 }
 
 impl MsgTransport for ShmTransport {
     fn send(&mut self, payload: &[u8]) -> Result<()> {
-        if payload.len() + 8 > self.qp.peer_mr().len() {
-            bail!(
-                "message {}B exceeds registered region {}B",
-                payload.len(),
-                self.qp.peer_mr().len()
-            );
+        if payload.len() > MAX_MSG {
+            bail!("message too large: {} bytes", payload.len());
         }
-        // Length goes in-band at the region head via a silent write; the
-        // payload write carries the single completion (one wakeup per
-        // message — RDMA_WRITE + RDMA_WRITE_WITH_IMM pattern).
-        let wr = self.next_wr;
-        self.next_wr += 1;
-        let len = (payload.len() as u64).to_le_bytes();
-        self.qp
-            .post_write_silent(&len, 0)
-            .map_err(|e| anyhow!("post len: {e}"))?;
-        self.qp
-            .post_write(payload, 8, wr)
-            .map_err(|e| anyhow!("post payload: {e}"))?;
-        Ok(())
+        self.tx
+            .send(payload.to_vec())
+            .map_err(|_| anyhow!("peer disconnected"))
     }
 
     fn recv(&mut self) -> Result<Vec<u8>> {
-        // One completion per message; its byte count is authoritative.
-        // A close sentinel means the peer tore the QP down.
-        let wc = self.qp.cq().poll_blocking();
-        if wc.wr_id == WR_ID_CLOSE {
-            bail!("peer disconnected");
-        }
-        Ok(self.qp.local_mr().read(8, wc.byte_len))
+        self.rx.recv().map_err(|_| anyhow!("peer disconnected"))
     }
 
     fn kind(&self) -> &'static str {
-        if self.gdr {
-            "gdr"
-        } else {
-            "rdma"
-        }
+        "shm"
     }
 }
 
@@ -93,7 +58,7 @@ mod tests {
 
     #[test]
     fn shm_roundtrip() {
-        let (mut c, mut s) = shm_pair(1 << 16, true);
+        let (mut c, mut s) = shm_pair(4);
         let server = thread::spawn(move || {
             for _ in 0..10 {
                 let req = s.recv().unwrap();
@@ -112,17 +77,21 @@ mod tests {
     }
 
     #[test]
-    fn oversized_message_rejected() {
-        let (mut c, _s) = shm_pair(128, false);
-        assert!(c.send(&[0u8; 121]).is_err());
-        assert!(c.send(&[0u8; 120]).is_ok());
+    fn close_surfaces_on_recv() {
+        let (c, mut s) = shm_pair(4);
+        drop(c);
+        assert!(s.recv().is_err());
     }
 
     #[test]
-    fn kind_reflects_gdr() {
-        let (c, _s) = shm_pair(64, true);
-        assert_eq!(c.kind(), "gdr");
-        let (r, _s) = shm_pair(64, false);
-        assert_eq!(r.kind(), "rdma");
+    fn oversized_message_rejected() {
+        let (mut c, _s) = shm_pair(1);
+        assert!(c.send(&vec![0u8; MAX_MSG + 1]).is_err());
+    }
+
+    #[test]
+    fn kind_is_shm() {
+        let (c, _s) = shm_pair(1);
+        assert_eq!(c.kind(), "shm");
     }
 }

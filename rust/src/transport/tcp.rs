@@ -8,10 +8,10 @@ use std::net::{TcpListener, TcpStream, ToSocketAddrs};
 
 use anyhow::{bail, Context, Result};
 
-use super::MsgTransport;
+use super::{Acceptor, MsgTransport};
 
-/// Hard cap on a single frame (64 MiB covers tiny_segnet_b8 responses).
-pub const MAX_FRAME: usize = 64 << 20;
+/// Hard cap on a single frame (the shared transport-wide message cap).
+pub const MAX_FRAME: usize = super::MAX_MSG;
 
 /// One framed TCP connection.
 pub struct TcpTransport {
@@ -61,6 +61,42 @@ impl MsgTransport for TcpTransport {
 
     fn kind(&self) -> &'static str {
         "tcp"
+    }
+}
+
+/// Non-blocking accept wrapper plugging a `TcpListener` into the
+/// transport-generic server loop (`coordinator::serve_on`).
+pub struct TcpAcceptor {
+    listener: TcpListener,
+}
+
+impl TcpAcceptor {
+    /// Takes ownership of a bound listener and switches it to
+    /// non-blocking accepts.
+    pub fn new(listener: TcpListener) -> Result<TcpAcceptor> {
+        listener
+            .set_nonblocking(true)
+            .context("listener nonblocking")?;
+        Ok(TcpAcceptor { listener })
+    }
+
+    pub fn local_addr(&self) -> Result<std::net::SocketAddr> {
+        self.listener.local_addr().context("listener addr")
+    }
+}
+
+impl Acceptor for TcpAcceptor {
+    type Conn = TcpTransport;
+
+    fn poll_accept(&mut self) -> Result<Option<TcpTransport>> {
+        match self.listener.accept() {
+            Ok((stream, _peer)) => {
+                stream.set_nonblocking(false).ok();
+                Ok(Some(TcpTransport::from_stream(stream)))
+            }
+            Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => Ok(None),
+            Err(e) => Err(e.into()),
+        }
     }
 }
 

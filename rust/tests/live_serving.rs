@@ -9,6 +9,7 @@ use accelserve::coordinator::{
     gateway_tcp, protocol, run_tcp, serve_tcp, BatchCfg, Executor, LoadCfg,
 };
 use accelserve::runtime::TensorBuf;
+use accelserve::transport::rdma::{rdma_fabric, rdma_pair, RingCfg};
 use accelserve::transport::shm::shm_pair;
 use accelserve::transport::MsgTransport;
 
@@ -83,7 +84,7 @@ fn gateway_proxies_and_adds_latency() {
     // Every request and response traversed the gateway, and the
     // pipeline still served the same request count. (Wall-clock
     // comparisons are too noisy on shared CI machines to assert.)
-    assert!(gw.forwarded.load(std::sync::atomic::Ordering::Relaxed) >= 24);
+    assert!(gw.forwarded().load(std::sync::atomic::Ordering::Relaxed) >= 24);
     assert_eq!(proxied.all.n(), direct.all.n());
     assert!(proxied.all.total.mean() > 0.0);
     gw.stop();
@@ -91,9 +92,9 @@ fn gateway_proxies_and_adds_latency() {
 }
 
 #[test]
-fn shm_verbs_transport_serves() {
+fn rdma_verbs_transport_serves() {
     let Some(exec) = start_exec(1, 1) else { return };
-    let (mut cli, srv) = shm_pair(8 << 20, true);
+    let (mut cli, srv) = rdma_pair(RingCfg::default(), false);
     let exec2 = exec.clone();
     let server = std::thread::spawn(move || {
         accelserve::coordinator::handle_conn(srv, &exec2);
@@ -121,8 +122,66 @@ fn shm_verbs_transport_serves() {
 }
 
 #[test]
-fn tcp_and_shm_same_numerics() {
-    // The same request over both transports must produce identical
+fn gdr_raw_pipeline_zero_copy_serves() {
+    // Raw frames over a GDR ring: the server's receive hands the
+    // executor a registered-region TensorBuf (no host bounce), and the
+    // output must match the same request over TCP.
+    let Some(exec) = start_exec(1, 1) else { return };
+    let frame = accelserve::models::zoo::WorkloadData::image(64 * 64 * 3, 11).bytes;
+    let req = protocol::Request {
+        model: "tiny_mobilenet".into(),
+        raw: true,
+        prio: 0,
+        payload: frame,
+    };
+
+    let (mut cli, srv) = rdma_pair(RingCfg::default(), true);
+    let e2 = exec.clone();
+    let h = std::thread::spawn(move || accelserve::coordinator::handle_conn(srv, &e2));
+    cli.send(&req.encode()).unwrap();
+    let gdr_out = match protocol::Response::decode(&cli.recv().unwrap()).unwrap() {
+        protocol::Response::Ok { payload, stages } => {
+            assert!(stages.preproc_ns > 0, "raw path must preprocess");
+            protocol::bytes_to_f32s(&payload).unwrap()
+        }
+        protocol::Response::Err(e) => panic!("{e}"),
+    };
+    drop(cli);
+    h.join().unwrap();
+
+    let server = serve_tcp("127.0.0.1:0", exec.clone()).unwrap();
+    let mut t = accelserve::transport::tcp::TcpTransport::connect(server.addr).unwrap();
+    t.send(&req.encode()).unwrap();
+    let tcp_out = match protocol::Response::decode(&t.recv().unwrap()).unwrap() {
+        protocol::Response::Ok { payload, .. } => protocol::bytes_to_f32s(&payload).unwrap(),
+        protocol::Response::Err(e) => panic!("{e}"),
+    };
+    server.stop();
+    assert_eq!(gdr_out, tcp_out, "zero-copy path must not change numerics");
+}
+
+#[test]
+fn serve_on_accepts_rdma_fabric_connections() {
+    // The transport-generic accept loop serving verbs connections
+    // through the in-process fabric, with a multi-client load run over
+    // `run_on` — the live-plane server matrix in one test.
+    let Some(exec) = start_exec(2, 1) else { return };
+    let (connector, listener) = rdma_fabric(RingCfg::default(), true);
+    let handle = accelserve::coordinator::serve_on(listener, exec.clone());
+    let stats = accelserve::coordinator::run_on(
+        |_client| connector.connect(),
+        &load("tiny_mobilenet", false, 2, 8),
+    )
+    .unwrap();
+    assert_eq!(stats.errors, 0);
+    assert_eq!(stats.all.n(), 2 * 6);
+    assert!(stats.all.total.mean() > 0.0);
+    handle.stop();
+}
+
+#[test]
+fn all_transports_same_numerics() {
+    // The same request over every transport must produce identical
     // outputs (raw-byte interchange, no serialization ambiguity).
     let Some(exec) = start_exec(1, 1) else { return };
     let input: Vec<f32> = (0..32 * 32 * 3).map(|i| (i % 13) as f32 / 13.0).collect();
@@ -133,17 +192,27 @@ fn tcp_and_shm_same_numerics() {
         payload: protocol::f32s_to_bytes(&input),
     };
 
-    // SHM path.
-    let (mut cli, srv) = shm_pair(8 << 20, false);
-    let e2 = exec.clone();
-    let h = std::thread::spawn(move || accelserve::coordinator::handle_conn(srv, &e2));
-    cli.send(&req.encode()).unwrap();
-    let shm_out = match protocol::Response::decode(&cli.recv().unwrap()).unwrap() {
-        protocol::Response::Ok { payload, .. } => protocol::bytes_to_f32s(&payload).unwrap(),
-        protocol::Response::Err(e) => panic!("{e}"),
+    let serve_once = |mut cli: Box<dyn MsgTransport>, srv: Box<dyn MsgTransport>| {
+        let e2 = exec.clone();
+        let h = std::thread::spawn(move || accelserve::coordinator::handle_conn(srv, &e2));
+        cli.send(&req.encode()).unwrap();
+        let out = match protocol::Response::decode(&cli.recv().unwrap()).unwrap() {
+            protocol::Response::Ok { payload, .. } => {
+                protocol::bytes_to_f32s(&payload).unwrap()
+            }
+            protocol::Response::Err(e) => panic!("{e}"),
+        };
+        drop(cli);
+        h.join().unwrap();
+        out
     };
-    drop(cli);
-    h.join().unwrap();
+
+    let (shm_c, shm_s) = shm_pair(4);
+    let shm_out = serve_once(Box::new(shm_c), Box::new(shm_s));
+    let (rdma_c, rdma_s) = rdma_pair(RingCfg::default(), false);
+    let rdma_out = serve_once(Box::new(rdma_c), Box::new(rdma_s));
+    let (gdr_c, gdr_s) = rdma_pair(RingCfg::default(), true);
+    let gdr_out = serve_once(Box::new(gdr_c), Box::new(gdr_s));
 
     // TCP path.
     let server = serve_tcp("127.0.0.1:0", exec.clone()).unwrap();
@@ -155,6 +224,8 @@ fn tcp_and_shm_same_numerics() {
     };
     server.stop();
     assert_eq!(shm_out, tcp_out);
+    assert_eq!(rdma_out, tcp_out);
+    assert_eq!(gdr_out, tcp_out);
 }
 
 #[test]

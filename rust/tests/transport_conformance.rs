@@ -1,0 +1,215 @@
+//! MsgTransport conformance suite: one generic harness run against all
+//! four live-plane transports (tcp, shm, rdma, gdr). Every transport
+//! must agree on the contract the coordinator relies on:
+//!
+//! * round-trip fidelity across payload sizes,
+//! * large (>= 4 MiB) payloads (chunked framing on the verbs rings),
+//! * zero-length messages,
+//! * peer close surfacing as `Err` from `recv`,
+//! * pipelined sends (sender running ahead of the receiver), and
+//! * concurrent send/recv from two threads on the same side.
+//!
+//! The paper's transport *ordering* (rdma < tcp, gdr <= rdma) is
+//! asserted by `tests/transport_matrix_ordering.rs`, kept in its own
+//! test binary so its wall-clock medians never compete with this
+//! suite's worker threads for CPU.
+
+use accelserve::transport::rdma::{rdma_pair, RingCfg};
+use accelserve::transport::shm::shm_pair;
+use accelserve::transport::tcp::TcpTransport;
+use accelserve::transport::MsgTransport;
+
+type Conn = Box<dyn MsgTransport>;
+type Pair = (Conn, Conn);
+
+fn tcp_pair() -> Pair {
+    let listener = TcpTransport::listen("127.0.0.1:0").expect("bind");
+    let addr = listener.local_addr().expect("addr");
+    let client = TcpTransport::connect(addr).expect("connect");
+    let (stream, _) = listener.accept().expect("accept");
+    (Box::new(client), Box::new(TcpTransport::from_stream(stream)))
+}
+
+fn shm_pair_boxed() -> Pair {
+    let (a, b) = shm_pair(8);
+    (Box::new(a), Box::new(b))
+}
+
+fn rdma_pair_boxed() -> Pair {
+    let (a, b) = rdma_pair(RingCfg::default(), false);
+    (Box::new(a), Box::new(b))
+}
+
+fn gdr_pair_boxed() -> Pair {
+    let (a, b) = rdma_pair(RingCfg::default(), true);
+    (Box::new(a), Box::new(b))
+}
+
+fn factories() -> Vec<(&'static str, fn() -> Pair)> {
+    vec![
+        ("tcp", tcp_pair),
+        ("shm", shm_pair_boxed),
+        ("rdma", rdma_pair_boxed),
+        ("gdr", gdr_pair_boxed),
+    ]
+}
+
+/// Deterministic payload: size + per-message tag baked into each byte.
+fn pattern(len: usize, tag: u8) -> Vec<u8> {
+    (0..len)
+        .map(|i| (i as u8).wrapping_mul(31).wrapping_add(tag))
+        .collect()
+}
+
+#[test]
+fn roundtrip_fidelity() {
+    for (name, make) in factories() {
+        let (mut client, mut server) = make();
+        let sizes = [0usize, 1, 3, 1024, 100_000];
+        let h = std::thread::spawn(move || {
+            for _ in 0..sizes.len() {
+                let msg = server.recv().expect("server recv");
+                let echoed: Vec<u8> = msg.iter().rev().copied().collect();
+                server.send(&echoed).expect("server send");
+            }
+        });
+        for (i, &size) in sizes.iter().enumerate() {
+            let msg = pattern(size, i as u8);
+            client.send(&msg).expect("client send");
+            let back = client.recv().expect("client recv");
+            let want: Vec<u8> = msg.iter().rev().copied().collect();
+            assert_eq!(back, want, "{name}: size {size}");
+        }
+        h.join().unwrap();
+    }
+}
+
+#[test]
+fn large_payload_framing() {
+    // 4 MiB + 3: forces multi-chunk framing on the default verbs ring
+    // (256 KiB slots -> 17 chunks, wrapping the 8-slot ring twice).
+    for (name, make) in factories() {
+        let (mut client, mut server) = make();
+        let h = std::thread::spawn(move || {
+            let msg = server.recv().expect("server recv");
+            server.send(&msg).expect("server send");
+        });
+        let msg = pattern((4 << 20) + 3, 42);
+        client.send(&msg).expect("client send");
+        let back = client.recv().expect("client recv");
+        assert_eq!(back.len(), msg.len(), "{name}: length");
+        assert_eq!(back, msg, "{name}: content");
+        h.join().unwrap();
+    }
+}
+
+#[test]
+fn zero_length_messages() {
+    for (name, make) in factories() {
+        let (mut client, mut server) = make();
+        let h = std::thread::spawn(move || {
+            for _ in 0..4 {
+                let msg = server.recv().expect("server recv");
+                server.send(&msg).expect("server send");
+            }
+        });
+        // Empties interleaved with payloads: framing must keep them apart.
+        for (i, size) in [0usize, 64, 0, 0].into_iter().enumerate() {
+            let msg = pattern(size, i as u8);
+            client.send(&msg).expect("client send");
+            let back = client.recv().expect("client recv");
+            assert_eq!(back, msg, "{name}: round {i}");
+        }
+        h.join().unwrap();
+    }
+}
+
+#[test]
+fn peer_close_surfaces_err_on_recv() {
+    for (name, make) in factories() {
+        let (mut client, mut server) = make();
+        let h = std::thread::spawn(move || {
+            let msg = server.recv().expect("server recv");
+            server.send(&msg).expect("server send");
+            // server drops here
+        });
+        client.send(b"last words").expect("client send");
+        assert_eq!(client.recv().expect("client recv"), b"last words");
+        h.join().unwrap();
+        assert!(
+            client.recv().is_err(),
+            "{name}: recv after peer close must error"
+        );
+    }
+}
+
+#[test]
+fn pipelined_sender_runs_ahead() {
+    // The sender keeps WINDOW requests in flight; flow control (socket
+    // buffers / bounded queue / ring credits) must neither corrupt nor
+    // deadlock.
+    const N: usize = 64;
+    const WINDOW: usize = 4;
+    for (name, make) in factories() {
+        let (mut client, mut server) = make();
+        let h = std::thread::spawn(move || {
+            for _ in 0..N {
+                let msg = server.recv().expect("server recv");
+                server.send(&msg).expect("server send");
+            }
+        });
+        for i in 0..N {
+            client.send(&pattern(512, i as u8)).expect("client send");
+            if i >= WINDOW {
+                let back = client.recv().expect("client recv");
+                assert_eq!(back, pattern(512, (i - WINDOW) as u8), "{name}: msg {i}");
+            }
+        }
+        for i in (N - WINDOW)..N {
+            let back = client.recv().expect("client drain");
+            assert_eq!(back, pattern(512, i as u8), "{name}: drain {i}");
+        }
+        h.join().unwrap();
+    }
+}
+
+#[test]
+fn interleaved_send_recv_from_two_threads() {
+    // One side runs a dedicated sender thread and a dedicated receiver
+    // thread concurrently; the other side relays between two
+    // connections. Exercises concurrent send/recv through the whole
+    // stack under pipelining.
+    const N: usize = 100;
+    for (name, make) in factories() {
+        let (tx_conn, relay_in) = make();
+        let (relay_out, rx_conn) = make();
+        let mut tx_conn = tx_conn;
+        let mut relay_in = relay_in;
+        let mut relay_out = relay_out;
+        let mut rx_conn = rx_conn;
+
+        let sender = std::thread::spawn(move || {
+            for i in 0..N {
+                tx_conn.send(&pattern(256, i as u8)).expect("sender send");
+            }
+        });
+        let relay = std::thread::spawn(move || {
+            for _ in 0..N {
+                let msg = relay_in.recv().expect("relay recv");
+                relay_out.send(&msg).expect("relay send");
+            }
+        });
+        let receiver = std::thread::spawn(move || {
+            for i in 0..N {
+                let msg = rx_conn.recv().expect("receiver recv");
+                assert_eq!(msg, pattern(256, i as u8), "msg {i}");
+            }
+        });
+        sender.join().unwrap_or_else(|_| panic!("{name}: sender panicked"));
+        relay.join().unwrap_or_else(|_| panic!("{name}: relay panicked"));
+        receiver
+            .join()
+            .unwrap_or_else(|_| panic!("{name}: receiver panicked"));
+    }
+}
+

@@ -1,0 +1,147 @@
+//! Offline stand-in for the `anyhow` crate.
+//!
+//! The container this repo builds in has no network access to crates.io,
+//! so the workspace vendors the small slice of anyhow's API the crate
+//! actually uses: `Error`, `Result`, `anyhow!`, `bail!`, and the
+//! `Context` extension trait. Semantics match anyhow where it matters:
+//!
+//! * `Error` deliberately does NOT implement `std::error::Error`, which
+//!   is what lets the blanket `From<E: std::error::Error>` impl exist
+//!   without colliding with `From<Error> for Error`.
+//! * `context`/`with_context` prepend the context to the source message
+//!   (`"context: source"`), matching anyhow's `{:#}` rendering.
+//!
+//! Swap this path dependency for the real crates.io `anyhow` when
+//! building in a connected environment; no call sites change.
+
+use std::fmt;
+
+/// A type-erased error: a rendered message chain.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Construct from a pre-rendered message (used by `anyhow!`/`bail!`).
+    pub fn new_msg(msg: String) -> Error {
+        Error { msg }
+    }
+
+    /// anyhow-compatible constructor from any displayable message.
+    pub fn msg<M: fmt::Display>(m: M) -> Error {
+        Error { msg: m.to_string() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error { msg: e.to_string() }
+    }
+}
+
+/// `Result` defaulting its error type to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to the error (or `None`) arm of a fallible value.
+pub trait Context<T> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, c: C) -> Result<T>;
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, c: C) -> Result<T> {
+        self.map_err(|e| Error::new_msg(format!("{c}: {e}")))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| Error::new_msg(format!("{}: {e}", f())))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, c: C) -> Result<T> {
+        self.ok_or_else(|| Error::new_msg(c.to_string()))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::new_msg(f().to_string()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::new_msg(format!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::Error::new_msg(format!($($arg)*)))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::Other, "boom")
+    }
+
+    #[test]
+    fn from_std_error_and_question_mark() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        assert_eq!(inner().unwrap_err().to_string(), "boom");
+    }
+
+    #[test]
+    fn context_on_result_and_option() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        assert_eq!(r.context("reading x").unwrap_err().to_string(), "reading x: boom");
+        let o: Option<u32> = None;
+        assert_eq!(o.context("missing key").unwrap_err().to_string(), "missing key");
+        let some: Option<u32> = Some(3);
+        assert_eq!(some.with_context(|| "nope").unwrap(), 3);
+    }
+
+    #[test]
+    fn macros_render() {
+        let e = anyhow!("x = {}", 7);
+        assert_eq!(format!("{e}"), "x = 7");
+        assert_eq!(format!("{e:#}"), "x = 7");
+        fn f() -> Result<()> {
+            bail!("bad {}", "state")
+        }
+        assert_eq!(f().unwrap_err().to_string(), "bad state");
+    }
+}

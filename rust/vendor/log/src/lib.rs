@@ -1,0 +1,44 @@
+//! Offline stand-in for the `log` facade: `warn!`/`error!` go straight
+//! to stderr, the chattier levels compile their arguments away. Swap the
+//! path dependency for the real crates.io `log` (plus a logger) when
+//! building in a connected environment; no call sites change.
+
+/// Log an error to stderr.
+#[macro_export]
+macro_rules! error {
+    ($($arg:tt)*) => {
+        eprintln!("[error] {}", format!($($arg)*))
+    };
+}
+
+/// Log a warning to stderr.
+#[macro_export]
+macro_rules! warn {
+    ($($arg:tt)*) => {
+        eprintln!("[warn] {}", format!($($arg)*))
+    };
+}
+
+/// Info-level logging: compiled out in the offline stub.
+#[macro_export]
+macro_rules! info {
+    ($($arg:tt)*) => {{
+        let _ = || format!($($arg)*);
+    }};
+}
+
+/// Debug-level logging: compiled out in the offline stub.
+#[macro_export]
+macro_rules! debug {
+    ($($arg:tt)*) => {{
+        let _ = || format!($($arg)*);
+    }};
+}
+
+/// Trace-level logging: compiled out in the offline stub.
+#[macro_export]
+macro_rules! trace {
+    ($($arg:tt)*) => {{
+        let _ = || format!($($arg)*);
+    }};
+}

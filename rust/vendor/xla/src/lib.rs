@@ -1,0 +1,163 @@
+//! Offline stand-in for the `xla` crate (the xla_extension / PJRT
+//! binding the live-plane `Engine` runs compiled HLO artifacts on).
+//!
+//! This container has no network access and no prebuilt xla_extension
+//! runtime, so the workspace vendors the exact API surface
+//! `rust/src/runtime/engine.rs` uses. Client construction succeeds (so
+//! `Engine::load` works against a manifest and the graceful-skip
+//! pattern in the tests keeps functioning); anything that would need a
+//! real PJRT runtime — parsing HLO text, compiling, executing —
+//! returns a descriptive error instead.
+//!
+//! Swap this path dependency for the real `xla` binding when building
+//! in an environment with xla_extension; no call sites change.
+
+use std::fmt;
+
+/// Errors surfaced by the stub: always a rendered message.
+pub struct Error(String);
+
+impl Error {
+    fn unavailable(what: &str) -> Error {
+        Error(format!(
+            "xla stub: {what} requires the real xla_extension/PJRT runtime \
+             (this build vendors rust/vendor/xla)"
+        ))
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Element dtypes the engine materializes literals for.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+    U8,
+}
+
+/// Parsed HLO module (never constructible in the stub).
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        Err(Error(format!(
+            "xla stub: cannot parse HLO text {path}: the real \
+             xla_extension/PJRT runtime is not available in this build"
+        )))
+    }
+}
+
+/// An XLA computation wrapping an HLO module.
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+/// A host literal: shape + dtype + raw bytes.
+pub struct Literal {
+    _private: (),
+}
+
+impl Literal {
+    pub fn create_from_shape_and_untyped_data(
+        _ty: ElementType,
+        _dims: &[usize],
+        _data: &[u8],
+    ) -> Result<Literal> {
+        Ok(Literal { _private: () })
+    }
+
+    pub fn to_tuple1(self) -> Result<Literal> {
+        Err(Error::unavailable("Literal::to_tuple1"))
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        Err(Error::unavailable("Literal::to_vec"))
+    }
+}
+
+impl AsRef<Literal> for Literal {
+    fn as_ref(&self) -> &Literal {
+        self
+    }
+}
+
+/// A device buffer returned by an execution.
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+/// A compiled, loaded executable.
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: AsRef<Literal>>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::unavailable("PjRtLoadedExecutable::execute"))
+    }
+}
+
+/// The PJRT client ("device context").
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    /// The stub client constructs fine: `Engine::load` only needs it to
+    /// exist; per-artifact compilation is where the stub reports itself.
+    pub fn cpu() -> Result<PjRtClient> {
+        Ok(PjRtClient { _private: () })
+    }
+
+    pub fn platform_name(&self) -> String {
+        "cpu".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::unavailable("PjRtClient::compile"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_constructs_but_compile_reports_stub() {
+        let c = PjRtClient::cpu().unwrap();
+        assert_eq!(c.platform_name(), "cpu");
+        assert!(HloModuleProto::from_text_file("x.hlo.txt").is_err());
+        let lit =
+            Literal::create_from_shape_and_untyped_data(ElementType::F32, &[2, 2], &[0; 16])
+                .unwrap();
+        assert!(lit.to_vec::<f32>().is_err());
+    }
+}
