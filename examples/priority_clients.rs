@@ -49,10 +49,7 @@ fn main() -> anyhow::Result<()> {
     println!("\n(GDR keeps the priority client flat; RDMA's copy queue erodes it — Fig 16)\n");
 
     // --------------------------------------------------------- live plane
-    if !std::path::Path::new("artifacts/manifest.json").exists() {
-        println!("live plane skipped: run `make artifacts` first");
-        return Ok(());
-    }
+    accelserve::models::gen::ensure_artifacts("artifacts")?;
     println!("live plane — priority queue on the PJRT executor (1 stream)\n");
     let exec = Arc::new(Executor::start(
         "artifacts",

@@ -2,13 +2,17 @@
 //! through the public API — no server, no sockets.
 //!
 //! ```sh
-//! make artifacts && cargo run --release --example quickstart
+//! cargo run --release --example quickstart
 //! ```
+//!
+//! Artifacts are generated on first run (`accelserve gen-artifacts`);
+//! `make artifacts` (python/JAX) may overwrite them with the real ones.
 
 use accelserve::models::zoo::WorkloadData;
 use accelserve::runtime::{Engine, TensorBuf};
 
 fn main() -> anyhow::Result<()> {
+    accelserve::models::gen::ensure_artifacts("artifacts")?;
     let engine = Engine::load("artifacts")?;
     println!("PJRT platform: {}", engine.platform());
     println!("artifacts: {}", engine.manifest().artifacts.len());

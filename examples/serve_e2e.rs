@@ -9,8 +9,11 @@
 //! sockets. Results are recorded in EXPERIMENTS.md §E2E.
 //!
 //! ```sh
-//! make artifacts && cargo run --release --example serve_e2e
+//! cargo run --release --example serve_e2e
 //! ```
+//!
+//! Artifacts are generated on first run (`accelserve gen-artifacts`);
+//! `make artifacts` (python/JAX) may overwrite them with the real ones.
 
 use std::sync::Arc;
 
@@ -21,6 +24,7 @@ use accelserve::transport::rdma::{rdma_pair, RingCfg};
 use accelserve::transport::MsgTransport;
 
 fn main() -> anyhow::Result<()> {
+    accelserve::models::gen::ensure_artifacts("artifacts")?;
     let models = ["tiny_mobilenet", "tiny_resnet", "tiny_segnet"];
     let exec = Arc::new(Executor::start(
         "artifacts",

@@ -30,10 +30,7 @@ fn bench(name: &str, iters: usize, mut f: impl FnMut()) -> f64 {
 }
 
 fn main() {
-    if !std::path::Path::new("artifacts/manifest.json").exists() {
-        eprintln!("bench_runtime skipped: run `make artifacts` first");
-        return;
-    }
+    accelserve::models::gen::ensure_artifacts("artifacts").expect("gen artifacts");
     let iters: usize = std::env::var("ACCELSERVE_BENCH_REQS")
         .ok()
         .and_then(|v| v.parse().ok())

@@ -135,7 +135,7 @@ fn main() {
         requests: iters.min(160),
         ..MatrixCfg::default()
     };
-    print!("{}", run_matrix(&cfg).render());
+    print!("{}", run_matrix(&cfg).expect("matrix run").render());
 
     println!("\n== simulator throughput (events/sec) ==");
     for (model, clients, reqs) in [("MobileNetV3", 16usize, 400usize), ("DeepLabV3_ResNet50", 16, 100)] {

@@ -3,35 +3,51 @@
 //! *real* transports — tcp, shm, rdma, gdr — on one identical
 //! raw-frame workload (`accelserve matrix`).
 //!
-//! The pipeline is self-contained (a deterministic CPU stand-in for
-//! the GPU preprocess + infer stages) so the experiment isolates what
-//! the paper isolates: how the communication mechanism moves the
-//! per-stage numbers while compute stays fixed. The stage definitions:
+//! The compute stages are identical across transports so the experiment
+//! isolates what the paper isolates: how the communication mechanism
+//! moves the per-stage numbers while compute stays fixed. Since PR 2
+//! the infer stage runs through the **real `Executor` + `Engine`**
+//! (the `tiny_mobilenet_b1` artifact under the pure-Rust HLO
+//! interpreter), not a CPU stand-in. The stage definitions:
 //!
 //! * **recv** — the server's blocking receive: transfer plus, for the
 //!   host-copy transports, the bounce of the payload out of the
 //!   transport buffer. GDR's receive hands back a registered-region
 //!   view, so this stage drops the payload-sized copy.
-//! * **preprocess** — u8 frame -> normalized f32 tensor. Identical
-//!   work for every transport (the GDR path reads the registered
-//!   region in place).
-//! * **infer** — fixed arithmetic over the f32 tensor.
-//! * **reply** — serializing + sending the (small) result.
+//! * **preprocess** — folds the raw u8 frame into the model's
+//!   (1,32,32,3) f32 input tensor. Work is proportional to the payload
+//!   and identical for every transport (the GDR path reads the
+//!   registered region in place).
+//! * **infer** — `Executor::infer_sync` on `tiny_mobilenet`: queue +
+//!   engine execution of the compiled HLO artifact.
+//! * **reply** — serializing + sending the 1000-logit f32 result.
 //!
 //! `total` is the client-observed round-trip, i.e. the model-serving
 //! latency of the paper's Table I.
 
+use std::path::PathBuf;
+use std::sync::Arc;
 use std::time::Instant;
 
+use anyhow::{Context, Result};
+
 use crate::coordinator::protocol::f32s_to_bytes;
+use crate::coordinator::{BatchCfg, Executor};
 use crate::metrics::stats::Series;
+use crate::models::gen;
 use crate::models::zoo::WorkloadData;
+use crate::runtime::TensorBuf;
 use crate::transport::rdma::{rdma_pair, RingCfg};
 use crate::transport::shm::shm_pair;
 use crate::transport::tcp::TcpTransport;
 use crate::transport::{MsgTransport, RecvMsg, TransportKind};
 
 use super::Table;
+
+/// The model every matrix cell serves (fixed compute across rows).
+const MATRIX_MODEL: &str = "tiny_mobilenet";
+/// Flat model-input tensor size: (1, 32, 32, 3).
+const MODEL_ELEMS: usize = gen::IN_H * gen::IN_W * gen::CHANNELS;
 
 /// Matrix experiment configuration.
 #[derive(Debug, Clone)]
@@ -43,6 +59,8 @@ pub struct MatrixCfg {
     /// Discarded leading requests per transport.
     pub warmup: usize,
     pub transports: Vec<TransportKind>,
+    /// Artifact directory; `None` generates into a per-process temp dir.
+    pub artifacts_dir: Option<PathBuf>,
 }
 
 impl Default for MatrixCfg {
@@ -52,6 +70,7 @@ impl Default for MatrixCfg {
             requests: 160,
             warmup: 16,
             transports: TransportKind::ALL.to_vec(),
+            artifacts_dir: None,
         }
     }
 }
@@ -66,31 +85,37 @@ struct StageStats {
     server: Series,
 }
 
-/// u8 camera frame -> normalized f32 tensor; reads region payloads in
-/// place (no host bounce).
+/// u8 camera frame -> the model's flat (1,32,32,3) f32 input tensor;
+/// reads region payloads in place (no host bounce). Every payload byte
+/// is touched (payload-proportional work, like a real resize), folded
+/// into the fixed-size tensor and mapped into [-0.5, 0.5].
 fn preprocess(msg: &RecvMsg) -> Vec<f32> {
-    fn normalize(b: &[u8]) -> Vec<f32> {
-        b.iter().map(|&x| x as f32 / 255.0).collect()
+    fn fold(b: &[u8]) -> Vec<f32> {
+        let mut acc = vec![0f32; MODEL_ELEMS];
+        for (i, &x) in b.iter().enumerate() {
+            acc[i % MODEL_ELEMS] += x as f32 / 255.0;
+        }
+        let passes = b.len().div_ceil(MODEL_ELEMS).max(1) as f32;
+        for v in &mut acc {
+            *v = *v / passes - 0.5;
+        }
+        acc
     }
     match msg {
-        RecvMsg::Host(v) => normalize(v),
-        RecvMsg::Region(s) => s.with(normalize),
+        RecvMsg::Host(v) => fold(v),
+        RecvMsg::Region(s) => s.with(fold),
     }
-}
-
-/// Deterministic stand-in inference: banded multiply-accumulate.
-fn infer(x: &[f32]) -> Vec<f32> {
-    const W: [f32; 8] = [0.11, 0.23, 0.31, 0.43, 0.53, 0.61, 0.71, 0.83];
-    let mut acc = [0f32; 8];
-    for (i, &v) in x.iter().enumerate() {
-        acc[i & 7] += v * W[i & 7];
-    }
-    acc.to_vec()
 }
 
 /// Serve `total` requests on one connection, recording per-stage
-/// timings for the ones past `warmup`.
-fn pipeline_server(mut t: Box<dyn MsgTransport>, total: usize, warmup: usize) -> StageStats {
+/// timings for the ones past `warmup`. Inference goes through the
+/// shared executor (the real engine).
+fn pipeline_server(
+    mut t: Box<dyn MsgTransport>,
+    exec: Arc<Executor>,
+    total: usize,
+    warmup: usize,
+) -> StageStats {
     let mut stats = StageStats::default();
     for i in 0..total {
         let t0 = Instant::now();
@@ -102,9 +127,17 @@ fn pipeline_server(mut t: Box<dyn MsgTransport>, total: usize, warmup: usize) ->
         let tensor = preprocess(&msg);
         drop(msg); // release the region slot before the next receive
         let t2 = Instant::now();
-        let out = infer(&tensor);
+        let done = match exec.infer_sync(MATRIX_MODEL, false, 0, TensorBuf::F32(tensor)) {
+            Ok(d) => d,
+            Err(e) => {
+                // Surface the engine failure: a silent break here would
+                // otherwise masquerade as a client-side disconnect.
+                eprintln!("matrix: infer stage failed, closing connection: {e:#}");
+                break;
+            }
+        };
         let t3 = Instant::now();
-        if t.send(&f32s_to_bytes(&out)).is_err() {
+        if t.send(&f32s_to_bytes(&done.output)).is_err() {
             break;
         }
         let t4 = Instant::now();
@@ -149,18 +182,24 @@ fn make_pair(
 }
 
 /// One cell: closed-loop client against the pipeline server.
-fn run_one(kind: TransportKind, cfg: &MatrixCfg) -> (StageStats, Series) {
+fn run_one(kind: TransportKind, cfg: &MatrixCfg, exec: &Arc<Executor>) -> (StageStats, Series) {
     let (mut client, server) = make_pair(kind, cfg.payload_bytes);
     let total = cfg.requests + cfg.warmup;
     let warmup = cfg.warmup;
-    let server_thread = std::thread::spawn(move || pipeline_server(server, total, warmup));
+    let exec2 = exec.clone();
+    let server_thread =
+        std::thread::spawn(move || pipeline_server(server, exec2, total, warmup));
     let payload = WorkloadData::image(cfg.payload_bytes, 7).bytes;
     let mut totals = Series::new();
     for i in 0..total {
         let t0 = Instant::now();
         client.send(&payload).expect("send");
         let reply = client.recv().expect("recv");
-        assert_eq!(reply.len(), 32, "stand-in inference returns 8 f32s");
+        assert_eq!(
+            reply.len(),
+            4 * gen::NUM_CLASSES,
+            "engine returns 1000 f32 logits"
+        );
         if i >= cfg.warmup {
             totals.push(t0.elapsed().as_secs_f64() * 1e3);
         }
@@ -171,11 +210,30 @@ fn run_one(kind: TransportKind, cfg: &MatrixCfg) -> (StageStats, Series) {
 }
 
 /// Run the matrix and render the per-stage latency table (p50 per
-/// stage; `total_ms` is the client round trip).
-pub fn run_matrix(cfg: &MatrixCfg) -> Table {
+/// stage; `total_ms` is the client round trip). Errors on an unusable
+/// artifact directory (e.g. artifacts using opcodes outside the
+/// interpreter's set) instead of panicking.
+pub fn run_matrix(cfg: &MatrixCfg) -> Result<Table> {
+    let dir: PathBuf = match &cfg.artifacts_dir {
+        Some(d) => d.clone(),
+        None => gen::ensure_test_artifacts().to_path_buf(),
+    };
+    // Self-provision like `accelserve serve`: an explicit --artifacts
+    // dir without a manifest gets the generated artifacts.
+    gen::ensure_artifacts(&dir)?;
+    let warm_b1 = format!("{MATRIX_MODEL}_b1");
+    let exec = Arc::new(
+        Executor::start(
+            &dir,
+            1,
+            BatchCfg { max_batch: 1 },
+            &[warm_b1.as_str(), "preprocess"],
+        )
+        .with_context(|| format!("matrix executor over {}", dir.display()))?,
+    );
     let mut t = Table::new(
         format!(
-            "transport matrix — {} KiB raw frames, {} requests",
+            "transport matrix — {} KiB raw frames, {} requests, infer = {MATRIX_MODEL} on the real engine",
             cfg.payload_bytes >> 10,
             cfg.requests
         ),
@@ -189,7 +247,7 @@ pub fn run_matrix(cfg: &MatrixCfg) -> Table {
         ],
     );
     for &kind in &cfg.transports {
-        let (mut st, mut totals) = run_one(kind, cfg);
+        let (mut st, mut totals) = run_one(kind, cfg, &exec);
         t.row(
             kind.name(),
             vec![
@@ -203,7 +261,7 @@ pub fn run_matrix(cfg: &MatrixCfg) -> Table {
         );
     }
     t.note("recv includes transfer + host bounce copy; GDR receives a registered-region view instead (Fig 2b)");
-    t.note("preprocess/infer are fixed CPU stand-ins, identical across rows: differences are pure transport effects");
+    t.note("preprocess folds the payload on the CPU; infer is the real Executor+Engine on tiny_mobilenet_b1 — both identical across rows, so differences are pure transport effects");
     if let (Some(tcp), Some(rdma)) = (t.get("tcp", "total_ms"), t.get("rdma", "total_ms")) {
         let ok = if rdma < tcp { "OK" } else { "VIOLATION" };
         t.note(format!("paper ordering rdma < tcp: {ok} ({rdma:.3} vs {tcp:.3} ms)"));
@@ -212,7 +270,10 @@ pub fn run_matrix(cfg: &MatrixCfg) -> Table {
         let ok = if gdr <= rdma { "OK" } else { "VIOLATION" };
         t.note(format!("paper ordering gdr <= rdma: {ok} ({gdr:.3} vs {rdma:.3} ms)"));
     }
-    t
+    if let Ok(e) = Arc::try_unwrap(exec) {
+        e.shutdown();
+    }
+    Ok(t)
 }
 
 #[cfg(test)]
@@ -222,17 +283,18 @@ mod tests {
     #[test]
     fn matrix_runs_all_transports() {
         // Small payload / few requests: a smoke test that every cell
-        // serves and reports positive stage latencies. Ordering is
-        // asserted by tests/transport_matrix_ordering.rs with a
-        // real-sized payload (timing-sensitive checks live in one
-        // isolated test binary).
+        // serves through the real engine and reports positive stage
+        // latencies. Ordering is asserted by
+        // tests/transport_matrix_ordering.rs with a real-sized payload
+        // (timing-sensitive checks live in one isolated test binary).
         let cfg = MatrixCfg {
             payload_bytes: 64 << 10,
             requests: 20,
             warmup: 4,
             transports: TransportKind::ALL.to_vec(),
+            artifacts_dir: None,
         };
-        let t = run_matrix(&cfg);
+        let t = run_matrix(&cfg).unwrap();
         assert_eq!(t.rows.len(), 4);
         for kind in ["tcp", "shm", "rdma", "gdr"] {
             for col in ["recv_ms", "preproc_ms", "infer_ms", "total_ms"] {
@@ -243,5 +305,18 @@ mod tests {
             let total = t.get(kind, "total_ms").unwrap();
             assert!(total > 0.8 * server, "{kind}: total {total} vs server {server}");
         }
+    }
+
+    #[test]
+    fn preprocess_output_matches_model_input() {
+        let small = RecvMsg::Host(vec![255u8; 100]);
+        let t = preprocess(&small);
+        assert_eq!(t.len(), MODEL_ELEMS);
+        assert!((t[0] - 0.5).abs() < 1e-6, "255 -> +0.5, got {}", t[0]);
+        assert!((t[MODEL_ELEMS - 1] + 0.5).abs() < 1e-6, "untouched -> -0.5");
+        // Folding is deterministic in the payload alone.
+        let a = preprocess(&RecvMsg::Host(WorkloadData::image(9000, 3).bytes));
+        let b = preprocess(&RecvMsg::Host(WorkloadData::image(9000, 3).bytes));
+        assert_eq!(a, b);
     }
 }

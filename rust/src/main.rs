@@ -1,6 +1,7 @@
 //! accelserve CLI: the launcher for both planes.
 //!
 //! ```text
+//! accelserve gen-artifacts --out-dir artifacts                   # offline AOT artifacts
 //! accelserve serve   --addr 0.0.0.0:7007 --streams 4 --batch 8   # live server
 //! accelserve gateway --addr 0.0.0.0:7008 --upstream host:7007    # live proxy
 //! accelserve client  --addr host:7007 --model tiny_resnet -n 100 -c 4
@@ -22,6 +23,7 @@ use accelserve::sim::world::{Scenario, World};
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let code = match args.first().map(String::as_str) {
+        Some("gen-artifacts") => cmd_gen_artifacts(&args[1..]),
         Some("serve") => cmd_serve(&args[1..]),
         Some("gateway") => cmd_gateway(&args[1..]),
         Some("client") => cmd_client(&args[1..]),
@@ -38,7 +40,23 @@ fn main() {
 }
 
 const HELP: &str = "accelserve — model serving with hardware-accelerated communication
-subcommands: serve | gateway | client | matrix | sim | fig | tables (see README.md)";
+subcommands: gen-artifacts | serve | gateway | client | matrix | sim | fig | tables (see README.md)";
+
+/// Generate the serving artifacts (HLO text + manifest.json) offline —
+/// no Python/JAX required (the rust twin of `make artifacts`).
+fn cmd_gen_artifacts(a: &[String]) -> i32 {
+    let dir = flag_or(a, "--out-dir", "artifacts");
+    match accelserve::models::gen::write_artifacts(dir) {
+        Ok(n) => {
+            println!("wrote {n} artifacts + manifest.json to {dir}/");
+            0
+        }
+        Err(e) => {
+            eprintln!("gen-artifacts: {e:#}");
+            1
+        }
+    }
+}
 
 /// Tiny flag parser: --key value pairs.
 fn flag<'a>(args: &'a [String], key: &str) -> Option<&'a str> {
@@ -79,6 +97,9 @@ fn cmd_matrix(a: &[String]) -> i32 {
         cfg.requests = n.max(1);
         cfg.warmup = (n / 10).max(2);
     }
+    if let Some(dir) = flag(a, "--artifacts") {
+        cfg.artifacts_dir = Some(dir.into());
+    }
     if let Some(list) = flag(a, "--transports") {
         let mut kinds = Vec::new();
         for name in list.split(',') {
@@ -93,7 +114,13 @@ fn cmd_matrix(a: &[String]) -> i32 {
         cfg.transports = kinds;
     }
     let csv = a.iter().any(|x| x == "--csv");
-    let t = accelserve::experiments::run_matrix(&cfg);
+    let t = match accelserve::experiments::run_matrix(&cfg) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("matrix: {e:#}");
+            return 1;
+        }
+    };
     if csv {
         print!("{}", t.to_csv());
     } else {
@@ -125,6 +152,16 @@ fn cmd_serve(a: &[String]) -> i32 {
     let streams: usize = flag_or(a, "--streams", "4").parse().unwrap_or(4);
     let batch: usize = flag_or(a, "--batch", "1").parse().unwrap_or(1);
     let dir = flag_or(a, "--artifacts", "artifacts");
+    // Self-provision: serving should work out of the box, with no
+    // Python AOT step required.
+    match accelserve::models::gen::ensure_artifacts(dir) {
+        Ok(0) => {}
+        Ok(n) => println!("generated {n} artifacts into {dir}/"),
+        Err(e) => {
+            eprintln!("gen-artifacts into {dir}: {e:#}");
+            return 1;
+        }
+    }
     let exec = match Executor::start(dir, streams, BatchCfg { max_batch: batch }, &[]) {
         Ok(e) => Arc::new(e),
         Err(e) => {

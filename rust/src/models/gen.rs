@@ -1,0 +1,607 @@
+//! Offline artifact generator: emits the live-plane serving artifacts
+//! (HLO text + `manifest.json`) **without Python/JAX** — the Rust twin
+//! of `python/compile/aot.py` (`accelserve gen-artifacts`).
+//!
+//! The generated model family mirrors the aot.py registry and I/O
+//! archetypes (DESIGN.md §1):
+//!
+//! * `preprocess`            — raw (64,64,3) u8 frame -> (1,32,32,3) f32
+//!   (2x2 average-pool resize + normalize to [-1, 1]),
+//! * `tiny_mobilenet_b{1,2,4,8}` — one 3x3 stride-2 conv + relu, global
+//!   average pool, dense 1000-class head,
+//! * `tiny_resnet_b{1,2,4,8}`    — two stacked 3x3 stride-2 convs,
+//! * `tiny_segnet_b{1,2,4,8}`    — 1x1 conv to 21 per-pixel classes
+//!   (the large-response DeepLabV3 archetype),
+//! * `tiny_*_raw`            — the fused u8 -> preprocess -> model graph.
+//!
+//! Weights are deterministic (SplitMix64 from a per-model seed,
+//! quantized to 3 decimals so the HLO text round-trips bit-exactly);
+//! the staged `preprocess` + `_b1` path and the fused `_raw` path share
+//! the same emitted constants, so their outputs agree exactly — the
+//! invariant `engine.rs::preprocess_then_classify_matches_fused_raw`
+//! asserts. Every op emitted is inside the vendored interpreter's
+//! supported set (see `rust/vendor/xla`).
+
+use std::path::{Path, PathBuf};
+use std::sync::OnceLock;
+
+use anyhow::{Context, Result};
+
+use crate::models::manifest::TensorSpec;
+use crate::sim::rng::Rng;
+
+pub const RAW_H: usize = 64;
+pub const RAW_W: usize = 64;
+pub const IN_H: usize = 32;
+pub const IN_W: usize = 32;
+pub const CHANNELS: usize = 3;
+pub const NUM_CLASSES: usize = 1000;
+pub const SEG_CLASSES: usize = 21;
+/// Batched variants compiled per model (the dynamic batcher's menu).
+pub const BATCH_SIZES: [usize; 4] = [1, 2, 4, 8];
+
+/// Incrementally builds one HLO-text module.
+struct Hlo {
+    body: Vec<String>,
+    next: usize,
+    has_sum_region: bool,
+}
+
+impl Hlo {
+    fn new() -> Hlo {
+        Hlo {
+            body: Vec::new(),
+            next: 0,
+            has_sum_region: false,
+        }
+    }
+
+    /// Append one instruction; returns its value name.
+    fn push(&mut self, shape: &str, expr: &str) -> String {
+        self.next += 1;
+        let name = format!("v{}", self.next);
+        self.body.push(format!("  {name} = {shape} {expr}"));
+        name
+    }
+
+    fn param(&mut self, shape: &str, index: usize) -> String {
+        let expr = format!("parameter({index})");
+        self.push(shape, &expr)
+    }
+
+    fn scalar(&mut self, v: f32) -> String {
+        let expr = format!("constant({})", fmt_f32(v));
+        self.push("f32[]", &expr)
+    }
+
+    fn array(&mut self, dims: &[usize], vals: &[f32]) -> String {
+        debug_assert_eq!(dims.iter().product::<usize>(), vals.len());
+        let expr = format!("constant({})", fmt_nested(dims, vals));
+        self.push(&sh_f32(dims), &expr)
+    }
+
+    /// Broadcast a scalar to `dims`.
+    fn splat(&mut self, v: f32, dims: &[usize]) -> String {
+        let s = self.scalar(v);
+        let expr = format!("broadcast({s}), dimensions={{}}");
+        self.push(&sh_f32(dims), &expr)
+    }
+
+    /// The shared scalar-add reduce region (emitted once per module).
+    fn sum_region(&mut self) -> &'static str {
+        self.has_sum_region = true;
+        "sum"
+    }
+
+    fn relu(&mut self, x: &str, dims: &[usize]) -> String {
+        let zeros = self.splat(0.0, dims);
+        let expr = format!("maximum({x}, {zeros})");
+        self.push(&sh_f32(dims), &expr)
+    }
+
+    /// Render the module; `root` becomes `ROOT tuple(root)` (aot.py
+    /// lowers with return_tuple=True, and the engine untuples).
+    fn finish(self, module: &str, root_shape: &str, root: &str) -> String {
+        let mut text = format!("HloModule {module}\n\n");
+        if self.has_sum_region {
+            text.push_str(
+                "sum {\n  a = f32[] parameter(0)\n  b = f32[] parameter(1)\n  \
+                 ROOT r = f32[] add(a, b)\n}\n\n",
+            );
+        }
+        text.push_str("ENTRY main {\n");
+        for line in &self.body {
+            text.push_str(line);
+            text.push('\n');
+        }
+        text.push_str(&format!("  ROOT out = ({root_shape}) tuple({root})\n}}\n"));
+        text
+    }
+}
+
+fn sh_f32(dims: &[usize]) -> String {
+    format!(
+        "f32[{}]",
+        dims.iter()
+            .map(usize::to_string)
+            .collect::<Vec<_>>()
+            .join(",")
+    )
+}
+
+fn sh_u8(dims: &[usize]) -> String {
+    format!(
+        "u8[{}]",
+        dims.iter()
+            .map(usize::to_string)
+            .collect::<Vec<_>>()
+            .join(",")
+    )
+}
+
+/// Shortest round-tripping decimal for an f32 (Rust's Debug format).
+fn fmt_f32(v: f32) -> String {
+    format!("{v:?}")
+}
+
+/// Nested-brace HLO constant payload, row-major.
+fn fmt_nested(dims: &[usize], vals: &[f32]) -> String {
+    match dims.len() {
+        0 => fmt_f32(vals[0]),
+        1 => format!(
+            "{{ {} }}",
+            vals.iter().map(|v| fmt_f32(*v)).collect::<Vec<_>>().join(", ")
+        ),
+        _ => {
+            let chunk = vals.len() / dims[0];
+            let parts: Vec<String> = (0..dims[0])
+                .map(|i| fmt_nested(&dims[1..], &vals[i * chunk..(i + 1) * chunk]))
+                .collect();
+            format!("{{ {} }}", parts.join(", "))
+        }
+    }
+}
+
+/// Deterministic uniform weights in [-scale, scale], quantized to 3
+/// decimals so the emitted text parses back to the exact value.
+fn weights(rng: &mut Rng, n: usize, scale: f64) -> Vec<f32> {
+    (0..n)
+        .map(|_| (((rng.f64() * 2.0 - 1.0) * scale * 1000.0).round() / 1000.0) as f32)
+        .collect()
+}
+
+/// One model family: its conv tower and head weights, generated once so
+/// every batch variant and the fused raw graph embed identical values.
+struct ModelWeights {
+    name: &'static str,
+    task: &'static str,
+    /// 3x3 stride-2 conv filters, (cin, cout, values) per layer.
+    convs: Vec<(usize, usize, Vec<f32>)>,
+    /// Dense head (feat, classes, values); `None` for segnet.
+    dense: Option<(usize, Vec<f32>)>,
+    bias: Vec<f32>,
+    /// 1x1 segmentation head for segnet.
+    seg_head: Option<Vec<f32>>,
+}
+
+impl ModelWeights {
+    fn classifier(name: &'static str, seed: u64, channels: &[usize]) -> ModelWeights {
+        let mut rng = Rng::new(seed);
+        let mut convs = Vec::new();
+        let mut cin = CHANNELS;
+        for &cout in channels {
+            let fan_in = 9 * cin;
+            let w = weights(&mut rng, 9 * cin * cout, (2.0 / fan_in as f64).sqrt());
+            convs.push((cin, cout, w));
+            cin = cout;
+        }
+        let dense = weights(&mut rng, cin * NUM_CLASSES, (2.0 / cin as f64).sqrt());
+        let bias = weights(&mut rng, NUM_CLASSES, 0.05);
+        ModelWeights {
+            name,
+            task: "classification",
+            convs,
+            dense: Some((cin, dense)),
+            bias,
+            seg_head: None,
+        }
+    }
+
+    fn segnet(name: &'static str, seed: u64) -> ModelWeights {
+        let mut rng = Rng::new(seed);
+        let head = weights(&mut rng, CHANNELS * SEG_CLASSES, 0.5);
+        let bias = weights(&mut rng, SEG_CLASSES, 0.05);
+        ModelWeights {
+            name,
+            task: "segmentation",
+            convs: Vec::new(),
+            dense: None,
+            bias,
+            seg_head: Some(head),
+        }
+    }
+
+    fn params(&self) -> usize {
+        self.convs.iter().map(|(_, _, w)| w.len()).sum::<usize>()
+            + self.dense.as_ref().map_or(0, |(_, w)| w.len())
+            + self.seg_head.as_ref().map_or(0, Vec::len)
+            + self.bias.len()
+    }
+
+    /// Per-request output shape.
+    fn out_shape(&self, batch: usize) -> Vec<usize> {
+        if self.seg_head.is_some() {
+            vec![batch, IN_H, IN_W, SEG_CLASSES]
+        } else {
+            vec![batch, NUM_CLASSES]
+        }
+    }
+
+    /// Approximate multiply-add GFLOPs at batch 1.
+    fn gflops(&self) -> f64 {
+        let mut h = IN_H;
+        let mut w = IN_W;
+        let mut fl = 0f64;
+        for (cin, cout, _) in &self.convs {
+            h /= 2;
+            w /= 2;
+            fl += 2.0 * (h * w * 9 * cin * cout) as f64;
+        }
+        if let Some((feat, _)) = &self.dense {
+            fl += 2.0 * (feat * NUM_CLASSES) as f64;
+        }
+        if self.seg_head.is_some() {
+            fl += 2.0 * (IN_H * IN_W * CHANNELS * SEG_CLASSES) as f64;
+        }
+        fl / 1e9
+    }
+}
+
+/// Emit the preprocess pipeline: u8[64,64,3] -> f32[1,32,32,3]
+/// (2x2 average pool + scale to [-1, 1]).
+fn emit_preprocess(h: &mut Hlo, raw: &str) -> String {
+    let cvt = {
+        let expr = format!("convert({raw})");
+        h.push(&sh_f32(&[RAW_H, RAW_W, CHANNELS]), &expr)
+    };
+    let grouped_dims = [IN_H, 2, IN_W, 2, CHANNELS];
+    let grouped = {
+        let expr = format!("reshape({cvt})");
+        h.push(&sh_f32(&grouped_dims), &expr)
+    };
+    let zero = h.scalar(0.0);
+    let region = h.sum_region();
+    let pool_dims = [IN_H, IN_W, CHANNELS];
+    let pooled = {
+        let expr = format!(
+            "reduce({grouped}, {zero}), dimensions={{1,3}}, to_apply={region}"
+        );
+        h.push(&sh_f32(&pool_dims), &expr)
+    };
+    // /4 window area, /255 byte range => one divide by 1020, then
+    // affine-map [0,1] to [-1,1].
+    let denom = h.splat(1020.0, &pool_dims);
+    let unit = {
+        let expr = format!("divide({pooled}, {denom})");
+        h.push(&sh_f32(&pool_dims), &expr)
+    };
+    let half = h.splat(0.5, &pool_dims);
+    let centered = {
+        let expr = format!("subtract({unit}, {half})");
+        h.push(&sh_f32(&pool_dims), &expr)
+    };
+    let two = h.splat(2.0, &pool_dims);
+    let normed = {
+        let expr = format!("multiply({centered}, {two})");
+        h.push(&sh_f32(&pool_dims), &expr)
+    };
+    let expr = format!("reshape({normed})");
+    h.push(&sh_f32(&[1, IN_H, IN_W, CHANNELS]), &expr)
+}
+
+/// Emit a model body over `x` (f32[batch,32,32,3]); returns the root.
+fn emit_model(h: &mut Hlo, x: &str, batch: usize, mw: &ModelWeights) -> String {
+    if let Some(head) = &mw.seg_head {
+        let out_dims = [batch, IN_H, IN_W, SEG_CLASSES];
+        let w = h.array(&[1, 1, CHANNELS, SEG_CLASSES], head);
+        let conv = {
+            let expr = format!(
+                "convolution({x}, {w}), window={{size=1x1}}, dim_labels=b01f_01io->b01f"
+            );
+            h.push(&sh_f32(&out_dims), &expr)
+        };
+        let bias = h.array(&[SEG_CLASSES], &mw.bias);
+        let bb = {
+            let expr = format!("broadcast({bias}), dimensions={{3}}");
+            h.push(&sh_f32(&out_dims), &expr)
+        };
+        let expr = format!("add({conv}, {bb})");
+        return h.push(&sh_f32(&out_dims), &expr);
+    }
+
+    let mut cur = x.to_string();
+    let (mut ch, mut cw) = (IN_H, IN_W);
+    for (cin, cout, wvals) in &mw.convs {
+        ch /= 2;
+        cw /= 2;
+        let dims = [batch, ch, cw, *cout];
+        let w = h.array(&[3, 3, *cin, *cout], wvals);
+        let conv = {
+            let expr = format!(
+                "convolution({cur}, {w}), window={{size=3x3 stride=2x2 pad=0_1x0_1}}, \
+                 dim_labels=b01f_01io->b01f"
+            );
+            h.push(&sh_f32(&dims), &expr)
+        };
+        cur = h.relu(&conv, &dims);
+    }
+    let (feat, dense) = mw.dense.as_ref().expect("classifier has a dense head");
+    let zero = h.scalar(0.0);
+    let region = h.sum_region();
+    let pooled = {
+        let expr = format!("reduce({cur}, {zero}), dimensions={{1,2}}, to_apply={region}");
+        h.push(&sh_f32(&[batch, *feat]), &expr)
+    };
+    let area = h.splat((ch * cw) as f32, &[batch, *feat]);
+    let avg = {
+        let expr = format!("divide({pooled}, {area})");
+        h.push(&sh_f32(&[batch, *feat]), &expr)
+    };
+    let wd = h.array(&[*feat, NUM_CLASSES], dense);
+    let logits = {
+        let expr = format!(
+            "dot({avg}, {wd}), lhs_contracting_dims={{1}}, rhs_contracting_dims={{0}}"
+        );
+        h.push(&sh_f32(&[batch, NUM_CLASSES]), &expr)
+    };
+    let bias = h.array(&[NUM_CLASSES], &mw.bias);
+    let bb = {
+        let expr = format!("broadcast({bias}), dimensions={{1}}");
+        h.push(&sh_f32(&[batch, NUM_CLASSES]), &expr)
+    };
+    let expr = format!("add({logits}, {bb})");
+    h.push(&sh_f32(&[batch, NUM_CLASSES]), &expr)
+}
+
+/// One generated artifact, ready to be written + indexed.
+struct Artifact {
+    name: String,
+    model: String,
+    task: String,
+    inputs: Vec<TensorSpec>,
+    output: TensorSpec,
+    gflops: f64,
+    params: usize,
+    text: String,
+}
+
+fn spec(shape: &[usize], dtype: &str) -> TensorSpec {
+    TensorSpec {
+        shape: shape.to_vec(),
+        dtype: dtype.to_string(),
+    }
+}
+
+fn preprocess_artifact() -> Artifact {
+    let mut h = Hlo::new();
+    let raw = h.param(&sh_u8(&[RAW_H, RAW_W, CHANNELS]), 0);
+    let out = emit_preprocess(&mut h, &raw);
+    let out_dims = [1, IN_H, IN_W, CHANNELS];
+    let text = h.finish("preprocess", &sh_f32(&out_dims), &out);
+    Artifact {
+        name: "preprocess".into(),
+        model: "preprocess".into(),
+        task: "preprocess".into(),
+        inputs: vec![spec(&[RAW_H, RAW_W, CHANNELS], "u8")],
+        output: spec(&out_dims, "f32"),
+        gflops: (RAW_H * RAW_W * CHANNELS) as f64 / 1e9,
+        params: 0,
+        text,
+    }
+}
+
+fn batched_artifact(mw: &ModelWeights, batch: usize) -> Artifact {
+    let name = format!("{}_b{batch}", mw.name);
+    let in_dims = [batch, IN_H, IN_W, CHANNELS];
+    let mut h = Hlo::new();
+    let x = h.param(&sh_f32(&in_dims), 0);
+    let out = emit_model(&mut h, &x, batch, mw);
+    let out_dims = mw.out_shape(batch);
+    let text = h.finish(&name, &sh_f32(&out_dims), &out);
+    Artifact {
+        name,
+        model: mw.name.into(),
+        task: mw.task.into(),
+        inputs: vec![spec(&in_dims, "f32")],
+        output: spec(&out_dims, "f32"),
+        gflops: mw.gflops() * batch as f64,
+        params: mw.params(),
+        text,
+    }
+}
+
+fn raw_artifact(mw: &ModelWeights) -> Artifact {
+    let name = format!("{}_raw", mw.name);
+    let mut h = Hlo::new();
+    let raw = h.param(&sh_u8(&[RAW_H, RAW_W, CHANNELS]), 0);
+    let pre = emit_preprocess(&mut h, &raw);
+    let out = emit_model(&mut h, &pre, 1, mw);
+    let out_dims = mw.out_shape(1);
+    let text = h.finish(&name, &sh_f32(&out_dims), &out);
+    Artifact {
+        name,
+        model: mw.name.into(),
+        task: mw.task.into(),
+        inputs: vec![spec(&[RAW_H, RAW_W, CHANNELS], "u8")],
+        output: spec(&out_dims, "f32"),
+        gflops: mw.gflops() + (RAW_H * RAW_W * CHANNELS) as f64 / 1e9,
+        params: mw.params(),
+        text,
+    }
+}
+
+fn model_family() -> Vec<ModelWeights> {
+    vec![
+        ModelWeights::classifier("tiny_mobilenet", 10, &[8]),
+        ModelWeights::classifier("tiny_resnet", 11, &[8, 16]),
+        ModelWeights::segnet("tiny_segnet", 12),
+    ]
+}
+
+fn generate_all() -> Vec<Artifact> {
+    let mut arts = vec![preprocess_artifact()];
+    for mw in model_family() {
+        for batch in BATCH_SIZES {
+            arts.push(batched_artifact(&mw, batch));
+        }
+        arts.push(raw_artifact(&mw));
+    }
+    arts.sort_by(|a, b| a.name.cmp(&b.name));
+    arts
+}
+
+fn tensor_json(t: &TensorSpec) -> String {
+    format!(
+        "{{\"shape\": [{}], \"dtype\": \"{}\"}}",
+        t.shape
+            .iter()
+            .map(usize::to_string)
+            .collect::<Vec<_>>()
+            .join(", "),
+        t.dtype
+    )
+}
+
+fn manifest_json(arts: &[Artifact]) -> String {
+    let mut s = String::from(
+        "{\n  \"format\": 1,\n  \"generator\": \"accelserve gen-artifacts\",\n  \
+         \"artifacts\": [\n",
+    );
+    for (i, a) in arts.iter().enumerate() {
+        let inputs: Vec<String> = a.inputs.iter().map(tensor_json).collect();
+        s.push_str(&format!(
+            "    {{\"name\": \"{}\", \"model\": \"{}\", \"task\": \"{}\", \
+             \"file\": \"{}.hlo.txt\",\n     \"inputs\": [{}],\n     \
+             \"output\": {},\n     \"gflops\": {}, \"params\": {}, \"hlo_bytes\": {}}}{}\n",
+            a.name,
+            a.model,
+            a.task,
+            a.name,
+            inputs.join(", "),
+            tensor_json(&a.output),
+            a.gflops,
+            a.params,
+            a.text.len(),
+            if i + 1 < arts.len() { "," } else { "" }
+        ));
+    }
+    s.push_str("  ]\n}\n");
+    s
+}
+
+/// Generate every artifact into `dir`; returns the artifact count.
+pub fn write_artifacts(dir: impl AsRef<Path>) -> Result<usize> {
+    let dir = dir.as_ref();
+    std::fs::create_dir_all(dir)
+        .with_context(|| format!("creating artifact dir {}", dir.display()))?;
+    let arts = generate_all();
+    for a in &arts {
+        let path = dir.join(format!("{}.hlo.txt", a.name));
+        std::fs::write(&path, &a.text)
+            .with_context(|| format!("writing {}", path.display()))?;
+    }
+    let mpath = dir.join("manifest.json");
+    std::fs::write(&mpath, manifest_json(&arts))
+        .with_context(|| format!("writing {}", mpath.display()))?;
+    Ok(arts.len())
+}
+
+/// Self-provision a serving directory: generate the artifacts only if
+/// `dir` has no manifest yet (the python AOT pipeline's output, when
+/// present, is left untouched). Returns the number of artifacts
+/// written, 0 when the directory was already provisioned.
+pub fn ensure_artifacts(dir: impl AsRef<Path>) -> Result<usize> {
+    let dir = dir.as_ref();
+    if dir.join("manifest.json").exists() {
+        return Ok(0);
+    }
+    write_artifacts(dir)
+}
+
+/// Artifacts for tests and the transport matrix: generated once per
+/// process into a temp directory (a skip is a failure now — no test
+/// depends on `make artifacts` anymore).
+pub fn ensure_test_artifacts() -> &'static Path {
+    static DIR: OnceLock<PathBuf> = OnceLock::new();
+    DIR.get_or_init(|| {
+        let dir = std::env::temp_dir().join(format!(
+            "accelserve-artifacts-{}",
+            std::process::id()
+        ));
+        write_artifacts(&dir).expect("generating test artifacts");
+        dir
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::manifest::Manifest;
+
+    #[test]
+    fn generator_writes_parseable_manifest() {
+        let dir = ensure_test_artifacts();
+        let m = Manifest::load(dir).unwrap();
+        // aot.py registry shape: preprocess + 3 models x (4 batches + raw).
+        assert_eq!(m.artifacts.len(), 1 + 3 * (BATCH_SIZES.len() + 1));
+        assert_eq!(m.batch_sizes("tiny_resnet"), vec![1, 2, 4, 8]);
+        let pre = m.get("preprocess").unwrap();
+        assert_eq!(pre.inputs[0], spec(&[RAW_H, RAW_W, CHANNELS], "u8"));
+        assert_eq!(pre.output.elems(), IN_H * IN_W * CHANNELS);
+        let b4 = m.get("tiny_mobilenet_b4").unwrap();
+        assert_eq!(b4.inputs[0].shape, vec![4, IN_H, IN_W, CHANNELS]);
+        assert_eq!(b4.output.shape, vec![4, NUM_CLASSES]);
+        let seg = m.get("tiny_segnet_b1").unwrap();
+        assert_eq!(seg.output.elems(), IN_H * IN_W * SEG_CLASSES);
+        let raw = m.get("tiny_resnet_raw").unwrap();
+        assert_eq!(raw.inputs[0].dtype, "u8");
+        for a in &m.artifacts {
+            assert!(m.hlo_path(a).exists(), "{} missing its HLO text", a.name);
+            assert!(a.gflops > 0.0 || a.name == "preprocess");
+        }
+    }
+
+    #[test]
+    fn emitted_hlo_compiles_in_the_interpreter() {
+        let dir = ensure_test_artifacts();
+        let m = Manifest::load(dir).unwrap();
+        let client = xla::PjRtClient::cpu().unwrap();
+        for a in &m.artifacts {
+            let path = m.hlo_path(a);
+            let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
+                .unwrap_or_else(|e| panic!("{}: {e}", a.name));
+            client
+                .compile(&xla::XlaComputation::from_proto(&proto))
+                .unwrap_or_else(|e| panic!("{}: {e}", a.name));
+        }
+    }
+
+    #[test]
+    fn weights_are_deterministic_across_calls() {
+        let a = generate_all();
+        let b = generate_all();
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.name, y.name);
+            assert_eq!(x.text, y.text, "{} text differs between runs", x.name);
+        }
+    }
+
+    #[test]
+    fn nested_constant_formatting() {
+        assert_eq!(fmt_nested(&[2], &[1.0, -2.5]), "{ 1.0, -2.5 }");
+        assert_eq!(
+            fmt_nested(&[2, 2], &[1.0, 2.0, 3.0, 4.0]),
+            "{ { 1.0, 2.0 }, { 3.0, 4.0 } }"
+        );
+    }
+}

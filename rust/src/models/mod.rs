@@ -1,6 +1,7 @@
-//! Model zoo: the paper's Table II DNNs (sim plane) and the live-plane
-//! artifact manifest.
+//! Model zoo: the paper's Table II DNNs (sim plane), the live-plane
+//! artifact manifest, and the offline artifact generator.
 
+pub mod gen;
 pub mod manifest;
 pub mod zoo;
 

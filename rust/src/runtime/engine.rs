@@ -199,20 +199,14 @@ impl Engine {
 mod tests {
     use super::*;
 
-    fn artifacts_dir() -> &'static str {
-        concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts")
-    }
-
-    fn have_artifacts() -> bool {
-        std::path::Path::new(artifacts_dir()).join("manifest.json").exists()
+    /// Artifacts are generated on demand (`models::gen`): these tests
+    /// always run — a skip is a failure now.
+    fn artifacts_dir() -> &'static std::path::Path {
+        crate::models::gen::ensure_test_artifacts()
     }
 
     #[test]
     fn engine_loads_and_infers() {
-        if !have_artifacts() {
-            eprintln!("skipping: run `make artifacts` first");
-            return;
-        }
         let eng = Engine::load(artifacts_dir()).unwrap();
         let plat = eng.platform().to_lowercase();
         assert!(plat == "host" || plat == "cpu", "platform {plat}");
@@ -226,9 +220,6 @@ mod tests {
 
     #[test]
     fn preprocess_then_classify_matches_fused_raw() {
-        if !have_artifacts() {
-            return;
-        }
         let eng = Engine::load(artifacts_dir()).unwrap();
         let raw = crate::models::zoo::WorkloadData::image(64 * 64 * 3, 9).bytes;
         let pre = eng.infer("preprocess", &TensorBuf::U8(raw.clone())).unwrap();
@@ -245,9 +236,6 @@ mod tests {
 
     #[test]
     fn batched_equals_singles() {
-        if !have_artifacts() {
-            return;
-        }
         let eng = Engine::load(artifacts_dir()).unwrap();
         let n_in = 32 * 32 * 3;
         let a: Vec<f32> = (0..n_in).map(|i| (i % 17) as f32 / 17.0).collect();
@@ -269,9 +257,6 @@ mod tests {
 
     #[test]
     fn rejects_bad_inputs() {
-        if !have_artifacts() {
-            return;
-        }
         let eng = Engine::load(artifacts_dir()).unwrap();
         assert!(eng.infer("no_such_model", &TensorBuf::F32(vec![0.0])).is_err());
         assert!(eng

@@ -4,6 +4,8 @@
 //! Interchange is HLO *text*: jax >= 0.5 emits HloModuleProto with
 //! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
 //! parser reassigns ids (see python/compile/aot.py and DESIGN.md §3).
+//! In this offline build the `xla` dependency is the vendored pure-Rust
+//! HLO interpreter (`rust/vendor/xla`), so execution is real either way.
 
 pub mod engine;
 

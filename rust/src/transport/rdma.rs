@@ -79,6 +79,13 @@ impl RingCfg {
         }
     }
 
+    /// Payload bytes one ring slot carries (one chunk): messages up to
+    /// this size are single-chunk (and zero-copy eligible in GDR mode);
+    /// one byte more forces multi-chunk framing.
+    pub fn chunk_capacity(&self) -> usize {
+        self.slot_bytes - SLOT_HDR
+    }
+
     fn region_len(&self) -> usize {
         RING_HDR + self.slots * self.slot_bytes
     }

@@ -1,7 +1,8 @@
 //! Integration tests for the live plane: real TCP sockets, the real
-//! PJRT engine on the AOT artifacts, gateway proxying, priorities and
-//! dynamic batching. Skipped gracefully when `make artifacts` hasn't
-//! run (CI without python).
+//! engine (pure-Rust HLO interpreter) on generated AOT artifacts,
+//! gateway proxying, priorities and dynamic batching. Artifacts are
+//! generated on demand into a temp dir (`models::gen`), so every test
+//! always runs — a skip is a failure now.
 
 use std::sync::Arc;
 
@@ -13,17 +14,9 @@ use accelserve::transport::rdma::{rdma_fabric, rdma_pair, RingCfg};
 use accelserve::transport::shm::shm_pair;
 use accelserve::transport::MsgTransport;
 
-fn artifacts() -> Option<&'static str> {
-    let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
-    std::path::Path::new(dir)
-        .join("manifest.json")
-        .exists()
-        .then_some(dir)
-}
-
-fn start_exec(streams: usize, max_batch: usize) -> Option<Arc<Executor>> {
-    let dir = artifacts()?;
-    Some(Arc::new(
+fn start_exec(streams: usize, max_batch: usize) -> Arc<Executor> {
+    let dir = accelserve::models::gen::ensure_test_artifacts();
+    Arc::new(
         Executor::start(
             dir,
             streams,
@@ -31,7 +24,7 @@ fn start_exec(streams: usize, max_batch: usize) -> Option<Arc<Executor>> {
             &["tiny_mobilenet_b1", "preprocess"],
         )
         .expect("executor start"),
-    ))
+    )
 }
 
 fn load(model: &str, raw: bool, clients: usize, reqs: usize) -> LoadCfg {
@@ -48,7 +41,7 @@ fn load(model: &str, raw: bool, clients: usize, reqs: usize) -> LoadCfg {
 
 #[test]
 fn tcp_end_to_end_preprocessed() {
-    let Some(exec) = start_exec(2, 1) else { return };
+    let exec = start_exec(2, 1);
     let server = serve_tcp("127.0.0.1:0", exec.clone()).unwrap();
     let stats = run_tcp(server.addr, &load("tiny_mobilenet", false, 2, 10)).unwrap();
     assert_eq!(stats.errors, 0);
@@ -61,7 +54,7 @@ fn tcp_end_to_end_preprocessed() {
 
 #[test]
 fn tcp_end_to_end_raw_pipeline() {
-    let Some(exec) = start_exec(2, 1) else { return };
+    let exec = start_exec(2, 1);
     let server = serve_tcp("127.0.0.1:0", exec.clone()).unwrap();
     let stats = run_tcp(server.addr, &load("tiny_mobilenet", true, 1, 8)).unwrap();
     assert_eq!(stats.errors, 0);
@@ -72,7 +65,7 @@ fn tcp_end_to_end_raw_pipeline() {
 
 #[test]
 fn gateway_proxies_and_adds_latency() {
-    let Some(exec) = start_exec(2, 1) else { return };
+    let exec = start_exec(2, 1);
     let server = serve_tcp("127.0.0.1:0", exec.clone()).unwrap();
     let gw = gateway_tcp("127.0.0.1:0", server.addr).unwrap();
 
@@ -93,7 +86,7 @@ fn gateway_proxies_and_adds_latency() {
 
 #[test]
 fn rdma_verbs_transport_serves() {
-    let Some(exec) = start_exec(1, 1) else { return };
+    let exec = start_exec(1, 1);
     let (mut cli, srv) = rdma_pair(RingCfg::default(), false);
     let exec2 = exec.clone();
     let server = std::thread::spawn(move || {
@@ -126,7 +119,7 @@ fn gdr_raw_pipeline_zero_copy_serves() {
     // Raw frames over a GDR ring: the server's receive hands the
     // executor a registered-region TensorBuf (no host bounce), and the
     // output must match the same request over TCP.
-    let Some(exec) = start_exec(1, 1) else { return };
+    let exec = start_exec(1, 1);
     let frame = accelserve::models::zoo::WorkloadData::image(64 * 64 * 3, 11).bytes;
     let req = protocol::Request {
         model: "tiny_mobilenet".into(),
@@ -165,7 +158,7 @@ fn serve_on_accepts_rdma_fabric_connections() {
     // The transport-generic accept loop serving verbs connections
     // through the in-process fabric, with a multi-client load run over
     // `run_on` — the live-plane server matrix in one test.
-    let Some(exec) = start_exec(2, 1) else { return };
+    let exec = start_exec(2, 1);
     let (connector, listener) = rdma_fabric(RingCfg::default(), true);
     let handle = accelserve::coordinator::serve_on(listener, exec.clone());
     let stats = accelserve::coordinator::run_on(
@@ -183,7 +176,7 @@ fn serve_on_accepts_rdma_fabric_connections() {
 fn all_transports_same_numerics() {
     // The same request over every transport must produce identical
     // outputs (raw-byte interchange, no serialization ambiguity).
-    let Some(exec) = start_exec(1, 1) else { return };
+    let exec = start_exec(1, 1);
     let input: Vec<f32> = (0..32 * 32 * 3).map(|i| (i % 13) as f32 / 13.0).collect();
     let req = protocol::Request {
         model: "tiny_mobilenet".into(),
@@ -230,7 +223,7 @@ fn all_transports_same_numerics() {
 
 #[test]
 fn priority_client_served_preferentially() {
-    let Some(exec) = start_exec(1, 1) else { return };
+    let exec = start_exec(1, 1);
     // Saturate the single stream with low-prio work, then submit one
     // high-prio job; it must overtake most of the queue.
     let slow: Vec<_> = (0..8)
@@ -253,7 +246,7 @@ fn priority_client_served_preferentially() {
 
 #[test]
 fn dynamic_batching_preserves_results() {
-    let Some(exec_b) = start_exec(1, 8) else { return };
+    let exec_b = start_exec(1, 8);
     let input: Vec<f32> = (0..32 * 32 * 3).map(|i| (i % 7) as f32 / 7.0).collect();
     // Burst of identical requests: the batcher may fuse them; outputs
     // must match the unbatched reference.
@@ -274,7 +267,7 @@ fn dynamic_batching_preserves_results() {
 
 #[test]
 fn server_reports_errors_gracefully() {
-    let Some(exec) = start_exec(1, 1) else { return };
+    let exec = start_exec(1, 1);
     let server = serve_tcp("127.0.0.1:0", exec.clone()).unwrap();
     let mut t = accelserve::transport::tcp::TcpTransport::connect(server.addr).unwrap();
     // Unknown model.

@@ -4,8 +4,11 @@
 //!
 //! * round-trip fidelity across payload sizes,
 //! * large (>= 4 MiB) payloads (chunked framing on the verbs rings),
+//! * chunk-boundary-straddling sizes (±1 byte around the verbs ring's
+//!   chunk capacity and its double),
 //! * zero-length messages,
 //! * peer close surfacing as `Err` from `recv`,
+//! * queued data surviving a peer close (drain, then `Err`),
 //! * pipelined sends (sender running ahead of the receiver), and
 //! * concurrent send/recv from two threads on the same side.
 //!
@@ -100,6 +103,63 @@ fn large_payload_framing() {
         assert_eq!(back.len(), msg.len(), "{name}: length");
         assert_eq!(back, msg, "{name}: content");
         h.join().unwrap();
+    }
+}
+
+#[test]
+fn chunk_boundary_straddling_sizes() {
+    // ±1 byte around the verbs ring's chunk capacity and its double:
+    // the largest single-chunk message, the exact fit, the smallest
+    // 2-chunk message, and the 2/3-chunk boundary. Off-by-one bugs in
+    // chunked framing live exactly here; tcp/shm run the same sizes so
+    // the transports stay contract-identical.
+    let cap = RingCfg::default().chunk_capacity();
+    let sizes = [cap - 1, cap, cap + 1, 2 * cap - 1, 2 * cap, 2 * cap + 1];
+    for (name, make) in factories() {
+        let (mut client, mut server) = make();
+        let rounds = sizes.len();
+        let h = std::thread::spawn(move || {
+            for _ in 0..rounds {
+                let msg = server.recv().expect("server recv");
+                server.send(&msg).expect("server send");
+            }
+        });
+        for (i, &size) in sizes.iter().enumerate() {
+            let msg = pattern(size, i as u8);
+            client.send(&msg).expect("client send");
+            let back = client.recv().expect("client recv");
+            assert_eq!(back.len(), msg.len(), "{name}: size {size} length");
+            assert!(back == msg, "{name}: size {size} content");
+        }
+        h.join().unwrap();
+    }
+}
+
+#[test]
+fn recv_after_peer_close_drains_queued_data() {
+    // A peer that sends N messages and hangs up must not lose them:
+    // the receiver drains all N, and only the next recv errors. (TCP
+    // buffers + FIN, the SHM queue, and the verbs CQ all order data
+    // ahead of the close event.)
+    const QUEUED: usize = 3;
+    for (name, make) in factories() {
+        let (mut client, mut server) = make();
+        for i in 0..QUEUED {
+            client
+                .send(&pattern(1000 + i, i as u8))
+                .expect("client send");
+        }
+        drop(client);
+        for i in 0..QUEUED {
+            let msg = server.recv().unwrap_or_else(|e| {
+                panic!("{name}: queued message {i} lost after peer close: {e}")
+            });
+            assert_eq!(msg, pattern(1000 + i, i as u8), "{name}: message {i}");
+        }
+        assert!(
+            server.recv().is_err(),
+            "{name}: recv past the queued data must surface the close"
+        );
     }
 }
 

@@ -18,10 +18,11 @@ fn matrix_ordering_matches_paper() {
         requests: 60,
         warmup: 10,
         transports: TransportKind::ALL.to_vec(),
+        artifacts_dir: None,
     };
     let mut last = String::new();
     for _attempt in 0..3 {
-        let t = run_matrix(&cfg);
+        let t = run_matrix(&cfg).expect("matrix run");
         let total = |k: &str| t.get(k, "total_ms").unwrap();
         let recv = |k: &str| t.get(k, "recv_ms").unwrap();
         // GDR's receive skips the 1 MiB host bounce copy entirely;

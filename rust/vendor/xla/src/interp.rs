@@ -1,0 +1,886 @@
+//! Reference evaluator for the parsed HLO op graph.
+//!
+//! Shapes are tiny (the serving artifacts are scaled-down CNNs), so
+//! every op is implemented as a direct index-space loop over row-major
+//! buffers — clarity over throughput. The declared result shape of each
+//! instruction is trusted for output allocation and cross-checked where
+//! it is cheap to do so.
+
+use crate::parser::{Computation, HloModule, Instr};
+use crate::{ElementType, Error, Literal, LiteralData, Result};
+
+/// Validate that every instruction in every computation is within the
+/// interpreter's opcode set (the "compile" step).
+pub(crate) fn check_supported(module: &HloModule) -> Result<()> {
+    const SUPPORTED: &[&str] = &[
+        "parameter",
+        "constant",
+        "iota",
+        "reshape",
+        "broadcast",
+        "convert",
+        "add",
+        "subtract",
+        "multiply",
+        "divide",
+        "maximum",
+        "minimum",
+        "dot",
+        "reduce",
+        "convolution",
+        "transpose",
+        "slice",
+        "call",
+        "tuple",
+        "get-tuple-element",
+    ];
+    module.entry_computation()?;
+    for comp in module.computations.values() {
+        for ins in &comp.instrs {
+            if !SUPPORTED.contains(&ins.opcode.as_str()) {
+                return Err(Error::msg(format!(
+                    "unsupported HLO opcode '{}' ({} in {}); the pure-Rust \
+                     interpreter supports: {}",
+                    ins.opcode,
+                    ins.name,
+                    comp.name,
+                    SUPPORTED.join(", ")
+                )));
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Evaluate the module's entry computation on `args`.
+pub(crate) fn evaluate_entry(module: &HloModule, args: &[&Literal]) -> Result<Literal> {
+    let entry = module.entry_computation()?;
+    let owned: Vec<Literal> = args.iter().map(|l| (*l).clone()).collect();
+    evaluate(module, entry, &owned)
+}
+
+fn evaluate(module: &HloModule, comp: &Computation, args: &[Literal]) -> Result<Literal> {
+    let mut env: Vec<Option<Literal>> = vec![None; comp.instrs.len()];
+    for i in 0..comp.instrs.len() {
+        let val = eval_instr(module, comp, &comp.instrs[i], &env, args)?;
+        env[i] = Some(val);
+    }
+    env[comp.root]
+        .take()
+        .ok_or_else(|| Error::msg(format!("{}: missing root value", comp.name)))
+}
+
+fn operand<'a>(
+    comp: &Computation,
+    env: &'a [Option<Literal>],
+    ins: &Instr,
+    i: usize,
+) -> Result<&'a Literal> {
+    let name = ins.operands.get(i).ok_or_else(|| {
+        Error::msg(format!("{}: missing operand #{i}", ins.name))
+    })?;
+    let idx = *comp.index.get(name).ok_or_else(|| {
+        Error::msg(format!("{}: unknown operand {name}", ins.name))
+    })?;
+    env[idx].as_ref().ok_or_else(|| {
+        Error::msg(format!(
+            "{}: operand {name} not evaluated yet (module not in def-before-use order)",
+            ins.name
+        ))
+    })
+}
+
+fn f32s(lit: &Literal, ctx: &str) -> Result<Vec<f32>> {
+    match &lit.data {
+        LiteralData::F32(v) => Ok(v.clone()),
+        LiteralData::U8(_) => Err(Error::msg(format!("{ctx}: expected f32 operand, got u8"))),
+        LiteralData::Tuple(_) => {
+            Err(Error::msg(format!("{ctx}: expected f32 operand, got tuple")))
+        }
+    }
+}
+
+/// Row-major strides for `dims`.
+fn strides(dims: &[usize]) -> Vec<usize> {
+    let mut s = vec![1usize; dims.len()];
+    for i in (0..dims.len().saturating_sub(1)).rev() {
+        s[i] = s[i + 1] * dims[i + 1];
+    }
+    s
+}
+
+/// Decompose `linear` into a multi-index over `dims`.
+fn unravel(mut linear: usize, dims: &[usize], out: &mut Vec<usize>) {
+    out.clear();
+    out.resize(dims.len(), 0);
+    for i in (0..dims.len()).rev() {
+        out[i] = linear % dims[i];
+        linear /= dims[i];
+    }
+}
+
+fn eval_instr(
+    module: &HloModule,
+    comp: &Computation,
+    ins: &Instr,
+    env: &[Option<Literal>],
+    args: &[Literal],
+) -> Result<Literal> {
+    match ins.opcode.as_str() {
+        "parameter" => {
+            let idx = ins
+                .param_index
+                .ok_or_else(|| Error::msg(format!("{}: parameter without index", ins.name)))?;
+            let arg = args.get(idx).ok_or_else(|| {
+                Error::msg(format!(
+                    "{}: parameter({idx}) but only {} arguments were passed",
+                    ins.name,
+                    args.len()
+                ))
+            })?;
+            let (ty, dims) = ins.shape.array()?;
+            let elems: usize = dims.iter().product();
+            if arg.element_count() != elems || arg.element_type() != Some(ty) {
+                return Err(Error::msg(format!(
+                    "{}: argument {idx} is {} x {:?}, computation expects {} x {}{:?}",
+                    ins.name,
+                    arg.element_count(),
+                    arg.element_type().map(ElementType::name),
+                    elems,
+                    ty.name(),
+                    dims
+                )));
+            }
+            Ok(Literal {
+                dims: dims.to_vec(),
+                data: arg.data.clone(),
+            })
+        }
+        "constant" => {
+            let (ty, dims) = ins.shape.array()?;
+            let vals = ins
+                .consts
+                .as_ref()
+                .ok_or_else(|| Error::msg(format!("{}: constant without payload", ins.name)))?;
+            let elems: usize = dims.iter().product();
+            if vals.len() != elems {
+                return Err(Error::msg(format!(
+                    "{}: constant has {} values for shape {:?}",
+                    ins.name,
+                    vals.len(),
+                    dims
+                )));
+            }
+            let data = match ty {
+                ElementType::F32 => LiteralData::F32(vals.iter().map(|v| *v as f32).collect()),
+                ElementType::U8 => LiteralData::U8(vals.iter().map(|v| *v as u8).collect()),
+            };
+            Ok(Literal {
+                dims: dims.to_vec(),
+                data,
+            })
+        }
+        "iota" => {
+            let (ty, dims) = ins.shape.array()?;
+            let d = ins
+                .attr("iota_dimension")
+                .and_then(|v| v.parse::<usize>().ok())
+                .ok_or_else(|| Error::msg(format!("{}: iota without dimension", ins.name)))?;
+            let n: usize = dims.iter().product();
+            let mut idx = Vec::new();
+            let mut vals = Vec::with_capacity(n);
+            for lin in 0..n {
+                unravel(lin, dims, &mut idx);
+                vals.push(idx[d] as f32);
+            }
+            let data = match ty {
+                ElementType::F32 => LiteralData::F32(vals),
+                ElementType::U8 => LiteralData::U8(vals.into_iter().map(|v| v as u8).collect()),
+            };
+            Ok(Literal {
+                dims: dims.to_vec(),
+                data,
+            })
+        }
+        "reshape" => {
+            let x = operand(comp, env, ins, 0)?;
+            let (_, dims) = ins.shape.array()?;
+            let elems: usize = dims.iter().product();
+            if x.element_count() != elems {
+                return Err(Error::msg(format!(
+                    "{}: reshape {} elements into {:?}",
+                    ins.name,
+                    x.element_count(),
+                    dims
+                )));
+            }
+            Ok(Literal {
+                dims: dims.to_vec(),
+                data: x.data.clone(),
+            })
+        }
+        "broadcast" => {
+            let x = operand(comp, env, ins, 0)?;
+            let (_, out_dims) = ins.shape.array()?;
+            let map = match ins.attr("dimensions") {
+                Some(v) => crate::parser::parse_usize_list(v)?,
+                None => Vec::new(),
+            };
+            if map.len() != x.dims.len() {
+                return Err(Error::msg(format!(
+                    "{}: broadcast maps {} dims for a rank-{} operand",
+                    ins.name,
+                    map.len(),
+                    x.dims.len()
+                )));
+            }
+            if let Some(&bad) = map.iter().find(|&&od| od >= out_dims.len()) {
+                return Err(Error::msg(format!(
+                    "{}: broadcast dimension {bad} out of range for rank-{} result",
+                    ins.name,
+                    out_dims.len()
+                )));
+            }
+            for (k, &od) in map.iter().enumerate() {
+                if x.dims[k] != out_dims[od] {
+                    return Err(Error::msg(format!(
+                        "{}: broadcast operand dim {k} (extent {}) mapped to result \
+                         dim {od} (extent {})",
+                        ins.name, x.dims[k], out_dims[od]
+                    )));
+                }
+            }
+            let xs = f32s(x, &ins.name)?;
+            let xstr = strides(&x.dims);
+            let n: usize = out_dims.iter().product();
+            let mut idx = Vec::new();
+            let mut out = Vec::with_capacity(n);
+            for lin in 0..n {
+                unravel(lin, out_dims, &mut idx);
+                let mut off = 0usize;
+                for (k, &od) in map.iter().enumerate() {
+                    off += idx[od] * xstr[k];
+                }
+                out.push(xs[off]);
+            }
+            Ok(Literal::from_f32s(out_dims, out))
+        }
+        "convert" => {
+            let x = operand(comp, env, ins, 0)?;
+            let (ty, dims) = ins.shape.array()?;
+            let data = match (&x.data, ty) {
+                (LiteralData::U8(v), ElementType::F32) => {
+                    LiteralData::F32(v.iter().map(|&b| b as f32).collect())
+                }
+                (LiteralData::F32(v), ElementType::U8) => LiteralData::U8(
+                    v.iter().map(|&f| f.round().clamp(0.0, 255.0) as u8).collect(),
+                ),
+                (LiteralData::F32(v), ElementType::F32) => LiteralData::F32(v.clone()),
+                (LiteralData::U8(v), ElementType::U8) => LiteralData::U8(v.clone()),
+                (LiteralData::Tuple(_), _) => {
+                    return Err(Error::msg(format!("{}: convert of tuple", ins.name)))
+                }
+            };
+            Ok(Literal {
+                dims: dims.to_vec(),
+                data,
+            })
+        }
+        "add" | "subtract" | "multiply" | "divide" | "maximum" | "minimum" => {
+            let a = f32s(operand(comp, env, ins, 0)?, &ins.name)?;
+            let b = f32s(operand(comp, env, ins, 1)?, &ins.name)?;
+            if a.len() != b.len() {
+                return Err(Error::msg(format!(
+                    "{}: elementwise {} on {} vs {} elements",
+                    ins.name,
+                    ins.opcode,
+                    a.len(),
+                    b.len()
+                )));
+            }
+            let f: fn(f32, f32) -> f32 = match ins.opcode.as_str() {
+                "add" => |x, y| x + y,
+                "subtract" => |x, y| x - y,
+                "multiply" => |x, y| x * y,
+                "divide" => |x, y| x / y,
+                "maximum" => f32::max,
+                _ => f32::min,
+            };
+            let (_, dims) = ins.shape.array()?;
+            let out: Vec<f32> = a.iter().zip(&b).map(|(&x, &y)| f(x, y)).collect();
+            Ok(Literal::from_f32s(dims, out))
+        }
+        "dot" => eval_dot(comp, env, ins),
+        "reduce" => eval_reduce(module, comp, env, ins),
+        "convolution" => eval_conv(comp, env, ins),
+        "transpose" => {
+            let x = operand(comp, env, ins, 0)?;
+            let perm = ins.attr_dims("dimensions")?;
+            if perm.len() != x.dims.len() || perm.iter().any(|&p| p >= x.dims.len()) {
+                return Err(Error::msg(format!(
+                    "{}: transpose permutation {:?} invalid for rank-{} operand",
+                    ins.name,
+                    perm,
+                    x.dims.len()
+                )));
+            }
+            let (_, out_dims) = ins.shape.array()?;
+            for (i, &p) in perm.iter().enumerate() {
+                if out_dims.get(i) != Some(&x.dims[p]) {
+                    return Err(Error::msg(format!(
+                        "{}: transpose result {:?} inconsistent with operand {:?} \
+                         permuted by {:?}",
+                        ins.name, out_dims, x.dims, perm
+                    )));
+                }
+            }
+            let xs = f32s(x, &ins.name)?;
+            let xstr = strides(&x.dims);
+            let n = xs.len();
+            let mut idx = Vec::new();
+            let mut out = Vec::with_capacity(n);
+            for lin in 0..n {
+                unravel(lin, out_dims, &mut idx);
+                let mut off = 0usize;
+                for (i, &p) in perm.iter().enumerate() {
+                    off += idx[i] * xstr[p];
+                }
+                out.push(xs[off]);
+            }
+            Ok(Literal::from_f32s(out_dims, out))
+        }
+        "slice" => eval_slice(comp, env, ins),
+        "call" => {
+            let target = ins
+                .attr_computation("to_apply")
+                .ok_or_else(|| Error::msg(format!("{}: call without to_apply", ins.name)))?;
+            let callee = module.computations.get(target).ok_or_else(|| {
+                Error::msg(format!("{}: unknown computation {target}", ins.name))
+            })?;
+            let mut call_args = Vec::with_capacity(ins.operands.len());
+            for i in 0..ins.operands.len() {
+                call_args.push(operand(comp, env, ins, i)?.clone());
+            }
+            evaluate(module, callee, &call_args)
+        }
+        "tuple" => {
+            let mut elems = Vec::with_capacity(ins.operands.len());
+            for i in 0..ins.operands.len() {
+                elems.push(operand(comp, env, ins, i)?.clone());
+            }
+            Ok(Literal {
+                dims: Vec::new(),
+                data: LiteralData::Tuple(elems),
+            })
+        }
+        "get-tuple-element" => {
+            let x = operand(comp, env, ins, 0)?;
+            let idx = ins
+                .attr("index")
+                .and_then(|v| v.parse::<usize>().ok())
+                .ok_or_else(|| Error::msg(format!("{}: missing tuple index", ins.name)))?;
+            match &x.data {
+                LiteralData::Tuple(t) => t.get(idx).cloned().ok_or_else(|| {
+                    Error::msg(format!("{}: tuple index {idx} out of range", ins.name))
+                }),
+                _ => Err(Error::msg(format!(
+                    "{}: get-tuple-element of non-tuple",
+                    ins.name
+                ))),
+            }
+        }
+        other => Err(Error::msg(format!(
+            "{}: unsupported opcode {other}",
+            ins.name
+        ))),
+    }
+}
+
+/// General dot with one contracting dim per side and no batch dims.
+fn eval_dot(comp: &Computation, env: &[Option<Literal>], ins: &Instr) -> Result<Literal> {
+    let lhs = operand(comp, env, ins, 0)?;
+    let rhs = operand(comp, env, ins, 1)?;
+    let lc = single_dim(ins, "lhs_contracting_dims")?;
+    let rc = single_dim(ins, "rhs_contracting_dims")?;
+    if lc >= lhs.dims.len() || rc >= rhs.dims.len() {
+        return Err(Error::msg(format!(
+            "{}: contracting dims [{lc}]/[{rc}] out of range for {:?}/{:?}",
+            ins.name, lhs.dims, rhs.dims
+        )));
+    }
+    if lhs.dims.get(lc) != rhs.dims.get(rc) {
+        return Err(Error::msg(format!(
+            "{}: contracting dims disagree ({:?}[{lc}] vs {:?}[{rc}])",
+            ins.name, lhs.dims, rhs.dims
+        )));
+    }
+    let k = lhs.dims[lc];
+    let a = f32s(lhs, &ins.name)?;
+    let b = f32s(rhs, &ins.name)?;
+    let astr = strides(&lhs.dims);
+    let bstr = strides(&rhs.dims);
+    let lfree: Vec<usize> = (0..lhs.dims.len()).filter(|&d| d != lc).collect();
+    let rfree: Vec<usize> = (0..rhs.dims.len()).filter(|&d| d != rc).collect();
+    let lfree_dims: Vec<usize> = lfree.iter().map(|&d| lhs.dims[d]).collect();
+    let rfree_dims: Vec<usize> = rfree.iter().map(|&d| rhs.dims[d]).collect();
+    let (_, out_dims) = ins.shape.array()?;
+    let m: usize = lfree_dims.iter().product();
+    let n: usize = rfree_dims.iter().product();
+    let mut out = Vec::with_capacity(m * n);
+    let mut li = Vec::new();
+    let mut ri = Vec::new();
+    for lm in 0..m {
+        unravel(lm, &lfree_dims, &mut li);
+        let abase: usize = lfree.iter().zip(&li).map(|(&d, &i)| i * astr[d]).sum();
+        for rn in 0..n {
+            unravel(rn, &rfree_dims, &mut ri);
+            let bbase: usize = rfree.iter().zip(&ri).map(|(&d, &i)| i * bstr[d]).sum();
+            let mut acc = 0f32;
+            for kk in 0..k {
+                acc += a[abase + kk * astr[lc]] * b[bbase + kk * bstr[rc]];
+            }
+            out.push(acc);
+        }
+    }
+    if out.len() != out_dims.iter().product::<usize>() {
+        return Err(Error::msg(format!(
+            "{}: dot produced {} elements for shape {:?}",
+            ins.name,
+            out.len(),
+            out_dims
+        )));
+    }
+    Ok(Literal::from_f32s(out_dims, out))
+}
+
+fn single_dim(ins: &Instr, key: &str) -> Result<usize> {
+    let dims = ins.attr_dims(key)?;
+    if dims.len() != 1 {
+        return Err(Error::msg(format!(
+            "{}: {} = {:?}; only a single contracting dim is supported",
+            ins.name, key, dims
+        )));
+    }
+    Ok(dims[0])
+}
+
+/// Reduce over `dimensions` with a monoid region (add/mul/max/min).
+fn eval_reduce(
+    module: &HloModule,
+    comp: &Computation,
+    env: &[Option<Literal>],
+    ins: &Instr,
+) -> Result<Literal> {
+    let x = operand(comp, env, ins, 0)?;
+    let init_lit = operand(comp, env, ins, 1)?;
+    let init = *f32s(init_lit, &ins.name)?.first().ok_or_else(|| {
+        Error::msg(format!("{}: reduce init must be a scalar", ins.name))
+    })?;
+    let red_dims = ins.attr_dims("dimensions")?;
+    let target = ins
+        .attr_computation("to_apply")
+        .ok_or_else(|| Error::msg(format!("{}: reduce without to_apply", ins.name)))?;
+    let region = module.computations.get(target).ok_or_else(|| {
+        Error::msg(format!("{}: unknown reduce region {target}", ins.name))
+    })?;
+    let f: fn(f32, f32) -> f32 = match region.instrs[region.root].opcode.as_str() {
+        "add" => |a, b| a + b,
+        "multiply" => |a, b| a * b,
+        "maximum" => f32::max,
+        "minimum" => f32::min,
+        other => {
+            return Err(Error::msg(format!(
+                "{}: reduce region {target} applies '{other}'; only \
+                 add/multiply/maximum/minimum regions are supported",
+                ins.name
+            )))
+        }
+    };
+    let xs = f32s(x, &ins.name)?;
+    let (_, out_dims) = ins.shape.array()?;
+    let keep: Vec<usize> = (0..x.dims.len())
+        .filter(|d| !red_dims.contains(d))
+        .collect();
+    let keep_dims: Vec<usize> = keep.iter().map(|&d| x.dims[d]).collect();
+    if keep_dims != out_dims {
+        return Err(Error::msg(format!(
+            "{}: reduce of {:?} over {:?} gives {:?}, shape says {:?}",
+            ins.name, x.dims, red_dims, keep_dims, out_dims
+        )));
+    }
+    let out_n: usize = keep_dims.iter().product();
+    let kstr = strides(&keep_dims);
+    let mut out = vec![init; out_n.max(1)];
+    let mut idx = Vec::new();
+    for (lin, &v) in xs.iter().enumerate() {
+        unravel(lin, &x.dims, &mut idx);
+        let mut off = 0usize;
+        for (j, &d) in keep.iter().enumerate() {
+            off += idx[d] * kstr[j];
+        }
+        out[off] = f(out[off], v);
+    }
+    Ok(Literal::from_f32s(out_dims, out))
+}
+
+/// NHWC x HWIO convolution with stride and zero padding
+/// (`dim_labels=b01f_01io->b01f`, the layout jax emits for our models).
+fn eval_conv(comp: &Computation, env: &[Option<Literal>], ins: &Instr) -> Result<Literal> {
+    let x = operand(comp, env, ins, 0)?;
+    let w = operand(comp, env, ins, 1)?;
+    if let Some(labels) = ins.attr("dim_labels") {
+        if labels != "b01f_01io->b01f" {
+            return Err(Error::msg(format!(
+                "{}: dim_labels {labels} unsupported (only b01f_01io->b01f)",
+                ins.name
+            )));
+        }
+    }
+    if x.dims.len() != 4 || w.dims.len() != 4 {
+        return Err(Error::msg(format!(
+            "{}: convolution expects rank-4 operands, got {:?} and {:?}",
+            ins.name, x.dims, w.dims
+        )));
+    }
+    let win = Window::parse(ins.attr("window").unwrap_or(""))?;
+    let (b, ih, iw, ci) = (x.dims[0], x.dims[1], x.dims[2], x.dims[3]);
+    let (kh, kw, kci, co) = (w.dims[0], w.dims[1], w.dims[2], w.dims[3]);
+    if kci != ci {
+        return Err(Error::msg(format!(
+            "{}: kernel input channels {kci} vs input channels {ci}",
+            ins.name
+        )));
+    }
+    if win.size != [kh, kw] {
+        return Err(Error::msg(format!(
+            "{}: window size {:?} vs kernel spatial dims [{kh}, {kw}]",
+            ins.name, win.size
+        )));
+    }
+    let (_, out_dims) = ins.shape.array()?;
+    let (oh, ow) = (out_dims[1], out_dims[2]);
+    let xv = f32s(x, &ins.name)?;
+    let wv = f32s(w, &ins.name)?;
+    let mut out = Vec::with_capacity(b * oh * ow * co);
+    for n in 0..b {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                for c in 0..co {
+                    let mut acc = 0f32;
+                    for ky in 0..kh {
+                        let iy = (oy * win.stride[0] + ky) as isize - win.pad_lo[0] as isize;
+                        if iy < 0 || iy as usize >= ih {
+                            continue;
+                        }
+                        for kx in 0..kw {
+                            let ix =
+                                (ox * win.stride[1] + kx) as isize - win.pad_lo[1] as isize;
+                            if ix < 0 || ix as usize >= iw {
+                                continue;
+                            }
+                            for ic in 0..ci {
+                                let xi = ((n * ih + iy as usize) * iw + ix as usize) * ci + ic;
+                                let wi = ((ky * kw + kx) * ci + ic) * co + c;
+                                acc += xv[xi] * wv[wi];
+                            }
+                        }
+                    }
+                    out.push(acc);
+                }
+            }
+        }
+    }
+    Ok(Literal::from_f32s(out_dims, out))
+}
+
+/// Parsed `window={size=3x3 stride=2x2 pad=0_1x0_1}` attribute.
+struct Window {
+    size: [usize; 2],
+    stride: [usize; 2],
+    pad_lo: [usize; 2],
+}
+
+impl Window {
+    fn parse(s: &str) -> Result<Window> {
+        let inner = s.trim().trim_start_matches('{').trim_end_matches('}');
+        let mut size = [1usize, 1];
+        let mut stride = [1usize, 1];
+        let mut pad_lo = [0usize, 0];
+        for part in inner.split_whitespace() {
+            let (key, val) = match part.split_once('=') {
+                Some(kv) => kv,
+                None => continue,
+            };
+            let fields: Vec<&str> = val.split('x').collect();
+            if fields.len() != 2 {
+                return Err(Error::msg(format!("window {key}={val}: expected HxW")));
+            }
+            match key {
+                "size" | "stride" => {
+                    let mut dims = [0usize; 2];
+                    for (i, f) in fields.iter().enumerate() {
+                        dims[i] = f.parse::<usize>().map_err(|_| {
+                            Error::msg(format!("window {key}: bad value {f}"))
+                        })?;
+                    }
+                    if key == "size" {
+                        size = dims;
+                    } else {
+                        stride = dims;
+                    }
+                }
+                "pad" => {
+                    for (i, f) in fields.iter().enumerate() {
+                        // `lo_hi`; the high edge is implied by the output
+                        // shape, so only the low edge shifts indexing.
+                        let lo = f.split('_').next().unwrap_or("0");
+                        pad_lo[i] = lo.parse::<usize>().map_err(|_| {
+                            Error::msg(format!("window pad: bad value {f}"))
+                        })?;
+                    }
+                }
+                _ => {}
+            }
+        }
+        Ok(Window {
+            size,
+            stride,
+            pad_lo,
+        })
+    }
+}
+
+/// `slice={[0:64:2], [0:3]}`-style strided slices.
+fn eval_slice(comp: &Computation, env: &[Option<Literal>], ins: &Instr) -> Result<Literal> {
+    let x = operand(comp, env, ins, 0)?;
+    let spec = ins
+        .attr("slice")
+        .ok_or_else(|| Error::msg(format!("{}: slice without ranges", ins.name)))?;
+    let inner = spec.trim().trim_start_matches('{').trim_end_matches('}');
+    let mut ranges = Vec::new();
+    for part in inner.split(',') {
+        let part = part.trim().trim_start_matches('[').trim_end_matches(']');
+        if part.is_empty() {
+            continue;
+        }
+        let nums: Vec<usize> = part
+            .split(':')
+            .map(|t| {
+                t.trim()
+                    .parse::<usize>()
+                    .map_err(|_| Error::msg(format!("{}: bad slice bound {t}", ins.name)))
+            })
+            .collect::<Result<_>>()?;
+        let (start, limit, step) = match nums.as_slice() {
+            [s, l] => (*s, *l, 1),
+            [s, l, st] => (*s, *l, *st),
+            _ => return Err(Error::msg(format!("{}: bad slice range {part}", ins.name))),
+        };
+        ranges.push((start, limit, step.max(1)));
+    }
+    if ranges.len() != x.dims.len() {
+        return Err(Error::msg(format!(
+            "{}: {} slice ranges for rank-{} operand",
+            ins.name,
+            ranges.len(),
+            x.dims.len()
+        )));
+    }
+    let (_, out_dims) = ins.shape.array()?;
+    for (d, &(start, limit, step)) in ranges.iter().enumerate() {
+        let span = if limit > start {
+            (limit - start).div_ceil(step)
+        } else {
+            0
+        };
+        if limit > x.dims[d] || span != out_dims[d] {
+            return Err(Error::msg(format!(
+                "{}: slice range [{start}:{limit}:{step}] invalid for dim {d} \
+                 (operand extent {}, result extent {})",
+                ins.name, x.dims[d], out_dims[d]
+            )));
+        }
+    }
+    let xs = f32s(x, &ins.name)?;
+    let xstr = strides(&x.dims);
+    let n: usize = out_dims.iter().product();
+    let mut idx = Vec::new();
+    let mut out = Vec::with_capacity(n);
+    for lin in 0..n {
+        unravel(lin, out_dims, &mut idx);
+        let mut off = 0usize;
+        for (d, &(start, _limit, step)) in ranges.iter().enumerate() {
+            off += (start + idx[d] * step) * xstr[d];
+        }
+        out.push(xs[off]);
+    }
+    Ok(Literal::from_f32s(out_dims, out))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::HloModuleProto;
+
+    fn run(text: &str, args: &[Literal]) -> Literal {
+        let m = HloModuleProto::from_text(text).unwrap();
+        check_supported(&m.module).unwrap();
+        let refs: Vec<&Literal> = args.iter().collect();
+        evaluate_entry(&m.module, &refs).unwrap()
+    }
+
+    #[test]
+    fn dot_matmul_golden() {
+        // [[1,2,3],[4,5,6]] x [[1,0],[0,1],[1,1]] = [[4,5],[10,11]]
+        let out = run(
+            "HloModule t\nENTRY main {\n\
+             x = f32[2,3] parameter(0)\n\
+             w = f32[3,2] constant({ { 1, 0 }, { 0, 1 }, { 1, 1 } })\n\
+             ROOT d = f32[2,2] dot(x, w), lhs_contracting_dims={1}, rhs_contracting_dims={0}\n}\n",
+            &[Literal::from_f32s(&[2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0])],
+        );
+        assert_eq!(out.to_vec::<f32>().unwrap(), vec![4.0, 5.0, 10.0, 11.0]);
+    }
+
+    #[test]
+    fn reduce_sum_and_max_golden() {
+        let text = "HloModule t\n\
+            sum {\n  a = f32[] parameter(0)\n  b = f32[] parameter(1)\n\
+            \x20 ROOT s = f32[] add(a, b)\n}\n\
+            mx {\n  a = f32[] parameter(0)\n  b = f32[] parameter(1)\n\
+            \x20 ROOT m = f32[] maximum(a, b)\n}\n\
+            ENTRY main {\n  x = f32[2,3] parameter(0)\n  z = f32[] constant(0)\n\
+            \x20 neg = f32[] constant(-1e9)\n\
+            \x20 rows = f32[2] reduce(x, z), dimensions={1}, to_apply=sum\n\
+            \x20 peaks = f32[2] reduce(x, neg), dimensions={1}, to_apply=mx\n\
+            \x20 ROOT both = (f32[2], f32[2]) tuple(rows, peaks)\n}\n";
+        let out = run(
+            text,
+            &[Literal::from_f32s(&[2, 3], vec![1.0, -2.0, 3.0, 4.0, 9.0, -6.0])],
+        );
+        match out.data {
+            LiteralData::Tuple(t) => {
+                assert_eq!(t[0].to_vec::<f32>().unwrap(), vec![2.0, 7.0]);
+                assert_eq!(t[1].to_vec::<f32>().unwrap(), vec![3.0, 9.0]);
+            }
+            _ => panic!("expected tuple"),
+        }
+    }
+
+    #[test]
+    fn broadcast_golden() {
+        // Scalar -> [2,2], and [2] -> [2,2] along each axis.
+        let out = run(
+            "HloModule t\nENTRY main {\n\
+             v = f32[2] parameter(0)\n\
+             rows = f32[2,2] broadcast(v), dimensions={0}\n\
+             cols = f32[2,2] broadcast(v), dimensions={1}\n\
+             ROOT o = (f32[2,2], f32[2,2]) tuple(rows, cols)\n}\n",
+            &[Literal::from_f32s(&[2], vec![10.0, 20.0])],
+        );
+        match out.data {
+            LiteralData::Tuple(t) => {
+                assert_eq!(
+                    t[0].to_vec::<f32>().unwrap(),
+                    vec![10.0, 10.0, 20.0, 20.0],
+                    "dimensions={{0}}: operand indexes rows"
+                );
+                assert_eq!(
+                    t[1].to_vec::<f32>().unwrap(),
+                    vec![10.0, 20.0, 10.0, 20.0],
+                    "dimensions={{1}}: operand indexes columns"
+                );
+            }
+            _ => panic!("expected tuple"),
+        }
+    }
+
+    #[test]
+    fn convert_golden() {
+        let out = run(
+            "HloModule t\nENTRY main {\n\
+             x = u8[4] parameter(0)\n\
+             ROOT f = f32[4] convert(x)\n}\n",
+            &[Literal::from_u8s(&[4], vec![0, 1, 128, 255])],
+        );
+        assert_eq!(
+            out.to_vec::<f32>().unwrap(),
+            vec![0.0, 1.0, 128.0, 255.0]
+        );
+    }
+
+    #[test]
+    fn convolution_golden() {
+        // 1x4x4x1 input of 1..16, 2x2x1x1 kernel [[1,0],[0,1]], stride 2,
+        // no padding: windows {1+6, 3+8, 9+14, 11+16}.
+        let out = run(
+            "HloModule t\nENTRY main {\n\
+             x = f32[1,4,4,1] parameter(0)\n\
+             w = f32[2,2,1,1] constant({ { { { 1 } }, { { 0 } } }, { { { 0 } }, { { 1 } } } })\n\
+             ROOT c = f32[1,2,2,1] convolution(x, w), window={size=2x2 stride=2x2}, \
+             dim_labels=b01f_01io->b01f\n}\n",
+            &[Literal::from_f32s(
+                &[1, 4, 4, 1],
+                (1..=16).map(|v| v as f32).collect(),
+            )],
+        );
+        assert_eq!(out.to_vec::<f32>().unwrap(), vec![7.0, 11.0, 23.0, 27.0]);
+    }
+
+    #[test]
+    fn convolution_same_padding_golden() {
+        // 1x2x2x1 input [[1,2],[3,4]], 3x3 all-ones kernel, stride 1,
+        // pad 1_1: every output is the sum of the in-bounds 3x3 window —
+        // all four windows cover the whole input => 10 everywhere.
+        let out = run(
+            "HloModule t\nENTRY main {\n\
+             x = f32[1,2,2,1] parameter(0)\n\
+             w = f32[3,3,1,1] constant({ { { { 1 } }, { { 1 } }, { { 1 } } }, \
+             { { { 1 } }, { { 1 } }, { { 1 } } }, { { { 1 } }, { { 1 } }, { { 1 } } } })\n\
+             ROOT c = f32[1,2,2,1] convolution(x, w), \
+             window={size=3x3 stride=1x1 pad=1_1x1_1}, dim_labels=b01f_01io->b01f\n}\n",
+            &[Literal::from_f32s(&[1, 2, 2, 1], vec![1.0, 2.0, 3.0, 4.0])],
+        );
+        assert_eq!(out.to_vec::<f32>().unwrap(), vec![10.0, 10.0, 10.0, 10.0]);
+    }
+
+    #[test]
+    fn transpose_slice_iota_golden() {
+        let out = run(
+            "HloModule t\nENTRY main {\n\
+             i = f32[6] iota(), iota_dimension=0\n\
+             m = f32[2,3] reshape(i)\n\
+             tr = f32[3,2] transpose(m), dimensions={1,0}\n\
+             ROOT s = f32[2,2] slice(tr), slice={[0:3:2], [0:2]}\n}\n",
+            &[],
+        );
+        // m = [[0,1,2],[3,4,5]]; tr = [[0,3],[1,4],[2,5]]; rows 0 and 2.
+        assert_eq!(out.to_vec::<f32>().unwrap(), vec![0.0, 3.0, 2.0, 5.0]);
+    }
+
+    #[test]
+    fn unsupported_opcode_reported_at_compile() {
+        let m = HloModuleProto::from_text(
+            "HloModule t\nENTRY main {\n\
+             x = f32[2] parameter(0)\n\
+             ROOT r = f32[2] tanh(x)\n}\n",
+        )
+        .unwrap();
+        let err = check_supported(&m.module).unwrap_err();
+        assert!(format!("{err}").contains("tanh"));
+    }
+
+    #[test]
+    fn arity_and_shape_mismatches_error() {
+        let m = HloModuleProto::from_text(
+            "HloModule t\nENTRY main {\n\
+             x = f32[4] parameter(0)\n\
+             ROOT r = f32[4] add(x, x)\n}\n",
+        )
+        .unwrap();
+        let bad = Literal::from_f32s(&[3], vec![0.0; 3]);
+        let refs = vec![&bad];
+        assert!(evaluate_entry(&m.module, &refs).is_err());
+        assert!(evaluate_entry(&m.module, &[]).is_err());
+    }
+}

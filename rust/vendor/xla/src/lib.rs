@@ -1,28 +1,33 @@
-//! Offline stand-in for the `xla` crate (the xla_extension / PJRT
+//! Pure-Rust stand-in for the `xla` crate (the xla_extension / PJRT
 //! binding the live-plane `Engine` runs compiled HLO artifacts on).
 //!
-//! This container has no network access and no prebuilt xla_extension
-//! runtime, so the workspace vendors the exact API surface
-//! `rust/src/runtime/engine.rs` uses. Client construction succeeds (so
-//! `Engine::load` works against a manifest and the graceful-skip
-//! pattern in the tests keeps functioning); anything that would need a
-//! real PJRT runtime — parsing HLO text, compiling, executing —
-//! returns a descriptive error instead.
+//! Unlike the original error-only stub, this crate now *executes*: it
+//! parses the HLO text `python/compile/aot.py` (or the offline
+//! `accelserve gen-artifacts` generator) emits into an op graph and
+//! interprets it over f32/u8 literals. The API surface is exactly what
+//! `rust/src/runtime/engine.rs` uses, so swapping in the real
+//! xla_extension binding still requires no call-site changes — this is
+//! a reference evaluator, not a compiler.
 //!
-//! Swap this path dependency for the real `xla` binding when building
-//! in an environment with xla_extension; no call sites change.
+//! Supported HLO opcodes (see `parser.rs` / `interp.rs`):
+//! `parameter`, `constant`, `iota`, `reshape`, `broadcast`, `convert`,
+//! `add`, `subtract`, `multiply`, `divide`, `maximum`, `minimum`,
+//! `dot` (single contracting dim), `reduce` (add/mul/max/min regions),
+//! `convolution` (NHWC x HWIO, stride + zero padding), `transpose`,
+//! `slice`, `call`, `tuple`, `get-tuple-element`.
+
+mod interp;
+mod parser;
 
 use std::fmt;
+use std::sync::Arc;
 
-/// Errors surfaced by the stub: always a rendered message.
+/// Errors surfaced by the interpreter: always a rendered message.
 pub struct Error(String);
 
 impl Error {
-    fn unavailable(what: &str) -> Error {
-        Error(format!(
-            "xla stub: {what} requires the real xla_extension/PJRT runtime \
-             (this build vendors rust/vendor/xla)"
-        ))
+    pub(crate) fn msg(m: impl Into<String>) -> Error {
+        Error(m.into())
     }
 }
 
@@ -49,51 +54,118 @@ pub enum ElementType {
     U8,
 }
 
-/// Parsed HLO module (never constructible in the stub).
-pub struct HloModuleProto {
-    _private: (),
-}
+impl ElementType {
+    pub fn byte_size(self) -> usize {
+        match self {
+            ElementType::F32 => 4,
+            ElementType::U8 => 1,
+        }
+    }
 
-impl HloModuleProto {
-    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
-        Err(Error(format!(
-            "xla stub: cannot parse HLO text {path}: the real \
-             xla_extension/PJRT runtime is not available in this build"
-        )))
+    pub fn name(self) -> &'static str {
+        match self {
+            ElementType::F32 => "f32",
+            ElementType::U8 => "u8",
+        }
     }
 }
 
-/// An XLA computation wrapping an HLO module.
-pub struct XlaComputation {
-    _private: (),
+/// Typed element storage of a [`Literal`].
+#[derive(Debug, Clone, PartialEq)]
+pub enum LiteralData {
+    F32(Vec<f32>),
+    U8(Vec<u8>),
+    Tuple(Vec<Literal>),
 }
 
-impl XlaComputation {
-    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
-        XlaComputation { _private: () }
-    }
-}
-
-/// A host literal: shape + dtype + raw bytes.
+/// A host literal: shape + dtype + elements (or a tuple of literals).
+#[derive(Debug, Clone, PartialEq)]
 pub struct Literal {
-    _private: (),
+    pub(crate) dims: Vec<usize>,
+    pub(crate) data: LiteralData,
 }
 
 impl Literal {
     pub fn create_from_shape_and_untyped_data(
-        _ty: ElementType,
-        _dims: &[usize],
-        _data: &[u8],
+        ty: ElementType,
+        dims: &[usize],
+        data: &[u8],
     ) -> Result<Literal> {
-        Ok(Literal { _private: () })
+        let elems: usize = dims.iter().product();
+        if data.len() != elems * ty.byte_size() {
+            return Err(Error::msg(format!(
+                "literal: {} bytes for {} x {} ({} expected)",
+                data.len(),
+                elems,
+                ty.name(),
+                elems * ty.byte_size()
+            )));
+        }
+        let data = match ty {
+            ElementType::F32 => LiteralData::F32(
+                data.chunks_exact(4)
+                    .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                    .collect(),
+            ),
+            ElementType::U8 => LiteralData::U8(data.to_vec()),
+        };
+        Ok(Literal {
+            dims: dims.to_vec(),
+            data,
+        })
     }
 
+    /// Scalar/array constructors used by the interpreter and tests.
+    pub fn from_f32s(dims: &[usize], values: Vec<f32>) -> Literal {
+        debug_assert_eq!(dims.iter().product::<usize>(), values.len());
+        Literal {
+            dims: dims.to_vec(),
+            data: LiteralData::F32(values),
+        }
+    }
+
+    pub fn from_u8s(dims: &[usize], values: Vec<u8>) -> Literal {
+        debug_assert_eq!(dims.iter().product::<usize>(), values.len());
+        Literal {
+            dims: dims.to_vec(),
+            data: LiteralData::U8(values),
+        }
+    }
+
+    pub fn dims(&self) -> &[usize] {
+        &self.dims
+    }
+
+    pub fn element_count(&self) -> usize {
+        match &self.data {
+            LiteralData::F32(v) => v.len(),
+            LiteralData::U8(v) => v.len(),
+            LiteralData::Tuple(t) => t.iter().map(Literal::element_count).sum(),
+        }
+    }
+
+    pub fn element_type(&self) -> Option<ElementType> {
+        match &self.data {
+            LiteralData::F32(_) => Some(ElementType::F32),
+            LiteralData::U8(_) => Some(ElementType::U8),
+            LiteralData::Tuple(_) => None,
+        }
+    }
+
+    /// Unwrap a 1-tuple (aot.py lowers with `return_tuple=True`).
     pub fn to_tuple1(self) -> Result<Literal> {
-        Err(Error::unavailable("Literal::to_tuple1"))
+        match self.data {
+            LiteralData::Tuple(mut elems) if elems.len() == 1 => Ok(elems.remove(0)),
+            LiteralData::Tuple(elems) => Err(Error::msg(format!(
+                "to_tuple1: literal is a {}-tuple",
+                elems.len()
+            ))),
+            _ => Err(Error::msg("to_tuple1: literal is not a tuple")),
+        }
     }
 
-    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
-        Err(Error::unavailable("Literal::to_vec"))
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::from_literal(self)
     }
 }
 
@@ -103,25 +175,83 @@ impl AsRef<Literal> for Literal {
     }
 }
 
+/// Native element types extractable from a [`Literal`].
+pub trait NativeType: Sized {
+    fn from_literal(lit: &Literal) -> Result<Vec<Self>>;
+}
+
+impl NativeType for f32 {
+    fn from_literal(lit: &Literal) -> Result<Vec<f32>> {
+        match &lit.data {
+            LiteralData::F32(v) => Ok(v.clone()),
+            _ => Err(Error::msg("to_vec::<f32>: literal is not f32")),
+        }
+    }
+}
+
+impl NativeType for u8 {
+    fn from_literal(lit: &Literal) -> Result<Vec<u8>> {
+        match &lit.data {
+            LiteralData::U8(v) => Ok(v.clone()),
+            _ => Err(Error::msg("to_vec::<u8>: literal is not u8")),
+        }
+    }
+}
+
+/// Parsed HLO module.
+pub struct HloModuleProto {
+    pub(crate) module: Arc<parser::HloModule>,
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error::msg(format!("reading HLO text {path}: {e}")))?;
+        Self::from_text(&text)
+    }
+
+    /// Parse HLO text directly (tests, in-memory fixtures).
+    pub fn from_text(text: &str) -> Result<HloModuleProto> {
+        Ok(HloModuleProto {
+            module: Arc::new(parser::parse(text)?),
+        })
+    }
+}
+
+/// An XLA computation wrapping an HLO module.
+pub struct XlaComputation {
+    module: Arc<parser::HloModule>,
+}
+
+impl XlaComputation {
+    pub fn from_proto(proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation {
+            module: proto.module.clone(),
+        }
+    }
+}
+
 /// A device buffer returned by an execution.
 pub struct PjRtBuffer {
-    _private: (),
+    lit: Literal,
 }
 
 impl PjRtBuffer {
     pub fn to_literal_sync(&self) -> Result<Literal> {
-        Err(Error::unavailable("PjRtBuffer::to_literal_sync"))
+        Ok(self.lit.clone())
     }
 }
 
-/// A compiled, loaded executable.
+/// A compiled, loaded executable: here, the interpretable op graph.
 pub struct PjRtLoadedExecutable {
-    _private: (),
+    module: Arc<parser::HloModule>,
 }
 
 impl PjRtLoadedExecutable {
-    pub fn execute<L: AsRef<Literal>>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
-        Err(Error::unavailable("PjRtLoadedExecutable::execute"))
+    pub fn execute<L: AsRef<Literal>>(&self, args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        let arg_refs: Vec<&Literal> = args.iter().map(AsRef::as_ref).collect();
+        let out = interp::evaluate_entry(&self.module, &arg_refs)?;
+        Ok(vec![vec![PjRtBuffer { lit: out }]])
     }
 }
 
@@ -131,8 +261,6 @@ pub struct PjRtClient {
 }
 
 impl PjRtClient {
-    /// The stub client constructs fine: `Engine::load` only needs it to
-    /// exist; per-artifact compilation is where the stub reports itself.
     pub fn cpu() -> Result<PjRtClient> {
         Ok(PjRtClient { _private: () })
     }
@@ -141,8 +269,16 @@ impl PjRtClient {
         "cpu".to_string()
     }
 
-    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
-        Err(Error::unavailable("PjRtClient::compile"))
+    /// "Compilation" validates that the entry computation exists and
+    /// every opcode is interpretable, so unsupported-op problems surface
+    /// at engine warm-up (like a real compile). Shape/attribute
+    /// inconsistencies in a malformed module surface as `Err` from
+    /// `execute` — the per-op evaluators validate before indexing.
+    pub fn compile(&self, comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        interp::check_supported(&comp.module)?;
+        Ok(PjRtLoadedExecutable {
+            module: comp.module.clone(),
+        })
     }
 }
 
@@ -150,14 +286,59 @@ impl PjRtClient {
 mod tests {
     use super::*;
 
+    const ADD_MODULE: &str = "\
+HloModule add_one
+
+ENTRY main.1 {
+  x = f32[2,2] parameter(0)
+  one = f32[] constant(1)
+  ones = f32[2,2] broadcast(one), dimensions={}
+  sum = f32[2,2] add(x, ones)
+  ROOT out = (f32[2,2]) tuple(sum)
+}
+";
+
     #[test]
-    fn client_constructs_but_compile_reports_stub() {
+    fn client_compiles_and_executes() {
         let c = PjRtClient::cpu().unwrap();
         assert_eq!(c.platform_name(), "cpu");
-        assert!(HloModuleProto::from_text_file("x.hlo.txt").is_err());
+        let proto = HloModuleProto::from_text(ADD_MODULE).unwrap();
+        let exe = c.compile(&XlaComputation::from_proto(&proto)).unwrap();
+        let lit = Literal::create_from_shape_and_untyped_data(
+            ElementType::F32,
+            &[2, 2],
+            &[1.0f32, 2.0, 3.0, 4.0]
+                .iter()
+                .flat_map(|v| v.to_le_bytes())
+                .collect::<Vec<u8>>(),
+        )
+        .unwrap();
+        let out = exe.execute::<Literal>(&[lit]).unwrap()[0][0]
+            .to_literal_sync()
+            .unwrap()
+            .to_tuple1()
+            .unwrap();
+        assert_eq!(out.to_vec::<f32>().unwrap(), vec![2.0, 3.0, 4.0, 5.0]);
+    }
+
+    #[test]
+    fn literal_validates_byte_length() {
+        assert!(Literal::create_from_shape_and_untyped_data(
+            ElementType::F32,
+            &[2, 2],
+            &[0; 15]
+        )
+        .is_err());
         let lit =
-            Literal::create_from_shape_and_untyped_data(ElementType::F32, &[2, 2], &[0; 16])
+            Literal::create_from_shape_and_untyped_data(ElementType::U8, &[3], &[7, 8, 9])
                 .unwrap();
+        assert_eq!(lit.to_vec::<u8>().unwrap(), vec![7, 8, 9]);
         assert!(lit.to_vec::<f32>().is_err());
+    }
+
+    #[test]
+    fn missing_file_reports_path() {
+        let err = HloModuleProto::from_text_file("/no/such/file.hlo.txt").unwrap_err();
+        assert!(format!("{err}").contains("/no/such/file.hlo.txt"));
     }
 }

@@ -1,0 +1,491 @@
+//! HLO-text parser: turns the text `XlaComputation::as_hlo_text()`
+//! prints (and the offline `accelserve gen-artifacts` generator emits)
+//! into an op graph the interpreter can walk.
+//!
+//! The grammar handled is the standard instruction line
+//!
+//! ```text
+//!   [ROOT ]name = shape opcode(operand, ...), attr={...}, attr=value
+//! ```
+//!
+//! inside `ENTRY name {` / `name {` computation blocks. Layout suffixes
+//! (`{1,0}`) and unknown attributes (e.g. `metadata=`) are skipped, so
+//! real jax-emitted modules parse as long as they stay inside the
+//! supported opcode set.
+
+use std::collections::HashMap;
+
+use crate::{ElementType, Error, Result};
+
+/// An array or tuple shape.
+#[derive(Debug, Clone, PartialEq)]
+pub(crate) enum Shape {
+    Array { ty: ElementType, dims: Vec<usize> },
+    Tuple(Vec<Shape>),
+}
+
+impl Shape {
+    pub fn elems(&self) -> usize {
+        match self {
+            Shape::Array { dims, .. } => dims.iter().product(),
+            Shape::Tuple(t) => t.iter().map(Shape::elems).sum(),
+        }
+    }
+
+    pub fn array(&self) -> Result<(ElementType, &[usize])> {
+        match self {
+            Shape::Array { ty, dims } => Ok((*ty, dims)),
+            Shape::Tuple(_) => Err(Error::msg("expected array shape, got tuple")),
+        }
+    }
+}
+
+/// One parsed instruction.
+#[derive(Debug, Clone)]
+pub(crate) struct Instr {
+    pub name: String,
+    pub shape: Shape,
+    pub opcode: String,
+    pub operands: Vec<String>,
+    pub attrs: Vec<(String, String)>,
+    /// `constant(...)` payload, row-major.
+    pub consts: Option<Vec<f64>>,
+    /// `parameter(N)` index.
+    pub param_index: Option<usize>,
+    pub is_root: bool,
+}
+
+impl Instr {
+    pub fn attr(&self, key: &str) -> Option<&str> {
+        self.attrs
+            .iter()
+            .find(|(k, _)| k == key)
+            .map(|(_, v)| v.as_str())
+    }
+
+    /// A computation-name attribute (`to_apply=...`), with the optional
+    /// `%` sigil stripped to match the computation map keys.
+    pub fn attr_computation(&self, key: &str) -> Option<&str> {
+        self.attr(key).map(|v| v.trim_start_matches('%'))
+    }
+
+    /// An attr of the form `{1,2}` parsed as a list of usize.
+    pub fn attr_dims(&self, key: &str) -> Result<Vec<usize>> {
+        let v = self
+            .attr(key)
+            .ok_or_else(|| Error::msg(format!("{}: missing attr {key}", self.name)))?;
+        parse_usize_list(v)
+    }
+}
+
+/// One named computation (entry or region).
+#[derive(Debug, Clone)]
+pub(crate) struct Computation {
+    pub name: String,
+    pub instrs: Vec<Instr>,
+    pub index: HashMap<String, usize>,
+    pub root: usize,
+}
+
+/// A parsed HLO module.
+#[derive(Debug, Clone)]
+pub(crate) struct HloModule {
+    pub name: String,
+    pub computations: HashMap<String, Computation>,
+    pub entry: String,
+}
+
+impl HloModule {
+    pub fn entry_computation(&self) -> Result<&Computation> {
+        self.computations
+            .get(&self.entry)
+            .ok_or_else(|| Error::msg(format!("no entry computation {}", self.entry)))
+    }
+}
+
+/// Parse a full HLO-text module.
+pub(crate) fn parse(text: &str) -> Result<HloModule> {
+    let mut name = String::new();
+    let mut computations = HashMap::new();
+    let mut entry: Option<String> = None;
+    let mut last_comp: Option<String> = None;
+    let mut cur: Option<Computation> = None;
+    let mut saw_root = false;
+
+    for raw in text.lines() {
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with("//") {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("HloModule") {
+            name = rest
+                .trim()
+                .split([',', ' '])
+                .next()
+                .unwrap_or("")
+                .to_string();
+            continue;
+        }
+        if line == "}" {
+            let mut c = cur
+                .take()
+                .ok_or_else(|| Error::msg("unmatched '}' outside a computation"))?;
+            if c.instrs.is_empty() {
+                return Err(Error::msg(format!("computation {} is empty", c.name)));
+            }
+            if !saw_root {
+                c.root = c.instrs.len() - 1;
+            }
+            last_comp = Some(c.name.clone());
+            computations.insert(c.name.clone(), c);
+            continue;
+        }
+        if line.ends_with('{') && !line.contains('=') {
+            if cur.is_some() {
+                return Err(Error::msg("nested computation block"));
+            }
+            let head = line[..line.len() - 1].trim();
+            let (is_entry, head) = match head.strip_prefix("ENTRY ") {
+                Some(rest) => (true, rest),
+                None => (false, head),
+            };
+            let cname = head
+                .split([' ', ','])
+                .next()
+                .unwrap_or("")
+                .trim_start_matches('%')
+                .to_string();
+            if cname.is_empty() {
+                return Err(Error::msg(format!("bad computation header: {line}")));
+            }
+            if is_entry {
+                entry = Some(cname.clone());
+            }
+            cur = Some(Computation {
+                name: cname,
+                instrs: Vec::new(),
+                index: HashMap::new(),
+                root: 0,
+            });
+            saw_root = false;
+            continue;
+        }
+        let comp = cur
+            .as_mut()
+            .ok_or_else(|| Error::msg(format!("instruction outside computation: {line}")))?;
+        let instr = parse_instr(line)?;
+        if instr.is_root {
+            comp.root = comp.instrs.len();
+            saw_root = true;
+        }
+        comp.index.insert(instr.name.clone(), comp.instrs.len());
+        comp.instrs.push(instr);
+    }
+    if cur.is_some() {
+        return Err(Error::msg("unterminated computation block"));
+    }
+    let entry = entry
+        .or(last_comp)
+        .ok_or_else(|| Error::msg("module has no computations"))?;
+    Ok(HloModule {
+        name,
+        computations,
+        entry,
+    })
+}
+
+fn parse_instr(line: &str) -> Result<Instr> {
+    let (is_root, line) = match line.strip_prefix("ROOT ") {
+        Some(rest) => (true, rest),
+        None => (false, line),
+    };
+    let eq = line
+        .find(" = ")
+        .ok_or_else(|| Error::msg(format!("instruction missing '=': {line}")))?;
+    let name = line[..eq].trim().trim_start_matches('%').to_string();
+    let rest = line[eq + 3..].trim();
+
+    // Shape: a tuple "(...)" or a space-free token like f32[4,3]{1,0}.
+    let (shape_str, rest) = if let Some(stripped) = rest.strip_prefix('(') {
+        let close = matching(stripped, '(', ')')?;
+        (&rest[..close + 2], rest[close + 2..].trim_start())
+    } else {
+        let sp = rest
+            .find(' ')
+            .ok_or_else(|| Error::msg(format!("instruction missing opcode: {line}")))?;
+        (&rest[..sp], rest[sp + 1..].trim_start())
+    };
+    let shape = parse_shape(shape_str)?;
+
+    // Opcode + parenthesized operand list.
+    let par = rest
+        .find('(')
+        .ok_or_else(|| Error::msg(format!("opcode missing '(': {line}")))?;
+    let opcode = rest[..par].trim().to_string();
+    if opcode.is_empty() || opcode.contains(' ') {
+        return Err(Error::msg(format!("bad opcode in: {line}")));
+    }
+    let close_rel = matching(&rest[par + 1..], '(', ')')?;
+    let inner = &rest[par + 1..par + 1 + close_rel];
+    let after = rest[par + 1 + close_rel + 1..]
+        .trim_start()
+        .trim_start_matches(',')
+        .trim();
+
+    let mut consts = None;
+    let mut param_index = None;
+    let mut operands = Vec::new();
+    match opcode.as_str() {
+        "constant" => consts = Some(parse_numbers(inner)?),
+        "parameter" => {
+            param_index = Some(inner.trim().parse::<usize>().map_err(|_| {
+                Error::msg(format!("bad parameter index '{inner}' in: {line}"))
+            })?)
+        }
+        _ => {
+            for tok in split_top(inner) {
+                let tok = tok.trim();
+                if tok.is_empty() {
+                    continue;
+                }
+                // Operands may be printed with their shape prefix
+                // ("f32[2]{0} %x"); the name is the last token.
+                let opname = tok
+                    .split_whitespace()
+                    .last()
+                    .unwrap_or(tok)
+                    .trim_start_matches('%');
+                operands.push(opname.to_string());
+            }
+        }
+    }
+
+    let mut attrs = Vec::new();
+    for piece in split_top(after) {
+        let piece = piece.trim();
+        if piece.is_empty() {
+            continue;
+        }
+        if let Some(eqi) = piece.find('=') {
+            attrs.push((
+                piece[..eqi].trim().to_string(),
+                piece[eqi + 1..].trim().to_string(),
+            ));
+        }
+    }
+
+    Ok(Instr {
+        name,
+        shape,
+        opcode,
+        operands,
+        attrs,
+        consts,
+        param_index,
+        is_root,
+    })
+}
+
+/// Index of the closing delimiter matching an already-consumed opener.
+fn matching(s: &str, open: char, close: char) -> Result<usize> {
+    let mut depth = 1usize;
+    for (i, c) in s.char_indices() {
+        if c == open {
+            depth += 1;
+        } else if c == close {
+            depth -= 1;
+            if depth == 0 {
+                return Ok(i);
+            }
+        }
+    }
+    Err(Error::msg(format!("unbalanced '{open}' in: {s}")))
+}
+
+/// Split on top-level commas (outside (), {} and []).
+fn split_top(s: &str) -> Vec<&str> {
+    let mut parts = Vec::new();
+    let mut depth = 0i32;
+    let mut start = 0usize;
+    for (i, c) in s.char_indices() {
+        match c {
+            '(' | '{' | '[' => depth += 1,
+            ')' | '}' | ']' => depth -= 1,
+            ',' if depth == 0 => {
+                parts.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    parts.push(&s[start..]);
+    parts
+}
+
+fn parse_shape(s: &str) -> Result<Shape> {
+    let s = s.trim();
+    if let Some(stripped) = s.strip_prefix('(') {
+        let close = matching(stripped, '(', ')')?;
+        let inner = &stripped[..close];
+        let mut members = Vec::new();
+        for part in split_top(inner) {
+            let part = part.trim();
+            if !part.is_empty() {
+                members.push(parse_shape(part)?);
+            }
+        }
+        return Ok(Shape::Tuple(members));
+    }
+    let lb = s
+        .find('[')
+        .ok_or_else(|| Error::msg(format!("shape missing '[': {s}")))?;
+    let rb = s
+        .find(']')
+        .ok_or_else(|| Error::msg(format!("shape missing ']': {s}")))?;
+    let ty = match &s[..lb] {
+        "f32" => ElementType::F32,
+        "u8" => ElementType::U8,
+        other => {
+            return Err(Error::msg(format!(
+                "unsupported element type {other} (supported: f32, u8)"
+            )))
+        }
+    };
+    let dims_str = &s[lb + 1..rb];
+    let mut dims = Vec::new();
+    if !dims_str.trim().is_empty() {
+        for d in dims_str.split(',') {
+            dims.push(
+                d.trim()
+                    .parse::<usize>()
+                    .map_err(|_| Error::msg(format!("bad dimension '{d}' in shape {s}")))?,
+            );
+        }
+    }
+    // Anything after ']' is the layout ({1,0}); skipped.
+    Ok(Shape::Array { ty, dims })
+}
+
+/// Parse `{1,2}` / `1` style lists of usize.
+pub(crate) fn parse_usize_list(s: &str) -> Result<Vec<usize>> {
+    let inner = s.trim().trim_start_matches('{').trim_end_matches('}');
+    let mut out = Vec::new();
+    for tok in inner.split(',') {
+        let tok = tok.trim();
+        if tok.is_empty() {
+            continue;
+        }
+        out.push(
+            tok.parse::<usize>()
+                .map_err(|_| Error::msg(format!("bad index '{tok}' in list {s}")))?,
+        );
+    }
+    Ok(out)
+}
+
+/// Extract every numeric token from a (possibly nested-brace) constant
+/// payload, row-major.
+fn parse_numbers(s: &str) -> Result<Vec<f64>> {
+    let cleaned: String = s
+        .chars()
+        .map(|c| if c == '{' || c == '}' || c == ',' { ' ' } else { c })
+        .collect();
+    let mut out = Vec::new();
+    for tok in cleaned.split_whitespace() {
+        out.push(
+            tok.parse::<f64>()
+                .map_err(|_| Error::msg(format!("bad constant token '{tok}'")))?,
+        );
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_instruction_forms() {
+        let i = parse_instr(
+            "dot.14 = f32[4,8]{1,0} dot(Arg_0.1, divide.13), \
+             lhs_contracting_dims={1}, rhs_contracting_dims={0}",
+        )
+        .unwrap();
+        assert_eq!(i.name, "dot.14");
+        assert_eq!(i.opcode, "dot");
+        assert_eq!(i.operands, vec!["Arg_0.1", "divide.13"]);
+        assert_eq!(i.attr_dims("lhs_contracting_dims").unwrap(), vec![1]);
+        assert_eq!(i.attr_dims("rhs_contracting_dims").unwrap(), vec![0]);
+        let (ty, dims) = i.shape.array().unwrap();
+        assert_eq!(ty, ElementType::F32);
+        assert_eq!(dims, &[4, 8]);
+
+        let c = parse_instr("k = f32[2,2] constant({ { 1, 2.5 }, { -3, 4e-2 } })").unwrap();
+        assert_eq!(c.consts.unwrap(), vec![1.0, 2.5, -3.0, 0.04]);
+
+        let p = parse_instr("Arg_0.1 = u8[64,64,3]{2,1,0} parameter(0)").unwrap();
+        assert_eq!(p.param_index, Some(0));
+
+        let r = parse_instr(
+            "ROOT tuple.27 = (f32[4,8]{1,0}) tuple(add.26)",
+        )
+        .unwrap();
+        assert!(r.is_root);
+        assert!(matches!(r.shape, Shape::Tuple(ref t) if t.len() == 1));
+    }
+
+    #[test]
+    fn window_attrs_survive_splitting() {
+        let i = parse_instr(
+            "conv = f32[1,16,16,8] convolution(x, w), \
+             window={size=3x3 stride=2x2 pad=0_1x0_1}, dim_labels=b01f_01io->b01f",
+        )
+        .unwrap();
+        assert_eq!(
+            i.attr("window").unwrap(),
+            "{size=3x3 stride=2x2 pad=0_1x0_1}"
+        );
+        assert_eq!(i.attr("dim_labels").unwrap(), "b01f_01io->b01f");
+    }
+
+    #[test]
+    fn parses_module_with_region() {
+        let m = parse(
+            "HloModule t, entry_computation_layout={(f32[4]{0})->f32[]}\n\n\
+             region_0.3 {\n  a = f32[] parameter(0)\n  b = f32[] parameter(1)\n\
+             \x20 ROOT s = f32[] add(a, b)\n}\n\n\
+             ENTRY main.9 {\n  x = f32[4]{0} parameter(0)\n  z = f32[] constant(0)\n\
+             \x20 ROOT r = f32[] reduce(x, z), dimensions={0}, to_apply=region_0.3\n}\n",
+        )
+        .unwrap();
+        assert_eq!(m.name, "t");
+        assert_eq!(m.entry, "main.9");
+        assert_eq!(m.computations.len(), 2);
+        let e = m.entry_computation().unwrap();
+        assert_eq!(e.instrs.len(), 3);
+        assert_eq!(e.root, 2);
+        assert_eq!(e.instrs[2].attr("to_apply").unwrap(), "region_0.3");
+    }
+
+    #[test]
+    fn percent_sigils_stripped_everywhere() {
+        // Long-form HLO prints %-prefixed names; names, operands and
+        // computation-name attributes must all resolve sigil-free.
+        let i = parse_instr(
+            "%r = f32[] reduce(%x, %z), dimensions={0}, to_apply=%region_0.3",
+        )
+        .unwrap();
+        assert_eq!(i.name, "r");
+        assert_eq!(i.operands, vec!["x", "z"]);
+        assert_eq!(i.attr("to_apply").unwrap(), "%region_0.3");
+        assert_eq!(i.attr_computation("to_apply").unwrap(), "region_0.3");
+    }
+
+    #[test]
+    fn rejects_malformed_lines() {
+        assert!(parse_instr("garbage").is_err());
+        assert!(parse_instr("x = f32[2] add(a, b").is_err());
+        assert!(parse_shape("q17[3]").is_err());
+        assert!(parse("ENTRY main {\n  x = f32[1] parameter(0)\n").is_err());
+    }
+}

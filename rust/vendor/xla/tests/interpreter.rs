@@ -1,0 +1,94 @@
+//! Integration tests: parse the checked-in minimal HLO fixture from
+//! disk (the same `from_text_file` path the engine uses) and verify the
+//! full parse -> compile -> execute round trip against hand-computed
+//! values.
+
+use xla::{ElementType, HloModuleProto, Literal, PjRtClient, XlaComputation};
+
+fn fixture_path() -> String {
+    format!(
+        "{}/tests/fixtures/min_classifier.hlo.txt",
+        env!("CARGO_MANIFEST_DIR")
+    )
+}
+
+fn f32s_to_bytes(v: &[f32]) -> Vec<u8> {
+    v.iter().flat_map(|x| x.to_le_bytes()).collect()
+}
+
+#[test]
+fn fixture_roundtrips_through_engine_path() {
+    let proto = HloModuleProto::from_text_file(&fixture_path()).unwrap();
+    let client = PjRtClient::cpu().unwrap();
+    let exe = client.compile(&XlaComputation::from_proto(&proto)).unwrap();
+
+    // Batch 0: conv = 1*0.5 + 2*(-0.5) + 3*1 + 4*0.25 = 3.5 -> relu 3.5
+    // Batch 1: conv = -0.5 + 0 + 0.5 - 0.5 = -0.5          -> relu 0
+    // logits = relu * [1, 2, -1] + [0.1, 0.2, 0.3], then / 4.
+    let input = [1.0f32, 2.0, 3.0, 4.0, -1.0, 0.0, 0.5, -2.0];
+    let lit = Literal::create_from_shape_and_untyped_data(
+        ElementType::F32,
+        &[2, 2, 2, 1],
+        &f32s_to_bytes(&input),
+    )
+    .unwrap();
+    let out = exe.execute::<Literal>(&[lit]).unwrap()[0][0]
+        .to_literal_sync()
+        .unwrap()
+        .to_tuple1()
+        .unwrap()
+        .to_vec::<f32>()
+        .unwrap();
+
+    let want = [0.9f32, 1.8, -0.8, 0.025, 0.05, 0.075];
+    assert_eq!(out.len(), want.len());
+    for (got, expect) in out.iter().zip(&want) {
+        assert!(
+            (got - expect).abs() < 1e-6,
+            "got {got}, expected {expect} (all: {out:?})"
+        );
+    }
+}
+
+#[test]
+fn fixture_is_deterministic_across_executions() {
+    let proto = HloModuleProto::from_text_file(&fixture_path()).unwrap();
+    let client = PjRtClient::cpu().unwrap();
+    let exe = client.compile(&XlaComputation::from_proto(&proto)).unwrap();
+    let lit = || {
+        Literal::create_from_shape_and_untyped_data(
+            ElementType::F32,
+            &[2, 2, 2, 1],
+            &f32s_to_bytes(&[0.25; 8]),
+        )
+        .unwrap()
+    };
+    let run = |l: Literal| {
+        exe.execute::<Literal>(&[l]).unwrap()[0][0]
+            .to_literal_sync()
+            .unwrap()
+            .to_tuple1()
+            .unwrap()
+            .to_vec::<f32>()
+            .unwrap()
+    };
+    assert_eq!(run(lit()), run(lit()));
+}
+
+#[test]
+fn wrong_arity_and_shape_surface_as_errors() {
+    let proto = HloModuleProto::from_text_file(&fixture_path()).unwrap();
+    let client = PjRtClient::cpu().unwrap();
+    let exe = client.compile(&XlaComputation::from_proto(&proto)).unwrap();
+    assert!(exe.execute::<Literal>(&[]).is_err(), "no args must error");
+    let bad = Literal::create_from_shape_and_untyped_data(
+        ElementType::F32,
+        &[2, 2],
+        &f32s_to_bytes(&[0.0; 4]),
+    )
+    .unwrap();
+    assert!(
+        exe.execute::<Literal>(&[bad]).is_err(),
+        "wrong element count must error"
+    );
+}
