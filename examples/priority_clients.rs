@@ -54,7 +54,7 @@ fn main() -> anyhow::Result<()> {
     let exec = Arc::new(Executor::start(
         "artifacts",
         1,
-        BatchCfg { max_batch: 1 },
+        BatchCfg::none(),
         &["tiny_mobilenet_b1", "tiny_resnet_b1"],
     )?);
 

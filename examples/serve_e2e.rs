@@ -29,7 +29,7 @@ fn main() -> anyhow::Result<()> {
     let exec = Arc::new(Executor::start(
         "artifacts",
         4,
-        BatchCfg { max_batch: 4 },
+        BatchCfg::opportunistic(4),
         &[
             "preprocess",
             "tiny_mobilenet_b1",

@@ -80,7 +80,7 @@ fn main() {
         Executor::start(
             "artifacts",
             1,
-            BatchCfg { max_batch: 1 },
+            BatchCfg::none(),
             &["tiny_mobilenet_b1"],
         )
         .unwrap(),

@@ -13,9 +13,17 @@
 //!   "sharing": "mps",
 //!   "streams": 8,
 //!   "priority_client": true,
-//!   "seed": 7
+//!   "seed": 7,
+//!   "max_batch": 8,
+//!   "flush_us": 2000
 //! }
 //! ```
+//!
+//! `live_transport`, `max_batch` and `flush_us` configure the *live*
+//! coordinator when a scenario file drives it: `accelserve matrix
+//! --config` reads `live_transport` (the matrix pins batching at b1 so
+//! stage latencies stay per-request), while `accelserve batchsweep
+//! --config` reads all three. The sim plane ignores them.
 
 use anyhow::{bail, Context, Result};
 
@@ -48,6 +56,8 @@ pub fn parse_scenario(text: &str) -> Result<Scenario> {
         "seed",
         "warmup_frac",
         "live_transport",
+        "max_batch",
+        "flush_us",
     ];
     for k in obj.keys() {
         if !KNOWN.contains(&k.as_str()) {
@@ -110,6 +120,15 @@ pub fn parse_scenario(text: &str) -> Result<Scenario> {
                 .with_context(|| format!("bad live_transport {lt} (tcp|shm|rdma|gdr)"))?,
         );
     }
+    if let Some(n) = v.get("max_batch").and_then(Json::as_u64) {
+        if n == 0 {
+            bail!("max_batch must be >= 1 (1 disables batching)");
+        }
+        sc.max_batch = n as usize;
+    }
+    if let Some(n) = v.get("flush_us").and_then(Json::as_u64) {
+        sc.flush_us = n;
+    }
     Ok(sc)
 }
 
@@ -130,7 +149,8 @@ mod tests {
             r#"{"model": "YoloV4", "transport": "rdma", "client_hop": "tcp",
                 "clients": 8, "requests": 50, "raw": false, "sharing": "mps",
                 "streams": 4, "priority_client": true, "seed": 9,
-                "warmup_frac": 0.2, "live_transport": "gdr"}"#,
+                "warmup_frac": 0.2, "live_transport": "gdr",
+                "max_batch": 8, "flush_us": 2000}"#,
         )
         .unwrap();
         assert_eq!(sc.model.name, "YoloV4");
@@ -144,6 +164,8 @@ mod tests {
         assert!(sc.priority_client);
         assert_eq!(sc.seed, 9);
         assert_eq!(sc.live_transport, Some(TransportKind::Gdr));
+        assert_eq!(sc.max_batch, 8);
+        assert_eq!(sc.flush_us, 2000);
         // And it runs.
         let stats = crate::sim::world::World::run(sc);
         assert!(stats.all.n() > 0);
@@ -157,6 +179,8 @@ mod tests {
         assert!(sc.raw_input);
         assert_eq!(sc.client_hop, None);
         assert_eq!(sc.live_transport, None);
+        assert_eq!(sc.max_batch, 1);
+        assert_eq!(sc.flush_us, 0);
     }
 
     #[test]
@@ -178,6 +202,10 @@ mod tests {
         .is_err());
         assert!(parse_scenario(
             r#"{"model": "ResNet50", "transport": "gdr", "live_transport": "warp"}"#
+        )
+        .is_err());
+        assert!(parse_scenario(
+            r#"{"model": "ResNet50", "transport": "gdr", "max_batch": 0}"#
         )
         .is_err());
         assert!(parse_scenario("[]").is_err());

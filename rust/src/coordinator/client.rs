@@ -110,10 +110,11 @@ pub fn run_client_loop(
     Ok(out)
 }
 
-/// Run the full load test over any transport: spawns `n_clients`
-/// closed-loop threads, each dialing its own connection through the
-/// `connect` closure (client index passed in, e.g. for per-client
-/// rings or priority addressing).
+/// Run the full load test over any transport: spawns
+/// [`LoadCfg::n_clients`] closed-loop threads, each dialing its own
+/// [`MsgTransport`] connection through the `connect` closure (client
+/// index passed in, e.g. for per-client rings or priority addressing),
+/// and aggregates the per-request records into [`LiveStats`].
 pub fn run_on<T, F>(connect: F, cfg: &LoadCfg) -> Result<LiveStats>
 where
     T: MsgTransport,

@@ -1,21 +1,53 @@
-//! The GPU-side execution service: a priority queue of inference jobs
-//! drained by a pool of execution streams, with optional dynamic
-//! batching onto the `_b{2,4,8}` artifacts.
+//! The GPU-side execution service: a priority queue of inference jobs,
+//! a **cross-request dynamic batcher**, and a pool of execution streams.
 //!
 //! This is the live-plane mirror of the simulated stream scheduler:
 //! `streams` bounds execution concurrency (Fig 15's trade-off), the
 //! priority queue implements client priorities (Fig 16), and the
-//! batcher exploits the per-batch compiled executables.
+//! batcher exploits the per-batch compiled `_b{2,4,8}` artifacts —
+//! batching is the knob that moves the compute/communication ratio the
+//! paper's transport comparison turns on.
+//!
+//! # Request lifecycle
+//!
+//! 1. **Submit** — [`Executor::submit`] pushes a [`Job`] onto the
+//!    priority queue (max-heap on priority, FIFO within a priority) and
+//!    returns the caller a reply channel. Each server connection thread
+//!    blocks on its own reply channel ([`Executor::infer_sync`]), so
+//!    scattering batched outputs back to the right client connection is
+//!    just answering each job's channel.
+//! 2. **Coalesce** — a dedicated batcher thread, the queue's *only*
+//!    consumer, pops the highest-priority head job and gathers
+//!    compatible peers (same model, same priority, same payload
+//!    length, preprocessed tensors) behind it into one batch. It seals the batch when it
+//!    reaches [`BatchCfg::max_batch`] jobs, or when
+//!    [`BatchCfg::flush_us`] has elapsed since the head was enqueued —
+//!    whichever comes first — so a lone request is never held past the
+//!    flush deadline; a higher-priority arrival aborts the gather and
+//!    requeues it, so priority clients overtake even a half-built
+//!    lower-priority batch. Being the sole consumer makes coalescing
+//!    deterministic: no worker can race the batcher for a peer job.
+//! 3. **Execute** — sealed batches pass over a rendezvous channel to
+//!    the stream workers (the zero-capacity handoff keeps at most one
+//!    batch committed ahead of the queue, preserving priority
+//!    overtaking). A worker splits the batch greedily onto the largest
+//!    batch executables the manifest actually provides (e.g. 7 jobs run
+//!    as `_b4` + `_b2` + `_b1`) and scatters the per-request output
+//!    rows back through each job's reply channel.
+//!
+//! PJRT clients are thread-local (`Rc`-based in the xla crate), so each
+//! execution stream worker owns a full `Engine` — one PJRT "device
+//! context" per stream, like one CUDA stream + TensorRT context each.
 
 use std::collections::BinaryHeap;
+use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex};
-use std::time::Instant;
-
-use std::path::PathBuf;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
+use crate::models::manifest::Manifest;
 use crate::runtime::{Engine, TensorBuf};
 
 use super::protocol::StageNs;
@@ -31,11 +63,15 @@ pub struct Job {
     seq: u64,
 }
 
-/// Completed job: output plus server-side stage timings.
+/// Completed job: output plus server-side stage timings and the size of
+/// the executed batch this job rode in (1 = ran alone).
 #[derive(Debug, Clone)]
 pub struct Done {
     pub output: Vec<f32>,
     pub stages: StageNs,
+    /// How many requests were fused into the executable call that
+    /// produced this output (the `_bN` artifact's N).
+    pub batch: usize,
 }
 
 struct Queued(Job);
@@ -64,28 +100,112 @@ struct Shared {
     cv: Condvar,
     stop: AtomicBool,
     seq: AtomicU64,
+    /// Workers currently parked waiting for a batch. The gather loop
+    /// seals early when it is sitting on incompatible work while a
+    /// stream is idle — holding a flush window only makes sense when
+    /// every stream is busy anyway.
+    idle_workers: AtomicU64,
+    /// Jobs executed (batched or not) — numerator of the mean batch size.
+    jobs_run: AtomicU64,
+    /// Executable calls issued — denominator of the mean batch size.
+    batches_run: AtomicU64,
 }
 
-/// Handle to a running executor.
+/// Dynamic-batching policy: how aggressively concurrent requests are
+/// coalesced onto the `_b{2,4,8}` batch executables.
 ///
-/// PJRT clients are thread-local (`Rc`-based in the xla crate), so each
-/// execution stream worker owns a full `Engine` — one PJRT "device
-/// context" per stream, like one CUDA stream + TensorRT context each.
+/// The two knobs span the paper's batching-vs-latency tradeoff:
+/// `max_batch` caps how much compute is fused per executable call (and
+/// therefore how far the compute/communication ratio shifts), and
+/// `flush_us` bounds the extra queueing latency a request can pay
+/// waiting for peers. `accelserve batchsweep` measures the whole grid.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BatchCfg {
+    /// Largest batch the coalescer may form (1 disables batching).
+    /// Batches are executed on the largest manifest-provided batch
+    /// executables that fit, so any value is safe — 6 runs as 4 + 2.
+    pub max_batch: usize,
+    /// Flush deadline in microseconds: how long the batch head may wait
+    /// for peers after being enqueued. 0 = opportunistic only (coalesce
+    /// whatever is already queued, never wait). Clamped to 10 minutes
+    /// at the point of use; a higher-priority arrival always interrupts
+    /// the gather regardless of the deadline.
+    pub flush_us: u64,
+}
+
+impl Default for BatchCfg {
+    fn default() -> BatchCfg {
+        BatchCfg::none()
+    }
+}
+
+impl BatchCfg {
+    /// Batching disabled: every request executes alone.
+    pub fn none() -> BatchCfg {
+        BatchCfg {
+            max_batch: 1,
+            flush_us: 0,
+        }
+    }
+
+    /// Coalesce whatever is already queued, up to `max_batch`, without
+    /// ever delaying the head request.
+    pub fn opportunistic(max_batch: usize) -> BatchCfg {
+        BatchCfg {
+            max_batch,
+            flush_us: 0,
+        }
+    }
+
+    /// Deadline batching: hold the head up to `flush_us` microseconds
+    /// for peers, sealing early the moment the batch fills.
+    pub fn deadline(max_batch: usize, flush_us: u64) -> BatchCfg {
+        BatchCfg {
+            max_batch,
+            flush_us,
+        }
+    }
+
+    /// Compact policy label for tables and CLI output: `b1`, `b8`
+    /// (opportunistic), `b8@2000us` (deadline).
+    pub fn label(&self) -> String {
+        if self.flush_us == 0 {
+            format!("b{}", self.max_batch)
+        } else {
+            format!("b{}@{}us", self.max_batch, self.flush_us)
+        }
+    }
+
+    /// Parse a CLI policy spec: `"1"`, `"8"` (opportunistic) or
+    /// `"8@2000"` (deadline, flush in µs).
+    pub fn parse(s: &str) -> Option<BatchCfg> {
+        let (b, flush) = match s.split_once('@') {
+            None => (s, 0u64),
+            Some((b, f)) => (b, f.trim_end_matches("us").parse().ok()?),
+        };
+        let max_batch: usize = b.trim_start_matches('b').parse().ok()?;
+        if max_batch == 0 {
+            return None;
+        }
+        Some(BatchCfg {
+            max_batch,
+            flush_us: flush,
+        })
+    }
+}
+
+/// Handle to a running executor: the batcher thread plus the stream
+/// worker pool (see the module docs for the three-stage lifecycle).
 pub struct Executor {
     shared: Arc<Shared>,
+    batcher: Option<std::thread::JoinHandle<()>>,
     workers: Vec<std::thread::JoinHandle<()>>,
 }
 
-/// Dynamic-batching configuration.
-#[derive(Debug, Clone, Copy)]
-pub struct BatchCfg {
-    /// Largest batch artifact to use (1 disables batching).
-    pub max_batch: usize,
-}
-
 impl Executor {
-    /// Start `streams` execution workers over the artifact directory;
-    /// each worker eagerly compiles the artifacts in `warm`.
+    /// Start the batcher plus `streams` execution workers over the
+    /// artifact directory; each worker eagerly compiles the artifacts
+    /// in `warm`.
     pub fn start(
         artifact_dir: impl Into<PathBuf>,
         streams: usize,
@@ -94,12 +214,24 @@ impl Executor {
     ) -> Result<Executor> {
         assert!(streams >= 1);
         let dir: PathBuf = artifact_dir.into();
+        // The batcher needs the batch-size menu up front to know how
+        // long a batch is worth holding; loading the manifest here also
+        // fails fast on an unusable artifact directory.
+        let manifest = Manifest::load(&dir)?;
         let shared = Arc::new(Shared {
             queue: Mutex::new(BinaryHeap::new()),
             cv: Condvar::new(),
             stop: AtomicBool::new(false),
             seq: AtomicU64::new(0),
+            idle_workers: AtomicU64::new(0),
+            jobs_run: AtomicU64::new(0),
+            batches_run: AtomicU64::new(0),
         });
+        // Rendezvous handoff: the batcher blocks until a worker is free,
+        // so at most one sealed batch is committed ahead of the queue
+        // and later high-priority arrivals still overtake queued work.
+        let (batch_tx, batch_rx) = mpsc::sync_channel::<Vec<Job>>(0);
+        let batch_rx = Arc::new(Mutex::new(batch_rx));
         let warm: Vec<String> = warm.iter().map(|s| s.to_string()).collect();
         let mut workers = Vec::new();
         let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
@@ -108,6 +240,7 @@ impl Executor {
             let dir = dir.clone();
             let warm = warm.clone();
             let ready = ready_tx.clone();
+            let rx = batch_rx.clone();
             workers.push(std::thread::spawn(move || {
                 let engine = match Engine::load(&dir).and_then(|e| {
                     let names: Vec<&str> = warm.iter().map(String::as_str).collect();
@@ -123,7 +256,7 @@ impl Executor {
                         return;
                     }
                 };
-                worker_loop(sh, engine, batch)
+                worker_loop(sh, engine, rx)
             }));
         }
         drop(ready_tx);
@@ -132,7 +265,13 @@ impl Executor {
                 .recv()
                 .map_err(|_| anyhow!("worker died during startup"))??;
         }
-        Ok(Executor { shared, workers })
+        let sh = shared.clone();
+        let batcher = std::thread::spawn(move || batcher_loop(sh, manifest, batch, batch_tx));
+        Ok(Executor {
+            shared,
+            batcher: Some(batcher),
+            workers,
+        })
     }
 
     /// Submit a job; the reply arrives on the returned channel.
@@ -175,19 +314,39 @@ impl Executor {
         self.shared.queue.lock().unwrap().len()
     }
 
-    /// Stop workers and join them.
+    /// Lifetime execution counters `(jobs, executable_calls)`: the mean
+    /// achieved batch size is `jobs / executable_calls`. Observability
+    /// for the `batchsweep` experiment.
+    pub fn batch_counters(&self) -> (u64, u64) {
+        (
+            self.shared.jobs_run.load(Ordering::Relaxed),
+            self.shared.batches_run.load(Ordering::Relaxed),
+        )
+    }
+
+    /// Stop the batcher and workers and join them. Jobs still queued
+    /// are dropped; their reply channels report the executor as gone.
     pub fn shutdown(mut self) {
         self.shared.stop.store(true, Ordering::SeqCst);
         self.shared.cv.notify_all();
+        if let Some(b) = self.batcher.take() {
+            let _ = b.join();
+        }
         for w in self.workers.drain(..) {
             let _ = w.join();
         }
     }
 }
 
-fn worker_loop(sh: Arc<Shared>, engine: Engine, batch: BatchCfg) {
+/// The coalescing stage: pop the highest-priority head, gather a batch
+/// behind it, hand it to a worker. Sole consumer of the job queue.
+fn batcher_loop(
+    sh: Arc<Shared>,
+    manifest: Manifest,
+    cfg: BatchCfg,
+    tx: mpsc::SyncSender<Vec<Job>>,
+) {
     loop {
-        // Pop the highest-priority job (blocking).
         let head = {
             let mut q = sh.queue.lock().unwrap();
             loop {
@@ -200,42 +359,167 @@ fn worker_loop(sh: Arc<Shared>, engine: Engine, batch: BatchCfg) {
                 q = sh.cv.wait(q).unwrap();
             }
         };
-        // Opportunistic batching: grab more queued jobs for the same
-        // model/mode without waiting (no added latency; exploits bursts).
-        let mut batch_jobs = vec![head];
-        if batch.max_batch > 1 && !batch_jobs[0].raw {
-            let mut q = sh.queue.lock().unwrap();
-            let mut rest: Vec<Queued> = Vec::new();
-            while batch_jobs.len() < batch.max_batch {
-                match q.pop() {
-                    None => break,
-                    Some(Queued(j))
-                        if j.model == batch_jobs[0].model
-                            && !j.raw
-                            && j.prio == batch_jobs[0].prio =>
-                    {
-                        batch_jobs.push(j)
-                    }
-                    Some(other) => rest.push(other),
-                }
-            }
-            for o in rest {
-                q.push(o);
-            }
+        let jobs = gather(&sh, &manifest, cfg, head);
+        if jobs.is_empty() {
+            continue; // gather yielded to a higher-priority arrival
         }
-        run_jobs(&engine, batch_jobs);
+        if tx.send(jobs).is_err() {
+            return; // all workers gone
+        }
     }
 }
 
-/// Largest artifact batch size <= n among the compiled {1,2,4,8}.
-fn artifact_batch(n: usize) -> usize {
-    [8usize, 4, 2, 1].into_iter().find(|&b| b <= n).unwrap_or(1)
+/// How many jobs a batch headed by `model` is worth gathering: capped
+/// by policy, and 1 when the manifest has no batched executable to
+/// exploit (holding jobs would add latency for nothing).
+fn gather_cap(manifest: &Manifest, model: &str, raw: bool, cfg: BatchCfg) -> usize {
+    if raw || cfg.max_batch <= 1 {
+        return 1;
+    }
+    let has_batched = manifest
+        .batch_sizes(model)
+        .into_iter()
+        .any(|b| b > 1 && b <= cfg.max_batch);
+    if has_batched {
+        cfg.max_batch
+    } else {
+        1
+    }
 }
 
-fn run_jobs(engine: &Engine, mut jobs: Vec<Job>) {
+/// Upper bound on the flush deadline (10 minutes, in µs): keeps an
+/// absurd `flush_us` from overflowing the `Instant` arithmetic below
+/// while staying far above any sane serving policy.
+const FLUSH_US_MAX: u64 = 600_000_000;
+
+/// Coalesce compatible queued jobs behind `head`: same model, same
+/// priority, same payload length, `F32` tensors (the only thing the
+/// batched executables concatenate — so a malformed request runs, and
+/// fails, alone). Seals when the batch fills, when `flush_us` has
+/// elapsed since the head was enqueued, or when incompatible work is
+/// waiting while a stream sits idle (holding a flush window only pays
+/// when every stream is busy). A *higher-priority* arrival instead
+/// aborts the gather entirely — the gathered jobs go back on the
+/// queue (original sequence numbers restore FIFO) and an empty vec
+/// tells the batcher to restart from the new, higher-priority head,
+/// so a priority client overtakes even a half-built batch.
+/// Incompatible jobs are swept aside once each and pushed back at
+/// seal time, in their original priority order.
+fn gather(sh: &Shared, manifest: &Manifest, cfg: BatchCfg, head: Job) -> Vec<Job> {
+    let batchable = !head.raw && matches!(head.payload, TensorBuf::F32(_));
+    let cap = if batchable {
+        gather_cap(manifest, &head.model, false, cfg)
+    } else {
+        1
+    };
+    let mut jobs = vec![head];
+    if cap <= 1 {
+        return jobs;
+    }
+    let flush = Duration::from_micros(cfg.flush_us.min(FLUSH_US_MAX));
+    let deadline = jobs[0].enqueued + flush;
+    let mut q = sh.queue.lock().unwrap();
+    let mut spill: Vec<Queued> = Vec::new();
+    let mut preempted = false;
+    loop {
+        // Each queued job is popped at most once per gather: compatible
+        // ones join the batch, the rest wait in `spill` until seal (the
+        // batcher is the queue's only consumer, so nothing misses them).
+        while jobs.len() < cap {
+            match q.pop() {
+                None => break,
+                Some(Queued(j))
+                    if j.model == jobs[0].model
+                        && !j.raw
+                        && j.prio == jobs[0].prio
+                        && j.payload.len() == jobs[0].payload.len()
+                        && matches!(j.payload, TensorBuf::F32(_)) =>
+                {
+                    jobs.push(j)
+                }
+                Some(other) => {
+                    preempted |= other.0.prio > jobs[0].prio;
+                    spill.push(other);
+                }
+            }
+        }
+        if preempted {
+            // A higher-priority job (sitting in `spill`) must run before
+            // everything gathered here: abandon the batch — the jobs go
+            // back with their original sequence numbers, so FIFO order
+            // is restored when they are re-popped after the priority
+            // job dispatches. An empty return tells the batcher to
+            // start over from the (now higher-priority) queue head.
+            for j in jobs.drain(..) {
+                q.push(Queued(j));
+            }
+            break;
+        }
+        let idle_starved = !spill.is_empty() && sh.idle_workers.load(Ordering::SeqCst) > 0;
+        if jobs.len() >= cap || idle_starved || sh.stop.load(Ordering::SeqCst) {
+            break;
+        }
+        let now = Instant::now();
+        let Some(wait) = deadline.checked_duration_since(now) else {
+            break; // flush deadline reached
+        };
+        if wait.is_zero() {
+            break;
+        }
+        let (guard, _) = sh.cv.wait_timeout(q, wait).unwrap();
+        q = guard;
+    }
+    for o in spill {
+        q.push(o);
+    }
+    jobs
+}
+
+/// The execution stage: take sealed batches off the rendezvous channel
+/// and run them. The `Mutex<Receiver>` is the usual shared-consumer
+/// pattern — one idle worker holds the lock and blocks in `recv`.
+fn worker_loop(sh: Arc<Shared>, engine: Engine, rx: Arc<Mutex<mpsc::Receiver<Vec<Job>>>>) {
+    loop {
+        let batch = {
+            let guard = rx.lock().unwrap();
+            sh.idle_workers.fetch_add(1, Ordering::SeqCst);
+            let received = guard.recv();
+            sh.idle_workers.fetch_sub(1, Ordering::SeqCst);
+            match received {
+                Ok(b) => b,
+                Err(_) => return, // batcher gone: shutdown
+            }
+        };
+        run_jobs(&engine, batch, &sh);
+    }
+}
+
+/// Largest manifest-provided batch executable size <= `n` for `model`
+/// (1 when the model has no batched variants).
+fn artifact_chunk(manifest: &Manifest, model: &str, n: usize) -> usize {
+    if n <= 1 {
+        return 1;
+    }
+    manifest
+        .batch_sizes(model)
+        .into_iter()
+        .filter(|&b| b <= n)
+        .max()
+        .unwrap_or(1)
+}
+
+/// Split a sealed batch greedily onto the largest available batch
+/// executables (a 7-job batch runs as `_b4` + `_b2` + `_b1`).
+fn run_jobs(engine: &Engine, mut jobs: Vec<Job>, sh: &Shared) {
     while !jobs.is_empty() {
-        let b = artifact_batch(jobs.len());
+        let b = if jobs[0].raw {
+            1
+        } else {
+            artifact_chunk(engine.manifest(), &jobs[0].model, jobs.len())
+        };
         let chunk: Vec<Job> = jobs.drain(..b).collect();
+        sh.jobs_run.fetch_add(chunk.len() as u64, Ordering::Relaxed);
+        sh.batches_run.fetch_add(1, Ordering::Relaxed);
         run_chunk(engine, chunk);
     }
 }
@@ -276,6 +560,7 @@ fn run_chunk(engine: &Engine, jobs: Vec<Job>) {
                         preproc_ns: (t1 - t0).as_nanos() as u64,
                         infer_ns: (t2 - t1).as_nanos() as u64,
                     },
+                    batch: 1,
                 });
                 let _ = jobs[0].reply.send(done);
             }
@@ -283,7 +568,8 @@ fn run_chunk(engine: &Engine, jobs: Vec<Job>) {
         return;
     }
 
-    // Preprocessed path, possibly batched.
+    // Preprocessed path, possibly batched: gather the rows, one
+    // executable call, scatter the output rows back per request.
     let b = jobs.len();
     let name = format!("{}_b{}", jobs[0].model, b);
     let mut flat: Vec<f32> = Vec::new();
@@ -291,7 +577,13 @@ fn run_chunk(engine: &Engine, jobs: Vec<Job>) {
         match &j.payload {
             TensorBuf::F32(v) => flat.extend_from_slice(v),
             TensorBuf::U8(_) | TensorBuf::U8Region(_) => {
-                let _ = j.reply.send(Err(anyhow!("u8 payload without raw flag")));
+                // Gather only fuses F32 payloads, so a chunk containing
+                // a u8 payload is that single malformed job — but
+                // answer every reply channel regardless: dropping a
+                // fused peer's sender would fail an innocent request.
+                for peer in &jobs {
+                    let _ = peer.reply.send(Err(anyhow!("u8 payload without raw flag")));
+                }
                 return;
             }
         }
@@ -316,6 +608,7 @@ fn run_chunk(engine: &Engine, jobs: Vec<Job>) {
                         preproc_ns: 0,
                         infer_ns,
                     },
+                    batch: b,
                 }));
             }
         }
@@ -326,13 +619,69 @@ fn run_chunk(engine: &Engine, jobs: Vec<Job>) {
 mod tests {
     use super::*;
 
+    /// A manifest with b1/b2/b4/b8 classifier variants plus an
+    /// unbatched model, for exercising the size menu without artifacts.
+    fn menu() -> Manifest {
+        let mut artifacts = String::new();
+        for b in [1usize, 2, 4, 8] {
+            artifacts.push_str(&format!(
+                r#"{{"name": "m_b{b}", "model": "m", "task": "c", "file": "m_b{b}.hlo.txt",
+                    "inputs": [{{"shape": [{b}, 4], "dtype": "f32"}}],
+                    "output": {{"shape": [{b}, 2], "dtype": "f32"}}}},"#
+            ));
+        }
+        artifacts.push_str(
+            r#"{"name": "solo_b1", "model": "solo", "task": "c", "file": "s.hlo.txt",
+                "inputs": [{"shape": [1, 4], "dtype": "f32"}],
+                "output": {"shape": [1, 2], "dtype": "f32"}}"#,
+        );
+        Manifest::parse(
+            &format!(r#"{{"format": 1, "artifacts": [{artifacts}]}}"#),
+            std::path::PathBuf::from("/tmp"),
+        )
+        .unwrap()
+    }
+
     #[test]
-    fn artifact_batch_picks_largest_leq() {
-        assert_eq!(artifact_batch(1), 1);
-        assert_eq!(artifact_batch(3), 2);
-        assert_eq!(artifact_batch(5), 4);
-        assert_eq!(artifact_batch(8), 8);
-        assert_eq!(artifact_batch(100), 8);
+    fn artifact_chunk_picks_largest_available_leq() {
+        let m = menu();
+        assert_eq!(artifact_chunk(&m, "m", 1), 1);
+        assert_eq!(artifact_chunk(&m, "m", 3), 2);
+        assert_eq!(artifact_chunk(&m, "m", 5), 4);
+        assert_eq!(artifact_chunk(&m, "m", 8), 8);
+        assert_eq!(artifact_chunk(&m, "m", 100), 8);
+        // No batched variants: always 1.
+        assert_eq!(artifact_chunk(&m, "solo", 8), 1);
+        assert_eq!(artifact_chunk(&m, "unknown", 8), 1);
+    }
+
+    #[test]
+    fn gather_cap_respects_policy_and_menu() {
+        let m = menu();
+        assert_eq!(gather_cap(&m, "m", false, BatchCfg::none()), 1);
+        assert_eq!(gather_cap(&m, "m", false, BatchCfg::opportunistic(8)), 8);
+        // Odd caps are allowed — the chunker splits them (6 = 4 + 2).
+        assert_eq!(gather_cap(&m, "m", false, BatchCfg::deadline(6, 100)), 6);
+        // Raw jobs and menu-less models never wait for peers.
+        assert_eq!(gather_cap(&m, "m", true, BatchCfg::opportunistic(8)), 1);
+        assert_eq!(gather_cap(&m, "solo", false, BatchCfg::opportunistic(8)), 1);
+    }
+
+    #[test]
+    fn batch_cfg_parse_and_label_roundtrip() {
+        assert_eq!(BatchCfg::parse("1"), Some(BatchCfg::none()));
+        assert_eq!(BatchCfg::parse("8"), Some(BatchCfg::opportunistic(8)));
+        assert_eq!(BatchCfg::parse("8@2000"), Some(BatchCfg::deadline(8, 2000)));
+        assert_eq!(BatchCfg::parse("b4@500us"), Some(BatchCfg::deadline(4, 500)));
+        assert_eq!(BatchCfg::parse("0"), None);
+        assert_eq!(BatchCfg::parse("x"), None);
+        assert_eq!(BatchCfg::none().label(), "b1");
+        assert_eq!(BatchCfg::opportunistic(8).label(), "b8");
+        assert_eq!(BatchCfg::deadline(8, 2000).label(), "b8@2000us");
+        for s in ["1", "8", "8@2000"] {
+            let c = BatchCfg::parse(s).unwrap();
+            assert_eq!(BatchCfg::parse(&c.label()), Some(c), "label {s}");
+        }
     }
 
     #[test]

@@ -37,9 +37,9 @@ impl GatewayLoop {
     }
 }
 
-/// Start a gateway: every connection accepted from `acceptor` gets a
-/// dedicated upstream dealer connection from `connect_upstream` and a
-/// relay thread.
+/// Start a gateway: every connection accepted from the [`Acceptor`]
+/// gets a dedicated upstream dealer [`MsgTransport`] connection from
+/// `connect_upstream` and a relay thread.
 pub fn gateway_on<A, U, F>(mut acceptor: A, connect_upstream: F) -> GatewayLoop
 where
     A: Acceptor,

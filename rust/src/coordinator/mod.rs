@@ -1,8 +1,14 @@
 //! L3 coordinator (live plane): the model-serving framework — wire
-//! protocol, execution service (streams + priority + dynamic batching),
-//! server, router-dealer gateway, and the closed-loop load generator.
-//! Policies here mirror the simulated world so both planes exercise the
-//! same design (DESIGN.md §3).
+//! protocol ([`protocol`]), execution service ([`executor`]: stream
+//! pool + priority queue + cross-request dynamic batcher), server
+//! ([`serve_on`]), router-dealer gateway ([`gateway_on`]), and the
+//! closed-loop load generator ([`run_on`]). Policies here mirror the
+//! simulated world so both planes exercise the same design
+//! (DESIGN.md §3).
+//!
+//! The request lifecycle through these modules — and how it maps onto
+//! the paper's recv/preprocess/infer/reply pipeline stages — is
+//! documented in `docs/ARCHITECTURE.md`.
 
 pub mod client;
 pub mod executor;

@@ -1,0 +1,253 @@
+//! Live-plane batch sweep: latency and throughput per **transport ×
+//! batch policy** (`accelserve batchsweep`) — the repo's version of
+//! the paper's batching-vs-communication tradeoff.
+//!
+//! The paper's central observation is that the *net* benefit of
+//! RDMA/GPUDirect depends on how the serving pipeline schedules work
+//! onto the accelerator: batching grows the compute per communicated
+//! byte, which shrinks the fraction of the round trip the transport can
+//! save. This experiment measures that interaction directly on the real
+//! stack: `clients` closed-loop clients per cell drive one shared
+//! [`Executor`] through a private connection each, the dynamic batcher
+//! coalesces their concurrent requests onto the `_b{2,4,8}` artifacts,
+//! and the table reports client-observed latency (p50/p99/mean),
+//! aggregate throughput, and the mean achieved batch size
+//! ([`Executor::batch_counters`]).
+//!
+//! Reading the table: within one transport row group, moving from `b1`
+//! to a batched policy trades per-request latency for throughput;
+//! across transports under a fixed policy, the latency gap between
+//! `tcp` and `rdma`/`gdr` is the communication share that batching has
+//! not amortized away.
+
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::coordinator::{handle_conn, run_on, BatchCfg, Executor, LiveStats, LoadCfg};
+use crate::models::gen;
+use crate::models::manifest::Manifest;
+use crate::transport::{connected_pair, MsgTransport, TransportKind};
+
+use super::Table;
+
+/// Batch-sweep configuration.
+#[derive(Debug, Clone)]
+pub struct SweepCfg {
+    /// Served model (must have `_b{N}` artifacts in the manifest).
+    pub model: String,
+    /// Concurrent closed-loop clients per cell — the batcher's supply
+    /// of coalescable requests.
+    pub clients: usize,
+    /// Measured requests per client.
+    pub requests: usize,
+    /// Discarded leading requests per client.
+    pub warmup: usize,
+    /// Execution streams. 1 (the default) makes the batching effect
+    /// visible: requests queue behind the busy stream and coalesce.
+    pub streams: usize,
+    pub transports: Vec<TransportKind>,
+    pub policies: Vec<BatchCfg>,
+    /// Artifact directory; `None` generates into a per-process temp dir.
+    pub artifacts_dir: Option<PathBuf>,
+}
+
+impl Default for SweepCfg {
+    fn default() -> SweepCfg {
+        SweepCfg {
+            model: "tiny_mobilenet".to_string(),
+            clients: 8,
+            requests: 40,
+            warmup: 4,
+            streams: 1,
+            transports: TransportKind::ALL.to_vec(),
+            policies: vec![
+                BatchCfg::none(),
+                BatchCfg::opportunistic(8),
+                BatchCfg::deadline(8, 2000),
+            ],
+            artifacts_dir: None,
+        }
+    }
+}
+
+/// One cell: `clients` private connections into one shared executor.
+/// Every transport kind gets the same treatment — per-connection server
+/// threads running `handle_conn`, closed-loop clients via `run_on`.
+fn run_cell(kind: TransportKind, exec: &Arc<Executor>, cfg: &SweepCfg) -> Result<LiveStats> {
+    let payload_elems = gen::IN_H * gen::IN_W * gen::CHANNELS;
+    // Request frame = 4-byte header + model name + f32 payload; sized
+    // so RDMA/GDR requests stay single-chunk.
+    let payload_hint = 4 + cfg.model.len() + payload_elems * 4 + 64;
+    // Create every endpoint pair before spawning anything, so the
+    // fallible step cannot leave half-started server threads behind.
+    let mut pairs = Vec::with_capacity(cfg.clients);
+    for _ in 0..cfg.clients {
+        pairs.push(connected_pair(kind, payload_hint)?);
+    }
+    let mut slots: Vec<Option<Box<dyn MsgTransport>>> = Vec::with_capacity(cfg.clients);
+    let mut servers = Vec::with_capacity(cfg.clients);
+    for (c, s) in pairs {
+        slots.push(Some(c));
+        let e2 = exec.clone();
+        servers.push(std::thread::spawn(move || handle_conn(s, &e2)));
+    }
+    let slots = Mutex::new(slots);
+    let lc = LoadCfg {
+        model: cfg.model.clone(),
+        raw: false,
+        n_clients: cfg.clients,
+        requests_per_client: cfg.requests + cfg.warmup,
+        priority_client: false,
+        payload_elems,
+        warmup: cfg.warmup,
+    };
+    let stats = run_on(
+        |i| {
+            slots
+                .lock()
+                .unwrap()
+                .get_mut(i)
+                .and_then(Option::take)
+                .ok_or_else(|| anyhow!("no pre-connected endpoint for client {i}"))
+        },
+        &lc,
+    )?;
+    // Clients hung up; their server threads see the close and exit.
+    for th in servers {
+        th.join().map_err(|_| anyhow!("sweep server thread panicked"))?;
+    }
+    if stats.errors > 0 {
+        // A cell with failed clients has holes in its series; 0.0
+        // quantiles would masquerade as measurements.
+        anyhow::bail!("{} client(s) failed", stats.errors);
+    }
+    Ok(stats)
+}
+
+/// Run the sweep and render one row per transport × policy with
+/// client-observed latency, throughput, and the mean achieved batch.
+pub fn run_batch_sweep(cfg: &SweepCfg) -> Result<Table> {
+    let dir: PathBuf = match &cfg.artifacts_dir {
+        Some(d) => d.clone(),
+        None => gen::ensure_test_artifacts().to_path_buf(),
+    };
+    gen::ensure_artifacts(&dir)?;
+    // Warm every batch variant the sweep can reach so compilation never
+    // lands inside a measured request.
+    let manifest = Manifest::load(&dir)?;
+    let warm: Vec<String> = manifest
+        .batch_sizes(&cfg.model)
+        .into_iter()
+        .map(|b| format!("{}_b{b}", cfg.model))
+        .collect();
+    if warm.is_empty() {
+        anyhow::bail!(
+            "model {} has no artifacts under {} — nothing to sweep",
+            cfg.model,
+            dir.display()
+        );
+    }
+    let warm_refs: Vec<&str> = warm.iter().map(String::as_str).collect();
+
+    let mut t = Table::new(
+        format!(
+            "batch sweep — {} × {} closed-loop clients, {} requests each, {} stream(s)",
+            cfg.model, cfg.clients, cfg.requests, cfg.streams
+        ),
+        &["p50_ms", "p99_ms", "mean_ms", "thr_rps", "avg_batch"],
+    );
+    for &policy in &cfg.policies {
+        let exec = Arc::new(
+            Executor::start(&dir, cfg.streams, policy, &warm_refs)
+                .with_context(|| format!("sweep executor over {}", dir.display()))?,
+        );
+        let mut failed: Option<anyhow::Error> = None;
+        for &kind in &cfg.transports {
+            let (jobs0, calls0) = exec.batch_counters();
+            let stats = match run_cell(kind, &exec, cfg)
+                .with_context(|| format!("cell {} {}", kind.name(), policy.label()))
+            {
+                Ok(s) => s,
+                Err(e) => {
+                    failed = Some(e);
+                    break;
+                }
+            };
+            let (jobs1, calls1) = exec.batch_counters();
+            let avg_batch = (jobs1 - jobs0) as f64 / (calls1 - calls0).max(1) as f64;
+            let mut total = stats.all.total.clone();
+            t.row(
+                format!("{} {}", kind.name(), policy.label()),
+                vec![
+                    total.quantile(0.5),
+                    total.quantile(0.99),
+                    stats.all.total.mean(),
+                    stats.throughput_rps,
+                    avg_batch,
+                ],
+            );
+        }
+        // Shut the batcher + workers down before propagating any cell
+        // error — bailing first would park those threads forever. On
+        // the happy path every server thread was joined in run_cell, so
+        // this is the last reference.
+        match Arc::try_unwrap(exec) {
+            Ok(e) => e.shutdown(),
+            Err(leaked) => {
+                // Only reachable when a cell aborted with server
+                // threads unjoined; report it unless a more specific
+                // error is already on its way out.
+                drop(leaked);
+                if failed.is_none() {
+                    anyhow::bail!("sweep still holds executor clones");
+                }
+            }
+        }
+        if let Some(e) = failed {
+            return Err(e);
+        }
+    }
+    t.note("b1 = no batching; bN = opportunistic coalescing up to N; bN@Dus = hold the batch head up to D µs for peers");
+    t.note("avg_batch = jobs / executable calls over the whole cell (warm-up included, so ramp-up biases it slightly low vs the steady state the latency columns measure)");
+    t.note("the tcp-vs-rdma/gdr latency gap under a fixed policy is the communication share batching has not amortized (paper §V)");
+    Ok(t)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sweep_runs_all_cells() {
+        // Smoke: every transport × policy cell serves through the real
+        // engine and reports positive latency/throughput and a sane
+        // achieved batch (in [1, max_batch]). Coalescing determinism is
+        // asserted by tests/batching.rs; this checks the harness.
+        let cfg = SweepCfg {
+            clients: 3,
+            requests: 6,
+            warmup: 2,
+            transports: vec![TransportKind::Tcp, TransportKind::Shm],
+            policies: vec![BatchCfg::none(), BatchCfg::deadline(4, 500)],
+            ..SweepCfg::default()
+        };
+        let t = run_batch_sweep(&cfg).unwrap();
+        assert_eq!(t.rows.len(), 4);
+        for policy in ["b1", "b4@500us"] {
+            for kind in ["tcp", "shm"] {
+                let row = format!("{kind} {policy}");
+                for col in ["p50_ms", "p99_ms", "mean_ms", "thr_rps"] {
+                    let v = t.get(&row, col).unwrap();
+                    assert!(v > 0.0, "{row}/{col} = {v}");
+                }
+                let avg = t.get(&row, "avg_batch").unwrap();
+                assert!((1.0..=4.0).contains(&avg), "{row}/avg_batch = {avg}");
+                if policy == "b1" {
+                    assert!((avg - 1.0).abs() < 1e-9, "unbatched cell fused jobs");
+                }
+            }
+        }
+    }
+}

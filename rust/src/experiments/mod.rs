@@ -1,10 +1,13 @@
 //! Experiment harnesses: one runner per paper figure/table (sim plane)
-//! plus the live-plane transport matrix, shared by the benches and the
-//! CLI.
+//! plus the live-plane transport matrix (`accelserve matrix`) and the
+//! transport × batch-policy sweep (`accelserve batchsweep`), shared by
+//! the benches and the CLI.
 
+pub mod batch_sweep;
 pub mod figs;
 pub mod table;
 pub mod transport_matrix;
 
+pub use batch_sweep::{run_batch_sweep, SweepCfg};
 pub use table::Table;
 pub use transport_matrix::{run_matrix, MatrixCfg};

@@ -37,10 +37,7 @@ use crate::metrics::stats::Series;
 use crate::models::gen;
 use crate::models::zoo::WorkloadData;
 use crate::runtime::TensorBuf;
-use crate::transport::rdma::{rdma_pair, RingCfg};
-use crate::transport::shm::shm_pair;
-use crate::transport::tcp::TcpTransport;
-use crate::transport::{MsgTransport, RecvMsg, TransportKind};
+use crate::transport::{connected_pair, MsgTransport, RecvMsg, TransportKind};
 
 use super::Table;
 
@@ -153,37 +150,13 @@ fn pipeline_server(
     stats
 }
 
-/// Connected (client, server) endpoints for one matrix cell.
-fn make_pair(
-    kind: TransportKind,
-    payload_bytes: usize,
-) -> (Box<dyn MsgTransport>, Box<dyn MsgTransport>) {
-    match kind {
-        TransportKind::Tcp => {
-            let listener = TcpTransport::listen("127.0.0.1:0").expect("bind");
-            let addr = listener.local_addr().expect("addr");
-            let client = TcpTransport::connect(addr).expect("connect");
-            let (stream, _) = listener.accept().expect("accept");
-            (Box::new(client), Box::new(TcpTransport::from_stream(stream)))
-        }
-        TransportKind::Shm => {
-            let (c, s) = shm_pair(8);
-            (Box::new(c), Box::new(s))
-        }
-        TransportKind::Rdma => {
-            let (c, s) = rdma_pair(RingCfg::for_payload(payload_bytes), false);
-            (Box::new(c), Box::new(s))
-        }
-        TransportKind::Gdr => {
-            let (c, s) = rdma_pair(RingCfg::for_payload(payload_bytes), true);
-            (Box::new(c), Box::new(s))
-        }
-    }
-}
-
 /// One cell: closed-loop client against the pipeline server.
-fn run_one(kind: TransportKind, cfg: &MatrixCfg, exec: &Arc<Executor>) -> (StageStats, Series) {
-    let (mut client, server) = make_pair(kind, cfg.payload_bytes);
+fn run_one(
+    kind: TransportKind,
+    cfg: &MatrixCfg,
+    exec: &Arc<Executor>,
+) -> Result<(StageStats, Series)> {
+    let (mut client, server) = connected_pair(kind, cfg.payload_bytes)?;
     let total = cfg.requests + cfg.warmup;
     let warmup = cfg.warmup;
     let exec2 = exec.clone();
@@ -205,8 +178,10 @@ fn run_one(kind: TransportKind, cfg: &MatrixCfg, exec: &Arc<Executor>) -> (Stage
         }
     }
     drop(client);
-    let stats = server_thread.join().expect("server thread");
-    (stats, totals)
+    let stats = server_thread
+        .join()
+        .map_err(|_| anyhow::anyhow!("matrix server thread panicked"))?;
+    Ok((stats, totals))
 }
 
 /// Run the matrix and render the per-stage latency table (p50 per
@@ -226,7 +201,7 @@ pub fn run_matrix(cfg: &MatrixCfg) -> Result<Table> {
         Executor::start(
             &dir,
             1,
-            BatchCfg { max_batch: 1 },
+            BatchCfg::none(),
             &[warm_b1.as_str(), "preprocess"],
         )
         .with_context(|| format!("matrix executor over {}", dir.display()))?,
@@ -246,8 +221,17 @@ pub fn run_matrix(cfg: &MatrixCfg) -> Result<Table> {
             "total_ms",
         ],
     );
+    let mut failed: Option<anyhow::Error> = None;
     for &kind in &cfg.transports {
-        let (mut st, mut totals) = run_one(kind, cfg, &exec);
+        let (mut st, mut totals) = match run_one(kind, cfg, &exec) {
+            Ok(cell) => cell,
+            Err(e) => {
+                // Stop measuring but fall through to the executor
+                // shutdown below — bailing here would leak its threads.
+                failed = Some(e);
+                break;
+            }
+        };
         t.row(
             kind.name(),
             vec![
@@ -272,6 +256,9 @@ pub fn run_matrix(cfg: &MatrixCfg) -> Result<Table> {
     }
     if let Ok(e) = Arc::try_unwrap(exec) {
         e.shutdown();
+    }
+    if let Some(e) = failed {
+        return Err(e);
     }
     Ok(t)
 }

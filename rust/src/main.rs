@@ -2,10 +2,11 @@
 //!
 //! ```text
 //! accelserve gen-artifacts --out-dir artifacts                   # offline AOT artifacts
-//! accelserve serve   --addr 0.0.0.0:7007 --streams 4 --batch 8   # live server
+//! accelserve serve   --addr 0.0.0.0:7007 --streams 4 --batch 8 --flush-us 2000
 //! accelserve gateway --addr 0.0.0.0:7008 --upstream host:7007    # live proxy
 //! accelserve client  --addr host:7007 --model tiny_resnet -n 100 -c 4
 //! accelserve matrix  --payload-kb 1024 --requests 160            # live transport matrix
+//! accelserve batchsweep --clients 8 --policies 1,8,8@2000        # transport x batch policy
 //! accelserve sim     --model ResNet50 --transport gdr -c 16 -n 300
 //! accelserve fig     --which 5 [--requests 300] [--csv]          # regen a figure
 //! accelserve tables  --which 2|3                                 # paper tables
@@ -28,6 +29,7 @@ fn main() {
         Some("gateway") => cmd_gateway(&args[1..]),
         Some("client") => cmd_client(&args[1..]),
         Some("matrix") => cmd_matrix(&args[1..]),
+        Some("batchsweep") => cmd_batchsweep(&args[1..]),
         Some("sim") => cmd_sim(&args[1..]),
         Some("fig") => cmd_fig(&args[1..]),
         Some("tables") => cmd_tables(&args[1..]),
@@ -40,7 +42,7 @@ fn main() {
 }
 
 const HELP: &str = "accelserve — model serving with hardware-accelerated communication
-subcommands: gen-artifacts | serve | gateway | client | matrix | sim | fig | tables (see README.md)";
+subcommands: gen-artifacts | serve | gateway | client | matrix | batchsweep | sim | fig | tables (see README.md)";
 
 /// Generate the serving artifacts (HLO text + manifest.json) offline —
 /// no Python/JAX required (the rust twin of `make artifacts`).
@@ -68,6 +70,19 @@ fn flag<'a>(args: &'a [String], key: &str) -> Option<&'a str> {
 
 fn flag_or<'a>(args: &'a [String], key: &str, default: &'a str) -> &'a str {
     flag(args, key).unwrap_or(default)
+}
+
+/// Parse a comma-separated `--transports` list (shared by `matrix` and
+/// `batchsweep`).
+fn parse_transports(list: &str) -> Result<Vec<accelserve::transport::TransportKind>, String> {
+    let mut kinds = Vec::new();
+    for name in list.split(',') {
+        match accelserve::transport::TransportKind::by_name(name) {
+            Some(k) => kinds.push(k),
+            None => return Err(format!("unknown transport {name} (tcp|shm|rdma|gdr)")),
+        }
+    }
+    Ok(kinds)
 }
 
 /// Live transport matrix: per-stage latency over tcp/shm/rdma/gdr.
@@ -101,23 +116,120 @@ fn cmd_matrix(a: &[String]) -> i32 {
         cfg.artifacts_dir = Some(dir.into());
     }
     if let Some(list) = flag(a, "--transports") {
-        let mut kinds = Vec::new();
-        for name in list.split(',') {
-            match accelserve::transport::TransportKind::by_name(name) {
-                Some(k) => kinds.push(k),
-                None => {
-                    eprintln!("unknown transport {name} (tcp|shm|rdma|gdr)");
-                    return 2;
-                }
+        match parse_transports(list) {
+            Ok(kinds) => cfg.transports = kinds,
+            Err(e) => {
+                eprintln!("{e}");
+                return 2;
             }
         }
-        cfg.transports = kinds;
     }
     let csv = a.iter().any(|x| x == "--csv");
     let t = match accelserve::experiments::run_matrix(&cfg) {
         Ok(t) => t,
         Err(e) => {
             eprintln!("matrix: {e:#}");
+            return 1;
+        }
+    };
+    if csv {
+        print!("{}", t.to_csv());
+    } else {
+        print!("{}", t.render());
+    }
+    0
+}
+
+/// Transport × batch-policy sweep: the batching-vs-communication
+/// tradeoff on the live stack (`accelserve batchsweep`).
+fn cmd_batchsweep(a: &[String]) -> i32 {
+    let mut cfg = accelserve::experiments::SweepCfg::default();
+    // A scenario file sets the baseline (clients, requests, pinned
+    // transport, batching policy); explicit flags below override it.
+    if let Some(path) = flag(a, "--config") {
+        match accelserve::config::load_scenario(path) {
+            Ok(sc) => {
+                cfg.clients = sc.n_clients;
+                cfg.requests = sc.requests_per_client;
+                cfg.warmup =
+                    (sc.requests_per_client as f64 * sc.warmup_frac) as usize;
+                if let Some(lt) = sc.live_transport {
+                    cfg.transports = vec![lt];
+                }
+                // A config pins the policy axis: the scenario's policy
+                // against the unbatched baseline when batching is on,
+                // just the baseline when the scenario leaves it off
+                // (max_batch defaults to 1) — never the default grid,
+                // which would sweep policies the file didn't ask for.
+                cfg.policies = if sc.max_batch > 1 {
+                    vec![
+                        BatchCfg::none(),
+                        BatchCfg {
+                            max_batch: sc.max_batch,
+                            flush_us: sc.flush_us,
+                        },
+                    ]
+                } else {
+                    if sc.flush_us > 0 {
+                        eprintln!(
+                            "batchsweep: scenario sets flush_us but not max_batch > 1 — \
+                             the flush deadline has nothing to batch; sweeping b1 only"
+                        );
+                    }
+                    vec![BatchCfg::none()]
+                };
+            }
+            Err(e) => {
+                eprintln!("config: {e:#}");
+                return 2;
+            }
+        }
+    }
+    if let Some(m) = flag(a, "--model") {
+        cfg.model = m.to_string();
+    }
+    if let Some(n) = flag(a, "--clients").and_then(|v| v.parse::<usize>().ok()) {
+        cfg.clients = n.max(1);
+    }
+    if let Some(n) = flag(a, "--requests").and_then(|v| v.parse::<usize>().ok()) {
+        cfg.requests = n.max(1);
+        cfg.warmup = (n / 10).max(2);
+    }
+    if let Some(n) = flag(a, "--streams").and_then(|v| v.parse::<usize>().ok()) {
+        cfg.streams = n.max(1);
+    }
+    if let Some(dir) = flag(a, "--artifacts") {
+        cfg.artifacts_dir = Some(dir.into());
+    }
+    if let Some(list) = flag(a, "--transports") {
+        match parse_transports(list) {
+            Ok(kinds) => cfg.transports = kinds,
+            Err(e) => {
+                eprintln!("{e}");
+                return 2;
+            }
+        }
+    }
+    if let Some(list) = flag(a, "--policies") {
+        let mut policies = Vec::new();
+        for spec in list.split(',') {
+            match BatchCfg::parse(spec) {
+                Some(p) => policies.push(p),
+                None => {
+                    eprintln!(
+                        "bad batch policy {spec:?} (want N, or N@FLUSH_US like 8@2000)"
+                    );
+                    return 2;
+                }
+            }
+        }
+        cfg.policies = policies;
+    }
+    let csv = a.iter().any(|x| x == "--csv");
+    let t = match accelserve::experiments::run_batch_sweep(&cfg) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("batchsweep: {e:#}");
             return 1;
         }
     };
@@ -150,7 +262,8 @@ fn cmd_serve(a: &[String]) -> i32 {
         }
     }
     let streams: usize = flag_or(a, "--streams", "4").parse().unwrap_or(4);
-    let batch: usize = flag_or(a, "--batch", "1").parse().unwrap_or(1);
+    let batch: usize = flag_or(a, "--batch", "1").parse().unwrap_or(1).max(1);
+    let flush_us: u64 = flag_or(a, "--flush-us", "0").parse().unwrap_or(0);
     let dir = flag_or(a, "--artifacts", "artifacts");
     // Self-provision: serving should work out of the box, with no
     // Python AOT step required.
@@ -162,7 +275,11 @@ fn cmd_serve(a: &[String]) -> i32 {
             return 1;
         }
     }
-    let exec = match Executor::start(dir, streams, BatchCfg { max_batch: batch }, &[]) {
+    let policy = BatchCfg {
+        max_batch: batch,
+        flush_us,
+    };
+    let exec = match Executor::start(dir, streams, policy, &[]) {
         Ok(e) => Arc::new(e),
         Err(e) => {
             eprintln!("executor: {e:#}");
@@ -171,7 +288,11 @@ fn cmd_serve(a: &[String]) -> i32 {
     };
     match serve_tcp(addr, exec) {
         Ok(h) => {
-            println!("serving on {} ({streams} streams, batch<={batch})", h.addr);
+            println!(
+                "serving on {} ({streams} streams, batching {})",
+                h.addr,
+                policy.label()
+            );
             loop {
                 std::thread::sleep(std::time::Duration::from_secs(3600));
             }

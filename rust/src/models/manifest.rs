@@ -1,5 +1,12 @@
-//! Live-plane artifact manifest: the JSON index `python -m compile.aot`
+//! Live-plane artifact manifest: the JSON index that `accelserve
+//! gen-artifacts` (or the original `python -m compile.aot` pipeline)
 //! writes next to the HLO text artifacts.
+//!
+//! [`Manifest`] is the executor's source of truth for what can run:
+//! each [`ArtifactEntry`] names one compiled executable with its
+//! [`TensorSpec`] I/O contract, and [`Manifest::batch_sizes`] is the
+//! dynamic batcher's menu — which `_b{N}` variants exist for a model
+//! and therefore how far concurrent requests can be coalesced.
 
 use std::path::{Path, PathBuf};
 
@@ -120,7 +127,11 @@ impl Manifest {
         self.dir.join(&entry.file)
     }
 
-    /// Batched variants available for a model, sorted ascending.
+    /// Batched variants available for a model (the `N`s of its `_bN`
+    /// artifacts), sorted ascending — the dynamic batcher's menu. A
+    /// model with no batched variants returns only `[1]` (or an empty
+    /// vec when the model is unknown), telling the batcher that holding
+    /// requests for it buys nothing.
     pub fn batch_sizes(&self, model: &str) -> Vec<usize> {
         let mut v: Vec<usize> = self
             .artifacts

@@ -181,14 +181,19 @@ pub static ZOO: &[PaperModel] = &[
 ];
 
 /// Synthetic client payload generator (deterministic pixels) for the
-/// live plane; sim plane uses only the byte counts.
+/// live plane; the sim plane uses only the byte counts. The load
+/// clients (`coordinator::client`), the transport matrix and the batch
+/// sweep all draw their request payloads from here, so two runs with
+/// the same seed serve byte-identical traffic.
 #[derive(Debug, Clone)]
 pub struct WorkloadData {
     pub bytes: Vec<u8>,
 }
 
 impl WorkloadData {
-    /// Deterministic pseudo-image of `n` bytes from `seed`.
+    /// Deterministic pseudo-image of `n` bytes from `seed` (same seed,
+    /// same bytes — the determinism the bit-identical batching tests
+    /// lean on).
     pub fn image(n: usize, seed: u64) -> WorkloadData {
         let mut rng = crate::sim::rng::Rng::new(seed);
         let mut bytes = vec![0u8; n];

@@ -14,8 +14,9 @@ use crate::rdmasim::RegionSlice;
 /// tag — the homogeneous raw-byte interchange RDMA requires (§VII).
 ///
 /// `U8Region` is the GPUDirect variant: the bytes still live in the
-/// transport's registered (device-staging) region and are consumed in
-/// place, skipping the host bounce copy the `U8` path implies.
+/// transport's registered (device-staging) region (a [`RegionSlice`])
+/// and are consumed in place, skipping the host bounce copy the `U8`
+/// path implies.
 #[derive(Debug, Clone)]
 pub enum TensorBuf {
     F32(Vec<f32>),
@@ -125,6 +126,11 @@ impl Engine {
     }
 
     /// Execute artifact `name` on `input`; returns the flat f32 output.
+    /// For a batched `_bN` artifact, `input` is the row-major
+    /// concatenation of the N per-request tensors and the output is the
+    /// concatenation of the N per-request rows — each row bit-identical
+    /// to running that request through the `_b1` artifact alone
+    /// (asserted by `tests/batching.rs`).
     pub fn infer(&self, name: &str, input: &TensorBuf) -> Result<Vec<f32>> {
         let c = self.get(name)?;
         let spec = &c.entry.inputs[0];

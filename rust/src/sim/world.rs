@@ -54,6 +54,15 @@ pub struct Scenario {
     /// --config`). The sim plane itself models `transport` above and
     /// ignores this knob.
     pub live_transport: Option<crate::transport::TransportKind>,
+    /// Live-plane dynamic batching: largest batch the executor may
+    /// coalesce (1 disables). Like `live_transport`, this configures
+    /// the live coordinator (`accelserve serve` / `batchsweep
+    /// --config`); the sim plane models per-request execution and
+    /// ignores it.
+    pub max_batch: usize,
+    /// Live-plane flush deadline (µs): how long a batch head may wait
+    /// for peers before the executor seals a partial batch.
+    pub flush_us: u64,
 }
 
 impl Scenario {
@@ -72,6 +81,8 @@ impl Scenario {
             seed: 1,
             warmup_frac: 0.05,
             live_transport: None,
+            max_batch: 1,
+            flush_us: 0,
         }
     }
 
@@ -119,6 +130,13 @@ impl Scenario {
 
     pub fn with_seed(mut self, s: u64) -> Scenario {
         self.seed = s;
+        self
+    }
+
+    /// Live-plane batching policy (see `max_batch` / `flush_us`).
+    pub fn with_batching(mut self, max_batch: usize, flush_us: u64) -> Scenario {
+        self.max_batch = max_batch.max(1);
+        self.flush_us = flush_us;
         self
     }
 

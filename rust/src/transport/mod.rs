@@ -24,7 +24,7 @@ pub mod rdma;
 pub mod shm;
 pub mod tcp;
 
-use anyhow::Result;
+use anyhow::{Context, Result};
 
 use crate::rdmasim::RegionSlice;
 
@@ -148,6 +148,42 @@ impl TransportKind {
     pub fn zero_copy_recv(self) -> bool {
         matches!(self, TransportKind::Gdr)
     }
+}
+
+/// An in-process connected `(client, server)` endpoint pair over
+/// `kind` — the one-call way to get any cell of the transport matrix,
+/// used by the experiment harnesses (`experiments::transport_matrix`,
+/// `experiments::batch_sweep`). `payload_hint` sizes the RDMA/GDR
+/// receive rings so a typical request stays single-chunk (and therefore
+/// zero-copy eligible in GDR mode).
+pub fn connected_pair(
+    kind: TransportKind,
+    payload_hint: usize,
+) -> Result<(Box<dyn MsgTransport>, Box<dyn MsgTransport>)> {
+    use crate::transport::rdma::{rdma_pair, RingCfg};
+    use crate::transport::shm::shm_pair;
+    use crate::transport::tcp::TcpTransport;
+    Ok(match kind {
+        TransportKind::Tcp => {
+            let listener = TcpTransport::listen("127.0.0.1:0").context("tcp bind")?;
+            let addr = listener.local_addr().context("tcp local addr")?;
+            let client = TcpTransport::connect(addr).context("tcp connect")?;
+            let (stream, _) = listener.accept().context("tcp accept")?;
+            (Box::new(client), Box::new(TcpTransport::from_stream(stream)))
+        }
+        TransportKind::Shm => {
+            let (c, s) = shm_pair(8);
+            (Box::new(c), Box::new(s))
+        }
+        TransportKind::Rdma => {
+            let (c, s) = rdma_pair(RingCfg::for_payload(payload_hint), false);
+            (Box::new(c), Box::new(s))
+        }
+        TransportKind::Gdr => {
+            let (c, s) = rdma_pair(RingCfg::for_payload(payload_hint), true);
+            (Box::new(c), Box::new(s))
+        }
+    })
 }
 
 #[cfg(test)]

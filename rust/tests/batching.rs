@@ -1,0 +1,175 @@
+//! Dynamic-batching correctness on the real engine:
+//!
+//! * coalesced execution is **bit-identical** to the same requests run
+//!   singly through the `_b1` artifact (b2/b4/b8, and a partial batch
+//!   that must split onto the available executables);
+//! * the flush deadline bounds how long a lone request waits for peers
+//!   that never arrive, and a full batch seals immediately without
+//!   waiting out the deadline.
+//!
+//! Artifacts are generated on demand (`models::gen`); nothing skips.
+
+use std::time::{Duration, Instant};
+
+use accelserve::coordinator::{BatchCfg, Executor};
+use accelserve::runtime::{Engine, TensorBuf};
+
+const ELEMS: usize = 32 * 32 * 3;
+
+fn artifacts() -> &'static std::path::Path {
+    accelserve::models::gen::ensure_test_artifacts()
+}
+
+/// Deterministic, request-distinct input tensor.
+fn input(seed: u32) -> Vec<f32> {
+    (0..ELEMS as u32)
+        .map(|i| {
+            let h = i.wrapping_mul(2654435761).wrapping_add(seed.wrapping_mul(97));
+            (h % 256) as f32 / 255.0
+        })
+        .collect()
+}
+
+/// Reference outputs: each input through the `_b1` artifact alone.
+fn singles(model: &str, inputs: &[Vec<f32>]) -> Vec<Vec<f32>> {
+    let eng = Engine::load(artifacts()).unwrap();
+    inputs
+        .iter()
+        .map(|v| {
+            eng.infer(&format!("{model}_b1"), &TensorBuf::F32(v.clone()))
+                .unwrap()
+        })
+        .collect()
+}
+
+/// Submit all inputs concurrently through a batching executor; returns
+/// per-request outputs and the batch size each rode in.
+fn batched(model: &str, inputs: &[Vec<f32>], cfg: BatchCfg) -> (Vec<Vec<f32>>, Vec<usize>) {
+    let exec = Executor::start(artifacts(), 1, cfg, &[]).unwrap();
+    let rxs: Vec<_> = inputs
+        .iter()
+        .map(|v| exec.submit(model, false, 0, TensorBuf::F32(v.clone())))
+        .collect();
+    let dones: Vec<_> = rxs
+        .into_iter()
+        .map(|rx| rx.recv().unwrap().unwrap())
+        .collect();
+    let outs = dones.iter().map(|d| d.output.clone()).collect();
+    let batches = dones.iter().map(|d| d.batch).collect();
+    exec.shutdown();
+    (outs, batches)
+}
+
+#[test]
+fn batched_outputs_bit_identical_to_singles() {
+    // For each batch executable: submit exactly `n` distinct requests
+    // with the cap at `n` and a far-away deadline. The batcher seals
+    // the moment the batch fills, fuses one `_bn` call, and every
+    // scattered output row must equal the single-request run bit for
+    // bit (same weights, same per-row op order — no tolerance).
+    for n in [2usize, 4, 8] {
+        let inputs: Vec<Vec<f32>> = (0..n as u32).map(|i| input(100 + i)).collect();
+        let reference = singles("tiny_mobilenet", &inputs);
+        let policy = BatchCfg::deadline(n, 60_000_000);
+        let (outs, batches) = batched("tiny_mobilenet", &inputs, policy);
+        for (i, (got, want)) in outs.iter().zip(&reference).enumerate() {
+            assert_eq!(got, want, "b{n}: request {i} output differs from b1 run");
+        }
+        assert_eq!(batches, vec![n; n], "b{n}: all requests should fuse");
+    }
+}
+
+#[test]
+fn partial_batch_splits_onto_available_artifacts() {
+    // Cap 3 with b{1,2,4,8} artifacts: three requests seal at the cap
+    // and must split greedily into a _b2 call plus a _b1 call — and
+    // still match the singles bit for bit.
+    let inputs: Vec<Vec<f32>> = (0..3u32).map(|i| input(200 + i)).collect();
+    let reference = singles("tiny_resnet", &inputs);
+    let policy = BatchCfg::deadline(3, 60_000_000);
+    let (outs, batches) = batched("tiny_resnet", &inputs, policy);
+    for (i, (got, want)) in outs.iter().zip(&reference).enumerate() {
+        assert_eq!(got, want, "request {i} output differs from b1 run");
+    }
+    assert_eq!(batches, vec![2, 2, 1], "3 jobs should run as _b2 + _b1");
+}
+
+#[test]
+fn solo_request_is_not_held_past_flush_deadline() {
+    // One lone request under a 40 ms flush deadline: no peer ever
+    // arrives, so the batcher must seal a 1-job batch at the deadline —
+    // not hold the request until the batch fills (which would be
+    // forever). The generous upper bound keeps slow CI machines from
+    // flaking while still distinguishing "released at ~40 ms" from
+    // "stuck".
+    let exec = Executor::start(artifacts(), 1, BatchCfg::deadline(8, 40_000), &[]).unwrap();
+    let t0 = Instant::now();
+    let done = exec
+        .infer_sync("tiny_mobilenet", false, 0, TensorBuf::F32(input(7)))
+        .unwrap();
+    let elapsed = t0.elapsed();
+    exec.shutdown();
+    assert_eq!(done.batch, 1, "solo request must run alone");
+    assert!(
+        elapsed >= Duration::from_millis(30),
+        "flushed before the deadline: {elapsed:?}"
+    );
+    assert!(
+        elapsed < Duration::from_secs(5),
+        "held far past the 40 ms deadline: {elapsed:?}"
+    );
+}
+
+#[test]
+fn higher_priority_arrival_overtakes_a_gathering_head() {
+    // A prio-0 head is gathering under a long flush window when a
+    // prio-10 job arrives. The gather must be aborted and requeued so
+    // the priority job runs *first* — it must not be stuck behind the
+    // flush window (nor behind a sealed low-priority batch).
+    let exec = Executor::start(artifacts(), 1, BatchCfg::deadline(8, 2_000_000), &[]).unwrap();
+    let lo = exec.submit("tiny_resnet", false, 0, TensorBuf::F32(input(3)));
+    // Wait until the batcher has popped `lo` as its gather head (the
+    // queue drains to 0) — a fixed sleep would race the scheduler, and
+    // if `hi` were queued first the priority heap would pop it first.
+    let handoff = Instant::now();
+    while exec.queue_len() > 0 && handoff.elapsed() < Duration::from_secs(10) {
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    assert_eq!(exec.queue_len(), 0, "batcher never picked up the head job");
+    // Raw jobs never gather peers, so `hi` completes without waiting
+    // out a flush window of its own.
+    let t_hi = Instant::now();
+    let frame = vec![128u8; 64 * 64 * 3];
+    let hi = exec.submit("tiny_mobilenet", true, 10, TensorBuf::U8(frame));
+    hi.recv().unwrap().unwrap();
+    let hi_elapsed = t_hi.elapsed();
+    assert!(
+        hi_elapsed < Duration::from_secs(1),
+        "priority job stuck behind a lower-priority gather: {hi_elapsed:?}"
+    );
+    // `lo` was requeued, becomes head again, and still honors its own
+    // (original) flush deadline rather than being lost or duplicated.
+    let lo_done = lo.recv().unwrap().unwrap();
+    assert_eq!(lo_done.batch, 1, "requeued head must still run (alone)");
+    exec.shutdown();
+}
+
+#[test]
+fn full_batch_seals_before_the_deadline() {
+    // Two requests under a cap of 2 and a 60 s deadline: the batch
+    // fills immediately, so both must come back long before the
+    // deadline — deadline batching must not tax full batches.
+    let exec = Executor::start(artifacts(), 1, BatchCfg::deadline(2, 60_000_000), &[]).unwrap();
+    let t0 = Instant::now();
+    let rx_a = exec.submit("tiny_mobilenet", false, 0, TensorBuf::F32(input(1)));
+    let rx_b = exec.submit("tiny_mobilenet", false, 0, TensorBuf::F32(input(2)));
+    let a = rx_a.recv().unwrap().unwrap();
+    let b = rx_b.recv().unwrap().unwrap();
+    let elapsed = t0.elapsed();
+    exec.shutdown();
+    assert_eq!((a.batch, b.batch), (2, 2), "pair must fuse into one _b2 call");
+    assert!(
+        elapsed < Duration::from_secs(10),
+        "full batch waited for the deadline: {elapsed:?}"
+    );
+}

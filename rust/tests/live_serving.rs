@@ -20,7 +20,7 @@ fn start_exec(streams: usize, max_batch: usize) -> Arc<Executor> {
         Executor::start(
             dir,
             streams,
-            BatchCfg { max_batch },
+            BatchCfg::opportunistic(max_batch),
             &["tiny_mobilenet_b1", "preprocess"],
         )
         .expect("executor start"),
