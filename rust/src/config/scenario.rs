@@ -19,14 +19,32 @@
 //! }
 //! ```
 //!
-//! `live_transport`, `max_batch` and `flush_us` configure the *live*
-//! coordinator when a scenario file drives it: `accelserve matrix
-//! --config` reads `live_transport` (the matrix pins batching at b1 so
-//! stage latencies stay per-request), while `accelserve batchsweep
-//! --config` reads all three. The sim plane ignores them.
+//! `live_transport`, `max_batch`, `flush_us` and `model_batch`
+//! configure the *live* coordinator when a scenario file drives it:
+//! `accelserve matrix --config` reads `live_transport` (the matrix
+//! pins batching at b1 so stage latencies stay per-request), while
+//! `accelserve batchsweep --config` and `accelserve mixsweep --config`
+//! read the batching knobs too. The sim plane ignores them. Two
+//! multi-model keys drive the mixed workloads:
+//!
+//! ```json
+//! {
+//!   "model": "MobileNetV3",
+//!   "transport": "gdr",
+//!   "model_mix": ["MobileNetV3", "ResNet50"],
+//!   "model_batch": {"tiny_resnet": "8@2000", "tiny_mobilenet": "4*2"}
+//! }
+//! ```
+//!
+//! `model_mix` (paper models, sim plane + `mixsweep --sim`) assigns
+//! clients round-robin across the listed models; `model_batch` (live
+//! plane) gives each served model its own lane policy — a
+//! [`BatchCfg`](crate::coordinator::BatchCfg) spec with an optional
+//! `*W` round-robin weight suffix.
 
 use anyhow::{bail, Context, Result};
 
+use crate::coordinator::ModelPolicy;
 use crate::gpu::Sharing;
 use crate::models::zoo::PaperModel;
 use crate::net::params::Transport;
@@ -58,6 +76,8 @@ pub fn parse_scenario(text: &str) -> Result<Scenario> {
         "live_transport",
         "max_batch",
         "flush_us",
+        "model_mix",
+        "model_batch",
     ];
     for k in obj.keys() {
         if !KNOWN.contains(&k.as_str()) {
@@ -129,6 +149,38 @@ pub fn parse_scenario(text: &str) -> Result<Scenario> {
     if let Some(n) = v.get("flush_us").and_then(Json::as_u64) {
         sc.flush_us = n;
     }
+    if let Some(arr) = v.get("model_mix").and_then(Json::as_arr) {
+        let mut mix = Vec::new();
+        for entry in arr {
+            let name = entry.as_str().context("model_mix entries must be model names")?;
+            mix.push(
+                PaperModel::by_name(name)
+                    .with_context(|| format!("unknown model_mix model {name}"))?,
+            );
+        }
+        if mix.is_empty() {
+            bail!("model_mix must list at least one model");
+        }
+        sc.model_mix = mix;
+    }
+    if let Some(mb) = v.get("model_batch") {
+        let obj = match mb {
+            Json::Obj(m) => m,
+            _ => bail!("model_batch must be an object of model: \"spec\" pairs"),
+        };
+        for (model, spec) in obj {
+            let spec = spec
+                .as_str()
+                .with_context(|| format!("model_batch.{model} must be a policy string"))?;
+            let policy = ModelPolicy::parse_spec(spec).with_context(|| {
+                format!(
+                    "bad model_batch.{model} spec {spec:?} \
+                     (want N, N@FLUSH_US, or either with a *WEIGHT suffix)"
+                )
+            })?;
+            sc.model_batch.push((model.clone(), policy));
+        }
+    }
     Ok(sc)
 }
 
@@ -181,6 +233,52 @@ mod tests {
         assert_eq!(sc.live_transport, None);
         assert_eq!(sc.max_batch, 1);
         assert_eq!(sc.flush_us, 0);
+    }
+
+    #[test]
+    fn multi_model_keys_roundtrip() {
+        let sc = parse_scenario(
+            r#"{"model": "MobileNetV3", "transport": "gdr",
+                "model_mix": ["MobileNetV3", "ResNet50"],
+                "model_batch": {"tiny_mobilenet": "4*2", "tiny_resnet": "8@2000"},
+                "clients": 8, "requests": 40}"#,
+        )
+        .unwrap();
+        assert_eq!(sc.model_mix.len(), 2);
+        assert_eq!(sc.model_mix[1].name, "ResNet50");
+        // BTreeMap ordering: keys come back sorted.
+        assert_eq!(sc.model_batch.len(), 2);
+        let (m, p) = &sc.model_batch[0];
+        assert_eq!(m, "tiny_mobilenet");
+        assert_eq!(
+            *p,
+            ModelPolicy::weighted(crate::coordinator::BatchCfg::opportunistic(4), 2)
+        );
+        let (r, p) = &sc.model_batch[1];
+        assert_eq!(r, "tiny_resnet");
+        assert_eq!(
+            *p,
+            ModelPolicy::new(crate::coordinator::BatchCfg::deadline(8, 2000))
+        );
+        // And the sim twin runs the mix.
+        let stats = crate::sim::world::World::run(sc);
+        assert_eq!(stats.per_model.len(), 2);
+        assert!(stats.per_model.iter().all(|(_, agg)| agg.n() > 0));
+    }
+
+    #[test]
+    fn rejects_bad_multi_model_keys() {
+        for bad in [
+            r#"{"model": "ResNet50", "transport": "gdr", "model_mix": []}"#,
+            r#"{"model": "ResNet50", "transport": "gdr", "model_mix": ["Nope"]}"#,
+            r#"{"model": "ResNet50", "transport": "gdr", "model_mix": [3]}"#,
+            r#"{"model": "ResNet50", "transport": "gdr", "model_batch": ["x"]}"#,
+            r#"{"model": "ResNet50", "transport": "gdr", "model_batch": {"m": "0"}}"#,
+            r#"{"model": "ResNet50", "transport": "gdr", "model_batch": {"m": "8*0"}}"#,
+            r#"{"model": "ResNet50", "transport": "gdr", "model_batch": {"m": 8}}"#,
+        ] {
+            assert!(parse_scenario(bad).is_err(), "accepted: {bad}");
+        }
     }
 
     #[test]

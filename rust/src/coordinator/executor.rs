@@ -1,45 +1,54 @@
-//! The GPU-side execution service: a priority queue of inference jobs,
-//! a **cross-request dynamic batcher**, and a pool of execution streams.
+//! The GPU-side execution service: **continuous multi-model batching**
+//! — one bounded priority queue ("lane") per model, a scheduler that
+//! seals batches independently per lane, and a shared pool of
+//! execution streams.
 //!
 //! This is the live-plane mirror of the simulated stream scheduler:
 //! `streams` bounds execution concurrency (Fig 15's trade-off), the
-//! priority queue implements client priorities (Fig 16), and the
-//! batcher exploits the per-batch compiled `_b{2,4,8}` artifacts —
+//! per-lane priority heaps implement client priorities (Fig 16), and
+//! the batcher exploits the per-batch compiled `_b{2,4,8}` artifacts —
 //! batching is the knob that moves the compute/communication ratio the
-//! paper's transport comparison turns on.
+//! paper's transport comparison turns on. Unlike a single-batcher
+//! pipeline, lanes are *concurrent*: a `tiny_resnet` batch launches on
+//! a free stream while a `tiny_mobilenet` gather is still filling, so
+//! a mixed workload never serializes behind whichever model currently
+//! owns the batcher.
 //!
 //! # Request lifecycle
 //!
-//! 1. **Submit** — [`Executor::submit`] pushes a [`Job`] onto the
-//!    priority queue (max-heap on priority, FIFO within a priority) and
-//!    returns the caller a reply channel. Each server connection thread
-//!    blocks on its own reply channel ([`Executor::infer_sync`]), so
-//!    scattering batched outputs back to the right client connection is
-//!    just answering each job's channel.
-//! 2. **Coalesce** — a dedicated batcher thread, the queue's *only*
-//!    consumer, pops the highest-priority head job and gathers
-//!    compatible peers (same model, same priority, same payload
-//!    length, preprocessed tensors) behind it into one batch. It seals the batch when it
-//!    reaches [`BatchCfg::max_batch`] jobs, or when
-//!    [`BatchCfg::flush_us`] has elapsed since the head was enqueued —
-//!    whichever comes first — so a lone request is never held past the
-//!    flush deadline; a higher-priority arrival aborts the gather and
-//!    requeues it, so priority clients overtake even a half-built
-//!    lower-priority batch. Being the sole consumer makes coalescing
-//!    deterministic: no worker can race the batcher for a peer job.
-//! 3. **Execute** — sealed batches pass over a rendezvous channel to
-//!    the stream workers (the zero-capacity handoff keeps at most one
-//!    batch committed ahead of the queue, preserving priority
-//!    overtaking). A worker splits the batch greedily onto the largest
-//!    batch executables the manifest actually provides (e.g. 7 jobs run
-//!    as `_b4` + `_b2` + `_b1`) and scatters the per-request output
-//!    rows back through each job's reply channel.
+//! 1. **Submit** — [`Executor::submit`] routes a [`Job`] to its
+//!    model's lane (a bounded max-heap on priority, FIFO within a
+//!    priority; overflow is rejected immediately on the reply channel)
+//!    and returns the caller a reply channel. Each server connection
+//!    thread blocks on its own reply channel
+//!    ([`Executor::infer_sync`]), so scattering batched outputs back
+//!    to the right client connection is just answering each job's
+//!    channel.
+//! 2. **Schedule** — a single scheduler thread watches every lane.
+//!    A lane's head group (compatible same-priority peers behind the
+//!    highest-priority job) seals when it reaches the lane's
+//!    [`BatchCfg::max_batch`], when [`BatchCfg::flush_us`] has elapsed
+//!    since the head was enqueued, immediately under an opportunistic
+//!    policy, or early when incompatible work waits in the same lane
+//!    while a stream is idle. Jobs stay in the lane heap until the
+//!    moment of sealing, so a higher-priority arrival overtakes a
+//!    half-built gather of its own model by construction — it simply
+//!    becomes the new head. When several lanes are sealable, a
+//!    **weighted round-robin** (per-model `weight`, default 1) picks
+//!    the next lane, so no model starves behind a busier one.
+//! 3. **Execute** — sealed batches are handed to idle stream workers
+//!    (at most one sealed batch per parked worker is ever committed
+//!    ahead of the queues, preserving priority overtaking). A worker
+//!    splits the batch greedily onto the largest batch executables the
+//!    manifest actually provides (e.g. 7 jobs run as `_b4` + `_b2` +
+//!    `_b1`) and scatters the per-request output rows back through
+//!    each job's reply channel.
 //!
 //! PJRT clients are thread-local (`Rc`-based in the xla crate), so each
 //! execution stream worker owns a full `Engine` — one PJRT "device
 //! context" per stream, like one CUDA stream + TensorRT context each.
 
-use std::collections::BinaryHeap;
+use std::collections::{BinaryHeap, HashMap, VecDeque};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex};
@@ -95,22 +104,6 @@ impl Ord for Queued {
     }
 }
 
-struct Shared {
-    queue: Mutex<BinaryHeap<Queued>>,
-    cv: Condvar,
-    stop: AtomicBool,
-    seq: AtomicU64,
-    /// Workers currently parked waiting for a batch. The gather loop
-    /// seals early when it is sitting on incompatible work while a
-    /// stream is idle — holding a flush window only makes sense when
-    /// every stream is busy anyway.
-    idle_workers: AtomicU64,
-    /// Jobs executed (batched or not) — numerator of the mean batch size.
-    jobs_run: AtomicU64,
-    /// Executable calls issued — denominator of the mean batch size.
-    batches_run: AtomicU64,
-}
-
 /// Dynamic-batching policy: how aggressively concurrent requests are
 /// coalesced onto the `_b{2,4,8}` batch executables.
 ///
@@ -118,7 +111,8 @@ struct Shared {
 /// `max_batch` caps how much compute is fused per executable call (and
 /// therefore how far the compute/communication ratio shifts), and
 /// `flush_us` bounds the extra queueing latency a request can pay
-/// waiting for peers. `accelserve batchsweep` measures the whole grid.
+/// waiting for peers. `accelserve batchsweep` measures the whole grid;
+/// `accelserve mixsweep` crosses it with multi-model traffic.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct BatchCfg {
     /// Largest batch the coalescer may form (1 disables batching).
@@ -128,7 +122,7 @@ pub struct BatchCfg {
     /// Flush deadline in microseconds: how long the batch head may wait
     /// for peers after being enqueued. 0 = opportunistic only (coalesce
     /// whatever is already queued, never wait). Clamped to 10 minutes
-    /// at the point of use; a higher-priority arrival always interrupts
+    /// at the point of use; a higher-priority arrival always overtakes
     /// the gather regardless of the deadline.
     pub flush_us: u64,
 }
@@ -194,44 +188,222 @@ impl BatchCfg {
     }
 }
 
-/// Handle to a running executor: the batcher thread plus the stream
+/// Per-model scheduling policy: a [`BatchCfg`] plus the lane's
+/// round-robin `weight` (how many batches the lane may dispatch per
+/// weighted-round-robin cycle relative to the other lanes; default 1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ModelPolicy {
+    /// Batching policy for this model's lane.
+    pub cfg: BatchCfg,
+    /// Weighted-round-robin share (clamped to >= 1 at the point of use).
+    pub weight: u32,
+}
+
+impl ModelPolicy {
+    /// Weight-1 policy around `cfg`.
+    pub fn new(cfg: BatchCfg) -> ModelPolicy {
+        ModelPolicy { cfg, weight: 1 }
+    }
+
+    /// Policy with an explicit round-robin weight.
+    pub fn weighted(cfg: BatchCfg, weight: u32) -> ModelPolicy {
+        ModelPolicy { cfg, weight }
+    }
+
+    /// Parse a policy spec: a [`BatchCfg::parse`] spec with an optional
+    /// `*W` round-robin weight suffix — `"8@2000"`, `"4*2"`,
+    /// `"8@500us*3"`.
+    pub fn parse_spec(s: &str) -> Option<ModelPolicy> {
+        let (cfg, weight) = match s.rsplit_once('*') {
+            None => (s, 1u32),
+            Some((c, w)) => (c, w.parse().ok().filter(|&w| w >= 1)?),
+        };
+        Some(ModelPolicy {
+            cfg: BatchCfg::parse(cfg)?,
+            weight,
+        })
+    }
+
+    /// Parse a `model=SPEC` CLI entry (the repeatable `--model-batch`
+    /// flag): `"tiny_resnet=8@2000"`, `"tiny_mobilenet=4*2"`.
+    pub fn parse_entry(s: &str) -> Option<(String, ModelPolicy)> {
+        let (model, spec) = s.split_once('=')?;
+        if model.is_empty() {
+            return None;
+        }
+        Some((model.to_string(), ModelPolicy::parse_spec(spec)?))
+    }
+
+    /// Compact label: the [`BatchCfg::label`] plus a `*W` suffix when
+    /// the weight is not 1.
+    pub fn label(&self) -> String {
+        if self.weight <= 1 {
+            self.cfg.label()
+        } else {
+            format!("{}*{}", self.cfg.label(), self.weight)
+        }
+    }
+}
+
+/// Default bound on each model lane's queue length.
+pub const DEFAULT_QUEUE_CAP: usize = 1024;
+
+/// Scheduler configuration: the global default [`BatchCfg`], per-model
+/// overrides, and the per-lane queue bound.
+#[derive(Debug, Clone)]
+pub struct SchedCfg {
+    /// Policy for models without a `per_model` override.
+    pub default: BatchCfg,
+    /// Per-model `(name, policy)` overrides — the scenario
+    /// `model_batch` key / `--model-batch` CLI flag.
+    pub per_model: Vec<(String, ModelPolicy)>,
+    /// Max queued (not-yet-dispatched) jobs per lane; overflow is
+    /// rejected immediately on the job's reply channel.
+    pub queue_cap: usize,
+}
+
+impl SchedCfg {
+    /// Every model gets `default`; no overrides.
+    pub fn uniform(default: BatchCfg) -> SchedCfg {
+        SchedCfg {
+            default,
+            per_model: Vec::new(),
+            queue_cap: DEFAULT_QUEUE_CAP,
+        }
+    }
+
+    /// Builder: add a per-model override.
+    pub fn with_model(mut self, model: impl Into<String>, policy: ModelPolicy) -> SchedCfg {
+        self.per_model.push((model.into(), policy));
+        self
+    }
+
+    /// The policy a lane for `model` would run under.
+    pub fn policy_for(&self, model: &str) -> ModelPolicy {
+        self.per_model
+            .iter()
+            .find(|(m, _)| m == model)
+            .map(|(_, p)| *p)
+            .unwrap_or(ModelPolicy::new(self.default))
+    }
+}
+
+/// One model's queue ("lane"): a bounded priority heap plus the lane's
+/// resolved policy and its weighted-round-robin credit state.
+struct Lane {
+    heap: BinaryHeap<Queued>,
+    cfg: BatchCfg,
+    weight: u32,
+    credits: u32,
+}
+
+/// Mutable scheduler state (behind `Shared::sched`): the lanes, the
+/// sealed-batch handoff queue, and the worker-idle accounting.
+struct Sched {
+    lanes: HashMap<String, Lane>,
+    /// Lane visit order for the weighted round-robin (insertion order).
+    order: Vec<String>,
+    /// Next lane the round-robin considers.
+    cursor: usize,
+    /// Sealed batches awaiting a worker. Invariant: never longer than
+    /// `idle_workers`, so a sealed batch always has a parked worker —
+    /// the N-worker generalization of a rendezvous handoff.
+    ready: VecDeque<Vec<Job>>,
+    /// Workers currently parked waiting for a batch.
+    idle_workers: usize,
+}
+
+struct Shared {
+    sched: Mutex<Sched>,
+    /// Wakes the scheduler: new submission, or a worker went idle.
+    sched_cv: Condvar,
+    /// Wakes a parked worker: a sealed batch was pushed to `ready`.
+    work_cv: Condvar,
+    stop: AtomicBool,
+    seq: AtomicU64,
+    cfg: SchedCfg,
+    /// Jobs executed (batched or not) — numerator of the mean batch size.
+    jobs_run: AtomicU64,
+    /// Executable calls issued — denominator of the mean batch size.
+    batches_run: AtomicU64,
+    /// Consecutive dispatches that switched model — the mixsweep's
+    /// measure of cross-model concurrency.
+    interleaves: AtomicU64,
+    /// Per-model `(jobs, executable_calls)` counters.
+    counters: Mutex<HashMap<String, (u64, u64)>>,
+}
+
+impl Shared {
+    /// The lane for `model`, created on first use with the resolved
+    /// per-model policy. Caller holds the `sched` lock.
+    fn lane<'a>(&self, s: &'a mut Sched, model: &str) -> &'a mut Lane {
+        let Sched { lanes, order, .. } = s;
+        lanes.entry(model.to_string()).or_insert_with(|| {
+            order.push(model.to_string());
+            let pol = self.cfg.policy_for(model);
+            Lane {
+                heap: BinaryHeap::new(),
+                cfg: pol.cfg,
+                weight: pol.weight.max(1),
+                credits: pol.weight.max(1),
+            }
+        })
+    }
+}
+
+/// Handle to a running executor: the scheduler thread plus the stream
 /// worker pool (see the module docs for the three-stage lifecycle).
 pub struct Executor {
     shared: Arc<Shared>,
-    batcher: Option<std::thread::JoinHandle<()>>,
+    scheduler: Option<std::thread::JoinHandle<()>>,
     workers: Vec<std::thread::JoinHandle<()>>,
 }
 
 impl Executor {
-    /// Start the batcher plus `streams` execution workers over the
-    /// artifact directory; each worker eagerly compiles the artifacts
-    /// in `warm`.
+    /// Start the scheduler plus `streams` execution workers over the
+    /// artifact directory with one global batching policy; each worker
+    /// eagerly compiles the artifacts in `warm`.
     pub fn start(
         artifact_dir: impl Into<PathBuf>,
         streams: usize,
         batch: BatchCfg,
         warm: &[&str],
     ) -> Result<Executor> {
+        Executor::start_with(artifact_dir, streams, SchedCfg::uniform(batch), warm)
+    }
+
+    /// Start with a full [`SchedCfg`] — per-model policy overrides and
+    /// a per-lane queue bound on top of the global default.
+    pub fn start_with(
+        artifact_dir: impl Into<PathBuf>,
+        streams: usize,
+        sched: SchedCfg,
+        warm: &[&str],
+    ) -> Result<Executor> {
         assert!(streams >= 1);
         let dir: PathBuf = artifact_dir.into();
-        // The batcher needs the batch-size menu up front to know how
-        // long a batch is worth holding; loading the manifest here also
-        // fails fast on an unusable artifact directory.
+        // The scheduler needs the batch-size menu up front to know how
+        // long a gather is worth holding; loading the manifest here
+        // also fails fast on an unusable artifact directory.
         let manifest = Manifest::load(&dir)?;
         let shared = Arc::new(Shared {
-            queue: Mutex::new(BinaryHeap::new()),
-            cv: Condvar::new(),
+            sched: Mutex::new(Sched {
+                lanes: HashMap::new(),
+                order: Vec::new(),
+                cursor: 0,
+                ready: VecDeque::new(),
+                idle_workers: 0,
+            }),
+            sched_cv: Condvar::new(),
+            work_cv: Condvar::new(),
             stop: AtomicBool::new(false),
             seq: AtomicU64::new(0),
-            idle_workers: AtomicU64::new(0),
+            cfg: sched,
             jobs_run: AtomicU64::new(0),
             batches_run: AtomicU64::new(0),
+            interleaves: AtomicU64::new(0),
+            counters: Mutex::new(HashMap::new()),
         });
-        // Rendezvous handoff: the batcher blocks until a worker is free,
-        // so at most one sealed batch is committed ahead of the queue
-        // and later high-priority arrivals still overtake queued work.
-        let (batch_tx, batch_rx) = mpsc::sync_channel::<Vec<Job>>(0);
-        let batch_rx = Arc::new(Mutex::new(batch_rx));
         let warm: Vec<String> = warm.iter().map(|s| s.to_string()).collect();
         let mut workers = Vec::new();
         let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
@@ -240,7 +412,6 @@ impl Executor {
             let dir = dir.clone();
             let warm = warm.clone();
             let ready = ready_tx.clone();
-            let rx = batch_rx.clone();
             workers.push(std::thread::spawn(move || {
                 let engine = match Engine::load(&dir).and_then(|e| {
                     let names: Vec<&str> = warm.iter().map(String::as_str).collect();
@@ -256,25 +427,41 @@ impl Executor {
                         return;
                     }
                 };
-                worker_loop(sh, engine, rx)
+                worker_loop(sh, engine)
             }));
         }
         drop(ready_tx);
         for _ in 0..streams {
-            ready_rx
+            let up = ready_rx
                 .recv()
-                .map_err(|_| anyhow!("worker died during startup"))??;
+                .map_err(|_| anyhow!("worker died during startup"))
+                .and_then(|r| r);
+            if let Err(e) = up {
+                // A worker failed to load its engine. The siblings that
+                // already succeeded are parked in worker_loop — without
+                // a stop signal they (and their engines) would leak
+                // forever, since no scheduler will ever feed them.
+                shared.stop.store(true, Ordering::SeqCst);
+                shared.work_cv.notify_all();
+                for w in workers {
+                    let _ = w.join();
+                }
+                return Err(e);
+            }
         }
         let sh = shared.clone();
-        let batcher = std::thread::spawn(move || batcher_loop(sh, manifest, batch, batch_tx));
+        let scheduler = std::thread::spawn(move || scheduler_loop(sh, manifest));
         Ok(Executor {
             shared,
-            batcher: Some(batcher),
+            scheduler: Some(scheduler),
             workers,
         })
     }
 
-    /// Submit a job; the reply arrives on the returned channel.
+    /// Submit a job; the reply arrives on the returned channel. A full
+    /// lane (more than [`SchedCfg::queue_cap`] queued jobs for this
+    /// model) rejects the job immediately on that channel instead of
+    /// queueing it.
     pub fn submit(
         &self,
         model: &str,
@@ -292,8 +479,19 @@ impl Executor {
             enqueued: Instant::now(),
             seq: self.shared.seq.fetch_add(1, Ordering::Relaxed),
         };
-        self.shared.queue.lock().unwrap().push(Queued(job));
-        self.shared.cv.notify_one();
+        {
+            let mut s = self.shared.sched.lock().unwrap();
+            let lane = self.shared.lane(&mut s, model);
+            if lane.heap.len() >= self.shared.cfg.queue_cap {
+                let _ = job.reply.send(Err(anyhow!(
+                    "lane for model {model} is full ({} queued jobs)",
+                    lane.heap.len()
+                )));
+                return rx;
+            }
+            lane.heap.push(Queued(job));
+        }
+        self.shared.sched_cv.notify_one();
         rx
     }
 
@@ -310,13 +508,15 @@ impl Executor {
             .map_err(|_| anyhow!("executor dropped the job"))?
     }
 
+    /// Jobs queued across all lanes, not yet sealed into a batch.
     pub fn queue_len(&self) -> usize {
-        self.shared.queue.lock().unwrap().len()
+        let s = self.shared.sched.lock().unwrap();
+        s.lanes.values().map(|l| l.heap.len()).sum()
     }
 
-    /// Lifetime execution counters `(jobs, executable_calls)`: the mean
-    /// achieved batch size is `jobs / executable_calls`. Observability
-    /// for the `batchsweep` experiment.
+    /// Lifetime execution counters `(jobs, executable_calls)` summed
+    /// over every model: the mean achieved batch size is
+    /// `jobs / executable_calls`. Observability for `batchsweep`.
     pub fn batch_counters(&self) -> (u64, u64) {
         (
             self.shared.jobs_run.load(Ordering::Relaxed),
@@ -324,47 +524,39 @@ impl Executor {
         )
     }
 
-    /// Stop the batcher and workers and join them. Jobs still queued
-    /// are dropped; their reply channels report the executor as gone.
+    /// Per-model `(model, jobs, executable_calls)` counters, sorted by
+    /// model name. Observability for `mixsweep`'s per-model avg-batch
+    /// column.
+    pub fn model_batch_counters(&self) -> Vec<(String, u64, u64)> {
+        let c = self.shared.counters.lock().unwrap();
+        let mut v: Vec<(String, u64, u64)> = c
+            .iter()
+            .map(|(m, &(jobs, calls))| (m.clone(), jobs, calls))
+            .collect();
+        v.sort();
+        v
+    }
+
+    /// How many dispatches switched model relative to the previous
+    /// dispatch — nonzero means two models were genuinely served
+    /// concurrently from the shared stream pool rather than run as two
+    /// serialized phases.
+    pub fn interleave_count(&self) -> u64 {
+        self.shared.interleaves.load(Ordering::Relaxed)
+    }
+
+    /// Stop the scheduler and workers and join them. Sealed batches
+    /// already handed to workers finish; jobs still queued in lanes are
+    /// dropped and their reply channels report the executor as gone.
     pub fn shutdown(mut self) {
         self.shared.stop.store(true, Ordering::SeqCst);
-        self.shared.cv.notify_all();
-        if let Some(b) = self.batcher.take() {
+        self.shared.sched_cv.notify_all();
+        self.shared.work_cv.notify_all();
+        if let Some(b) = self.scheduler.take() {
             let _ = b.join();
         }
         for w in self.workers.drain(..) {
             let _ = w.join();
-        }
-    }
-}
-
-/// The coalescing stage: pop the highest-priority head, gather a batch
-/// behind it, hand it to a worker. Sole consumer of the job queue.
-fn batcher_loop(
-    sh: Arc<Shared>,
-    manifest: Manifest,
-    cfg: BatchCfg,
-    tx: mpsc::SyncSender<Vec<Job>>,
-) {
-    loop {
-        let head = {
-            let mut q = sh.queue.lock().unwrap();
-            loop {
-                if sh.stop.load(Ordering::SeqCst) {
-                    return;
-                }
-                if let Some(j) = q.pop() {
-                    break j.0;
-                }
-                q = sh.cv.wait(q).unwrap();
-            }
-        };
-        let jobs = gather(&sh, &manifest, cfg, head);
-        if jobs.is_empty() {
-            continue; // gather yielded to a higher-priority arrival
-        }
-        if tx.send(jobs).is_err() {
-            return; // all workers gone
         }
     }
 }
@@ -392,105 +584,192 @@ fn gather_cap(manifest: &Manifest, model: &str, raw: bool, cfg: BatchCfg) -> usi
 /// while staying far above any sane serving policy.
 const FLUSH_US_MAX: u64 = 600_000_000;
 
-/// Coalesce compatible queued jobs behind `head`: same model, same
-/// priority, same payload length, `F32` tensors (the only thing the
-/// batched executables concatenate — so a malformed request runs, and
-/// fails, alone). Seals when the batch fills, when `flush_us` has
-/// elapsed since the head was enqueued, or when incompatible work is
-/// waiting while a stream sits idle (holding a flush window only pays
-/// when every stream is busy). A *higher-priority* arrival instead
-/// aborts the gather entirely — the gathered jobs go back on the
-/// queue (original sequence numbers restore FIFO) and an empty vec
-/// tells the batcher to restart from the new, higher-priority head,
-/// so a priority client overtakes even a half-built batch.
-/// Incompatible jobs are swept aside once each and pushed back at
-/// seal time, in their original priority order.
-fn gather(sh: &Shared, manifest: &Manifest, cfg: BatchCfg, head: Job) -> Vec<Job> {
+fn flush_deadline(head: &Job, cfg: BatchCfg) -> Instant {
+    head.enqueued + Duration::from_micros(cfg.flush_us.min(FLUSH_US_MAX))
+}
+
+/// The continuous scheduler: seal sealable lanes onto idle workers in
+/// weighted-round-robin order; when every remaining lane is holding a
+/// gather for peers, sleep until the earliest flush deadline (or until
+/// a submission / worker-idle notification).
+fn scheduler_loop(sh: Arc<Shared>, manifest: Manifest) {
+    let mut last_model: Option<String> = None;
+    let mut s = sh.sched.lock().unwrap();
+    loop {
+        if sh.stop.load(Ordering::SeqCst) {
+            return;
+        }
+        let now = Instant::now();
+        // Dispatch until workers run out or nothing is sealable.
+        while s.ready.len() < s.idle_workers {
+            let Some(batch) = pick_and_seal(&mut s, &manifest, now) else {
+                break;
+            };
+            if let Some(prev) = &last_model {
+                if *prev != batch[0].model {
+                    sh.interleaves.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+            last_model = Some(batch[0].model.clone());
+            s.ready.push_back(batch);
+            sh.work_cv.notify_one();
+        }
+        // With spare workers, every nonempty lane is holding for peers
+        // (anything sealable was sealed above): sleep to the earliest
+        // flush deadline. With no spare worker, sleep until one frees.
+        let wait = if s.ready.len() < s.idle_workers {
+            earliest_deadline(&s, now)
+        } else {
+            None
+        };
+        s = match wait {
+            Some(d) => sh.sched_cv.wait_timeout(s, d).unwrap().0,
+            None => sh.sched_cv.wait(s).unwrap(),
+        };
+    }
+}
+
+/// Earliest flush deadline over all nonempty lanes, as a wait duration
+/// from `now` (floored at 100µs so a just-expired deadline cannot spin
+/// the scheduler).
+fn earliest_deadline(s: &Sched, now: Instant) -> Option<Duration> {
+    s.lanes
+        .values()
+        .filter_map(|lane| {
+            lane.heap
+                .peek()
+                .map(|q| flush_deadline(&q.0, lane.cfg))
+        })
+        .min()
+        .map(|d| {
+            d.saturating_duration_since(now)
+                .max(Duration::from_micros(100))
+        })
+}
+
+/// Weighted round-robin over the lanes: starting at the cursor, seal
+/// the first sealable lane that still has round-robin credits; if no
+/// sealable lane has credits left, refill every lane to its weight and
+/// retry once. A lane keeps the cursor until its credits run out, so a
+/// weight-2 lane dispatches two batches per cycle.
+fn pick_and_seal(s: &mut Sched, manifest: &Manifest, now: Instant) -> Option<Vec<Job>> {
+    let n = s.order.len();
+    if n == 0 {
+        return None;
+    }
+    for pass in 0..2 {
+        for k in 0..n {
+            let i = (s.cursor + k) % n;
+            let name = &s.order[i];
+            let lane = s.lanes.get_mut(name).unwrap();
+            if pass == 0 && lane.credits == 0 {
+                continue;
+            }
+            if let Some(batch) = try_seal(lane, manifest, now) {
+                lane.credits = lane.credits.saturating_sub(1);
+                s.cursor = if lane.credits == 0 { (i + 1) % n } else { i };
+                return Some(batch);
+            }
+        }
+        if pass == 0 {
+            for l in s.lanes.values_mut() {
+                l.credits = l.weight.max(1);
+            }
+        }
+    }
+    None
+}
+
+/// Try to seal the lane's head group. The group is the run of
+/// compatible jobs at the head's priority (same payload length, `F32`,
+/// non-raw — the only thing the batched executables concatenate, so a
+/// malformed request runs, and fails, alone). It seals when it fills
+/// the policy cap, under an opportunistic (`flush_us == 0`) policy,
+/// at the head's flush deadline, or early when other work waits in
+/// this lane (the caller only attempts a seal while a stream is idle —
+/// holding a flush window while blocking queued work on an idle stream
+/// would buy latency for nothing). Otherwise every popped job goes
+/// back on the heap — nothing is held outside the lane, which is what
+/// lets a later higher-priority arrival become the new head and
+/// overtake the gather.
+fn try_seal(lane: &mut Lane, manifest: &Manifest, now: Instant) -> Option<Vec<Job>> {
+    let head_prio = lane.heap.peek()?.0.prio;
+    let head = lane.heap.pop().unwrap().0;
     let batchable = !head.raw && matches!(head.payload, TensorBuf::F32(_));
     let cap = if batchable {
-        gather_cap(manifest, &head.model, false, cfg)
+        gather_cap(manifest, &head.model, false, lane.cfg)
     } else {
         1
     };
-    let mut jobs = vec![head];
     if cap <= 1 {
-        return jobs;
+        return Some(vec![head]);
     }
-    let flush = Duration::from_micros(cfg.flush_us.min(FLUSH_US_MAX));
-    let deadline = jobs[0].enqueued + flush;
-    let mut q = sh.queue.lock().unwrap();
+    let mut group = vec![head];
     let mut spill: Vec<Queued> = Vec::new();
-    let mut preempted = false;
-    loop {
-        // Each queued job is popped at most once per gather: compatible
-        // ones join the batch, the rest wait in `spill` until seal (the
-        // batcher is the queue's only consumer, so nothing misses them).
-        while jobs.len() < cap {
-            match q.pop() {
-                None => break,
-                Some(Queued(j))
-                    if j.model == jobs[0].model
-                        && !j.raw
-                        && j.prio == jobs[0].prio
-                        && j.payload.len() == jobs[0].payload.len()
-                        && matches!(j.payload, TensorBuf::F32(_)) =>
+    // The heap pops in priority order, so once the priority drops below
+    // the head's there are no more compatible jobs to find.
+    while group.len() < cap {
+        match lane.heap.peek() {
+            Some(q) if q.0.prio == head_prio => {
+                let j = lane.heap.pop().unwrap().0;
+                if !j.raw
+                    && j.payload.len() == group[0].payload.len()
+                    && matches!(j.payload, TensorBuf::F32(_))
                 {
-                    jobs.push(j)
-                }
-                Some(other) => {
-                    preempted |= other.0.prio > jobs[0].prio;
-                    spill.push(other);
+                    group.push(j);
+                } else {
+                    spill.push(Queued(j));
                 }
             }
+            _ => break,
         }
-        if preempted {
-            // A higher-priority job (sitting in `spill`) must run before
-            // everything gathered here: abandon the batch — the jobs go
-            // back with their original sequence numbers, so FIFO order
-            // is restored when they are re-popped after the priority
-            // job dispatches. An empty return tells the batcher to
-            // start over from the (now higher-priority) queue head.
-            for j in jobs.drain(..) {
-                q.push(Queued(j));
-            }
-            break;
-        }
-        let idle_starved = !spill.is_empty() && sh.idle_workers.load(Ordering::SeqCst) > 0;
-        if jobs.len() >= cap || idle_starved || sh.stop.load(Ordering::SeqCst) {
-            break;
-        }
-        let now = Instant::now();
-        let Some(wait) = deadline.checked_duration_since(now) else {
-            break; // flush deadline reached
-        };
-        if wait.is_zero() {
-            break;
-        }
-        let (guard, _) = sh.cv.wait_timeout(q, wait).unwrap();
-        q = guard;
     }
-    for o in spill {
-        q.push(o);
+    let blocked_work = !spill.is_empty() || !lane.heap.is_empty();
+    let seal = group.len() >= cap
+        || lane.cfg.flush_us == 0
+        || now >= flush_deadline(&group[0], lane.cfg)
+        || blocked_work;
+    for q in spill {
+        lane.heap.push(q);
     }
-    jobs
+    if seal {
+        Some(group)
+    } else {
+        for j in group {
+            lane.heap.push(Queued(j));
+        }
+        None
+    }
 }
 
-/// The execution stage: take sealed batches off the rendezvous channel
-/// and run them. The `Mutex<Receiver>` is the usual shared-consumer
-/// pattern — one idle worker holds the lock and blocks in `recv`.
-fn worker_loop(sh: Arc<Shared>, engine: Engine, rx: Arc<Mutex<mpsc::Receiver<Vec<Job>>>>) {
+/// The execution stage: park until the scheduler hands over a sealed
+/// batch, run it, repeat. The `idle_workers` count is what lets the
+/// scheduler seal exactly as many batches as there are streams to run
+/// them on.
+fn worker_loop(sh: Arc<Shared>, engine: Engine) {
     loop {
         let batch = {
-            let guard = rx.lock().unwrap();
-            sh.idle_workers.fetch_add(1, Ordering::SeqCst);
-            let received = guard.recv();
-            sh.idle_workers.fetch_sub(1, Ordering::SeqCst);
-            match received {
-                Ok(b) => b,
-                Err(_) => return, // batcher gone: shutdown
-            }
+            let mut s = sh.sched.lock().unwrap();
+            s.idle_workers += 1;
+            // A stream just became available: lanes holding jobs may
+            // now be worth sealing.
+            sh.sched_cv.notify_one();
+            let b = loop {
+                if let Some(b) = s.ready.pop_front() {
+                    break Some(b);
+                }
+                if sh.stop.load(Ordering::SeqCst) {
+                    break None;
+                }
+                s = sh.work_cv.wait(s).unwrap();
+            };
+            s.idle_workers -= 1;
+            b
         };
-        run_jobs(&engine, batch, &sh);
+        match batch {
+            Some(b) => run_jobs(&engine, b, &sh),
+            None => return, // shutdown: lanes drained or abandoned
+        }
     }
 }
 
@@ -511,6 +790,7 @@ fn artifact_chunk(manifest: &Manifest, model: &str, n: usize) -> usize {
 /// Split a sealed batch greedily onto the largest available batch
 /// executables (a 7-job batch runs as `_b4` + `_b2` + `_b1`).
 fn run_jobs(engine: &Engine, mut jobs: Vec<Job>, sh: &Shared) {
+    let model = jobs[0].model.clone();
     while !jobs.is_empty() {
         let b = if jobs[0].raw {
             1
@@ -520,6 +800,12 @@ fn run_jobs(engine: &Engine, mut jobs: Vec<Job>, sh: &Shared) {
         let chunk: Vec<Job> = jobs.drain(..b).collect();
         sh.jobs_run.fetch_add(chunk.len() as u64, Ordering::Relaxed);
         sh.batches_run.fetch_add(1, Ordering::Relaxed);
+        {
+            let mut c = sh.counters.lock().unwrap();
+            let e = c.entry(model.clone()).or_insert((0, 0));
+            e.0 += chunk.len() as u64;
+            e.1 += 1;
+        }
         run_chunk(engine, chunk);
     }
 }
@@ -577,7 +863,7 @@ fn run_chunk(engine: &Engine, jobs: Vec<Job>) {
         match &j.payload {
             TensorBuf::F32(v) => flat.extend_from_slice(v),
             TensorBuf::U8(_) | TensorBuf::U8Region(_) => {
-                // Gather only fuses F32 payloads, so a chunk containing
+                // The seal only fuses F32 payloads, so a chunk containing
                 // a u8 payload is that single malformed job — but
                 // answer every reply channel regardless: dropping a
                 // fused peer's sender would fail an innocent request.
@@ -685,6 +971,54 @@ mod tests {
     }
 
     #[test]
+    fn model_policy_parse_and_label() {
+        assert_eq!(
+            ModelPolicy::parse_spec("8@2000"),
+            Some(ModelPolicy::new(BatchCfg::deadline(8, 2000)))
+        );
+        assert_eq!(
+            ModelPolicy::parse_spec("4*2"),
+            Some(ModelPolicy::weighted(BatchCfg::opportunistic(4), 2))
+        );
+        assert_eq!(
+            ModelPolicy::parse_spec("8@500us*3"),
+            Some(ModelPolicy::weighted(BatchCfg::deadline(8, 500), 3))
+        );
+        assert_eq!(ModelPolicy::parse_spec("8*0"), None);
+        assert_eq!(ModelPolicy::parse_spec(""), None);
+        assert_eq!(
+            ModelPolicy::parse_entry("tiny_resnet=8@2000"),
+            Some((
+                "tiny_resnet".to_string(),
+                ModelPolicy::new(BatchCfg::deadline(8, 2000))
+            ))
+        );
+        assert_eq!(ModelPolicy::parse_entry("=8"), None);
+        assert_eq!(ModelPolicy::parse_entry("tiny_resnet"), None);
+        assert_eq!(
+            ModelPolicy::weighted(BatchCfg::deadline(8, 2000), 2).label(),
+            "b8@2000us*2"
+        );
+        assert_eq!(ModelPolicy::new(BatchCfg::none()).label(), "b1");
+    }
+
+    #[test]
+    fn sched_cfg_resolves_overrides() {
+        let cfg = SchedCfg::uniform(BatchCfg::opportunistic(8)).with_model(
+            "tiny_resnet",
+            ModelPolicy::weighted(BatchCfg::deadline(4, 500), 2),
+        );
+        assert_eq!(
+            cfg.policy_for("tiny_resnet"),
+            ModelPolicy::weighted(BatchCfg::deadline(4, 500), 2)
+        );
+        assert_eq!(
+            cfg.policy_for("tiny_mobilenet"),
+            ModelPolicy::new(BatchCfg::opportunistic(8))
+        );
+    }
+
+    #[test]
     fn priority_queue_orders_jobs() {
         let (tx, _rx) = mpsc::channel();
         let mk = |prio: u8, seq: u64| {
@@ -707,5 +1041,106 @@ mod tests {
             .map(|q| (q.0.prio, q.0.seq))
             .collect();
         assert_eq!(order, vec![(5, 1), (5, 3), (0, 0), (0, 2)]);
+    }
+
+    /// WRR fairness without an engine: drive `pick_and_seal` directly
+    /// over two saturated lanes and check the dispatch pattern.
+    #[test]
+    fn weighted_round_robin_alternates_lanes() {
+        let manifest = menu();
+        let (tx, _rx) = mpsc::channel();
+        let mut s = Sched {
+            lanes: HashMap::new(),
+            order: Vec::new(),
+            cursor: 0,
+            ready: VecDeque::new(),
+            idle_workers: 0,
+        };
+        let mut seq = 0u64;
+        for (model, n) in [("m", 8usize), ("solo", 4)] {
+            s.order.push(model.to_string());
+            let mut heap = BinaryHeap::new();
+            for _ in 0..n {
+                heap.push(Queued(Job {
+                    model: model.to_string(),
+                    raw: false,
+                    prio: 0,
+                    payload: TensorBuf::F32(vec![0.0; 4]),
+                    reply: tx.clone(),
+                    enqueued: Instant::now(),
+                    seq,
+                }));
+                seq += 1;
+            }
+            s.lanes.insert(
+                model.to_string(),
+                Lane {
+                    heap,
+                    cfg: BatchCfg::opportunistic(2),
+                    weight: 1,
+                    credits: 1,
+                },
+            );
+        }
+        let now = Instant::now();
+        let mut dispatch = Vec::new();
+        while let Some(batch) = pick_and_seal(&mut s, &manifest, now) {
+            dispatch.push(batch[0].model.clone());
+        }
+        // "m" seals pairs (cap 2), "solo" has no batched variants and
+        // seals singles; round-robin must alternate them, not drain one.
+        assert_eq!(
+            dispatch,
+            vec!["m", "solo", "m", "solo", "m", "solo", "m", "solo"],
+            "round-robin must interleave the lanes"
+        );
+    }
+
+    /// A weight-2 lane gets two dispatches per cycle; weight-1 gets one.
+    #[test]
+    fn wrr_weight_biases_dispatch_share() {
+        let manifest = menu();
+        let (tx, _rx) = mpsc::channel();
+        let mut s = Sched {
+            lanes: HashMap::new(),
+            order: Vec::new(),
+            cursor: 0,
+            ready: VecDeque::new(),
+            idle_workers: 0,
+        };
+        for (model, weight, n) in [("m", 2u32, 6usize), ("solo", 1, 3)] {
+            s.order.push(model.to_string());
+            let mut heap = BinaryHeap::new();
+            for i in 0..n {
+                heap.push(Queued(Job {
+                    model: model.to_string(),
+                    raw: false,
+                    prio: 0,
+                    payload: TensorBuf::F32(vec![0.0; 4]),
+                    reply: tx.clone(),
+                    enqueued: Instant::now(),
+                    seq: i as u64,
+                }));
+            }
+            s.lanes.insert(
+                model.to_string(),
+                Lane {
+                    heap,
+                    cfg: BatchCfg::none(),
+                    weight,
+                    credits: weight,
+                },
+            );
+        }
+        let now = Instant::now();
+        let mut dispatch = Vec::new();
+        while let Some(batch) = pick_and_seal(&mut s, &manifest, now) {
+            dispatch.push(batch[0].model.clone());
+        }
+        assert_eq!(
+            dispatch,
+            vec!["m", "m", "solo", "m", "m", "solo", "m", "m", "solo"],
+            "weight-2 lane should dispatch twice per cycle"
+        );
     }
 }

@@ -1,10 +1,10 @@
 //! L3 coordinator (live plane): the model-serving framework — wire
-//! protocol ([`protocol`]), execution service ([`executor`]: stream
-//! pool + priority queue + cross-request dynamic batcher), server
-//! ([`serve_on`]), router-dealer gateway ([`gateway_on`]), and the
-//! closed-loop load generator ([`run_on`]). Policies here mirror the
-//! simulated world so both planes exercise the same design
-//! (DESIGN.md §3).
+//! protocol ([`protocol`]), execution service ([`executor`]: shared
+//! stream pool + per-model priority lanes + continuous cross-request
+//! batching), server ([`serve_on`]), router-dealer gateway
+//! ([`gateway_on`]), and the closed-loop load generator ([`run_on`]).
+//! Policies here mirror the simulated world so both planes exercise
+//! the same design (DESIGN.md §3).
 //!
 //! The request lifecycle through these modules — and how it maps onto
 //! the paper's recv/preprocess/infer/reply pipeline stages — is
@@ -17,6 +17,6 @@ pub mod protocol;
 pub mod server;
 
 pub use client::{run_on, run_tcp, LiveStats, LoadCfg};
-pub use executor::{BatchCfg, Done, Executor};
+pub use executor::{BatchCfg, Done, Executor, ModelPolicy, SchedCfg};
 pub use gateway::{gateway_on, gateway_tcp, GatewayHandle, GatewayLoop};
 pub use server::{handle_conn, serve_on, serve_tcp, ServeLoop, ServerHandle};

@@ -5,8 +5,10 @@
 //! the homogeneity requirement of RDMA, §VII, kept for TCP too so the
 //! comparison stays fair, §III-A).
 //!
+//! ```text
 //! Request:  [op u8][flags u8][prio u8][name_len u8][name][payload]
 //! Response: [status u8][queue_ns u64][preproc_ns u64][infer_ns u64][payload]
+//! ```
 
 use anyhow::{bail, Result};
 

@@ -103,9 +103,9 @@ impl ServeLoop {
 /// accepted from the [`Acceptor`] gets a handler thread running
 /// [`handle_conn`] against the shared [`Executor`]. Because each
 /// connection blocks in [`Executor::infer_sync`] on its own reply
-/// channel, the executor's dynamic batcher can fuse requests from many
-/// connections and still scatter each output row back to the right
-/// client.
+/// channel, the executor's continuous batcher can fuse requests from
+/// many connections — per model, across models concurrently — and
+/// still scatter each output row back to the right client.
 pub fn serve_on<A: Acceptor>(mut acceptor: A, exec: Arc<Executor>) -> ServeLoop {
     let stop = Arc::new(AtomicBool::new(false));
     let stop2 = stop.clone();

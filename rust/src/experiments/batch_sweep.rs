@@ -21,16 +21,16 @@
 //! not amortized away.
 
 use std::path::PathBuf;
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 
-use anyhow::{anyhow, Context, Result};
+use anyhow::{Context, Result};
 
-use crate::coordinator::{handle_conn, run_on, BatchCfg, Executor, LiveStats, LoadCfg};
+use crate::coordinator::{BatchCfg, Executor, LiveStats};
 use crate::models::gen;
 use crate::models::manifest::Manifest;
-use crate::transport::{connected_pair, MsgTransport, TransportKind};
+use crate::transport::TransportKind;
 
-use super::Table;
+use super::{drain_executor, drive_model_clients, Table};
 
 /// Batch-sweep configuration.
 #[derive(Debug, Clone)]
@@ -74,56 +74,10 @@ impl Default for SweepCfg {
 
 /// One cell: `clients` private connections into one shared executor.
 /// Every transport kind gets the same treatment — per-connection server
-/// threads running `handle_conn`, closed-loop clients via `run_on`.
+/// threads running `handle_conn`, closed-loop clients via `run_on`
+/// (see [`drive_model_clients`]).
 fn run_cell(kind: TransportKind, exec: &Arc<Executor>, cfg: &SweepCfg) -> Result<LiveStats> {
-    let payload_elems = gen::IN_H * gen::IN_W * gen::CHANNELS;
-    // Request frame = 4-byte header + model name + f32 payload; sized
-    // so RDMA/GDR requests stay single-chunk.
-    let payload_hint = 4 + cfg.model.len() + payload_elems * 4 + 64;
-    // Create every endpoint pair before spawning anything, so the
-    // fallible step cannot leave half-started server threads behind.
-    let mut pairs = Vec::with_capacity(cfg.clients);
-    for _ in 0..cfg.clients {
-        pairs.push(connected_pair(kind, payload_hint)?);
-    }
-    let mut slots: Vec<Option<Box<dyn MsgTransport>>> = Vec::with_capacity(cfg.clients);
-    let mut servers = Vec::with_capacity(cfg.clients);
-    for (c, s) in pairs {
-        slots.push(Some(c));
-        let e2 = exec.clone();
-        servers.push(std::thread::spawn(move || handle_conn(s, &e2)));
-    }
-    let slots = Mutex::new(slots);
-    let lc = LoadCfg {
-        model: cfg.model.clone(),
-        raw: false,
-        n_clients: cfg.clients,
-        requests_per_client: cfg.requests + cfg.warmup,
-        priority_client: false,
-        payload_elems,
-        warmup: cfg.warmup,
-    };
-    let stats = run_on(
-        |i| {
-            slots
-                .lock()
-                .unwrap()
-                .get_mut(i)
-                .and_then(Option::take)
-                .ok_or_else(|| anyhow!("no pre-connected endpoint for client {i}"))
-        },
-        &lc,
-    )?;
-    // Clients hung up; their server threads see the close and exit.
-    for th in servers {
-        th.join().map_err(|_| anyhow!("sweep server thread panicked"))?;
-    }
-    if stats.errors > 0 {
-        // A cell with failed clients has holes in its series; 0.0
-        // quantiles would masquerade as measurements.
-        anyhow::bail!("{} client(s) failed", stats.errors);
-    }
-    Ok(stats)
+    drive_model_clients(kind, exec, &cfg.model, cfg.clients, cfg.requests, cfg.warmup)
 }
 
 /// Run the sweep and render one row per transport × policy with
@@ -189,21 +143,13 @@ pub fn run_batch_sweep(cfg: &SweepCfg) -> Result<Table> {
                 ],
             );
         }
-        // Shut the batcher + workers down before propagating any cell
-        // error — bailing first would park those threads forever. On
-        // the happy path every server thread was joined in run_cell, so
-        // this is the last reference.
-        match Arc::try_unwrap(exec) {
-            Ok(e) => e.shutdown(),
-            Err(leaked) => {
-                // Only reachable when a cell aborted with server
-                // threads unjoined; report it unless a more specific
-                // error is already on its way out.
-                drop(leaked);
-                if failed.is_none() {
-                    anyhow::bail!("sweep still holds executor clones");
-                }
-            }
+        // Shut the scheduler + workers down before propagating any
+        // cell error — bailing first would park those threads forever.
+        // On the happy path every server thread was joined in
+        // run_cell; after an aborted cell a handler can hold a clone
+        // for a moment longer, which drain_executor rides out.
+        if !drain_executor(exec) && failed.is_none() {
+            anyhow::bail!("sweep still holds executor clones");
         }
         if let Some(e) = failed {
             return Err(e);

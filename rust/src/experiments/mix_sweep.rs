@@ -1,0 +1,356 @@
+//! Live-plane model-mix sweep: per-model latency, throughput and
+//! achieved batch per **transport × model**, with every model's
+//! clients running *concurrently* against one shared executor
+//! (`accelserve mixsweep`) — the experiment that shows continuous
+//! multi-model batching actually interleaving on the stream pool.
+//!
+//! PR 3's `batchsweep` fuses same-model requests but measures one
+//! model at a time; a mixed workload (the paper's multi-stage,
+//! multi-model pipeline setting, and the explicit concern of
+//! "GPUs, CPUs, and NICs: Rethinking the Network's Role in Serving
+//! Complex AI Pipelines", arXiv:2502.15712) additionally needs the
+//! scheduler to serve *different* models concurrently from one stream
+//! pool instead of queueing one model behind the other. Each cell
+//! here drives `clients_per_model` closed-loop clients **per model**
+//! at the same time; the table reports per-model p50/p99/mean
+//! latency, per-model throughput, the per-model mean achieved batch
+//! ([`Executor::model_batch_counters`]), and the executor's
+//! cross-model **interleave count** — how many dispatches switched
+//! model relative to the previous dispatch. A serialized scheduler
+//! scores ~1 interleave per cell; the continuous scheduler scores
+//! many.
+//!
+//! [`run_sim_mix`] is the simulated twin: the same mixed workload at
+//! paper scale (`Scenario::with_model_mix` over the paper's models)
+//! reporting per-model latency and the sim's own interleave counter.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::{BatchCfg, Executor, LiveStats, ModelPolicy, SchedCfg};
+use crate::models::gen;
+use crate::models::manifest::Manifest;
+use crate::models::zoo::PaperModel;
+use crate::net::params::Transport;
+use crate::sim::world::{Scenario, World};
+use crate::transport::TransportKind;
+
+use super::{drain_executor, drive_model_clients, Table};
+
+/// Mix-sweep configuration.
+#[derive(Debug, Clone)]
+pub struct MixCfg {
+    /// Served models, each driven by its own client group (must all
+    /// have artifacts in the manifest).
+    pub models: Vec<String>,
+    /// Concurrent closed-loop clients **per model**.
+    pub clients_per_model: usize,
+    /// Measured requests per client.
+    pub requests: usize,
+    /// Discarded leading requests per client.
+    pub warmup: usize,
+    /// Execution streams shared by all models. 2 (the default) lets
+    /// two models run concurrently while staying oversubscribed
+    /// enough that batching stays visible.
+    pub streams: usize,
+    pub transports: Vec<TransportKind>,
+    /// Default batching policy for every model lane.
+    pub policy: BatchCfg,
+    /// Per-model policy overrides (`--model-batch`, scenario
+    /// `model_batch`).
+    pub per_model: Vec<(String, ModelPolicy)>,
+    /// Artifact directory; `None` generates into a per-process temp dir.
+    pub artifacts_dir: Option<PathBuf>,
+}
+
+impl Default for MixCfg {
+    fn default() -> MixCfg {
+        MixCfg {
+            models: vec!["tiny_mobilenet".to_string(), "tiny_resnet".to_string()],
+            clients_per_model: 4,
+            requests: 32,
+            warmup: 4,
+            streams: 2,
+            transports: TransportKind::ALL.to_vec(),
+            policy: BatchCfg::deadline(8, 1000),
+            per_model: Vec::new(),
+            artifacts_dir: None,
+        }
+    }
+}
+
+/// One cell: every model's client group runs concurrently against the
+/// shared executor over private `kind` connections. Returns per-model
+/// stats in `cfg.models` order.
+fn run_mix_cell(
+    kind: TransportKind,
+    exec: &Arc<Executor>,
+    cfg: &MixCfg,
+) -> Result<Vec<LiveStats>> {
+    let results: Vec<Result<LiveStats>> = std::thread::scope(|s| {
+        let handles: Vec<_> = cfg
+            .models
+            .iter()
+            .map(|model| {
+                s.spawn(move || {
+                    drive_model_clients(
+                        kind,
+                        exec,
+                        model,
+                        cfg.clients_per_model,
+                        cfg.requests,
+                        cfg.warmup,
+                    )
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| {
+                h.join()
+                    .unwrap_or_else(|_| Err(anyhow::anyhow!("mix client group panicked")))
+            })
+            .collect()
+    });
+    let mut out = Vec::with_capacity(results.len());
+    for (model, res) in cfg.models.iter().zip(results) {
+        out.push(res.with_context(|| format!("client group for {model}"))?);
+    }
+    Ok(out)
+}
+
+/// Run the live mix sweep: one row per transport × model with
+/// client-observed latency, per-model throughput, the per-model mean
+/// achieved batch, and the cell's cross-model interleave count
+/// (identical on every row of a transport group — it is a property of
+/// the shared executor, not of one model).
+pub fn run_mix_sweep(cfg: &MixCfg) -> Result<Table> {
+    if cfg.models.len() < 2 {
+        anyhow::bail!("mixsweep needs at least two models (got {:?})", cfg.models);
+    }
+    // Duplicate names would make the per-model rows and counter deltas
+    // ambiguous (two client groups, one lane); weight a model's share
+    // with `--model-batch model=SPEC*W` or `--clients` instead.
+    let mut seen = cfg.models.clone();
+    seen.sort();
+    seen.dedup();
+    if seen.len() != cfg.models.len() {
+        anyhow::bail!("mixsweep models must be distinct (got {:?})", cfg.models);
+    }
+    let dir: PathBuf = match &cfg.artifacts_dir {
+        Some(d) => d.clone(),
+        None => gen::ensure_test_artifacts().to_path_buf(),
+    };
+    gen::ensure_artifacts(&dir)?;
+    // Warm every batch variant of every swept model so compilation
+    // never lands inside a measured request.
+    let manifest = Manifest::load(&dir)?;
+    let mut warm: Vec<String> = Vec::new();
+    for model in &cfg.models {
+        let sizes = manifest.batch_sizes(model);
+        if sizes.is_empty() {
+            anyhow::bail!(
+                "model {model} has no artifacts under {} (servable: {:?})",
+                dir.display(),
+                manifest.models()
+            );
+        }
+        warm.extend(sizes.into_iter().map(|b| format!("{model}_b{b}")));
+    }
+    let warm_refs: Vec<&str> = warm.iter().map(String::as_str).collect();
+    let sched = SchedCfg {
+        per_model: cfg.per_model.clone(),
+        ..SchedCfg::uniform(cfg.policy)
+    };
+
+    let mut t = Table::new(
+        format!(
+            "mix sweep — {{{}}} × {} clients each, {} requests, {} stream(s), default {}",
+            cfg.models.join(", "),
+            cfg.clients_per_model,
+            cfg.requests,
+            cfg.streams,
+            cfg.policy.label()
+        ),
+        &[
+            "p50_ms",
+            "p99_ms",
+            "mean_ms",
+            "thr_rps",
+            "avg_batch",
+            "interleaves",
+        ],
+    );
+    for &kind in &cfg.transports {
+        // A fresh executor per transport cell, so the per-model
+        // counters and the interleave count are the cell's own.
+        let exec = Arc::new(
+            Executor::start_with(&dir, cfg.streams, sched.clone(), &warm_refs)
+                .with_context(|| format!("mix executor over {}", dir.display()))?,
+        );
+        let cell = run_mix_cell(kind, &exec, cfg)
+            .with_context(|| format!("mix cell {}", kind.name()));
+        let stats = match cell {
+            Ok(s) => s,
+            Err(e) => {
+                // Drain the executor before propagating — bailing with
+                // live worker threads would park them forever. Server
+                // threads may hold clones for a moment after a failed
+                // cell, so this retries rather than racing try_unwrap.
+                if !drain_executor(exec) {
+                    log::warn!("mix cell failed and executor clones leaked");
+                }
+                return Err(e);
+            }
+        };
+        let interleaves = exec.interleave_count() as f64;
+        let counters = exec.model_batch_counters();
+        for (model, st) in cfg.models.iter().zip(&stats) {
+            let (jobs, calls) = counters
+                .iter()
+                .find(|(m, _, _)| m == model)
+                .map(|&(_, j, c)| (j, c))
+                .unwrap_or((0, 0));
+            let avg_batch = jobs as f64 / calls.max(1) as f64;
+            let mut total = st.all.total.clone();
+            t.row(
+                format!("{} {}", kind.name(), model),
+                vec![
+                    total.quantile(0.5),
+                    total.quantile(0.99),
+                    st.all.total.mean(),
+                    st.throughput_rps,
+                    avg_batch,
+                    interleaves,
+                ],
+            );
+        }
+        if !drain_executor(exec) {
+            anyhow::bail!("mix sweep still holds executor clones");
+        }
+    }
+    t.note("each transport cell serves every model's client group concurrently from one executor");
+    t.note("avg_batch = per-model jobs / executable calls; interleaves = dispatches that switched model (per transport cell, repeated on its rows)");
+    t.note("a serialized scheduler would score ~1 interleave per cell; per-model lanes + weighted round-robin score many");
+    Ok(t)
+}
+
+/// The simulated twin (`accelserve mixsweep --sim`): the same mixed
+/// workload at paper scale on the discrete-event plane. One row per
+/// transport × paper model; clients are assigned models round-robin
+/// ([`Scenario::with_model_mix`]), `interleaves` counts inference
+/// completions that switched model.
+pub fn run_sim_mix(
+    models: &[&'static PaperModel],
+    transports: &[Transport],
+    clients_per_model: usize,
+    requests: usize,
+) -> Table {
+    let mut t = Table::new(
+        format!(
+            "sim mix — {{{}}} × {} clients each, {} requests",
+            models.iter().map(|m| m.name).collect::<Vec<_>>().join(", "),
+            clients_per_model,
+            requests
+        ),
+        &["p50_ms", "p99_ms", "mean_ms", "thr_rps", "interleaves"],
+    );
+    for &tr in transports {
+        let sc = Scenario::direct(models[0], tr)
+            .with_model_mix(models.to_vec())
+            .with_clients(clients_per_model * models.len())
+            .with_requests(requests);
+        let stats = World::run(sc);
+        for (name, agg) in &stats.per_model {
+            let mut total = agg.total.clone();
+            let thr = agg.n() as f64 / stats.duration_s.max(1e-9);
+            t.row(
+                format!("{} {}", tr.name(), name),
+                vec![
+                    total.quantile(0.5),
+                    total.quantile(0.99),
+                    agg.total.mean(),
+                    thr,
+                    stats.interleaves as f64,
+                ],
+            );
+        }
+    }
+    t.note("clients round-robin over the model mix; interleaves = inference completions that switched model (per transport cell)");
+    t.note("per-model thr_rps counts measured requests only (warmup excluded), so it underestimates the served rate slightly");
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mix_sweep_interleaves_and_batches_per_model() {
+        // Smoke + the acceptance property: ≥2 models × ≥2 transports,
+        // per-model avg batch ≥ 1 everywhere (and > 1 somewhere: the
+        // deadline policy gathers concurrent clients), nonzero
+        // cross-model interleaves in every cell. Bit-identity of the
+        // batched outputs is pinned by tests/batching.rs.
+        let cfg = MixCfg {
+            clients_per_model: 3,
+            requests: 8,
+            warmup: 2,
+            transports: vec![TransportKind::Tcp, TransportKind::Shm],
+            policy: BatchCfg::deadline(4, 2000),
+            ..MixCfg::default()
+        };
+        let t = run_mix_sweep(&cfg).unwrap();
+        assert_eq!(t.rows.len(), 4, "2 transports x 2 models");
+        let mut any_batched = false;
+        for kind in ["tcp", "shm"] {
+            for model in ["tiny_mobilenet", "tiny_resnet"] {
+                let row = format!("{kind} {model}");
+                for col in ["p50_ms", "p99_ms", "mean_ms", "thr_rps"] {
+                    let v = t.get(&row, col).unwrap();
+                    assert!(v > 0.0, "{row}/{col} = {v}");
+                }
+                let avg = t.get(&row, "avg_batch").unwrap();
+                assert!((1.0..=4.0).contains(&avg), "{row}/avg_batch = {avg}");
+                any_batched |= avg > 1.0;
+                let il = t.get(&row, "interleaves").unwrap();
+                assert!(il > 0.0, "{row}: models never interleaved");
+            }
+        }
+        assert!(any_batched, "no cell achieved any batching");
+    }
+
+    #[test]
+    fn mix_sweep_rejects_degenerate_model_lists() {
+        let single = MixCfg {
+            models: vec!["tiny_mobilenet".to_string()],
+            ..MixCfg::default()
+        };
+        assert!(run_mix_sweep(&single).is_err());
+        let dup = MixCfg {
+            models: vec!["tiny_mobilenet".to_string(), "tiny_mobilenet".to_string()],
+            ..MixCfg::default()
+        };
+        assert!(run_mix_sweep(&dup).is_err(), "duplicate models are ambiguous");
+    }
+
+    #[test]
+    fn sim_mix_reports_per_model_rows() {
+        let models = [
+            PaperModel::by_name("MobileNetV3").unwrap(),
+            PaperModel::by_name("ResNet50").unwrap(),
+        ];
+        let t = run_sim_mix(&models, &[Transport::Tcp, Transport::Gdr], 4, 60);
+        assert_eq!(t.rows.len(), 4);
+        for tr in ["tcp", "gdr"] {
+            for m in ["MobileNetV3", "ResNet50"] {
+                let row = format!("{tr} {m}");
+                assert!(t.get(&row, "mean_ms").unwrap() > 0.0, "{row}");
+            }
+            let il = t.get(&format!("{tr} MobileNetV3"), "interleaves").unwrap();
+            assert!(il > 0.0, "{tr}: sim mix never interleaved");
+        }
+    }
+}

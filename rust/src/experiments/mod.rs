@@ -1,13 +1,110 @@
 //! Experiment harnesses: one runner per paper figure/table (sim plane)
-//! plus the live-plane transport matrix (`accelserve matrix`) and the
-//! transport × batch-policy sweep (`accelserve batchsweep`), shared by
-//! the benches and the CLI.
+//! plus the live-plane transport matrix (`accelserve matrix`), the
+//! transport × batch-policy sweep (`accelserve batchsweep`), and the
+//! transport × model-mix sweep (`accelserve mixsweep`), shared by the
+//! benches and the CLI.
 
 pub mod batch_sweep;
 pub mod figs;
+pub mod mix_sweep;
 pub mod table;
 pub mod transport_matrix;
 
 pub use batch_sweep::{run_batch_sweep, SweepCfg};
+pub use mix_sweep::{run_mix_sweep, run_sim_mix, MixCfg};
 pub use table::Table;
 pub use transport_matrix::{run_matrix, MatrixCfg};
+
+use std::sync::{Arc, Mutex};
+
+use anyhow::{anyhow, Result};
+
+use crate::coordinator::{handle_conn, run_on, Executor, LiveStats, LoadCfg};
+use crate::models::gen;
+use crate::transport::{connected_pair, MsgTransport, TransportKind};
+
+/// Reclaim and shut down a shared executor. After a failed cell,
+/// per-connection server threads can still hold `Arc<Executor>` clones
+/// for a brief window (the clients have hung up; each handler exits on
+/// peer close) — retry the unwrap briefly instead of leaking parked
+/// stream workers. Returns `false` if the executor never became
+/// reclaimable (a genuinely stuck clone holder).
+pub(crate) fn drain_executor(mut exec: Arc<Executor>) -> bool {
+    for _ in 0..200 {
+        match Arc::try_unwrap(exec) {
+            Ok(e) => {
+                e.shutdown();
+                return true;
+            }
+            Err(still) => {
+                exec = still;
+                std::thread::sleep(std::time::Duration::from_millis(10));
+            }
+        }
+    }
+    false
+}
+
+/// Drive `clients` closed-loop clients for one model over `kind`
+/// against a shared executor: each client gets a private
+/// pre-connected endpoint and a per-connection server thread running
+/// [`handle_conn`]. Shared by `batchsweep` (one model per cell) and
+/// `mixsweep` (one concurrent call per model in the mix).
+pub(crate) fn drive_model_clients(
+    kind: TransportKind,
+    exec: &Arc<Executor>,
+    model: &str,
+    clients: usize,
+    requests: usize,
+    warmup: usize,
+) -> Result<LiveStats> {
+    let payload_elems = gen::IN_H * gen::IN_W * gen::CHANNELS;
+    // Request frame = 4-byte header + model name + f32 payload; sized
+    // so RDMA/GDR requests stay single-chunk.
+    let payload_hint = 4 + model.len() + payload_elems * 4 + 64;
+    // Create every endpoint pair before spawning anything, so the
+    // fallible step cannot leave half-started server threads behind.
+    let mut pairs = Vec::with_capacity(clients);
+    for _ in 0..clients {
+        pairs.push(connected_pair(kind, payload_hint)?);
+    }
+    let mut slots: Vec<Option<Box<dyn MsgTransport>>> = Vec::with_capacity(clients);
+    let mut servers = Vec::with_capacity(clients);
+    for (c, s) in pairs {
+        slots.push(Some(c));
+        let e2 = exec.clone();
+        servers.push(std::thread::spawn(move || handle_conn(s, &e2)));
+    }
+    let slots = Mutex::new(slots);
+    let lc = LoadCfg {
+        model: model.to_string(),
+        raw: false,
+        n_clients: clients,
+        requests_per_client: requests + warmup,
+        priority_client: false,
+        payload_elems,
+        warmup,
+    };
+    let stats = run_on(
+        |i| {
+            slots
+                .lock()
+                .unwrap()
+                .get_mut(i)
+                .and_then(Option::take)
+                .ok_or_else(|| anyhow!("no pre-connected endpoint for client {i}"))
+        },
+        &lc,
+    )?;
+    // Clients hung up; their server threads see the close and exit.
+    for th in servers {
+        th.join()
+            .map_err(|_| anyhow!("experiment server thread panicked"))?;
+    }
+    if stats.errors > 0 {
+        // A cell with failed clients has holes in its series; 0.0
+        // quantiles would masquerade as measurements.
+        anyhow::bail!("{} client(s) failed", stats.errors);
+    }
+    Ok(stats)
+}

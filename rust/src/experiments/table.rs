@@ -6,14 +6,18 @@ use std::fmt::Write as _;
 /// One regenerated figure/table: rows of labeled numeric series.
 #[derive(Debug, Clone, Default)]
 pub struct Table {
+    /// Heading printed above the table.
     pub title: String,
+    /// Column names, in print order.
     pub columns: Vec<String>,
+    /// `(row label, one value per column)` in insertion order.
     pub rows: Vec<(String, Vec<f64>)>,
     /// Paper-reported reference points, printed beneath the table.
     pub notes: Vec<String>,
 }
 
 impl Table {
+    /// An empty table with the given title and column names.
     pub fn new(title: impl Into<String>, columns: &[&str]) -> Table {
         Table {
             title: title.into(),
@@ -23,6 +27,7 @@ impl Table {
         }
     }
 
+    /// Append one labeled row (must match the column count).
     pub fn row(&mut self, label: impl Into<String>, values: Vec<f64>) -> &mut Self {
         let label = label.into();
         debug_assert_eq!(
@@ -34,6 +39,7 @@ impl Table {
         self
     }
 
+    /// Append a footnote printed beneath the table.
     pub fn note(&mut self, s: impl Into<String>) -> &mut Self {
         self.notes.push(s.into());
         self

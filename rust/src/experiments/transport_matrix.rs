@@ -254,8 +254,8 @@ pub fn run_matrix(cfg: &MatrixCfg) -> Result<Table> {
         let ok = if gdr <= rdma { "OK" } else { "VIOLATION" };
         t.note(format!("paper ordering gdr <= rdma: {ok} ({gdr:.3} vs {rdma:.3} ms)"));
     }
-    if let Ok(e) = Arc::try_unwrap(exec) {
-        e.shutdown();
+    if !super::drain_executor(exec) && failed.is_none() {
+        anyhow::bail!("matrix still holds executor clones");
     }
     if let Some(e) = failed {
         return Err(e);

@@ -2,11 +2,13 @@
 //!
 //! ```text
 //! accelserve gen-artifacts --out-dir artifacts                   # offline AOT artifacts
-//! accelserve serve   --addr 0.0.0.0:7007 --streams 4 --batch 8 --flush-us 2000
+//! accelserve serve   --addr 0.0.0.0:7007 --streams 4 --batch 8 --flush-us 2000 \
+//!                    --model-batch tiny_resnet=8@2000            # per-model lane override
 //! accelserve gateway --addr 0.0.0.0:7008 --upstream host:7007    # live proxy
 //! accelserve client  --addr host:7007 --model tiny_resnet -n 100 -c 4
 //! accelserve matrix  --payload-kb 1024 --requests 160            # live transport matrix
 //! accelserve batchsweep --clients 8 --policies 1,8,8@2000        # transport x batch policy
+//! accelserve mixsweep --models tiny_mobilenet,tiny_resnet        # transport x model mix
 //! accelserve sim     --model ResNet50 --transport gdr -c 16 -n 300
 //! accelserve fig     --which 5 [--requests 300] [--csv]          # regen a figure
 //! accelserve tables  --which 2|3                                 # paper tables
@@ -14,7 +16,9 @@
 
 use std::sync::Arc;
 
-use accelserve::coordinator::{gateway_tcp, run_tcp, serve_tcp, BatchCfg, Executor, LoadCfg};
+use accelserve::coordinator::{
+    gateway_tcp, run_tcp, serve_tcp, BatchCfg, Executor, LoadCfg, ModelPolicy, SchedCfg,
+};
 use accelserve::experiments::figs;
 use accelserve::gpu::Sharing;
 use accelserve::models::zoo::PaperModel;
@@ -30,6 +34,7 @@ fn main() {
         Some("client") => cmd_client(&args[1..]),
         Some("matrix") => cmd_matrix(&args[1..]),
         Some("batchsweep") => cmd_batchsweep(&args[1..]),
+        Some("mixsweep") => cmd_mixsweep(&args[1..]),
         Some("sim") => cmd_sim(&args[1..]),
         Some("fig") => cmd_fig(&args[1..]),
         Some("tables") => cmd_tables(&args[1..]),
@@ -42,7 +47,7 @@ fn main() {
 }
 
 const HELP: &str = "accelserve — model serving with hardware-accelerated communication
-subcommands: gen-artifacts | serve | gateway | client | matrix | batchsweep | sim | fig | tables (see README.md)";
+subcommands: gen-artifacts | serve | gateway | client | matrix | batchsweep | mixsweep | sim | fig | tables (see README.md and docs/EXPERIMENTS.md)";
 
 /// Generate the serving artifacts (HLO text + manifest.json) offline —
 /// no Python/JAX required (the rust twin of `make artifacts`).
@@ -70,6 +75,34 @@ fn flag<'a>(args: &'a [String], key: &str) -> Option<&'a str> {
 
 fn flag_or<'a>(args: &'a [String], key: &str, default: &'a str) -> &'a str {
     flag(args, key).unwrap_or(default)
+}
+
+/// All values of a repeatable `--key value` flag, in order.
+fn flags_all<'a>(args: &'a [String], key: &str) -> Vec<&'a str> {
+    args.iter()
+        .enumerate()
+        .filter(|(_, a)| *a == key)
+        .filter_map(|(i, _)| args.get(i + 1))
+        .map(String::as_str)
+        .collect()
+}
+
+/// Parse every `--model-batch model=SPEC` occurrence (shared by
+/// `serve` and `mixsweep`).
+fn parse_model_batch(args: &[String]) -> Result<Vec<(String, ModelPolicy)>, String> {
+    let mut out = Vec::new();
+    for spec in flags_all(args, "--model-batch") {
+        match ModelPolicy::parse_entry(spec) {
+            Some(e) => out.push(e),
+            None => {
+                return Err(format!(
+                    "bad --model-batch {spec:?} (want model=N, model=N@FLUSH_US, \
+                     optionally *WEIGHT — e.g. tiny_resnet=8@2000 or tiny_mobilenet=4*2)"
+                ))
+            }
+        }
+    }
+    Ok(out)
 }
 
 /// Parse a comma-separated `--transports` list (shared by `matrix` and
@@ -241,6 +274,167 @@ fn cmd_batchsweep(a: &[String]) -> i32 {
     0
 }
 
+/// Transport × model-mix sweep: continuous multi-model batching on the
+/// live stack, or the paper-scale simulated twin with `--sim`
+/// (`accelserve mixsweep`).
+fn cmd_mixsweep(a: &[String]) -> i32 {
+    let csv = a.iter().any(|x| x == "--csv");
+    if a.iter().any(|x| x == "--sim") {
+        // Simulated twin: paper models over the modeled fabric. A
+        // scenario file sets the baseline (its "model_mix", sim
+        // "transport", clients, requests); explicit flags override it.
+        let mut models: Vec<&'static PaperModel> = Vec::new();
+        let mut transports: Vec<Transport> = vec![Transport::Tcp, Transport::Rdma, Transport::Gdr];
+        let mut clients = 4usize;
+        let mut requests = 200usize;
+        if let Some(path) = flag(a, "--config") {
+            match accelserve::config::load_scenario(path) {
+                Ok(sc) => {
+                    models = if sc.model_mix.is_empty() {
+                        vec![sc.model]
+                    } else {
+                        sc.model_mix.clone()
+                    };
+                    transports = vec![sc.transport];
+                    requests = sc.requests_per_client;
+                    // The scenario's client count is the total across
+                    // the mix; run_sim_mix takes clients per model.
+                    clients = (sc.n_clients / models.len().max(1)).max(1);
+                }
+                Err(e) => {
+                    eprintln!("config: {e:#}");
+                    return 2;
+                }
+            }
+        }
+        if let Some(names) = flag(a, "--models") {
+            models.clear();
+            for n in names.split(',') {
+                match PaperModel::by_name(n) {
+                    Some(m) => models.push(m),
+                    None => {
+                        eprintln!("unknown paper model {n}; see `accelserve tables --which 2`");
+                        return 2;
+                    }
+                }
+            }
+        } else if models.is_empty() {
+            models = vec![
+                PaperModel::by_name("MobileNetV3").expect("zoo model"),
+                PaperModel::by_name("ResNet50").expect("zoo model"),
+            ];
+        }
+        if let Some(list) = flag(a, "--transports") {
+            transports.clear();
+            for n in list.split(',') {
+                match Transport::by_name(n) {
+                    Some(t) => transports.push(t),
+                    None => {
+                        eprintln!("unknown sim transport {n} (local|tcp|rdma|gdr)");
+                        return 2;
+                    }
+                }
+            }
+        }
+        if let Some(n) = flag(a, "--clients").and_then(|v| v.parse::<usize>().ok()) {
+            clients = n.max(1);
+        }
+        if let Some(n) = flag(a, "--requests").and_then(|v| v.parse::<usize>().ok()) {
+            requests = n.max(1);
+        }
+        let t = accelserve::experiments::run_sim_mix(&models, &transports, clients, requests);
+        if csv {
+            print!("{}", t.to_csv());
+        } else {
+            print!("{}", t.render());
+        }
+        return 0;
+    }
+    let mut cfg = accelserve::experiments::MixCfg::default();
+    // A scenario file sets the baseline (clients, requests, pinned
+    // transport, per-model policies); explicit flags below override it.
+    if let Some(path) = flag(a, "--config") {
+        match accelserve::config::load_scenario(path) {
+            Ok(sc) => {
+                cfg.clients_per_model = sc.n_clients;
+                cfg.requests = sc.requests_per_client;
+                cfg.warmup = (sc.requests_per_client as f64 * sc.warmup_frac) as usize;
+                if let Some(lt) = sc.live_transport {
+                    cfg.transports = vec![lt];
+                }
+                // A config pins the default policy outright — including
+                // "max_batch": 1 (b1, batching off) — like batchsweep
+                // does; scenario defaults (max_batch 1, flush 0) mean a
+                // file without batching keys runs unbatched lanes.
+                cfg.policy = BatchCfg {
+                    max_batch: sc.max_batch.max(1),
+                    flush_us: sc.flush_us,
+                };
+                cfg.per_model = sc.model_batch.clone();
+            }
+            Err(e) => {
+                eprintln!("config: {e:#}");
+                return 2;
+            }
+        }
+    }
+    if let Some(list) = flag(a, "--models") {
+        cfg.models = list.split(',').map(str::to_string).collect();
+    }
+    if let Some(n) = flag(a, "--clients").and_then(|v| v.parse::<usize>().ok()) {
+        cfg.clients_per_model = n.max(1);
+    }
+    if let Some(n) = flag(a, "--requests").and_then(|v| v.parse::<usize>().ok()) {
+        cfg.requests = n.max(1);
+        cfg.warmup = (n / 10).max(2);
+    }
+    if let Some(n) = flag(a, "--streams").and_then(|v| v.parse::<usize>().ok()) {
+        cfg.streams = n.max(1);
+    }
+    if let Some(dir) = flag(a, "--artifacts") {
+        cfg.artifacts_dir = Some(dir.into());
+    }
+    if let Some(list) = flag(a, "--transports") {
+        match parse_transports(list) {
+            Ok(kinds) => cfg.transports = kinds,
+            Err(e) => {
+                eprintln!("{e}");
+                return 2;
+            }
+        }
+    }
+    if let Some(spec) = flag(a, "--policy") {
+        match BatchCfg::parse(spec) {
+            Some(p) => cfg.policy = p,
+            None => {
+                eprintln!("bad --policy {spec:?} (want N, or N@FLUSH_US like 8@2000)");
+                return 2;
+            }
+        }
+    }
+    match parse_model_batch(a) {
+        Ok(per_model) if per_model.is_empty() => {}
+        Ok(per_model) => cfg.per_model = per_model,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    }
+    let t = match accelserve::experiments::run_mix_sweep(&cfg) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("mixsweep: {e:#}");
+            return 1;
+        }
+    };
+    if csv {
+        print!("{}", t.to_csv());
+    } else {
+        print!("{}", t.render());
+    }
+    0
+}
+
 fn cmd_serve(a: &[String]) -> i32 {
     let addr = flag_or(a, "--addr", "127.0.0.1:7007");
     if let Some(tr) = flag(a, "--transport") {
@@ -279,7 +473,18 @@ fn cmd_serve(a: &[String]) -> i32 {
         max_batch: batch,
         flush_us,
     };
-    let exec = match Executor::start(dir, streams, policy, &[]) {
+    let per_model = match parse_model_batch(a) {
+        Ok(pm) => pm,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let sched = SchedCfg {
+        per_model: per_model.clone(),
+        ..SchedCfg::uniform(policy)
+    };
+    let exec = match Executor::start_with(dir, streams, sched, &[]) {
         Ok(e) => Arc::new(e),
         Err(e) => {
             eprintln!("executor: {e:#}");
@@ -288,8 +493,17 @@ fn cmd_serve(a: &[String]) -> i32 {
     };
     match serve_tcp(addr, exec) {
         Ok(h) => {
+            let overrides = if per_model.is_empty() {
+                String::new()
+            } else {
+                let specs: Vec<String> = per_model
+                    .iter()
+                    .map(|(m, p)| format!("{m}={}", p.label()))
+                    .collect();
+                format!(", overrides {}", specs.join(" "))
+            };
             println!(
-                "serving on {} ({streams} streams, batching {})",
+                "serving on {} ({streams} streams, batching {}{overrides})",
                 h.addr,
                 policy.label()
             );

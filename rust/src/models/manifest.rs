@@ -127,6 +127,15 @@ impl Manifest {
         self.dir.join(&entry.file)
     }
 
+    /// Distinct model names in the manifest, sorted — the menu of
+    /// servable models for multi-model experiments (`mixsweep`).
+    pub fn models(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.artifacts.iter().map(|a| a.model.clone()).collect();
+        v.sort();
+        v.dedup();
+        v
+    }
+
     /// Batched variants available for a model (the `N`s of its `_bN`
     /// artifacts), sorted ascending — the dynamic batcher's menu. A
     /// model with no batched variants returns only `[1]` (or an empty
@@ -185,6 +194,7 @@ mod tests {
         assert_eq!(a.output.shape, vec![1, 1000]);
         assert_eq!(m.hlo_path(a), PathBuf::from("/tmp/m_b1.hlo.txt"));
         assert_eq!(m.batch_sizes("m"), vec![1, 4]);
+        assert_eq!(m.models(), vec!["m".to_string()]);
     }
 
     #[test]

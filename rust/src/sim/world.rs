@@ -32,20 +32,30 @@ use crate::sim::time::Ns;
 /// One experiment configuration (§III-C experimental scenarios).
 #[derive(Debug, Clone)]
 pub struct Scenario {
+    /// The served model (every client, unless `model_mix` is set).
     pub model: &'static PaperModel,
+    /// Multi-model mix: when non-empty, client `c` serves
+    /// `model_mix[c % model_mix.len()]` instead of `model` — the
+    /// simulated twin of the live plane's continuous multi-model
+    /// batching workload (`accelserve mixsweep`).
+    pub model_mix: Vec<&'static PaperModel>,
     /// Gateway-to-server (or direct client-to-server) transport.
     pub transport: Transport,
     /// Proxied mode: the client-to-gateway hop transport. `None` = direct.
     pub client_hop: Option<Transport>,
+    /// Closed-loop client count.
     pub n_clients: usize,
+    /// Requests each client sends back-to-back.
     pub requests_per_client: usize,
     /// Clients submit raw camera frames (server preprocesses on GPU).
     pub raw_input: bool,
+    /// GPU sharing mode (multi-stream / multi-context / MPS, Fig 17).
     pub sharing: Sharing,
     /// Stream/context pool size. 0 = one per client.
     pub n_streams: usize,
     /// Client 0 runs at high CUDA stream priority (Fig 16).
     pub priority_client: bool,
+    /// Deterministic RNG seed (same seed → bit-identical run).
     pub seed: u64,
     /// Leading fraction of each client's requests dropped from stats.
     pub warmup_frac: f64,
@@ -63,6 +73,11 @@ pub struct Scenario {
     /// Live-plane flush deadline (µs): how long a batch head may wait
     /// for peers before the executor seals a partial batch.
     pub flush_us: u64,
+    /// Live-plane per-model batching overrides (the scenario
+    /// `model_batch` key): each model lane's policy and round-robin
+    /// weight in the continuous scheduler. Like `max_batch`, a live
+    /// knob the sim plane ignores.
+    pub model_batch: Vec<(String, crate::coordinator::ModelPolicy)>,
 }
 
 impl Scenario {
@@ -70,6 +85,7 @@ impl Scenario {
     pub fn direct(model: &'static PaperModel, transport: Transport) -> Scenario {
         Scenario {
             model,
+            model_mix: Vec::new(),
             transport,
             client_hop: None,
             n_clients: 1,
@@ -83,6 +99,7 @@ impl Scenario {
             live_transport: None,
             max_batch: 1,
             flush_us: 0,
+            model_batch: Vec::new(),
         }
     }
 
@@ -98,36 +115,43 @@ impl Scenario {
         }
     }
 
+    /// Set the number of closed-loop clients.
     pub fn with_clients(mut self, n: usize) -> Scenario {
         self.n_clients = n;
         self
     }
 
+    /// Set the per-client request count.
     pub fn with_requests(mut self, n: usize) -> Scenario {
         self.requests_per_client = n;
         self
     }
 
+    /// Toggle raw (server-preprocessed) vs preprocessed inputs.
     pub fn with_raw(mut self, raw: bool) -> Scenario {
         self.raw_input = raw;
         self
     }
 
+    /// Set the GPU sharing mode (Fig 17).
     pub fn with_sharing(mut self, s: Sharing) -> Scenario {
         self.sharing = s;
         self
     }
 
+    /// Set the stream/context pool size (0 = one per client).
     pub fn with_streams(mut self, n: usize) -> Scenario {
         self.n_streams = n;
         self
     }
 
+    /// Give client 0 high stream priority (Fig 16).
     pub fn with_priority_client(mut self, p: bool) -> Scenario {
         self.priority_client = p;
         self
     }
 
+    /// Set the deterministic RNG seed.
     pub fn with_seed(mut self, s: u64) -> Scenario {
         self.seed = s;
         self
@@ -138,6 +162,24 @@ impl Scenario {
         self.max_batch = max_batch.max(1);
         self.flush_us = flush_us;
         self
+    }
+
+    /// Multi-model workload: clients are assigned models round-robin
+    /// from `models` (client `c` serves `models[c % models.len()]`).
+    /// An empty list reverts to the single-model `model`.
+    pub fn with_model_mix(mut self, models: Vec<&'static PaperModel>) -> Scenario {
+        self.model_mix = models;
+        self
+    }
+
+    /// The effective per-client model list: `model_mix` when set,
+    /// otherwise the single `model`.
+    pub fn mix(&self) -> Vec<&'static PaperModel> {
+        if self.model_mix.is_empty() {
+            vec![self.model]
+        } else {
+            self.model_mix.clone()
+        }
     }
 
     fn effective_streams(&self) -> usize {
@@ -182,6 +224,17 @@ pub struct RunStats {
     pub copy_busy_s: f64,
     /// Events processed (simulator throughput metric for §Perf).
     pub events: u64,
+    /// Per-model aggregates `(model name, stats)` — one entry per
+    /// *distinct* model of [`Scenario::mix`], first-occurrence order
+    /// (listing a model twice in the mix weights its traffic, it does
+    /// not split its stats). For a single-model scenario this is one
+    /// entry equal to `all`.
+    pub per_model: Vec<(String, StageAgg)>,
+    /// Inference completions whose model differed from the previous
+    /// completion — the sim twin of the live executor's cross-model
+    /// interleave counter (nonzero = models were served concurrently,
+    /// not phase-by-phase).
+    pub interleaves: u64,
 }
 
 #[derive(Debug, Clone, Copy)]
@@ -248,13 +301,26 @@ pub struct World {
     gpu: GpuSim,
     reqs: Vec<Req>,
     sent_per_client: Vec<usize>,
-    /// Shared per-scenario GPU job shape (perf: one allocation total).
-    job_spec: Arc<JobSpec>,
+    /// Per mix-position index into `models` ([`Scenario::mix`] with
+    /// duplicates collapsed); client `c` serves position `c %
+    /// mix_assign.len()`, so listing a model twice weights its traffic
+    /// without splitting its stats.
+    mix_assign: Vec<usize>,
+    /// Distinct models of the mix, first-occurrence order.
+    models: Vec<&'static PaperModel>,
+    /// Shared per-model GPU job shapes, parallel to `models` (perf:
+    /// one allocation per model total).
+    job_specs: Vec<Arc<JobSpec>>,
+    /// Model index of the last completed inference (cross-model
+    /// interleave accounting).
+    last_infer_model: Option<usize>,
     stats: RunStats,
     events: u64,
 }
 
 impl World {
+    /// Build the world for one scenario (call [`World::run`] to drive
+    /// it; this seeds the RNG, the GPU model and the per-model specs).
     pub fn new(sc: Scenario) -> World {
         let gpu = GpuSim::new(
             GpuConfig::default(),
@@ -262,9 +328,33 @@ impl World {
             sc.effective_streams(),
             sc.seed,
         );
-        let job_spec = Arc::new(Self::build_job_spec(&sc));
+        // Collapse duplicate mix entries (a duplicated model weights
+        // its traffic share) onto one stats/spec slot per model.
+        let mut models: Vec<&'static PaperModel> = Vec::new();
+        let mut mix_assign = Vec::new();
+        for m in sc.mix() {
+            let idx = models
+                .iter()
+                .position(|d| d.name == m.name)
+                .unwrap_or_else(|| {
+                    models.push(m);
+                    models.len() - 1
+                });
+            mix_assign.push(idx);
+        }
+        let job_specs = models
+            .iter()
+            .map(|m| Arc::new(Self::build_job_spec(&sc, m)))
+            .collect();
+        let mut stats = RunStats::default();
+        for m in &models {
+            stats.per_model.push((m.name.to_string(), StageAgg::new()));
+        }
         World {
-            job_spec,
+            mix_assign,
+            models,
+            job_specs,
+            last_infer_model: None,
             rng: Rng::new(sc.seed),
             gpu,
             now: Ns::ZERO,
@@ -273,10 +363,21 @@ impl World {
             fabric: Fabric::new(),
             reqs: Vec::new(),
             sent_per_client: vec![0; sc.n_clients],
-            stats: RunStats::default(),
+            stats,
             events: 0,
             sc,
         }
+    }
+
+    /// Index into `models` (and `per_model` / `job_specs`) for
+    /// `client`'s model.
+    fn model_idx(&self, client: usize) -> usize {
+        self.mix_assign[client % self.mix_assign.len()]
+    }
+
+    /// The model `req` runs (clients are pinned to one model each).
+    fn model_of(&self, req: usize) -> &'static PaperModel {
+        self.models[self.model_idx(self.reqs[req].client)]
     }
 
     /// Run the scenario to completion and aggregate the Table I metrics.
@@ -328,8 +429,7 @@ impl World {
         }
     }
 
-    fn build_job_spec(sc: &Scenario) -> JobSpec {
-        let m = sc.model;
+    fn build_job_spec(sc: &Scenario, m: &PaperModel) -> JobSpec {
         let mut kernels = Vec::new();
         let mut boundary = 0;
         if sc.raw_input {
@@ -386,7 +486,7 @@ impl World {
             ..Default::default()
         });
 
-        let m = self.sc.model;
+        let m = self.models[self.model_idx(client)];
         let bytes = m.request_bytes(self.sc.raw_input);
         match (self.sc.transport, self.sc.client_hop) {
             (Transport::Local, _) => {
@@ -394,8 +494,8 @@ impl World {
                 self.reqs[req].t_at_server = self.now;
                 self.reqs[req].t_h2d_done = self.now;
                 let prio = self.prio_of(client);
-                self.gpu
-                    .submit_job(self.now, req, prio, self.job_spec.clone());
+                let spec = self.job_specs[self.model_idx(client)].clone();
+                self.gpu.submit_job(self.now, req, prio, spec);
             }
             (_, None) => {
                 // Direct connection: client -> server on the fabric.
@@ -421,7 +521,7 @@ impl World {
     fn on_req_at_gw(&mut self, req: usize) {
         // Gateway residence (forwarding decision + optional protocol
         // translation), then the gateway -> server hop.
-        let m = self.sc.model;
+        let m = self.model_of(req);
         let bytes = m.request_bytes(self.sc.raw_input);
         let res = PROXY_PARAMS.residence_us(bytes, self.sc.translated());
         self.reqs[req].cpu_us += res; // gateway CPU is busy for residence
@@ -436,7 +536,7 @@ impl World {
 
     fn on_req_at_server(&mut self, req: usize) {
         self.reqs[req].t_at_server = self.now;
-        let m = self.sc.model;
+        let m = self.model_of(req);
         if self.sc.transport.needs_gpu_copies() {
             // Fig 2(a) steps 3: stage into GPU memory via the copy engine.
             let bytes = m.request_bytes(self.sc.raw_input);
@@ -452,8 +552,8 @@ impl World {
     fn submit_job(&mut self, req: usize) {
         let client = self.reqs[req].client;
         let prio = self.prio_of(client);
-        self.gpu
-            .submit_job(self.now, req, prio, self.job_spec.clone());
+        let spec = self.job_specs[self.model_idx(client)].clone();
+        self.gpu.submit_job(self.now, req, prio, spec);
     }
 
     fn on_gpu_notify(&mut self, n: GpuNotify) {
@@ -467,11 +567,16 @@ impl World {
             }
             GpuNotify::InferDone { req } => {
                 self.reqs[req].t_infer_done = self.now;
+                let midx = self.model_idx(self.reqs[req].client);
+                if self.last_infer_model.is_some_and(|last| last != midx) {
+                    self.stats.interleaves += 1;
+                }
+                self.last_infer_model = Some(midx);
                 if !self.sc.raw_input {
                     self.reqs[req].t_preproc_done = self.reqs[req].t_h2d_done;
                 }
                 if self.sc.transport.needs_gpu_copies() {
-                    let bytes = self.sc.model.response_bytes();
+                    let bytes = self.model_of(req).response_bytes();
                     self.gpu.submit_copy(self.now, req, CopyDir::D2H, bytes);
                     self.reqs[req].cpu_us += 5.0;
                 } else {
@@ -487,7 +592,7 @@ impl World {
     }
 
     fn send_response(&mut self, req: usize) {
-        let bytes = self.sc.model.response_bytes();
+        let bytes = self.model_of(req).response_bytes();
         if self.sc.transport == Transport::Local {
             self.push(self.now, Ev::RespAtClient { req });
             return;
@@ -542,6 +647,8 @@ impl World {
         };
         if r.measured {
             self.stats.all.push(&rec);
+            let midx = self.model_idx(r.client);
+            self.stats.per_model[midx].1.push(&rec);
             if rec.priority {
                 self.stats.priority.push(&rec);
             } else {
@@ -713,6 +820,68 @@ mod tests {
         let b = quick(Scenario::direct(model("ResNet50"), Transport::Tcp).with_seed(7));
         assert_eq!(a.all.total.mean(), b.all.total.mean());
         assert_eq!(a.events, b.events);
+    }
+
+    #[test]
+    fn model_mix_serves_both_models_concurrently() {
+        // Two models, four clients each: every model collects its own
+        // measured requests, the mix interleaves on the stream pool
+        // (nonzero cross-model interleaves), and the heavier model's
+        // per-model latency exceeds the lighter one's.
+        let s = World::run(
+            Scenario::direct(model("MobileNetV3"), Transport::Gdr)
+                .with_model_mix(vec![model("MobileNetV3"), model("ResNet50")])
+                .with_clients(8)
+                .with_requests(40),
+        );
+        assert_eq!(s.per_model.len(), 2);
+        let (m_name, m_agg) = &s.per_model[0];
+        let (r_name, r_agg) = &s.per_model[1];
+        assert_eq!(m_name, "MobileNetV3");
+        assert_eq!(r_name, "ResNet50");
+        assert!(m_agg.n() > 0 && r_agg.n() > 0);
+        assert_eq!(m_agg.n() + r_agg.n(), s.all.n());
+        assert!(
+            r_agg.total.mean() > m_agg.total.mean(),
+            "ResNet50 ({}) should be slower than MobileNetV3 ({})",
+            r_agg.total.mean(),
+            m_agg.total.mean()
+        );
+        assert!(s.interleaves > 0, "mixed models never interleaved");
+    }
+
+    #[test]
+    fn duplicate_mix_entries_weight_traffic_without_splitting_stats() {
+        // ["R", "R", "M"] weights ResNet50 2:1 — its stats land in ONE
+        // entry (not two half-entries), and same-model back-to-back
+        // completions do not count as interleaves.
+        let s = World::run(
+            Scenario::direct(model("ResNet50"), Transport::Gdr)
+                .with_model_mix(vec![
+                    model("ResNet50"),
+                    model("ResNet50"),
+                    model("MobileNetV3"),
+                ])
+                .with_clients(6)
+                .with_requests(30),
+        );
+        assert_eq!(s.per_model.len(), 2, "duplicates must collapse");
+        let (r_name, r_agg) = &s.per_model[0];
+        let (m_name, m_agg) = &s.per_model[1];
+        assert_eq!(r_name, "ResNet50");
+        assert_eq!(m_name, "MobileNetV3");
+        assert_eq!(r_agg.n() + m_agg.n(), s.all.n());
+        // 4 of 6 clients serve ResNet50 under the 2:1 mix.
+        assert_eq!(r_agg.n(), 2 * m_agg.n());
+    }
+
+    #[test]
+    fn single_model_scenario_has_one_per_model_entry() {
+        let s = quick(Scenario::direct(model("ResNet50"), Transport::Tcp));
+        assert_eq!(s.per_model.len(), 1);
+        assert_eq!(s.per_model[0].0, "ResNet50");
+        assert_eq!(s.per_model[0].1.n(), s.all.n());
+        assert_eq!(s.interleaves, 0, "one model cannot interleave");
     }
 
     #[test]
