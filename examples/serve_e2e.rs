@@ -55,6 +55,7 @@ fn main() -> anyhow::Result<()> {
             let cfg = LoadCfg {
                 model: model.into(),
                 raw: false,
+                spans: false,
                 n_clients: clients,
                 requests_per_client: 60,
                 priority_client: false,
@@ -62,15 +63,15 @@ fn main() -> anyhow::Result<()> {
                 warmup: 5,
             };
             let s = run_tcp(addr, &cfg)?;
-            let mut t = s.all.total.clone();
+            let lat = s.all.total.summary();
             println!(
                 "{:<16} {:>5} {:>9} {:>10.1} {:>9.3} {:>9.3} {:>9.3} {:>9.3}",
                 format!("{model}/{label}"),
                 clients,
                 s.all.n(),
                 s.throughput_rps,
-                t.quantile(0.5),
-                s.all.total.mean(),
+                lat.p50,
+                lat.mean,
                 s.all.infer.mean(),
                 s.all.request.mean() + s.all.response.mean(),
             );
@@ -81,6 +82,7 @@ fn main() -> anyhow::Result<()> {
     let raw_cfg = LoadCfg {
         model: "tiny_resnet".into(),
         raw: true,
+        spans: false,
         n_clients: 2,
         requests_per_client: 40,
         priority_client: false,
@@ -104,6 +106,7 @@ fn main() -> anyhow::Result<()> {
     let req = protocol::Request {
         model: "tiny_resnet".into(),
         raw: true,
+        spans: false,
         prio: 0,
         payload: accelserve::models::zoo::WorkloadData::image(64 * 64 * 3, 3).bytes,
     }
@@ -119,6 +122,7 @@ fn main() -> anyhow::Result<()> {
         match protocol::Response::decode(&frame)? {
             protocol::Response::Ok { .. } => {}
             protocol::Response::Err(e) => anyhow::bail!("gdr server: {e}"),
+            other => anyhow::bail!("unexpected response: {other:?}"),
         }
     }
     println!(

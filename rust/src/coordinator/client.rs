@@ -1,7 +1,9 @@
 //! Closed-loop load generator (the paper's client): N client threads,
 //! each sending `requests` back-to-back inference requests and
 //! recording the Table I latency breakdown from its own clock plus the
-//! server-reported stage timings.
+//! server-reported stage timings — and, since protocol v2, the
+//! server's span timeline, collapsed per request into the nine-stage
+//! [`StageBreakdown`] and aggregated into [`LiveStats::spans`].
 
 use std::net::SocketAddr;
 use std::time::Instant;
@@ -11,10 +13,12 @@ use anyhow::{anyhow, bail, Result};
 use crate::metrics::stats::{ReqRecord, StageAgg};
 use crate::models::zoo::WorkloadData;
 use crate::sim::time::Ns;
+use crate::trace::{BreakdownAgg, StageBreakdown};
 use crate::transport::tcp::TcpTransport;
 use crate::transport::MsgTransport;
 
-use super::protocol::{Request, Response};
+use super::executor::ExecStats;
+use super::protocol::{self, Request, Response};
 
 /// Load-generation configuration.
 #[derive(Debug, Clone)]
@@ -22,6 +26,11 @@ pub struct LoadCfg {
     pub model: String,
     /// Send raw uint8 frames (server preprocesses) or f32 tensors.
     pub raw: bool,
+    /// Request span timelines ([`protocol::FLAG_SPANS`], protocol v2).
+    /// Off by default so legacy experiments measure under the exact v1
+    /// conditions (no span block on the wire, no extra server stamps);
+    /// `stagebreak` turns it on.
+    pub spans: bool,
     pub n_clients: usize,
     pub requests_per_client: usize,
     /// Client 0 gets high priority.
@@ -38,17 +47,43 @@ pub struct LiveStats {
     pub all: StageAgg,
     pub priority: StageAgg,
     pub normal: StageAgg,
+    /// Nine-stage span breakdowns (protocol v2). Empty when the server
+    /// answered with v1 span-less responses.
+    pub spans: BreakdownAgg,
     pub duration_s: f64,
     pub throughput_rps: f64,
     pub errors: usize,
 }
 
-/// Drive a closed loop over an arbitrary connected transport.
+/// One measured request: the Table I record plus, when the server
+/// returned a span timeline, its nine-stage breakdown.
+#[derive(Debug, Clone)]
+pub struct ClientRec {
+    pub rec: ReqRecord,
+    pub breakdown: Option<StageBreakdown>,
+}
+
+/// Query a server's executor counters over an open connection (the
+/// stats opcode, protocol v2). A v1 server answers with an error
+/// response, surfaced here as `Err`.
+pub fn fetch_stats(t: &mut dyn MsgTransport) -> Result<ExecStats> {
+    t.send(&protocol::encode_stats_request())?;
+    match Response::decode(&t.recv()?)? {
+        Response::Stats(s) => Ok(s),
+        Response::Err(e) => bail!("server rejected stats request: {e}"),
+        Response::Ok { .. } => bail!("server answered stats with an inference response"),
+    }
+}
+
+/// Drive a closed loop over an arbitrary connected transport. With
+/// [`LoadCfg::spans`] set, requests ask for span timelines
+/// ([`protocol::FLAG_SPANS`]); a span-less (v1) response simply yields
+/// records without breakdowns.
 pub fn run_client_loop(
     t: &mut dyn MsgTransport,
     cfg: &LoadCfg,
     client_idx: usize,
-) -> Result<Vec<ReqRecord>> {
+) -> Result<Vec<ClientRec>> {
     let prio = if cfg.priority_client && client_idx == 0 {
         10
     } else {
@@ -69,6 +104,7 @@ pub fn run_client_loop(
     let req = Request {
         model: cfg.model.clone(),
         raw: cfg.raw,
+        spans: cfg.spans,
         prio,
         payload,
     }
@@ -82,7 +118,8 @@ pub fn run_client_loop(
         let total = t0.elapsed();
         match Response::decode(&frame)? {
             Response::Err(e) => bail!("server error: {e}"),
-            Response::Ok { stages, .. } => {
+            Response::Stats(_) => bail!("unsolicited stats response"),
+            Response::Ok { stages, span, .. } => {
                 if i < cfg.warmup {
                     continue;
                 }
@@ -92,17 +129,21 @@ pub fn run_client_loop(
                 // processing (the paper's ZeroMQ accounting, §III-B);
                 // split evenly between request and response paths.
                 let net_ns = total_ns.saturating_sub(server_ns);
-                out.push(ReqRecord {
-                    client: client_idx,
-                    total: Ns(total_ns),
-                    request: Ns(net_ns / 2),
-                    response: Ns(net_ns - net_ns / 2),
-                    copy_h2d: Ns(0),
-                    copy_d2h: Ns(0),
-                    preproc: Ns(stages.preproc_ns),
-                    infer: Ns(stages.queue_ns + stages.infer_ns),
-                    cpu_us: 0.0,
-                    priority: prio > 0,
+                out.push(ClientRec {
+                    rec: ReqRecord {
+                        client: client_idx,
+                        total: Ns(total_ns),
+                        request: Ns(net_ns / 2),
+                        response: Ns(net_ns - net_ns / 2),
+                        copy_h2d: Ns(0),
+                        copy_d2h: Ns(0),
+                        preproc: Ns(stages.preproc_ns),
+                        infer: Ns(stages.queue_ns + stages.infer_ns),
+                        cpu_us: 0.0,
+                        priority: prio > 0,
+                    },
+                    breakdown: span
+                        .map(|block| StageBreakdown::from_span(&block, total_ns)),
                 });
             }
         }
@@ -121,11 +162,11 @@ where
     F: Fn(usize) -> Result<T> + Sync,
 {
     let t_start = Instant::now();
-    let results: Vec<Result<Vec<ReqRecord>>> = std::thread::scope(|s| {
+    let results: Vec<Result<Vec<ClientRec>>> = std::thread::scope(|s| {
         let mut handles = Vec::new();
         for c in 0..cfg.n_clients {
             let connect = &connect;
-            handles.push(s.spawn(move || -> Result<Vec<ReqRecord>> {
+            handles.push(s.spawn(move || -> Result<Vec<ClientRec>> {
                 let mut t = connect(c)?;
                 run_client_loop(&mut t, cfg, c)
             }));
@@ -146,12 +187,16 @@ where
                 // A successful client completed its whole closed loop
                 // (warmup requests were served even though unrecorded).
                 served += cfg.requests_per_client;
-                for r in &records {
+                for cr in &records {
+                    let r = &cr.rec;
                     stats.all.push(r);
                     if r.priority {
                         stats.priority.push(r);
                     } else {
                         stats.normal.push(r);
+                    }
+                    if let Some(b) = &cr.breakdown {
+                        stats.spans.push(b, r.total.0);
                     }
                 }
             }

@@ -58,6 +58,7 @@ use anyhow::{anyhow, Result};
 
 use crate::models::manifest::Manifest;
 use crate::runtime::{Engine, TensorBuf};
+use crate::trace::{SpanRec, Stamp};
 
 use super::protocol::StageNs;
 
@@ -68,12 +69,16 @@ pub struct Job {
     pub prio: u8,
     pub payload: TensorBuf,
     pub reply: mpsc::Sender<Result<Done>>,
+    /// The request's trace span (enqueue/gather/seal/dispatch and the
+    /// engine stamps are marked as the job moves through the pipeline).
+    span: SpanRec,
     enqueued: Instant,
     seq: u64,
 }
 
-/// Completed job: output plus server-side stage timings and the size of
-/// the executed batch this job rode in (1 = ran alone).
+/// Completed job: output plus server-side stage timings, the size of
+/// the executed batch this job rode in (1 = ran alone), and the
+/// request's stamped trace span.
 #[derive(Debug, Clone)]
 pub struct Done {
     pub output: Vec<f32>,
@@ -81,6 +86,59 @@ pub struct Done {
     /// How many requests were fused into the executable call that
     /// produced this output (the `_bN` artifact's N).
     pub batch: usize,
+    /// The span timeline stamped through lane/scheduler/engine; the
+    /// server marks [`Stamp::ReplySend`] and ships it to the client
+    /// when the request asked for spans (protocol v2).
+    pub span: SpanRec,
+}
+
+/// Why a lane's head group sealed — the per-lane counters the stats
+/// opcode reports, indexed in this order (see [`SEAL_REASON_NAMES`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(usize)]
+pub enum SealReason {
+    /// Unbatchable head (raw / no batched artifact / `max_batch` 1).
+    Single = 0,
+    /// The gather reached the policy cap.
+    Full = 1,
+    /// Opportunistic policy (`flush_us` 0): took what was queued.
+    Opportunistic = 2,
+    /// The head's flush deadline expired.
+    Deadline = 3,
+    /// Incompatible work waited in the lane while a stream sat idle.
+    Blocked = 4,
+}
+
+/// Number of seal reasons (width of the per-lane counter array).
+pub const N_SEAL_REASONS: usize = 5;
+
+/// Reason names, indexed like the counters.
+pub const SEAL_REASON_NAMES: [&str; N_SEAL_REASONS] =
+    ["single", "full", "opportunistic", "deadline", "blocked"];
+
+/// One lane's counter snapshot (the stats opcode's per-lane row).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LaneStats {
+    pub model: String,
+    /// Jobs executed for this model.
+    pub jobs: u64,
+    /// Executable calls issued for this model (`jobs / calls` = mean
+    /// achieved batch).
+    pub calls: u64,
+    /// Jobs currently queued in the lane, not yet sealed.
+    pub depth: u32,
+    /// Sealed-batch counts by [`SealReason`].
+    pub sealed: [u64; N_SEAL_REASONS],
+}
+
+/// Executor-wide counter snapshot ([`Executor::stats`], carried over
+/// the wire by the stats opcode).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct ExecStats {
+    /// Dispatches that switched model vs the previous dispatch.
+    pub interleaves: u64,
+    /// Per-lane counters, sorted by model name.
+    pub lanes: Vec<LaneStats>,
 }
 
 struct Queued(Job);
@@ -295,6 +353,8 @@ struct Lane {
     cfg: BatchCfg,
     weight: u32,
     credits: u32,
+    /// Sealed-batch counts by [`SealReason`] (stats opcode).
+    sealed: [u64; N_SEAL_REASONS],
 }
 
 /// Mutable scheduler state (behind `Shared::sched`): the lanes, the
@@ -346,6 +406,7 @@ impl Shared {
                 cfg: pol.cfg,
                 weight: pol.weight.max(1),
                 credits: pol.weight.max(1),
+                sealed: [0; N_SEAL_REASONS],
             }
         })
     }
@@ -461,7 +522,9 @@ impl Executor {
     /// Submit a job; the reply arrives on the returned channel. A full
     /// lane (more than [`SchedCfg::queue_cap`] queued jobs for this
     /// model) rejects the job immediately on that channel instead of
-    /// queueing it.
+    /// queueing it. The job gets a fresh trace span starting now; use
+    /// [`Executor::submit_traced`] to carry server-side receive stamps
+    /// into the executor.
     pub fn submit(
         &self,
         model: &str,
@@ -469,13 +532,29 @@ impl Executor {
         prio: u8,
         payload: TensorBuf,
     ) -> mpsc::Receiver<Result<Done>> {
+        self.submit_traced(model, raw, prio, payload, SpanRec::begin())
+    }
+
+    /// [`Executor::submit`] with a caller-provided trace span (the
+    /// server passes the span it began at the transport boundary, so
+    /// the timeline covers receive + parse as well).
+    pub fn submit_traced(
+        &self,
+        model: &str,
+        raw: bool,
+        prio: u8,
+        payload: TensorBuf,
+        mut span: SpanRec,
+    ) -> mpsc::Receiver<Result<Done>> {
         let (tx, rx) = mpsc::channel();
+        span.mark(Stamp::Enqueue);
         let job = Job {
             model: model.to_string(),
             raw,
             prio,
             payload,
             reply: tx,
+            span,
             enqueued: Instant::now(),
             seq: self.shared.seq.fetch_add(1, Ordering::Relaxed),
         };
@@ -504,6 +583,20 @@ impl Executor {
         payload: TensorBuf,
     ) -> Result<Done> {
         self.submit(model, raw, prio, payload)
+            .recv()
+            .map_err(|_| anyhow!("executor dropped the job"))?
+    }
+
+    /// Submit with a caller-provided trace span and wait.
+    pub fn infer_traced(
+        &self,
+        model: &str,
+        raw: bool,
+        prio: u8,
+        payload: TensorBuf,
+        span: SpanRec,
+    ) -> Result<Done> {
+        self.submit_traced(model, raw, prio, payload, span)
             .recv()
             .map_err(|_| anyhow!("executor dropped the job"))?
     }
@@ -543,6 +636,35 @@ impl Executor {
     /// serialized phases.
     pub fn interleave_count(&self) -> u64 {
         self.shared.interleaves.load(Ordering::Relaxed)
+    }
+
+    /// Snapshot every per-lane counter (jobs, executable calls, queue
+    /// depth, sealed-batch reasons) plus the interleave count — what
+    /// the stats opcode serves over the wire. Lanes are sorted by model
+    /// name; the per-model job/call counters are consistent with
+    /// [`Executor::model_batch_counters`] by construction (same map).
+    pub fn stats(&self) -> ExecStats {
+        let s = self.shared.sched.lock().unwrap();
+        let counters = self.shared.counters.lock().unwrap();
+        let mut lanes: Vec<LaneStats> = s
+            .lanes
+            .iter()
+            .map(|(model, lane)| {
+                let (jobs, calls) = counters.get(model).copied().unwrap_or((0, 0));
+                LaneStats {
+                    model: model.clone(),
+                    jobs,
+                    calls,
+                    depth: lane.heap.len() as u32,
+                    sealed: lane.sealed,
+                }
+            })
+            .collect();
+        lanes.sort_by(|a, b| a.model.cmp(&b.model));
+        ExecStats {
+            interleaves: self.shared.interleaves.load(Ordering::Relaxed),
+            lanes,
+        }
     }
 
     /// Stop the scheduler and workers and join them. Sealed batches
@@ -694,7 +816,11 @@ fn pick_and_seal(s: &mut Sched, manifest: &Manifest, now: Instant) -> Option<Vec
 /// overtake the gather.
 fn try_seal(lane: &mut Lane, manifest: &Manifest, now: Instant) -> Option<Vec<Job>> {
     let head_prio = lane.heap.peek()?.0.prio;
-    let head = lane.heap.pop().unwrap().0;
+    let mut head = lane.heap.pop().unwrap().0;
+    // First consideration for a gather: the trace boundary between
+    // lane-queue and gather-wait (first write wins, so an aborted
+    // gather that re-forms later keeps the original stamp).
+    head.span.mark(Stamp::GatherStart);
     let batchable = !head.raw && matches!(head.payload, TensorBuf::F32(_));
     let cap = if batchable {
         gather_cap(manifest, &head.model, false, lane.cfg)
@@ -702,6 +828,8 @@ fn try_seal(lane: &mut Lane, manifest: &Manifest, now: Instant) -> Option<Vec<Jo
         1
     };
     if cap <= 1 {
+        head.span.mark(Stamp::Seal);
+        lane.sealed[SealReason::Single as usize] += 1;
         return Some(vec![head]);
     }
     let mut group = vec![head];
@@ -711,7 +839,8 @@ fn try_seal(lane: &mut Lane, manifest: &Manifest, now: Instant) -> Option<Vec<Jo
     while group.len() < cap {
         match lane.heap.peek() {
             Some(q) if q.0.prio == head_prio => {
-                let j = lane.heap.pop().unwrap().0;
+                let mut j = lane.heap.pop().unwrap().0;
+                j.span.mark(Stamp::GatherStart);
                 if !j.raw
                     && j.payload.len() == group[0].payload.len()
                     && matches!(j.payload, TensorBuf::F32(_))
@@ -725,20 +854,35 @@ fn try_seal(lane: &mut Lane, manifest: &Manifest, now: Instant) -> Option<Vec<Jo
         }
     }
     let blocked_work = !spill.is_empty() || !lane.heap.is_empty();
-    let seal = group.len() >= cap
-        || lane.cfg.flush_us == 0
-        || now >= flush_deadline(&group[0], lane.cfg)
-        || blocked_work;
+    let reason = if group.len() >= cap {
+        Some(SealReason::Full)
+    } else if lane.cfg.flush_us == 0 {
+        Some(SealReason::Opportunistic)
+    } else if now >= flush_deadline(&group[0], lane.cfg) {
+        Some(SealReason::Deadline)
+    } else if blocked_work {
+        Some(SealReason::Blocked)
+    } else {
+        None
+    };
     for q in spill {
         lane.heap.push(q);
     }
-    if seal {
-        Some(group)
-    } else {
-        for j in group {
-            lane.heap.push(Queued(j));
+    match reason {
+        Some(r) => {
+            lane.sealed[r as usize] += 1;
+            let t_seal = Instant::now();
+            for j in &mut group {
+                j.span.mark_at(Stamp::Seal, t_seal);
+            }
+            Some(group)
         }
-        None
+        None => {
+            for j in group {
+                lane.heap.push(Queued(j));
+            }
+            None
+        }
     }
 }
 
@@ -810,45 +954,66 @@ fn run_jobs(engine: &Engine, mut jobs: Vec<Job>, sh: &Shared) {
     }
 }
 
-fn run_chunk(engine: &Engine, jobs: Vec<Job>) {
+fn run_chunk(engine: &Engine, mut jobs: Vec<Job>) {
+    // Chunk execution starts now: the trace boundary between
+    // dispatch-wait (rendezvous + earlier chunks of the same sealed
+    // batch) and the engine stages.
     let t_deq = Instant::now();
     let queue_ns: Vec<u64> = jobs
-        .iter()
-        .map(|j| t_deq.duration_since(j.enqueued).as_nanos() as u64)
+        .iter_mut()
+        .map(|j| {
+            j.span.mark_at(Stamp::Dispatch, t_deq);
+            t_deq.duration_since(j.enqueued).as_nanos() as u64
+        })
         .collect();
 
     if jobs.len() == 1 && jobs[0].raw {
         // Two-stage raw pipeline: preprocess artifact, then batch-1 model
         // (separately timed, like the paper's preprocessing stage).
-        let job = &jobs[0];
+        let Job {
+            model,
+            payload,
+            reply,
+            mut span,
+            ..
+        } = jobs.pop().expect("one raw job");
         let t0 = Instant::now();
-        let pre = match &job.payload {
+        let pre = match &payload {
             // U8Region is the GDR zero-copy case: the preprocess
             // artifact reads straight out of the registered region.
             TensorBuf::U8(_) | TensorBuf::U8Region(_) => {
-                engine.infer("preprocess", &job.payload)
+                engine.infer_timed("preprocess", &payload)
             }
             TensorBuf::F32(_) => Err(anyhow!("raw job with non-u8 payload")),
         };
         match pre {
             Err(e) => {
-                let _ = jobs[0].reply.send(Err(e));
+                let _ = reply.send(Err(e));
             }
-            Ok(pre) => {
+            Ok((pre, tm_pre)) => {
+                // Staging the raw frame onto the device is the
+                // preprocess call's literal build.
+                span.mark_after(Stamp::H2dDone, t0, tm_pre.h2d_ns);
                 let t1 = Instant::now();
-                let name = format!("{}_b1", job.model);
-                let out = engine.infer(&name, &TensorBuf::F32(pre));
+                span.mark_at(Stamp::PreprocDone, t1);
+                let name = format!("{model}_b1");
+                let out = engine.infer_timed(&name, &TensorBuf::F32(pre));
                 let t2 = Instant::now();
-                let done = out.map(|output| Done {
-                    output,
-                    stages: StageNs {
-                        queue_ns: queue_ns[0],
-                        preproc_ns: (t1 - t0).as_nanos() as u64,
-                        infer_ns: (t2 - t1).as_nanos() as u64,
-                    },
-                    batch: 1,
+                let done = out.map(|(output, tm)| {
+                    span.mark_after(Stamp::InferDone, t1, tm.h2d_ns + tm.compute_ns);
+                    span.mark_at(Stamp::D2hDone, t2);
+                    Done {
+                        output,
+                        stages: StageNs {
+                            queue_ns: queue_ns[0],
+                            preproc_ns: (t1 - t0).as_nanos() as u64,
+                            infer_ns: (t2 - t1).as_nanos() as u64,
+                        },
+                        batch: 1,
+                        span,
+                    }
                 });
-                let _ = jobs[0].reply.send(done);
+                let _ = reply.send(done);
             }
         }
         return;
@@ -875,7 +1040,7 @@ fn run_chunk(engine: &Engine, jobs: Vec<Job>) {
         }
     }
     let t1 = Instant::now();
-    let res = engine.infer(&name, &TensorBuf::F32(flat));
+    let res = engine.infer_timed(&name, &TensorBuf::F32(flat));
     let infer_ns = t1.elapsed().as_nanos() as u64;
     match res {
         Err(e) => {
@@ -884,10 +1049,21 @@ fn run_chunk(engine: &Engine, jobs: Vec<Job>) {
                 let _ = j.reply.send(Err(anyhow!("{msg}")));
             }
         }
-        Ok(out) => {
+        Ok((out, tm)) => {
+            // Row gather (dispatch -> t1) plus the literal build is the
+            // chunk's H2D stage; the fetch-and-scatter end is D2H.
+            let t_h2d = t1 + Duration::from_nanos(tm.h2d_ns);
+            let t_infer = t_h2d + Duration::from_nanos(tm.compute_ns);
+            let t_d2h = Instant::now();
             let per = out.len() / b;
-            for (i, j) in jobs.iter().enumerate() {
-                let _ = j.reply.send(Ok(Done {
+            for (i, j) in jobs.into_iter().enumerate() {
+                let Job {
+                    reply, mut span, ..
+                } = j;
+                span.mark_at(Stamp::H2dDone, t_h2d);
+                span.mark_at(Stamp::InferDone, t_infer);
+                span.mark_at(Stamp::D2hDone, t_d2h);
+                let _ = reply.send(Ok(Done {
                     output: out[i * per..(i + 1) * per].to_vec(),
                     stages: StageNs {
                         queue_ns: queue_ns[i],
@@ -895,6 +1071,7 @@ fn run_chunk(engine: &Engine, jobs: Vec<Job>) {
                         infer_ns,
                     },
                     batch: b,
+                    span,
                 }));
             }
         }
@@ -1028,6 +1205,7 @@ mod tests {
                 prio,
                 payload: TensorBuf::F32(vec![]),
                 reply: tx.clone(),
+                span: SpanRec::begin(),
                 enqueued: Instant::now(),
                 seq,
             })
@@ -1041,6 +1219,78 @@ mod tests {
             .map(|q| (q.0.prio, q.0.seq))
             .collect();
         assert_eq!(order, vec![(5, 1), (5, 3), (0, 0), (0, 2)]);
+    }
+
+    /// Seal reasons and span stamps without an engine: drive `try_seal`
+    /// directly and watch the lane counters plus the per-job stamps.
+    #[test]
+    fn try_seal_counts_reasons_and_stamps_spans() {
+        let manifest = menu();
+        let (tx, _rx) = mpsc::channel();
+        let mut seq = 0u64;
+        let mut mk = |enq: Instant| {
+            seq += 1;
+            Queued(Job {
+                model: "m".to_string(),
+                raw: false,
+                prio: 0,
+                payload: TensorBuf::F32(vec![0.0; 4]),
+                reply: tx.clone(),
+                span: SpanRec::begin_at(enq),
+                enqueued: enq,
+                seq,
+            })
+        };
+        let mut lane = Lane {
+            heap: BinaryHeap::new(),
+            cfg: BatchCfg::deadline(4, 1_000_000), // 1s: never expires here
+            weight: 1,
+            credits: 1,
+            sealed: [0; N_SEAL_REASONS],
+        };
+        let now = Instant::now();
+        // A lone job far from its deadline holds for peers: no seal,
+        // and the job goes back without a Seal stamp.
+        lane.heap.push(mk(now));
+        assert!(try_seal(&mut lane, &manifest, now).is_none());
+        assert_eq!(lane.heap.len(), 1);
+        assert!(!lane.heap.peek().unwrap().0.span.is_set(Stamp::Seal));
+        assert!(
+            lane.heap.peek().unwrap().0.span.is_set(Stamp::GatherStart),
+            "considered once: gather stamp taken"
+        );
+        // Filling to the cap seals Full and stamps every member.
+        for _ in 0..3 {
+            lane.heap.push(mk(now));
+        }
+        let batch = try_seal(&mut lane, &manifest, now).expect("full group seals");
+        assert_eq!(batch.len(), 4);
+        assert_eq!(lane.sealed[SealReason::Full as usize], 1);
+        for j in &batch {
+            let gather = j.span.get(Stamp::GatherStart).unwrap();
+            let seal = j.span.get(Stamp::Seal).unwrap();
+            assert!(gather <= seal, "gather {gather} > seal {seal}");
+        }
+        // An expired deadline seals a partial group as Deadline.
+        lane.cfg = BatchCfg::deadline(4, 1); // 1µs flush
+        lane.heap.push(mk(now));
+        std::thread::sleep(Duration::from_millis(2));
+        assert!(try_seal(&mut lane, &manifest, Instant::now()).is_some());
+        assert_eq!(lane.sealed[SealReason::Deadline as usize], 1);
+        // An unbatchable policy seals Single.
+        lane.cfg = BatchCfg::none();
+        lane.heap.push(mk(now));
+        assert!(try_seal(&mut lane, &manifest, now).is_some());
+        assert_eq!(lane.sealed[SealReason::Single as usize], 1);
+        // Opportunistic policy seals whatever is queued.
+        lane.cfg = BatchCfg::opportunistic(4);
+        lane.heap.push(mk(now));
+        lane.heap.push(mk(now));
+        assert_eq!(
+            try_seal(&mut lane, &manifest, now).expect("seals").len(),
+            2
+        );
+        assert_eq!(lane.sealed[SealReason::Opportunistic as usize], 1);
     }
 
     /// WRR fairness without an engine: drive `pick_and_seal` directly
@@ -1067,6 +1317,7 @@ mod tests {
                     prio: 0,
                     payload: TensorBuf::F32(vec![0.0; 4]),
                     reply: tx.clone(),
+                    span: SpanRec::begin(),
                     enqueued: Instant::now(),
                     seq,
                 }));
@@ -1079,6 +1330,7 @@ mod tests {
                     cfg: BatchCfg::opportunistic(2),
                     weight: 1,
                     credits: 1,
+                    sealed: [0; N_SEAL_REASONS],
                 },
             );
         }
@@ -1118,6 +1370,7 @@ mod tests {
                     prio: 0,
                     payload: TensorBuf::F32(vec![0.0; 4]),
                     reply: tx.clone(),
+                    span: SpanRec::begin(),
                     enqueued: Instant::now(),
                     seq: i as u64,
                 }));
@@ -1129,6 +1382,7 @@ mod tests {
                     cfg: BatchCfg::none(),
                     weight,
                     credits: weight,
+                    sealed: [0; N_SEAL_REASONS],
                 },
             );
         }

@@ -16,7 +16,10 @@ pub mod gateway;
 pub mod protocol;
 pub mod server;
 
-pub use client::{run_on, run_tcp, LiveStats, LoadCfg};
-pub use executor::{BatchCfg, Done, Executor, ModelPolicy, SchedCfg};
+pub use client::{fetch_stats, run_on, run_tcp, ClientRec, LiveStats, LoadCfg};
+pub use executor::{
+    BatchCfg, Done, ExecStats, Executor, LaneStats, ModelPolicy, SchedCfg, SealReason,
+    N_SEAL_REASONS, SEAL_REASON_NAMES,
+};
 pub use gateway::{gateway_on, gateway_tcp, GatewayHandle, GatewayLoop};
 pub use server::{handle_conn, serve_on, serve_tcp, ServeLoop, ServerHandle};

@@ -7,21 +7,54 @@
 //!
 //! ```text
 //! Request:  [op u8][flags u8][prio u8][name_len u8][name][payload]
-//! Response: [status u8][queue_ns u64][preproc_ns u64][infer_ns u64][payload]
+//! Response: status 0 (v1 Ok):
+//!             [0][queue_ns u64][preproc_ns u64][infer_ns u64][payload]
+//!           status 1 (Err): [1][utf8 message]
+//!           status 2 (v2 Ok + span): [2][queue_ns][preproc_ns][infer_ns]
+//!             [span block][payload]   (see `trace::wire`)
+//!           status 3 (Stats): [3][ver][interleaves u64][n u8][lanes...]
 //! ```
+//!
+//! # Protocol v2 and compatibility
+//!
+//! v2 adds the request flag [`FLAG_SPANS`] and the stats opcode
+//! [`OP_STATS`], both *opt-in*, so the two directions stay mutually
+//! compatible:
+//!
+//! * a **v1 client against a v2 server** never sets `FLAG_SPANS`, so
+//!   the server answers with a status-0 frame — byte-identical to v1;
+//! * a **v2 client against a v1 server** sets a flag bit the old
+//!   server ignores and gets a status-0 frame back, which the v2
+//!   decoder still accepts (span absent).
+//!
+//! `tests/trace_protocol.rs` pins both directions.
 
 use anyhow::{bail, Result};
 
-/// Request opcodes.
+use crate::trace::wire::decode_span_block;
+use crate::trace::{SpanBlock, SpanRec};
+
+use super::executor::{ExecStats, LaneStats, N_SEAL_REASONS};
+
+/// Request opcode: run inference (the v1 opcode).
 pub const OP_INFER: u8 = 1;
+/// Request opcode (v2): snapshot the executor's per-lane counters.
+/// Frame is the 4-byte header only (`[OP_STATS][0][0][0]`).
+pub const OP_STATS: u8 = 2;
 /// flags bit 0: payload is a raw uint8 camera frame (server preprocesses).
 pub const FLAG_RAW: u8 = 1;
+/// flags bit 1 (v2): client asks for the span timeline in the response.
+pub const FLAG_SPANS: u8 = 2;
+/// Stats response wire version.
+pub const STATS_VER: u8 = 1;
 
 /// A parsed inference request.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Request {
     pub model: String,
     pub raw: bool,
+    /// Ask the server to return the request's span timeline (v2).
+    pub spans: bool,
     pub prio: u8,
     pub payload: Vec<u8>,
 }
@@ -33,7 +66,22 @@ pub struct Request {
 pub struct RequestMeta {
     pub model: String,
     pub raw: bool,
+    /// The client set [`FLAG_SPANS`].
+    pub spans: bool,
     pub prio: u8,
+}
+
+/// Encode a stats request frame (v2): header only, no payload.
+pub fn encode_stats_request() -> Vec<u8> {
+    vec![OP_STATS, 0, 0, 0]
+}
+
+/// Opcode of a request frame (for dispatch before full parsing).
+pub fn request_opcode(buf: &[u8]) -> Result<u8> {
+    match buf.first() {
+        Some(&op) => Ok(op),
+        None => bail!("empty request frame"),
+    }
 }
 
 /// Parse the request header from a frame, returning the metadata and
@@ -54,6 +102,7 @@ pub fn split_header(buf: &[u8]) -> Result<(RequestMeta, usize)> {
         RequestMeta {
             model,
             raw: buf[1] & FLAG_RAW != 0,
+            spans: buf[1] & FLAG_SPANS != 0,
             prio: buf[2],
         },
         4 + name_len,
@@ -66,7 +115,14 @@ impl Request {
         assert!(name.len() <= u8::MAX as usize, "model name too long");
         let mut buf = Vec::with_capacity(4 + name.len() + self.payload.len());
         buf.push(OP_INFER);
-        buf.push(if self.raw { FLAG_RAW } else { 0 });
+        let mut flags = 0u8;
+        if self.raw {
+            flags |= FLAG_RAW;
+        }
+        if self.spans {
+            flags |= FLAG_SPANS;
+        }
+        buf.push(flags);
         buf.push(self.prio);
         buf.push(name.len() as u8);
         buf.extend_from_slice(name);
@@ -79,6 +135,7 @@ impl Request {
         Ok(Request {
             model: meta.model,
             raw: meta.raw,
+            spans: meta.spans,
             prio: meta.prio,
             payload: buf[payload_off..].to_vec(),
         })
@@ -106,19 +163,36 @@ impl StageNs {
 /// A parsed response.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Response {
-    Ok { stages: StageNs, payload: Vec<u8> },
+    /// Inference result. `span` is present iff the client asked for the
+    /// timeline ([`FLAG_SPANS`]) *and* the server speaks v2 — its
+    /// presence selects the status-2 encoding, its absence the
+    /// v1-identical status-0 encoding.
+    Ok {
+        stages: StageNs,
+        span: Option<SpanBlock>,
+        payload: Vec<u8>,
+    },
     Err(String),
+    /// Executor per-lane counter snapshot (v2, answer to [`OP_STATS`]).
+    Stats(ExecStats),
 }
 
 impl Response {
     pub fn encode(&self) -> Vec<u8> {
         match self {
-            Response::Ok { stages, payload } => {
+            Response::Ok {
+                stages,
+                span,
+                payload,
+            } => {
                 let mut buf = Vec::with_capacity(25 + payload.len());
-                buf.push(0u8);
+                buf.push(if span.is_some() { 2u8 } else { 0u8 });
                 buf.extend_from_slice(&stages.queue_ns.to_le_bytes());
                 buf.extend_from_slice(&stages.preproc_ns.to_le_bytes());
                 buf.extend_from_slice(&stages.infer_ns.to_le_bytes());
+                if let Some(block) = span {
+                    buf.extend_from_slice(&block.encode());
+                }
                 buf.extend_from_slice(payload);
                 buf
             }
@@ -128,6 +202,7 @@ impl Response {
                 buf.extend_from_slice(msg.as_bytes());
                 buf
             }
+            Response::Stats(stats) => encode_stats(stats),
         }
     }
 
@@ -136,28 +211,114 @@ impl Response {
             bail!("empty response frame");
         }
         match buf[0] {
-            0 => {
+            status @ (0 | 2) => {
                 if buf.len() < 25 {
                     bail!("short ok response");
                 }
                 let u = |i: usize| {
                     u64::from_le_bytes(buf[i..i + 8].try_into().expect("8 bytes"))
                 };
+                let stages = StageNs {
+                    queue_ns: u(1),
+                    preproc_ns: u(9),
+                    infer_ns: u(17),
+                };
+                let (span, payload_off) = if status == 2 {
+                    let (block, used) = decode_span_block(&buf[25..])?;
+                    (Some(block), 25 + used)
+                } else {
+                    (None, 25)
+                };
                 Ok(Response::Ok {
-                    stages: StageNs {
-                        queue_ns: u(1),
-                        preproc_ns: u(9),
-                        infer_ns: u(17),
-                    },
-                    payload: buf[25..].to_vec(),
+                    stages,
+                    span,
+                    payload: buf[payload_off..].to_vec(),
                 })
             }
             1 => Ok(Response::Err(
                 String::from_utf8_lossy(&buf[1..]).to_string(),
             )),
+            3 => Ok(Response::Stats(decode_stats(buf)?)),
             s => bail!("unknown response status {s}"),
         }
     }
+}
+
+/// Convert a live span record into the decoded-block form carried by
+/// [`Response::Ok`] (what the server attaches before encoding).
+pub fn span_to_block(span: &SpanRec) -> SpanBlock {
+    SpanBlock::of(span)
+}
+
+/// Encode an [`ExecStats`] snapshot as a status-3 frame.
+fn encode_stats(stats: &ExecStats) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(11 + stats.lanes.len() * 64);
+    buf.push(3u8);
+    buf.push(STATS_VER);
+    buf.extend_from_slice(&stats.interleaves.to_le_bytes());
+    assert!(stats.lanes.len() <= u8::MAX as usize, "too many lanes");
+    buf.push(stats.lanes.len() as u8);
+    for lane in &stats.lanes {
+        let name = lane.model.as_bytes();
+        assert!(name.len() <= u8::MAX as usize, "model name too long");
+        buf.push(name.len() as u8);
+        buf.extend_from_slice(name);
+        buf.extend_from_slice(&lane.jobs.to_le_bytes());
+        buf.extend_from_slice(&lane.calls.to_le_bytes());
+        buf.extend_from_slice(&lane.depth.to_le_bytes());
+        for &s in &lane.sealed {
+            buf.extend_from_slice(&s.to_le_bytes());
+        }
+    }
+    buf
+}
+
+/// Decode a status-3 stats frame (rejects truncation and bad versions).
+fn decode_stats(buf: &[u8]) -> Result<ExecStats> {
+    if buf.len() < 11 {
+        bail!("short stats response: {} bytes", buf.len());
+    }
+    if buf[1] != STATS_VER {
+        bail!("unknown stats version {}", buf[1]);
+    }
+    let interleaves = u64::from_le_bytes(buf[2..10].try_into().expect("8 bytes"));
+    let n_lanes = buf[10] as usize;
+    let mut at = 11usize;
+    let mut lanes = Vec::with_capacity(n_lanes);
+    for k in 0..n_lanes {
+        let name_len = *buf
+            .get(at)
+            .ok_or_else(|| anyhow::anyhow!("stats truncated at lane {k}"))?
+            as usize;
+        at += 1;
+        let fixed = 8 + 8 + 4 + 8 * N_SEAL_REASONS;
+        if buf.len() < at + name_len + fixed {
+            bail!("stats truncated inside lane {k}");
+        }
+        let model = std::str::from_utf8(&buf[at..at + name_len])?.to_string();
+        at += name_len;
+        let u64_at = |i: usize| u64::from_le_bytes(buf[i..i + 8].try_into().expect("8 bytes"));
+        let jobs = u64_at(at);
+        let calls = u64_at(at + 8);
+        let depth = u32::from_le_bytes(buf[at + 16..at + 20].try_into().expect("4 bytes"));
+        at += 20;
+        let mut sealed = [0u64; N_SEAL_REASONS];
+        for s in sealed.iter_mut() {
+            *s = u64_at(at);
+            at += 8;
+        }
+        lanes.push(LaneStats {
+            model,
+            jobs,
+            calls,
+            depth,
+            sealed,
+        });
+    }
+    if at != buf.len() {
+        bail!("stats frame has {} trailing bytes", buf.len() - at);
+    }
+    Ok(ExecStats { interleaves, lanes })
 }
 
 /// f32 slice -> LE bytes.
@@ -188,10 +349,16 @@ mod tests {
         let r = Request {
             model: "tiny_resnet".into(),
             raw: true,
+            spans: false,
             prio: 7,
             payload: vec![1, 2, 3, 4, 5],
         };
         assert_eq!(Request::decode(&r.encode()).unwrap(), r);
+        let with_spans = Request {
+            spans: true,
+            ..r.clone()
+        };
+        assert_eq!(Request::decode(&with_spans.encode()).unwrap(), with_spans);
     }
 
     #[test]
@@ -199,6 +366,7 @@ mod tests {
         let r = Request {
             model: "tiny_mobilenet".into(),
             raw: false,
+            spans: true,
             prio: 3,
             payload: vec![9; 12],
         };
@@ -206,6 +374,7 @@ mod tests {
         let (meta, off) = split_header(&frame).unwrap();
         assert_eq!(meta.model, "tiny_mobilenet");
         assert!(!meta.raw);
+        assert!(meta.spans);
         assert_eq!(meta.prio, 3);
         assert_eq!(&frame[off..], &r.payload[..]);
         assert!(split_header(&[]).is_err());
@@ -219,16 +388,106 @@ mod tests {
                 preproc_ns: 456,
                 infer_ns: 789,
             },
+            span: None,
             payload: f32s_to_bytes(&[1.5, -2.25]),
         };
-        let d = Response::decode(&r.encode()).unwrap();
+        let frame = r.encode();
+        assert_eq!(frame[0], 0, "span-less Ok must stay a v1 status-0 frame");
+        let d = Response::decode(&frame).unwrap();
         assert_eq!(d, r);
-        if let Response::Ok { payload, stages } = d {
+        if let Response::Ok {
+            payload, stages, ..
+        } = d
+        {
             assert_eq!(bytes_to_f32s(&payload).unwrap(), vec![1.5, -2.25]);
             assert_eq!(stages.total(), 123 + 456 + 789);
         }
         let e = Response::Err("boom".into());
         assert_eq!(Response::decode(&e.encode()).unwrap(), e);
+    }
+
+    #[test]
+    fn v2_response_carries_span_block() {
+        let mut span = SpanRec::begin();
+        span.mark(crate::trace::Stamp::RecvDone);
+        span.mark(crate::trace::Stamp::InferDone);
+        span.mark(crate::trace::Stamp::ReplySend);
+        let block = span_to_block(&span);
+        let r = Response::Ok {
+            stages: StageNs::default(),
+            span: Some(block.clone()),
+            payload: f32s_to_bytes(&[7.5]),
+        };
+        let frame = r.encode();
+        assert_eq!(frame[0], 2, "span selects the status-2 encoding");
+        match Response::decode(&frame).unwrap() {
+            Response::Ok { span, payload, .. } => {
+                assert_eq!(span, Some(block));
+                assert_eq!(bytes_to_f32s(&payload).unwrap(), vec![7.5]);
+            }
+            other => panic!("decoded {other:?}"),
+        }
+        // Truncating inside the span block must be rejected, not read
+        // into the payload.
+        assert!(Response::decode(&frame[..27]).is_err());
+    }
+
+    #[test]
+    fn stats_roundtrip_and_validation() {
+        let stats = ExecStats {
+            interleaves: 42,
+            lanes: vec![
+                LaneStats {
+                    model: "tiny_mobilenet".into(),
+                    jobs: 100,
+                    calls: 30,
+                    depth: 3,
+                    sealed: [1, 2, 3, 4, 5],
+                },
+                LaneStats {
+                    model: "tiny_resnet".into(),
+                    jobs: 8,
+                    calls: 8,
+                    depth: 0,
+                    sealed: [8, 0, 0, 0, 0],
+                },
+            ],
+        };
+        let r = Response::Stats(stats.clone());
+        let frame = r.encode();
+        assert_eq!(frame[0], 3);
+        assert_eq!(Response::decode(&frame).unwrap(), Response::Stats(stats));
+        // Truncation anywhere inside the frame is rejected.
+        for cut in 1..frame.len() {
+            assert!(Response::decode(&frame[..cut]).is_err(), "cut {cut}");
+        }
+        // Trailing garbage is rejected.
+        let mut long = frame.clone();
+        long.push(0);
+        assert!(Response::decode(&long).is_err());
+        // Bad version is rejected.
+        let mut bad = frame;
+        bad[1] = 9;
+        assert!(Response::decode(&bad).is_err());
+    }
+
+    #[test]
+    fn stats_request_is_dispatchable() {
+        let frame = encode_stats_request();
+        assert_eq!(request_opcode(&frame).unwrap(), OP_STATS);
+        // The v1 parser rejects it (unknown opcode), as a v1 server
+        // would — the client surface treats that as "stats unsupported".
+        assert!(split_header(&frame).is_err());
+        assert!(request_opcode(&[]).is_err());
+        let infer = Request {
+            model: "m".into(),
+            raw: false,
+            spans: false,
+            prio: 0,
+            payload: vec![],
+        }
+        .encode();
+        assert_eq!(request_opcode(&infer).unwrap(), OP_INFER);
     }
 
     #[test]

@@ -15,11 +15,12 @@
 use std::net::SocketAddr;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
 use crate::runtime::TensorBuf;
+use crate::trace::{SpanRec, Stamp};
 use crate::transport::tcp::{TcpAcceptor, TcpTransport};
 use crate::transport::{Acceptor, MsgTransport, RecvMsg};
 
@@ -56,22 +57,51 @@ fn request_from_msg(msg: RecvMsg) -> Result<(RequestMeta, TensorBuf)> {
     }
 }
 
+/// Opcode of a received frame without materializing region payloads.
+fn msg_opcode(msg: &RecvMsg) -> Option<u8> {
+    match msg {
+        RecvMsg::Host(v) => v.first().copied(),
+        RecvMsg::Region(s) => s.with(|b| b.first().copied()),
+    }
+}
+
 /// Serve one connection until the peer hangs up: the request-handling /
 /// preprocessing / inference / response-handling pipeline of Fig 3.
+///
+/// Every request gets a trace span based at the transport's receive
+/// boundary ([`MsgTransport::recv_boundary`], the live analogue of a
+/// WR timestamp); the executor and engine stamp it as the job moves,
+/// and the response carries it back when the client asked for spans
+/// (protocol v2). A stats-opcode frame is answered from
+/// [`Executor::stats`] without touching the lanes.
 pub fn handle_conn(mut t: impl MsgTransport, exec: &Executor) {
     loop {
         let msg = match t.recv_msg() {
             Ok(m) => m,
             Err(_) => return, // peer closed
         };
+        if msg_opcode(&msg) == Some(protocol::OP_STATS) {
+            drop(msg); // release a region slot before the next receive
+            if t.send(&Response::Stats(exec.stats()).encode()).is_err() {
+                return;
+            }
+            continue;
+        }
+        let mut span = SpanRec::begin_at(t.recv_boundary().unwrap_or_else(Instant::now));
         let resp = match request_from_msg(msg) {
             Err(e) => Response::Err(format!("bad request: {e}")),
             Ok((meta, payload)) => {
-                match exec.infer_sync(&meta.model, meta.raw, meta.prio, payload) {
-                    Ok(done) => Response::Ok {
-                        stages: done.stages,
-                        payload: f32s_to_bytes(&done.output),
-                    },
+                span.mark(Stamp::RecvDone);
+                match exec.infer_traced(&meta.model, meta.raw, meta.prio, payload, span) {
+                    Ok(done) => {
+                        let mut span = done.span;
+                        span.mark(Stamp::ReplySend);
+                        Response::Ok {
+                            stages: done.stages,
+                            span: meta.spans.then(|| protocol::span_to_block(&span)),
+                            payload: f32s_to_bytes(&done.output),
+                        }
+                    }
                     Err(e) => Response::Err(e.to_string()),
                 }
             }

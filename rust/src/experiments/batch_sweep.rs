@@ -77,7 +77,10 @@ impl Default for SweepCfg {
 /// threads running `handle_conn`, closed-loop clients via `run_on`
 /// (see [`drive_model_clients`]).
 fn run_cell(kind: TransportKind, exec: &Arc<Executor>, cfg: &SweepCfg) -> Result<LiveStats> {
-    drive_model_clients(kind, exec, &cfg.model, cfg.clients, cfg.requests, cfg.warmup)
+    // spans off: keep this sweep's wire conditions v1-identical.
+    drive_model_clients(
+        kind, exec, &cfg.model, cfg.clients, cfg.requests, cfg.warmup, false,
+    )
 }
 
 /// Run the sweep and render one row per transport × policy with
@@ -131,16 +134,10 @@ pub fn run_batch_sweep(cfg: &SweepCfg) -> Result<Table> {
             };
             let (jobs1, calls1) = exec.batch_counters();
             let avg_batch = (jobs1 - jobs0) as f64 / (calls1 - calls0).max(1) as f64;
-            let mut total = stats.all.total.clone();
+            let lat = stats.all.total.summary();
             t.row(
                 format!("{} {}", kind.name(), policy.label()),
-                vec![
-                    total.quantile(0.5),
-                    total.quantile(0.99),
-                    stats.all.total.mean(),
-                    stats.throughput_rps,
-                    avg_batch,
-                ],
+                vec![lat.p50, lat.p99, lat.mean, stats.throughput_rps, avg_batch],
             );
         }
         // Shut the scheduler + workers down before propagating any

@@ -95,6 +95,7 @@ fn run_mix_cell(
             .iter()
             .map(|model| {
                 s.spawn(move || {
+                    // spans off: keep the wire conditions v1-identical.
                     drive_model_clients(
                         kind,
                         exec,
@@ -102,6 +103,7 @@ fn run_mix_cell(
                         cfg.clients_per_model,
                         cfg.requests,
                         cfg.warmup,
+                        false,
                     )
                 })
             })
@@ -214,13 +216,13 @@ pub fn run_mix_sweep(cfg: &MixCfg) -> Result<Table> {
                 .map(|&(_, j, c)| (j, c))
                 .unwrap_or((0, 0));
             let avg_batch = jobs as f64 / calls.max(1) as f64;
-            let mut total = st.all.total.clone();
+            let lat = st.all.total.summary();
             t.row(
                 format!("{} {}", kind.name(), model),
                 vec![
-                    total.quantile(0.5),
-                    total.quantile(0.99),
-                    st.all.total.mean(),
+                    lat.p50,
+                    lat.p99,
+                    lat.mean,
                     st.throughput_rps,
                     avg_batch,
                     interleaves,
@@ -264,17 +266,11 @@ pub fn run_sim_mix(
             .with_requests(requests);
         let stats = World::run(sc);
         for (name, agg) in &stats.per_model {
-            let mut total = agg.total.clone();
+            let lat = agg.total.summary();
             let thr = agg.n() as f64 / stats.duration_s.max(1e-9);
             t.row(
                 format!("{} {}", tr.name(), name),
-                vec![
-                    total.quantile(0.5),
-                    total.quantile(0.99),
-                    agg.total.mean(),
-                    thr,
-                    stats.interleaves as f64,
-                ],
+                vec![lat.p50, lat.p99, lat.mean, thr, stats.interleaves as f64],
             );
         }
     }

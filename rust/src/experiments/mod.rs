@@ -1,17 +1,20 @@
 //! Experiment harnesses: one runner per paper figure/table (sim plane)
 //! plus the live-plane transport matrix (`accelserve matrix`), the
-//! transport × batch-policy sweep (`accelserve batchsweep`), and the
-//! transport × model-mix sweep (`accelserve mixsweep`), shared by the
-//! benches and the CLI.
+//! transport × batch-policy sweep (`accelserve batchsweep`), the
+//! transport × model-mix sweep (`accelserve mixsweep`), and the
+//! span-timeline stage breakdown (`accelserve stagebreak`), shared by
+//! the benches and the CLI.
 
 pub mod batch_sweep;
 pub mod figs;
 pub mod mix_sweep;
+pub mod stage_break;
 pub mod table;
 pub mod transport_matrix;
 
 pub use batch_sweep::{run_batch_sweep, SweepCfg};
 pub use mix_sweep::{run_mix_sweep, run_sim_mix, MixCfg};
+pub use stage_break::{run_sim_stage_break, run_stage_break, StageBreakCfg};
 pub use table::Table;
 pub use transport_matrix::{run_matrix, MatrixCfg};
 
@@ -48,8 +51,11 @@ pub(crate) fn drain_executor(mut exec: Arc<Executor>) -> bool {
 /// Drive `clients` closed-loop clients for one model over `kind`
 /// against a shared executor: each client gets a private
 /// pre-connected endpoint and a per-connection server thread running
-/// [`handle_conn`]. Shared by `batchsweep` (one model per cell) and
-/// `mixsweep` (one concurrent call per model in the mix).
+/// [`handle_conn`]. Shared by `batchsweep` (one model per cell),
+/// `mixsweep` (one concurrent call per model in the mix), and
+/// `stagebreak` (`spans` on: requests carry `FLAG_SPANS` and the
+/// returned [`LiveStats::spans`] aggregate fills in; the latency
+/// sweeps leave it off so their wire conditions stay v1-identical).
 pub(crate) fn drive_model_clients(
     kind: TransportKind,
     exec: &Arc<Executor>,
@@ -57,6 +63,7 @@ pub(crate) fn drive_model_clients(
     clients: usize,
     requests: usize,
     warmup: usize,
+    spans: bool,
 ) -> Result<LiveStats> {
     let payload_elems = gen::IN_H * gen::IN_W * gen::CHANNELS;
     // Request frame = 4-byte header + model name + f32 payload; sized
@@ -79,6 +86,7 @@ pub(crate) fn drive_model_clients(
     let lc = LoadCfg {
         model: model.to_string(),
         raw: false,
+        spans,
         n_clients: clients,
         requests_per_client: requests + warmup,
         priority_client: false,

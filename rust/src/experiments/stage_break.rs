@@ -1,0 +1,315 @@
+//! Live-plane stage breakdown: per-stage latency per **transport ×
+//! batch policy**, measured from wire-carried span timelines
+//! (`accelserve stagebreak`) — the live reproduction of the paper's
+//! Table I / Figs 5–6 decomposition, with a `--sim` twin that emits
+//! the same columns from the sim plane's `ReqRecord` so the two are
+//! comparable cell-for-cell.
+//!
+//! Every client requests span timelines (protocol v2); the server
+//! returns the stamps taken at the transport ring boundary, the lane,
+//! the scheduler, and the engine, and the client collapses them onto
+//! the nine-stage taxonomy ([`Stage`]). Because each breakdown
+//! partitions the client-observed round trip exactly, the stage
+//! columns of the default (mean) table sum to the end-to-end latency
+//! by construction — the structural check the paper's profiling rests
+//! on, asserted here per cell.
+//!
+//! Reading the table: across transports under `b1`, the `req_ms` /
+//! `resp_ms` columns carry the whole transport effect (Fig 5); under a
+//! batched policy, `gather_ms` shows what the flush window costs and
+//! `infer_ms` what fusing buys back (the batching-vs-communication
+//! tradeoff the transport comparison turns on).
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::{BatchCfg, Executor};
+use crate::metrics::stats::{Series, Stat};
+use crate::models::gen;
+use crate::models::manifest::Manifest;
+use crate::models::zoo::PaperModel;
+use crate::net::params::Transport;
+use crate::sim::world::{Scenario, World};
+use crate::trace::Stage;
+use crate::transport::TransportKind;
+
+use super::{drain_executor, drive_model_clients, Table};
+
+/// Stage-breakdown experiment configuration.
+#[derive(Debug, Clone)]
+pub struct StageBreakCfg {
+    /// Served model (must have artifacts in the manifest).
+    pub model: String,
+    /// Concurrent closed-loop clients per cell.
+    pub clients: usize,
+    /// Measured requests per client.
+    pub requests: usize,
+    /// Discarded leading requests per client.
+    pub warmup: usize,
+    /// Execution streams (1 keeps queueing/batching effects visible).
+    pub streams: usize,
+    pub transports: Vec<TransportKind>,
+    pub policies: Vec<BatchCfg>,
+    /// Which statistic the stage columns show. With [`Stat::Mean`]
+    /// (the default) the components sum to the end-to-end mean
+    /// exactly; quantile columns are near-additive for stable cells.
+    pub stat: Stat,
+    /// Artifact directory; `None` generates into a per-process temp dir.
+    pub artifacts_dir: Option<PathBuf>,
+}
+
+impl Default for StageBreakCfg {
+    fn default() -> StageBreakCfg {
+        StageBreakCfg {
+            model: "tiny_mobilenet".to_string(),
+            clients: 4,
+            requests: 40,
+            warmup: 4,
+            streams: 1,
+            transports: TransportKind::ALL.to_vec(),
+            policies: vec![BatchCfg::none(), BatchCfg::deadline(8, 2000)],
+            stat: Stat::Mean,
+            artifacts_dir: None,
+        }
+    }
+}
+
+/// Column names: the nine stage columns, their sum, and the end-to-end
+/// statistics (shared verbatim by the live table and the sim twin).
+pub fn stage_columns() -> Vec<&'static str> {
+    let mut cols: Vec<&'static str> = Stage::ALL.iter().map(|s| s.column()).collect();
+    cols.extend(["sum_ms", "e2e_ms", "p50_ms", "p99_ms"]);
+    cols
+}
+
+/// One table row from per-stage series plus the end-to-end total.
+fn row_values(stages: &[&Series], total: &Series, stat: Stat) -> Vec<f64> {
+    let mut vals: Vec<f64> = stages.iter().map(|s| s.stat(stat)).collect();
+    let sum: f64 = vals.iter().sum();
+    let t = total.summary();
+    vals.push(sum);
+    vals.push(t.get(stat));
+    vals.push(t.p50);
+    vals.push(t.p99);
+    vals
+}
+
+/// Run the live sweep: one row per transport × policy, stage columns
+/// from the wire-carried spans.
+pub fn run_stage_break(cfg: &StageBreakCfg) -> Result<Table> {
+    let dir: PathBuf = match &cfg.artifacts_dir {
+        Some(d) => d.clone(),
+        None => gen::ensure_test_artifacts().to_path_buf(),
+    };
+    gen::ensure_artifacts(&dir)?;
+    let manifest = Manifest::load(&dir)?;
+    let warm: Vec<String> = manifest
+        .batch_sizes(&cfg.model)
+        .into_iter()
+        .map(|b| format!("{}_b{b}", cfg.model))
+        .collect();
+    if warm.is_empty() {
+        anyhow::bail!(
+            "model {} has no artifacts under {} — nothing to measure",
+            cfg.model,
+            dir.display()
+        );
+    }
+    let warm_refs: Vec<&str> = warm.iter().map(String::as_str).collect();
+
+    let mut t = Table::new(
+        format!(
+            "stage breakdown ({}) — {} × {} clients, {} requests each, {} stream(s)",
+            cfg.stat.name(),
+            cfg.model,
+            cfg.clients,
+            cfg.requests,
+            cfg.streams
+        ),
+        &stage_columns(),
+    );
+    for &policy in &cfg.policies {
+        let exec = Arc::new(
+            Executor::start(&dir, cfg.streams, policy, &warm_refs)
+                .with_context(|| format!("stagebreak executor over {}", dir.display()))?,
+        );
+        let mut failed: Option<anyhow::Error> = None;
+        for &kind in &cfg.transports {
+            let stats = match drive_model_clients(
+                kind,
+                &exec,
+                &cfg.model,
+                cfg.clients,
+                cfg.requests,
+                cfg.warmup,
+                true, // spans on: the whole experiment reads them
+            )
+            .with_context(|| format!("cell {} {}", kind.name(), policy.label()))
+            {
+                Ok(s) => s,
+                Err(e) => {
+                    failed = Some(e);
+                    break;
+                }
+            };
+            if stats.spans.n() == 0 {
+                failed = Some(anyhow::anyhow!(
+                    "cell {} {}: server returned no span timelines",
+                    kind.name(),
+                    policy.label()
+                ));
+                break;
+            }
+            let stages: Vec<&Series> =
+                Stage::ALL.iter().map(|&s| stats.spans.stage(s)).collect();
+            t.row(
+                format!("{} {}", kind.name(), policy.label()),
+                row_values(&stages, &stats.spans.total, cfg.stat),
+            );
+        }
+        // Drain before propagating any cell error — bailing first would
+        // park the stream workers forever (same discipline as the other
+        // sweeps).
+        if !drain_executor(exec) && failed.is_none() {
+            anyhow::bail!("stagebreak still holds executor clones");
+        }
+        if let Some(e) = failed {
+            return Err(e);
+        }
+    }
+    t.note("stage columns derive from wire-carried span timelines (protocol v2); sum_ms is their sum and matches e2e_ms exactly under the mean statistic");
+    t.note("req/resp include the client wire halves; req also carries the receive-side host bounce that GDR eliminates (Fig 2b)");
+    t.note("queue = lane wait before first gather consideration; gather = flush-window wait; disp = sealed-batch wait for a stream");
+    Ok(t)
+}
+
+/// The simulated twin (`accelserve stagebreak --sim`): identical
+/// columns from the sim plane's per-request records, at paper scale.
+/// The sim models per-request execution (no lane machinery), so the
+/// `queue/gather/disp` columns are structurally zero and its
+/// stream-slot queueing lands in `infer_ms` — rows are labeled `b1`
+/// for cell-for-cell comparison against the live table's unbatched
+/// rows.
+pub fn run_sim_stage_break(
+    model: &'static PaperModel,
+    transports: &[Transport],
+    clients: usize,
+    requests: usize,
+    stat: Stat,
+) -> Table {
+    let mut t = Table::new(
+        format!(
+            "sim stage breakdown ({}) — {} × {} clients, {} requests",
+            stat.name(),
+            model.name,
+            clients,
+            requests
+        ),
+        &stage_columns(),
+    );
+    let zero = Series::new();
+    for &tr in transports {
+        let sc = Scenario::direct(model, tr)
+            .with_clients(clients)
+            .with_requests(requests);
+        let stats = World::run(sc);
+        let a = &stats.all;
+        let stages: Vec<&Series> = vec![
+            &a.request,  // request-transport
+            &zero,       // lane-queue (live-plane machinery)
+            &zero,       // gather-wait
+            &zero,       // dispatch-wait
+            &a.copy_h2d, // copy-h2d
+            &a.preproc,  // preproc
+            &a.infer,    // infer (incl. stream-slot queueing)
+            &a.copy_d2h, // copy-d2h
+            &a.response, // response-transport
+        ];
+        t.row(format!("{} b1", tr.name()), row_values(&stages, &a.total, stat));
+    }
+    t.note("sim models per-request execution: queue/gather/disp are structurally zero and stream queueing lands in infer_ms");
+    t.note("compare against the live table's b1 rows cell-for-cell (same columns, same stage semantics)");
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn live_stage_components_sum_to_e2e() {
+        // The acceptance property: every cell's stage components sum
+        // to within 5% of the reported end-to-end latency (exact under
+        // the mean statistic, up to f64 rounding).
+        let cfg = StageBreakCfg {
+            clients: 3,
+            requests: 6,
+            warmup: 2,
+            transports: vec![TransportKind::Tcp, TransportKind::Gdr],
+            policies: vec![BatchCfg::none(), BatchCfg::deadline(4, 500)],
+            ..StageBreakCfg::default()
+        };
+        let t = run_stage_break(&cfg).unwrap();
+        assert_eq!(t.rows.len(), 4);
+        for policy in ["b1", "b4@500us"] {
+            for kind in ["tcp", "gdr"] {
+                let row = format!("{kind} {policy}");
+                let sum = t.get(&row, "sum_ms").unwrap();
+                let e2e = t.get(&row, "e2e_ms").unwrap();
+                assert!(e2e > 0.0, "{row}: e2e {e2e}");
+                assert!(
+                    (sum - e2e).abs() / e2e < 0.05,
+                    "{row}: stages sum to {sum} but e2e is {e2e}"
+                );
+                assert!(t.get(&row, "infer_ms").unwrap() > 0.0, "{row}");
+                assert!(t.get(&row, "p99_ms").unwrap() >= t.get(&row, "p50_ms").unwrap());
+            }
+        }
+    }
+
+    #[test]
+    fn quantile_stat_produces_rows() {
+        let cfg = StageBreakCfg {
+            clients: 2,
+            requests: 5,
+            warmup: 1,
+            transports: vec![TransportKind::Shm],
+            policies: vec![BatchCfg::none()],
+            stat: Stat::P50,
+            ..StageBreakCfg::default()
+        };
+        let t = run_stage_break(&cfg).unwrap();
+        assert_eq!(t.rows.len(), 1);
+        let e2e = t.get("shm b1", "e2e_ms").unwrap();
+        assert_eq!(e2e, t.get("shm b1", "p50_ms").unwrap());
+    }
+
+    #[test]
+    fn sim_twin_has_same_columns_and_sums() {
+        let model = PaperModel::by_name("MobileNetV3").unwrap();
+        let t = run_sim_stage_break(
+            model,
+            &[Transport::Tcp, Transport::Rdma, Transport::Gdr],
+            2,
+            80,
+            Stat::Mean,
+        );
+        assert_eq!(t.columns, stage_columns());
+        assert_eq!(t.rows.len(), 3);
+        for tr in ["tcp", "rdma", "gdr"] {
+            let row = format!("{tr} b1");
+            let sum = t.get(&row, "sum_ms").unwrap();
+            let e2e = t.get(&row, "e2e_ms").unwrap();
+            assert!(
+                (sum - e2e).abs() / e2e < 0.05,
+                "{row}: stages sum to {sum} but e2e is {e2e}"
+            );
+            assert_eq!(t.get(&row, "queue_ms"), Some(0.0), "{row}");
+        }
+        // The sim's structural property: GDR has no copies, RDMA does.
+        assert_eq!(t.get("gdr b1", "h2d_ms"), Some(0.0));
+        assert!(t.get("rdma b1", "h2d_ms").unwrap() > 0.0);
+    }
+}

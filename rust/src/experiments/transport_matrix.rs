@@ -223,7 +223,7 @@ pub fn run_matrix(cfg: &MatrixCfg) -> Result<Table> {
     );
     let mut failed: Option<anyhow::Error> = None;
     for &kind in &cfg.transports {
-        let (mut st, mut totals) = match run_one(kind, cfg, &exec) {
+        let (st, totals) = match run_one(kind, cfg, &exec) {
             Ok(cell) => cell,
             Err(e) => {
                 // Stop measuring but fall through to the executor
@@ -235,12 +235,12 @@ pub fn run_matrix(cfg: &MatrixCfg) -> Result<Table> {
         t.row(
             kind.name(),
             vec![
-                st.recv.quantile(0.5),
-                st.preproc.quantile(0.5),
-                st.infer.quantile(0.5),
-                st.reply.quantile(0.5),
-                st.server.quantile(0.5),
-                totals.quantile(0.5),
+                st.recv.summary().p50,
+                st.preproc.summary().p50,
+                st.infer.summary().p50,
+                st.reply.summary().p50,
+                st.server.summary().p50,
+                totals.summary().p50,
             ],
         );
     }

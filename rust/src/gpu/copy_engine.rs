@@ -17,7 +17,11 @@ use crate::sim::time::Ns;
 
 use super::params::GpuConfig;
 
-/// Copy direction (engine selector).
+/// Copy direction (engine selector). The two directions are the sim
+/// plane's source for the Table I copy stages — the same `copy-h2d` /
+/// `copy-d2h` slots of the shared stage taxonomy
+/// ([`crate::trace::Stage`]) that the live plane fills from
+/// `Engine::infer_timed` staging/fetch stamps.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum CopyDir {
     H2D,
@@ -29,6 +33,14 @@ impl CopyDir {
         match self {
             CopyDir::H2D => 0,
             CopyDir::D2H => 1,
+        }
+    }
+
+    /// The shared-taxonomy stage this direction's copy time lands in.
+    pub fn stage(self) -> crate::trace::Stage {
+        match self {
+            CopyDir::H2D => crate::trace::Stage::CopyH2d,
+            CopyDir::D2H => crate::trace::Stage::CopyD2h,
         }
     }
 

@@ -19,4 +19,5 @@ pub mod net;
 pub mod rdmasim;
 pub mod runtime;
 pub mod sim;
+pub mod trace;
 pub mod transport;

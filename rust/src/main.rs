@@ -6,9 +6,11 @@
 //!                    --model-batch tiny_resnet=8@2000            # per-model lane override
 //! accelserve gateway --addr 0.0.0.0:7008 --upstream host:7007    # live proxy
 //! accelserve client  --addr host:7007 --model tiny_resnet -n 100 -c 4
+//! accelserve stats   --addr host:7007                            # per-lane executor counters
 //! accelserve matrix  --payload-kb 1024 --requests 160            # live transport matrix
 //! accelserve batchsweep --clients 8 --policies 1,8,8@2000        # transport x batch policy
 //! accelserve mixsweep --models tiny_mobilenet,tiny_resnet        # transport x model mix
+//! accelserve stagebreak --policies 1,8@2000 [--pct 99] [--sim]   # per-stage span breakdown
 //! accelserve sim     --model ResNet50 --transport gdr -c 16 -n 300
 //! accelserve fig     --which 5 [--requests 300] [--csv]          # regen a figure
 //! accelserve tables  --which 2|3                                 # paper tables
@@ -17,10 +19,12 @@
 use std::sync::Arc;
 
 use accelserve::coordinator::{
-    gateway_tcp, run_tcp, serve_tcp, BatchCfg, Executor, LoadCfg, ModelPolicy, SchedCfg,
+    fetch_stats, gateway_tcp, run_tcp, serve_tcp, BatchCfg, Executor, LoadCfg, ModelPolicy,
+    SchedCfg, SEAL_REASON_NAMES,
 };
 use accelserve::experiments::figs;
 use accelserve::gpu::Sharing;
+use accelserve::metrics::stats::Stat;
 use accelserve::models::zoo::PaperModel;
 use accelserve::net::params::Transport;
 use accelserve::sim::world::{Scenario, World};
@@ -32,9 +36,11 @@ fn main() {
         Some("serve") => cmd_serve(&args[1..]),
         Some("gateway") => cmd_gateway(&args[1..]),
         Some("client") => cmd_client(&args[1..]),
+        Some("stats") => cmd_stats(&args[1..]),
         Some("matrix") => cmd_matrix(&args[1..]),
         Some("batchsweep") => cmd_batchsweep(&args[1..]),
         Some("mixsweep") => cmd_mixsweep(&args[1..]),
+        Some("stagebreak") => cmd_stagebreak(&args[1..]),
         Some("sim") => cmd_sim(&args[1..]),
         Some("fig") => cmd_fig(&args[1..]),
         Some("tables") => cmd_tables(&args[1..]),
@@ -47,7 +53,7 @@ fn main() {
 }
 
 const HELP: &str = "accelserve — model serving with hardware-accelerated communication
-subcommands: gen-artifacts | serve | gateway | client | matrix | batchsweep | mixsweep | sim | fig | tables (see README.md and docs/EXPERIMENTS.md)";
+subcommands: gen-artifacts | serve | gateway | client | stats | matrix | batchsweep | mixsweep | stagebreak | sim | fig | tables (see README.md and docs/EXPERIMENTS.md)";
 
 /// Generate the serving artifacts (HLO text + manifest.json) offline —
 /// no Python/JAX required (the rust twin of `make artifacts`).
@@ -103,6 +109,34 @@ fn parse_model_batch(args: &[String]) -> Result<Vec<(String, ModelPolicy)>, Stri
         }
     }
     Ok(out)
+}
+
+/// Warn once per misconfigured lane whose policy sets a flush deadline
+/// without a batch to gather (`max_batch` <= 1) — the executor would
+/// otherwise silently run b1 while the operator believes deadline
+/// batching is on. Shared by `mixsweep`'s default and per-model
+/// policies (the `batchsweep --config` path has its own copy of the
+/// default-policy case).
+fn warn_unbatched_flush(cmd: &str, default: &BatchCfg, per_model: &[(String, ModelPolicy)]) {
+    if default.flush_us > 0 && default.max_batch <= 1 {
+        eprintln!(
+            "{cmd}: default policy sets flush_us but not max_batch > 1 — \
+             the flush deadline has nothing to batch; unlisted lanes run b1"
+        );
+    }
+    let mut seen: Vec<&str> = Vec::new();
+    for (model, p) in per_model {
+        if seen.contains(&model.as_str()) {
+            continue; // one warning per lane; first entry wins (policy_for)
+        }
+        seen.push(model);
+        if p.cfg.flush_us > 0 && p.cfg.max_batch <= 1 {
+            eprintln!(
+                "{cmd}: lane {model} sets flush_us but not max_batch > 1 — \
+                 the flush deadline has nothing to batch; this lane runs b1"
+            );
+        }
+    }
 }
 
 /// Parse a comma-separated `--transports` list (shared by `matrix` and
@@ -420,6 +454,7 @@ fn cmd_mixsweep(a: &[String]) -> i32 {
             return 2;
         }
     }
+    warn_unbatched_flush("mixsweep", &cfg.policy, &cfg.per_model);
     let t = match accelserve::experiments::run_mix_sweep(&cfg) {
         Ok(t) => t,
         Err(e) => {
@@ -431,6 +466,181 @@ fn cmd_mixsweep(a: &[String]) -> i32 {
         print!("{}", t.to_csv());
     } else {
         print!("{}", t.render());
+    }
+    0
+}
+
+/// Per-stage latency breakdown from wire-carried span timelines, per
+/// transport × batch policy — the live Table I / Fig 5–6 reproduction
+/// (`accelserve stagebreak`), or the sim-plane twin with `--sim`.
+fn cmd_stagebreak(a: &[String]) -> i32 {
+    let csv = a.iter().any(|x| x == "--csv");
+    let stat = match flag(a, "--pct") {
+        None => Stat::Mean,
+        Some(s) => match Stat::by_name(s) {
+            Some(st) => st,
+            None => {
+                eprintln!("bad --pct {s:?} (want mean, 50/p50 or 99/p99)");
+                return 2;
+            }
+        },
+    };
+    if a.iter().any(|x| x == "--sim") {
+        // The sim twin models per-request execution only: no lanes, no
+        // batching, no artifacts. Say so instead of silently dropping
+        // live-only flags and inviting an apples-to-oranges comparison.
+        for live_only in ["--policies", "--streams", "--artifacts"] {
+            if flag(a, live_only).is_some() {
+                eprintln!(
+                    "stagebreak: {live_only} is a live-plane knob — the sim twin \
+                     models per-request (b1) execution and ignores it"
+                );
+            }
+        }
+        let model = flag_or(a, "--model", "MobileNetV3");
+        let Some(model) = PaperModel::by_name(model) else {
+            eprintln!("unknown paper model {model}; see `accelserve tables --which 2`");
+            return 2;
+        };
+        let mut transports = vec![Transport::Tcp, Transport::Rdma, Transport::Gdr];
+        if let Some(list) = flag(a, "--transports") {
+            transports.clear();
+            for n in list.split(',') {
+                match Transport::by_name(n) {
+                    Some(t) => transports.push(t),
+                    None => {
+                        eprintln!("unknown sim transport {n} (local|tcp|rdma|gdr)");
+                        return 2;
+                    }
+                }
+            }
+        }
+        let clients = flag(a, "--clients")
+            .and_then(|v| v.parse::<usize>().ok())
+            .unwrap_or(2)
+            .max(1);
+        let requests = flag(a, "--requests")
+            .and_then(|v| v.parse::<usize>().ok())
+            .unwrap_or(200)
+            .max(1);
+        let t = accelserve::experiments::run_sim_stage_break(
+            model, &transports, clients, requests, stat,
+        );
+        if csv {
+            print!("{}", t.to_csv());
+        } else {
+            print!("{}", t.render());
+        }
+        return 0;
+    }
+    let mut cfg = accelserve::experiments::StageBreakCfg {
+        stat,
+        ..Default::default()
+    };
+    if let Some(m) = flag(a, "--model") {
+        cfg.model = m.to_string();
+    }
+    if let Some(n) = flag(a, "--clients").and_then(|v| v.parse::<usize>().ok()) {
+        cfg.clients = n.max(1);
+    }
+    if let Some(n) = flag(a, "--requests").and_then(|v| v.parse::<usize>().ok()) {
+        cfg.requests = n.max(1);
+        cfg.warmup = (n / 10).max(2);
+    }
+    if let Some(n) = flag(a, "--streams").and_then(|v| v.parse::<usize>().ok()) {
+        cfg.streams = n.max(1);
+    }
+    if let Some(dir) = flag(a, "--artifacts") {
+        cfg.artifacts_dir = Some(dir.into());
+    }
+    if let Some(list) = flag(a, "--transports") {
+        match parse_transports(list) {
+            Ok(kinds) => cfg.transports = kinds,
+            Err(e) => {
+                eprintln!("{e}");
+                return 2;
+            }
+        }
+    }
+    if let Some(list) = flag(a, "--policies") {
+        let mut policies = Vec::new();
+        for spec in list.split(',') {
+            match BatchCfg::parse(spec) {
+                Some(p) => policies.push(p),
+                None => {
+                    eprintln!("bad batch policy {spec:?} (want N, or N@FLUSH_US like 8@2000)");
+                    return 2;
+                }
+            }
+        }
+        cfg.policies = policies;
+    }
+    let t = match accelserve::experiments::run_stage_break(&cfg) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("stagebreak: {e:#}");
+            return 1;
+        }
+    };
+    if csv {
+        print!("{}", t.to_csv());
+    } else {
+        print!("{}", t.render());
+    }
+    0
+}
+
+/// Query a running server's executor counters over the stats opcode
+/// (`accelserve stats`): per-lane jobs / calls / queue depth / sealed
+/// reasons plus the cross-model interleave count.
+fn cmd_stats(a: &[String]) -> i32 {
+    let addr = flag_or(a, "--addr", "127.0.0.1:7007");
+    let sock: std::net::SocketAddr = match addr.parse() {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("bad addr {addr}: {e}");
+            return 2;
+        }
+    };
+    let mut t = match accelserve::transport::tcp::TcpTransport::connect(sock) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("connect {addr}: {e:#}");
+            return 1;
+        }
+    };
+    let stats = match fetch_stats(&mut t) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("stats: {e:#}");
+            return 1;
+        }
+    };
+    let mut cols: Vec<&str> = vec!["jobs", "calls", "avg_batch", "depth"];
+    cols.extend(SEAL_REASON_NAMES);
+    let mut table = accelserve::experiments::Table::new(
+        format!("executor lanes @ {addr}"),
+        &cols,
+    );
+    for lane in &stats.lanes {
+        let mut vals = vec![
+            lane.jobs as f64,
+            lane.calls as f64,
+            lane.jobs as f64 / (lane.calls.max(1)) as f64,
+            lane.depth as f64,
+        ];
+        vals.extend(lane.sealed.iter().map(|&s| s as f64));
+        table.row(lane.model.clone(), vals);
+    }
+    table.note(format!(
+        "interleaves (dispatches that switched model): {}",
+        stats.interleaves
+    ));
+    table.note("sealed-reason columns count sealed batches per lane: single = unbatchable head, full = hit the policy cap, opportunistic = took what was queued, deadline = flush expired, blocked = incompatible work waited while a stream sat idle");
+    if a.iter().any(|x| x == "--csv") {
+        print!("{}", table.to_csv());
+    } else {
+        print!("{}", table.render());
     }
     0
 }
@@ -558,6 +768,7 @@ fn cmd_client(a: &[String]) -> i32 {
     let cfg = LoadCfg {
         model,
         raw,
+        spans: false,
         n_clients: c,
         requests_per_client: n,
         priority_client: false,
@@ -566,13 +777,13 @@ fn cmd_client(a: &[String]) -> i32 {
     };
     match run_tcp(sock, &cfg) {
         Ok(s) => {
-            let mut t = s.all.total.clone();
+            let lat = s.all.total.summary();
             println!(
                 "requests={} throughput={:.1} rps  total p50={:.3} ms mean={:.3} ms  infer={:.3} ms  preproc={:.3} ms  net={:.3} ms",
                 s.all.n(),
                 s.throughput_rps,
-                t.quantile(0.5),
-                s.all.total.mean(),
+                lat.p50,
+                lat.mean,
                 s.all.infer.mean(),
                 s.all.preproc.mean(),
                 s.all.request.mean() + s.all.response.mean(),
@@ -637,14 +848,14 @@ fn cmd_sim(a: &[String]) -> i32 {
     }
     let s = World::run(sc);
     let (net, copy, proc) = s.all.fractions();
-    let mut t = s.all.total.clone();
+    let lat = s.all.total.summary();
     println!(
         "{} over {} x{}: total={:.3} ms (p99={:.3})  net={:.1}% copy={:.1}% proc={:.1}%  thr={:.1} rps  gpu_util={:.2}",
         model.name,
         tr.name(),
         c,
-        s.all.total.mean(),
-        t.quantile(0.99),
+        lat.mean,
+        lat.p99,
         net * 100.0,
         copy * 100.0,
         proc * 100.0,

@@ -126,6 +126,78 @@ impl Series {
     pub fn max(&mut self) -> f64 {
         self.quantile(1.0)
     }
+
+    /// One-shot reporting summary (n / mean / p50 / p99) computed on a
+    /// working copy, so a shared aggregate needs no `&mut` clone dance.
+    /// Every experiment table reports latency through this, keeping the
+    /// live and sim planes' percentile math identical by construction.
+    pub fn summary(&self) -> Summary {
+        let mut s = self.clone();
+        Summary {
+            n: s.len(),
+            mean: s.mean(),
+            p50: s.quantile(0.5),
+            p99: s.quantile(0.99),
+        }
+    }
+
+    /// The statistic `stat` of this series (table-column dispatch).
+    pub fn stat(&self, stat: Stat) -> f64 {
+        match stat {
+            Stat::Mean => self.mean(),
+            Stat::P50 | Stat::P99 => self.summary().get(stat),
+        }
+    }
+}
+
+/// Which statistic a report column shows.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Stat {
+    Mean,
+    P50,
+    P99,
+}
+
+impl Stat {
+    /// Parse a CLI spec: `mean`, `p50`/`50`, `p99`/`99`.
+    pub fn by_name(s: &str) -> Option<Stat> {
+        match s.to_ascii_lowercase().as_str() {
+            "mean" | "avg" => Some(Stat::Mean),
+            "p50" | "50" | "median" => Some(Stat::P50),
+            "p99" | "99" => Some(Stat::P99),
+            _ => None,
+        }
+    }
+
+    /// Label for table titles.
+    pub fn name(self) -> &'static str {
+        match self {
+            Stat::Mean => "mean",
+            Stat::P50 => "p50",
+            Stat::P99 => "p99",
+        }
+    }
+}
+
+/// The standard reporting summary of one [`Series`].
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub p50: f64,
+    pub p99: f64,
+}
+
+impl Summary {
+    /// Field selector by [`Stat`] (lets table code compute one summary
+    /// and read several statistics from it).
+    pub fn get(&self, stat: Stat) -> f64 {
+        match stat {
+            Stat::Mean => self.mean,
+            Stat::P50 => self.p50,
+            Stat::P99 => self.p99,
+        }
+    }
 }
 
 /// Aggregated per-stage breakdown over a run (the Fig 6/8/12/13 rows).
@@ -250,6 +322,31 @@ mod tests {
             let hi = s.max();
             assert!(lo <= hi);
         }
+    }
+
+    #[test]
+    fn summary_matches_direct_quantiles() {
+        let mut s = Series::new();
+        for v in [5.0, 1.0, 4.0, 2.0, 3.0] {
+            s.push(v);
+        }
+        let sum = s.summary();
+        assert_eq!(sum.n, 5);
+        assert_eq!(sum.mean, 3.0);
+        assert_eq!(sum.p50, s.quantile(0.5));
+        assert_eq!(sum.p99, s.quantile(0.99));
+        assert_eq!(s.stat(Stat::Mean), 3.0);
+        assert_eq!(s.stat(Stat::P50), sum.p50);
+        assert_eq!(s.stat(Stat::P99), sum.p99);
+    }
+
+    #[test]
+    fn stat_parses_cli_specs() {
+        assert_eq!(Stat::by_name("mean"), Some(Stat::Mean));
+        assert_eq!(Stat::by_name("P50"), Some(Stat::P50));
+        assert_eq!(Stat::by_name("99"), Some(Stat::P99));
+        assert_eq!(Stat::by_name("p75"), None);
+        assert_eq!(Stat::P99.name(), "p99");
     }
 
     #[test]

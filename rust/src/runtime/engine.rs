@@ -59,6 +59,25 @@ struct Compiled {
     entry: ArtifactEntry,
 }
 
+/// How one [`Engine::infer_timed`] call split between input staging
+/// (H2D analogue), compute, and output fetch (D2H analogue).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct EngineTiming {
+    /// Artifact lookup + literal build from the input bytes.
+    pub h2d_ns: u64,
+    /// The executable call.
+    pub compute_ns: u64,
+    /// Result fetch back to a host f32 vector.
+    pub d2h_ns: u64,
+}
+
+impl EngineTiming {
+    /// Whole engine-internal duration.
+    pub fn total_ns(&self) -> u64 {
+        self.h2d_ns + self.compute_ns + self.d2h_ns
+    }
+}
+
 /// Loads artifacts once, compiles each HLO module once, then serves
 /// inference calls. Interior mutability: the executable cache fills
 /// lazily; PJRT execution itself is routed through a mutex because the
@@ -132,6 +151,21 @@ impl Engine {
     /// to running that request through the `_b1` artifact alone
     /// (asserted by `tests/batching.rs`).
     pub fn infer(&self, name: &str, input: &TensorBuf) -> Result<Vec<f32>> {
+        self.infer_timed(name, input).map(|(out, _)| out)
+    }
+
+    /// [`Engine::infer`] plus the engine-internal stage timing: how the
+    /// call split between staging the input (the live analogue of the
+    /// H2D copy — literal build from host or region bytes), the compute
+    /// itself, and fetching the output back (D2H). This is what the
+    /// executor stamps into a request's trace span
+    /// (`trace::Stamp::{H2dDone, InferDone, D2hDone}`).
+    pub fn infer_timed(
+        &self,
+        name: &str,
+        input: &TensorBuf,
+    ) -> Result<(Vec<f32>, EngineTiming)> {
+        let t0 = std::time::Instant::now();
         let c = self.get(name)?;
         let spec = &c.entry.inputs[0];
         if input.len() != spec.elems() {
@@ -177,17 +211,29 @@ impl Engine {
                 got.dtype()
             ),
         };
-        let result = c
+        let t_staged = std::time::Instant::now();
+        let buffers = c
             .exe
             .execute::<xla::Literal>(&[lit])
-            .map_err(|e| anyhow!("execute {name}: {e}"))?[0][0]
+            .map_err(|e| anyhow!("execute {name}: {e}"))?;
+        let t_computed = std::time::Instant::now();
+        let result = buffers[0][0]
             .to_literal_sync()
             .map_err(|e| anyhow!("fetch result: {e}"))?;
         // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
         let out = result
             .to_tuple1()
             .map_err(|e| anyhow!("untuple: {e}"))?;
-        out.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e}"))
+        let out = out.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e}"))?;
+        let t_fetched = std::time::Instant::now();
+        Ok((
+            out,
+            EngineTiming {
+                h2d_ns: (t_staged - t0).as_nanos() as u64,
+                compute_ns: (t_computed - t_staged).as_nanos() as u64,
+                d2h_ns: (t_fetched - t_computed).as_nanos() as u64,
+            },
+        ))
     }
 
     /// Output element count of an artifact (for buffer pre-allocation).
@@ -259,6 +305,17 @@ mod tests {
         for (x, y) in out2[1000..].iter().zip(&o_b) {
             assert!((x - y).abs() < 1e-3);
         }
+    }
+
+    #[test]
+    fn infer_timed_matches_untimed() {
+        let eng = Engine::load(artifacts_dir()).unwrap();
+        let n_in = eng.manifest().get("tiny_mobilenet_b1").unwrap().inputs[0].elems();
+        let input = TensorBuf::F32(vec![0.25; n_in]);
+        let (out, tm) = eng.infer_timed("tiny_mobilenet_b1", &input).unwrap();
+        assert_eq!(out, eng.infer("tiny_mobilenet_b1", &input).unwrap());
+        assert!(tm.compute_ns > 0, "compute took no time: {tm:?}");
+        assert_eq!(tm.total_ns(), tm.h2d_ns + tm.compute_ns + tm.d2h_ns);
     }
 
     #[test]

@@ -9,4 +9,4 @@
 
 pub mod engine;
 
-pub use engine::{Engine, TensorBuf};
+pub use engine::{Engine, EngineTiming, TensorBuf};

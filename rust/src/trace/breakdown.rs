@@ -1,0 +1,204 @@
+//! Collapsing a span timeline onto the nine-stage taxonomy.
+//!
+//! A [`StageBreakdown`] assigns every consecutive stamp interval of a
+//! decoded span block to one [`Stage`], plus the client-side network
+//! share (client-observed total minus the server span, split evenly
+//! between the request and response paths — the paper's ZeroMQ
+//! accounting, §III-B). Missing stamps inherit the previous stamp's
+//! offset, so an absent stage (e.g. preproc for preprocessed inputs)
+//! contributes exactly zero and the components always sum to the
+//! client-observed total.
+
+use crate::metrics::stats::Series;
+
+use super::span::Stamp;
+use super::wire::SpanBlock;
+use super::{Stage, N_STAGES};
+
+/// Per-request stage durations (ns), indexed by [`Stage`].
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct StageBreakdown {
+    ns: [u64; N_STAGES],
+}
+
+impl StageBreakdown {
+    /// Derive the breakdown from a server span block and the
+    /// client-observed end-to-end latency. With monotone stamps the
+    /// stage components sum to `total_ns` exactly.
+    pub fn from_span(span: &SpanBlock, total_ns: u64) -> StageBreakdown {
+        // Fall-forward chain: a missing stamp inherits its predecessor,
+        // so the interval it would bound contributes zero.
+        let ring = span.get(Stamp::RecvRing).unwrap_or(0);
+        let recv_done = span.get(Stamp::RecvDone).unwrap_or(ring).max(ring);
+        let mut prev = recv_done;
+        let mut at = |s: Stamp| {
+            prev = span.get(s).unwrap_or(prev).max(prev);
+            prev
+        };
+        let gather = at(Stamp::Enqueue).max(recv_done); // enqueue folds into lane-queue
+        let gather = at(Stamp::GatherStart).max(gather);
+        let seal = at(Stamp::Seal);
+        let dispatch = at(Stamp::Dispatch);
+        let h2d = at(Stamp::H2dDone);
+        let pre = at(Stamp::PreprocDone);
+        let infer = at(Stamp::InferDone);
+        let d2h = at(Stamp::D2hDone);
+        let reply = at(Stamp::ReplySend);
+
+        let server_span = reply.saturating_sub(ring);
+        let net = total_ns.saturating_sub(server_span);
+        let mut ns = [0u64; N_STAGES];
+        ns[Stage::RequestXfer.idx()] = net / 2 + (recv_done - ring);
+        ns[Stage::LaneQueue.idx()] = gather - recv_done;
+        ns[Stage::GatherWait.idx()] = seal - gather;
+        ns[Stage::DispatchWait.idx()] = dispatch - seal;
+        ns[Stage::CopyH2d.idx()] = h2d - dispatch;
+        ns[Stage::Preproc.idx()] = pre - h2d;
+        ns[Stage::Infer.idx()] = infer - pre;
+        ns[Stage::CopyD2h.idx()] = d2h - infer;
+        ns[Stage::ResponseXfer.idx()] = (reply - d2h) + (net - net / 2);
+        StageBreakdown { ns }
+    }
+
+    /// Duration of one stage, ns.
+    pub fn get(&self, stage: Stage) -> u64 {
+        self.ns[stage.idx()]
+    }
+
+    /// Sum of all stage components, ns (equals the client total when
+    /// the span stamps were monotone).
+    pub fn sum(&self) -> u64 {
+        self.ns.iter().sum()
+    }
+}
+
+/// Streaming aggregate of stage breakdowns over a run: one
+/// [`Series`] (ms domain) per stage plus the end-to-end total —
+/// the live-plane twin of the sim's `StageAgg`.
+#[derive(Debug, Clone, Default)]
+pub struct BreakdownAgg {
+    stages: [Series; N_STAGES],
+    /// Client-observed end-to-end latency.
+    pub total: Series,
+}
+
+impl BreakdownAgg {
+    pub fn new() -> BreakdownAgg {
+        BreakdownAgg::default()
+    }
+
+    /// Record one request's breakdown and its end-to-end total (ns).
+    pub fn push(&mut self, b: &StageBreakdown, total_ns: u64) {
+        for s in Stage::ALL {
+            self.stages[s.idx()].push(b.get(s) as f64 / 1e6);
+        }
+        self.total.push(total_ns as f64 / 1e6);
+    }
+
+    /// The per-stage series.
+    pub fn stage(&self, s: Stage) -> &Series {
+        &self.stages[s.idx()]
+    }
+
+    /// Number of recorded requests.
+    pub fn n(&self) -> usize {
+        self.total.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::span::SpanRec;
+    use crate::trace::wire::{decode_span_block, encode_span_block};
+    use std::time::{Duration, Instant};
+
+    fn block(stamps: &[(Stamp, u64)]) -> SpanBlock {
+        let base = Instant::now();
+        let mut s = SpanRec::begin_at(base);
+        for &(stamp, ns) in stamps {
+            s.mark_at(stamp, base + Duration::from_nanos(ns));
+        }
+        decode_span_block(&encode_span_block(&s)).unwrap().0
+    }
+
+    #[test]
+    fn full_span_partitions_total_exactly() {
+        let b = block(&[
+            (Stamp::RecvDone, 100),
+            (Stamp::Enqueue, 120),
+            (Stamp::GatherStart, 500),
+            (Stamp::Seal, 900),
+            (Stamp::Dispatch, 1_000),
+            (Stamp::H2dDone, 1_400),
+            (Stamp::PreprocDone, 2_000),
+            (Stamp::InferDone, 9_000),
+            (Stamp::D2hDone, 9_300),
+            (Stamp::ReplySend, 9_500),
+        ]);
+        let total = 12_000u64; // 2_500 ns of wire
+        let d = StageBreakdown::from_span(&b, total);
+        assert_eq!(d.sum(), total);
+        assert_eq!(d.get(Stage::RequestXfer), 1_250 + 100);
+        assert_eq!(d.get(Stage::LaneQueue), 400); // 100 -> 500 (enqueue folded)
+        assert_eq!(d.get(Stage::GatherWait), 400);
+        assert_eq!(d.get(Stage::DispatchWait), 100);
+        assert_eq!(d.get(Stage::CopyH2d), 400);
+        assert_eq!(d.get(Stage::Preproc), 600);
+        assert_eq!(d.get(Stage::Infer), 7_000);
+        assert_eq!(d.get(Stage::CopyD2h), 300);
+        assert_eq!(d.get(Stage::ResponseXfer), 200 + 1_250);
+    }
+
+    #[test]
+    fn missing_stamps_contribute_zero() {
+        // No preproc (preprocessed input), no gather detail.
+        let b = block(&[
+            (Stamp::RecvDone, 100),
+            (Stamp::Enqueue, 150),
+            (Stamp::Dispatch, 1_000),
+            (Stamp::InferDone, 5_000),
+            (Stamp::ReplySend, 5_200),
+        ]);
+        let d = StageBreakdown::from_span(&b, 6_000);
+        assert_eq!(d.sum(), 6_000);
+        assert_eq!(d.get(Stage::Preproc), 0);
+        assert_eq!(d.get(Stage::CopyH2d), 0);
+        // Missing gather/seal fall forward to the enqueue stamp, so
+        // the enqueue->dispatch gap lands in dispatch-wait.
+        assert_eq!(d.get(Stage::LaneQueue), 50);
+        assert_eq!(d.get(Stage::GatherWait), 0);
+        assert_eq!(d.get(Stage::DispatchWait), 850);
+        assert_eq!(d.get(Stage::Infer), 4_000);
+    }
+
+    #[test]
+    fn server_span_longer_than_total_never_negative() {
+        // A clock oddity where the client total undercuts the server
+        // span must clamp the net share, not underflow.
+        let b = block(&[(Stamp::RecvDone, 10), (Stamp::ReplySend, 10_000)]);
+        let d = StageBreakdown::from_span(&b, 5_000);
+        assert_eq!(d.get(Stage::RequestXfer), 10);
+        assert!(d.sum() >= 10_000);
+    }
+
+    #[test]
+    fn agg_accumulates_additively() {
+        let b = block(&[
+            (Stamp::RecvDone, 100),
+            (Stamp::InferDone, 900),
+            (Stamp::ReplySend, 1_000),
+        ]);
+        let d = StageBreakdown::from_span(&b, 2_000);
+        let mut a = BreakdownAgg::new();
+        for _ in 0..3 {
+            a.push(&d, 2_000);
+        }
+        assert_eq!(a.n(), 3);
+        assert!((a.total.mean() - 2e-3).abs() < 1e-12);
+        // Stage means stay additive over the aggregate: they sum to
+        // the end-to-end mean (the stagebreak table's invariant).
+        let sum: f64 = Stage::ALL.iter().map(|&s| a.stage(s).mean()).sum();
+        assert!((sum - a.total.mean()).abs() < 1e-9, "{sum}");
+    }
+}

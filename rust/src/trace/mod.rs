@@ -1,0 +1,149 @@
+//! Live-plane stage tracing: a compact per-request span timeline
+//! threaded through the whole serving pipeline, carried back to the
+//! client inside the wire protocol (v2 responses).
+//!
+//! The paper's headline contribution is *visibility*: CUDA-event /
+//! WR-timestamp profiling that decomposes model-serving latency into
+//! per-stage overheads (§III-B, Table I, Figs 5–9), which is what shows
+//! where RDMA/GPUDirect actually help. The sim plane always had that
+//! breakdown (`metrics::stats::ReqRecord`); this module gives the live
+//! plane the same thing: every component stamps a monotonic-clock
+//! offset into the request's [`SpanRec`] as the request passes through
+//! — the transport at the ring boundary, the server at parse, the
+//! executor at lane enqueue / gather / seal / dispatch, the engine
+//! around its staging copies and compute — and the server returns the
+//! stamps to the client in the response's span block.
+//!
+//! # Stage taxonomy
+//!
+//! Nine derived stages, the shared vocabulary of both planes ([`Stage`];
+//! the sim's `ReqRecord` fields map onto the same names):
+//!
+//! | stage              | live-plane interval                  | paper analogue        |
+//! |--------------------|--------------------------------------|-----------------------|
+//! | request-transport  | client wire half + ring→parse bounce | req transfer (Fig 2)  |
+//! | lane-queue         | parse → first gather consideration   | server queueing       |
+//! | gather-wait        | gather start → batch sealed          | batching delay        |
+//! | dispatch-wait      | sealed → chunk execution starts      | stream-slot queueing  |
+//! | copy-h2d           | dispatch → input staged on device    | H2D copy (Table I)    |
+//! | preproc            | staging → preprocessing done         | preprocessing         |
+//! | infer              | preprocess → compute finished        | inference             |
+//! | copy-d2h           | compute → output back on host        | D2H copy (Table I)    |
+//! | response-transport | reply build + client wire half       | resp transfer         |
+//!
+//! Raw stamps are the finer-grained [`Stamp`] events; a
+//! [`StageBreakdown`] collapses consecutive stamp intervals onto the
+//! nine stages so the components sum to the client-observed end-to-end
+//! latency *exactly* (`accelserve stagebreak` asserts this).
+
+pub mod breakdown;
+pub mod span;
+pub mod wire;
+
+pub use breakdown::{BreakdownAgg, StageBreakdown};
+pub use span::{SpanRec, Stamp, N_STAMPS};
+pub use wire::{decode_span_block, encode_span_block, SpanBlock, SPAN_VER};
+
+/// The fixed nine-stage taxonomy shared by the live and sim planes
+/// (see the module docs for the live-plane interval each stage covers).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Stage {
+    /// Client-to-server transport, incl. the receive-side host bounce.
+    RequestXfer,
+    /// Waiting in the model lane before the scheduler first considers
+    /// the job for a gather.
+    LaneQueue,
+    /// Waiting while the job's batch gathers peers (the flush window).
+    GatherWait,
+    /// Sealed batch waiting for its execution stream (rendezvous plus
+    /// any earlier chunks of the same sealed batch).
+    DispatchWait,
+    /// Staging the input onto the device (row gather + literal build).
+    CopyH2d,
+    /// GPU preprocessing (raw inputs only; zero otherwise).
+    Preproc,
+    /// Compute: the executable call itself.
+    Infer,
+    /// Fetching the output back to the host and scattering rows.
+    CopyD2h,
+    /// Reply build plus server-to-client transport.
+    ResponseXfer,
+}
+
+/// Number of stages in the taxonomy.
+pub const N_STAGES: usize = 9;
+
+impl Stage {
+    /// Every stage, in pipeline order.
+    pub const ALL: [Stage; N_STAGES] = [
+        Stage::RequestXfer,
+        Stage::LaneQueue,
+        Stage::GatherWait,
+        Stage::DispatchWait,
+        Stage::CopyH2d,
+        Stage::Preproc,
+        Stage::Infer,
+        Stage::CopyD2h,
+        Stage::ResponseXfer,
+    ];
+
+    /// Human-readable stage name.
+    pub fn name(self) -> &'static str {
+        match self {
+            Stage::RequestXfer => "request-transport",
+            Stage::LaneQueue => "lane-queue",
+            Stage::GatherWait => "gather-wait",
+            Stage::DispatchWait => "dispatch-wait",
+            Stage::CopyH2d => "copy-h2d",
+            Stage::Preproc => "preproc",
+            Stage::Infer => "infer",
+            Stage::CopyD2h => "copy-d2h",
+            Stage::ResponseXfer => "response-transport",
+        }
+    }
+
+    /// Short column label for result tables (`accelserve stagebreak`).
+    pub fn column(self) -> &'static str {
+        match self {
+            Stage::RequestXfer => "req_ms",
+            Stage::LaneQueue => "queue_ms",
+            Stage::GatherWait => "gather_ms",
+            Stage::DispatchWait => "disp_ms",
+            Stage::CopyH2d => "h2d_ms",
+            Stage::Preproc => "pre_ms",
+            Stage::Infer => "infer_ms",
+            Stage::CopyD2h => "d2h_ms",
+            Stage::ResponseXfer => "resp_ms",
+        }
+    }
+
+    /// Index into [`Stage::ALL`]-ordered arrays.
+    pub fn idx(self) -> usize {
+        self as usize
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stage_indices_match_order() {
+        for (i, s) in Stage::ALL.iter().enumerate() {
+            assert_eq!(s.idx(), i, "{}", s.name());
+        }
+        assert_eq!(Stage::ALL.len(), N_STAGES);
+    }
+
+    #[test]
+    fn stage_labels_unique() {
+        let mut names: Vec<&str> = Stage::ALL.iter().map(|s| s.name()).collect();
+        let mut cols: Vec<&str> = Stage::ALL.iter().map(|s| s.column()).collect();
+        names.sort();
+        names.dedup();
+        cols.sort();
+        cols.dedup();
+        assert_eq!(names.len(), N_STAGES);
+        assert_eq!(cols.len(), N_STAGES);
+    }
+}

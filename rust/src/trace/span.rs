@@ -1,0 +1,243 @@
+//! Per-request span records: monotonic-clock stamps taken as a request
+//! passes through the live serving pipeline.
+//!
+//! A [`SpanRec`] is created by the server when the request frame is
+//! complete at the transport boundary (the base instant, the live
+//! analogue of an RDMA WR timestamp) and travels with the job through
+//! the executor and engine; each component marks its [`Stamp`] as an
+//! offset in nanoseconds from the base. Marking is first-write-wins,
+//! so re-considering a job (a gather that aborts and re-forms) cannot
+//! move an already-taken stamp backwards, and a fixed-size array plus a
+//! bitmask keeps the hot-path cost to one `Instant::now()` and two
+//! stores per stamp.
+
+use std::time::{Duration, Instant};
+
+/// Stamp events, in pipeline order. The discriminant is the wire id of
+/// the stamp in a response span block (see [`crate::trace::wire`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum Stamp {
+    /// Request frame complete at the transport boundary (ring slot /
+    /// socket), before any host bounce copy. Offset 0 by construction.
+    RecvRing = 0,
+    /// Request parsed, payload materialized for the executor.
+    RecvDone = 1,
+    /// Job entered its model lane.
+    Enqueue = 2,
+    /// Scheduler first pulled the job into a candidate gather.
+    GatherStart = 3,
+    /// The job's batch sealed.
+    Seal = 4,
+    /// A stream worker started executing the job's chunk.
+    Dispatch = 5,
+    /// Input staged on the device (row gather + literal build done).
+    H2dDone = 6,
+    /// GPU preprocessing finished (raw inputs only).
+    PreprocDone = 7,
+    /// Compute finished.
+    InferDone = 8,
+    /// Output fetched back to the host, rows scattered.
+    D2hDone = 9,
+    /// Server began building the reply frame.
+    ReplySend = 10,
+}
+
+/// Number of stamp slots in a span.
+pub const N_STAMPS: usize = 11;
+
+impl Stamp {
+    /// Every stamp, in pipeline order.
+    pub const ALL: [Stamp; N_STAMPS] = [
+        Stamp::RecvRing,
+        Stamp::RecvDone,
+        Stamp::Enqueue,
+        Stamp::GatherStart,
+        Stamp::Seal,
+        Stamp::Dispatch,
+        Stamp::H2dDone,
+        Stamp::PreprocDone,
+        Stamp::InferDone,
+        Stamp::D2hDone,
+        Stamp::ReplySend,
+    ];
+
+    /// Wire id of the stamp.
+    pub fn id(self) -> u8 {
+        self as u8
+    }
+
+    /// Stamp for a wire id, if known.
+    pub fn from_id(id: u8) -> Option<Stamp> {
+        Stamp::ALL.get(id as usize).copied()
+    }
+
+    /// Human-readable stamp name.
+    pub fn name(self) -> &'static str {
+        match self {
+            Stamp::RecvRing => "recv-ring",
+            Stamp::RecvDone => "recv-done",
+            Stamp::Enqueue => "enqueue",
+            Stamp::GatherStart => "gather-start",
+            Stamp::Seal => "seal",
+            Stamp::Dispatch => "dispatch",
+            Stamp::H2dDone => "h2d-done",
+            Stamp::PreprocDone => "preproc-done",
+            Stamp::InferDone => "infer-done",
+            Stamp::D2hDone => "d2h-done",
+            Stamp::ReplySend => "reply-send",
+        }
+    }
+}
+
+/// The span timeline of one live request: a base instant plus up to
+/// [`N_STAMPS`] nanosecond offsets (see the module docs).
+#[derive(Debug, Clone)]
+pub struct SpanRec {
+    base: Instant,
+    off: [u64; N_STAMPS],
+    set: u16,
+}
+
+impl SpanRec {
+    /// Begin a span now (marks [`Stamp::RecvRing`] at offset 0).
+    pub fn begin() -> SpanRec {
+        SpanRec::begin_at(Instant::now())
+    }
+
+    /// Begin a span at a transport-provided boundary instant (marks
+    /// [`Stamp::RecvRing`] at offset 0).
+    pub fn begin_at(base: Instant) -> SpanRec {
+        let mut s = SpanRec {
+            base,
+            off: [0; N_STAMPS],
+            set: 0,
+        };
+        s.mark_at(Stamp::RecvRing, base);
+        s
+    }
+
+    /// The span's base instant (the [`Stamp::RecvRing`] event).
+    pub fn base(&self) -> Instant {
+        self.base
+    }
+
+    /// Mark `stamp` at the current instant (first write wins).
+    pub fn mark(&mut self, stamp: Stamp) {
+        self.mark_at(stamp, Instant::now());
+    }
+
+    /// Mark `stamp` at an explicit instant (first write wins; instants
+    /// before the base clamp to offset 0).
+    pub fn mark_at(&mut self, stamp: Stamp, t: Instant) {
+        let bit = 1u16 << stamp.id();
+        if self.set & bit != 0 {
+            return;
+        }
+        self.off[stamp.id() as usize] =
+            t.saturating_duration_since(self.base).as_nanos() as u64;
+        self.set |= bit;
+    }
+
+    /// Offset of `stamp` in nanoseconds from the base, if marked.
+    pub fn get(&self, stamp: Stamp) -> Option<u64> {
+        if self.set & (1u16 << stamp.id()) != 0 {
+            Some(self.off[stamp.id() as usize])
+        } else {
+            None
+        }
+    }
+
+    /// Is `stamp` marked?
+    pub fn is_set(&self, stamp: Stamp) -> bool {
+        self.set & (1u16 << stamp.id()) != 0
+    }
+
+    /// Marked stamps in pipeline (= wire id) order.
+    pub fn stamps(&self) -> impl Iterator<Item = (Stamp, u64)> + '_ {
+        Stamp::ALL
+            .iter()
+            .filter_map(move |&s| self.get(s).map(|o| (s, o)))
+    }
+
+    /// Number of marked stamps.
+    pub fn len(&self) -> usize {
+        self.set.count_ones() as usize
+    }
+
+    /// True when no stamp is marked (never the case after `begin`).
+    pub fn is_empty(&self) -> bool {
+        self.set == 0
+    }
+
+    /// Convenience for stamping an event a known duration after another
+    /// instant (e.g. engine-reported copy/compute durations).
+    pub fn mark_after(&mut self, stamp: Stamp, from: Instant, ns: u64) {
+        self.mark_at(stamp, from + Duration::from_nanos(ns));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stamp_ids_roundtrip() {
+        for (i, s) in Stamp::ALL.iter().enumerate() {
+            assert_eq!(s.id() as usize, i);
+            assert_eq!(Stamp::from_id(s.id()), Some(*s), "{}", s.name());
+        }
+        assert_eq!(Stamp::from_id(N_STAMPS as u8), None);
+    }
+
+    #[test]
+    fn begin_marks_ring_at_zero() {
+        let s = SpanRec::begin();
+        assert_eq!(s.get(Stamp::RecvRing), Some(0));
+        assert_eq!(s.len(), 1);
+        assert!(!s.is_empty());
+        assert!(!s.is_set(Stamp::Enqueue));
+    }
+
+    #[test]
+    fn first_write_wins() {
+        let base = Instant::now();
+        let mut s = SpanRec::begin_at(base);
+        s.mark_at(Stamp::Seal, base + Duration::from_nanos(100));
+        s.mark_at(Stamp::Seal, base + Duration::from_nanos(999));
+        assert_eq!(s.get(Stamp::Seal), Some(100));
+    }
+
+    #[test]
+    fn pre_base_instants_clamp_to_zero() {
+        let base = Instant::now();
+        let mut s = SpanRec::begin_at(base + Duration::from_millis(1));
+        s.mark_at(Stamp::RecvDone, base);
+        assert_eq!(s.get(Stamp::RecvDone), Some(0));
+    }
+
+    #[test]
+    fn stamps_iterate_in_pipeline_order() {
+        let base = Instant::now();
+        let mut s = SpanRec::begin_at(base);
+        s.mark_at(Stamp::Dispatch, base + Duration::from_nanos(50));
+        s.mark_at(Stamp::Enqueue, base + Duration::from_nanos(10));
+        let got: Vec<(Stamp, u64)> = s.stamps().collect();
+        assert_eq!(
+            got,
+            vec![
+                (Stamp::RecvRing, 0),
+                (Stamp::Enqueue, 10),
+                (Stamp::Dispatch, 50)
+            ]
+        );
+    }
+
+    #[test]
+    fn mark_after_offsets_from_given_instant() {
+        let base = Instant::now();
+        let mut s = SpanRec::begin_at(base);
+        s.mark_after(Stamp::H2dDone, base + Duration::from_nanos(100), 40);
+        assert_eq!(s.get(Stamp::H2dDone), Some(140));
+    }
+}

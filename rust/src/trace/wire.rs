@@ -1,0 +1,216 @@
+//! Wire encoding of a span timeline: the versioned span block a v2
+//! response carries between the stage-timing header and the payload.
+//!
+//! ```text
+//! [ver u8][count u8]([id u8][off_ns u64 LE]) * count
+//! ```
+//!
+//! Stamps are encoded in strictly increasing id order, which makes the
+//! block canonical, cheap to validate, and forward-compatible: a
+//! decoder keeps ids it does not recognize (a newer server may stamp
+//! finer events) but rejects structural damage — truncation, a bad
+//! version, an oversized count, or out-of-order/duplicate ids.
+
+use anyhow::{bail, Result};
+
+use super::span::{SpanRec, Stamp};
+
+/// Span block wire version.
+pub const SPAN_VER: u8 = 1;
+
+/// Upper bound on stamps per block (wire ids are one byte; 32 leaves
+/// room for finer taxonomies without unbounded allocation).
+pub const MAX_BLOCK_STAMPS: usize = 32;
+
+/// Bytes one encoded stamp occupies.
+const STAMP_BYTES: usize = 9;
+
+/// A decoded span block: `(wire id, ns offset)` pairs in increasing id
+/// order. Unknown ids are preserved (forward compatibility).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct SpanBlock {
+    pub stamps: Vec<(u8, u64)>,
+}
+
+impl SpanBlock {
+    /// The block form of a live span record. `SpanRec::stamps`
+    /// iterates in wire-id order, so the result is canonical by
+    /// construction.
+    pub fn of(span: &SpanRec) -> SpanBlock {
+        SpanBlock {
+            stamps: span.stamps().map(|(s, off)| (s.id(), off)).collect(),
+        }
+    }
+
+    /// Encode the block in its canonical byte form — the single
+    /// byte-level encoder of the format ([`encode_span_block`] and the
+    /// protocol's response encoding both route through here).
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(2 + self.stamps.len() * STAMP_BYTES);
+        out.push(SPAN_VER);
+        debug_assert!(self.stamps.len() <= MAX_BLOCK_STAMPS);
+        out.push(self.stamps.len() as u8);
+        for &(id, off) in &self.stamps {
+            out.push(id);
+            out.extend_from_slice(&off.to_le_bytes());
+        }
+        out
+    }
+
+    /// Offset of a known stamp, if present.
+    pub fn get(&self, stamp: Stamp) -> Option<u64> {
+        let id = stamp.id();
+        self.stamps
+            .iter()
+            .find(|&&(i, _)| i == id)
+            .map(|&(_, off)| off)
+    }
+
+    /// Number of stamps in the block.
+    pub fn len(&self) -> usize {
+        self.stamps.len()
+    }
+
+    /// True when the block carries no stamps.
+    pub fn is_empty(&self) -> bool {
+        self.stamps.is_empty()
+    }
+}
+
+/// Encode a span record as a wire block (see the module docs) — the
+/// same bytes the server emits for a v2 response ([`SpanBlock::of`] +
+/// [`SpanBlock::encode`]).
+pub fn encode_span_block(span: &SpanRec) -> Vec<u8> {
+    SpanBlock::of(span).encode()
+}
+
+/// Decode a span block from the front of `buf`, returning the block
+/// and the number of bytes consumed. Rejects truncated or malformed
+/// blocks (see the module docs for what counts as malformed).
+pub fn decode_span_block(buf: &[u8]) -> Result<(SpanBlock, usize)> {
+    if buf.len() < 2 {
+        bail!("span block truncated: {} bytes", buf.len());
+    }
+    if buf[0] != SPAN_VER {
+        bail!("unknown span block version {}", buf[0]);
+    }
+    let count = buf[1] as usize;
+    if count > MAX_BLOCK_STAMPS {
+        bail!("span block claims {count} stamps (cap {MAX_BLOCK_STAMPS})");
+    }
+    let need = 2 + count * STAMP_BYTES;
+    if buf.len() < need {
+        bail!("span block truncated: {} of {need} bytes", buf.len());
+    }
+    let mut stamps = Vec::with_capacity(count);
+    let mut prev_id: Option<u8> = None;
+    for k in 0..count {
+        let at = 2 + k * STAMP_BYTES;
+        let id = buf[at];
+        if prev_id.is_some_and(|p| id <= p) {
+            bail!("span block ids not strictly increasing at stamp {k}");
+        }
+        prev_id = Some(id);
+        let off = u64::from_le_bytes(
+            buf[at + 1..at + STAMP_BYTES].try_into().expect("8 bytes"),
+        );
+        stamps.push((id, off));
+    }
+    Ok((SpanBlock { stamps }, need))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::{Duration, Instant};
+
+    fn sample_span() -> SpanRec {
+        let base = Instant::now();
+        let mut s = SpanRec::begin_at(base);
+        for (stamp, ns) in [
+            (Stamp::RecvDone, 1_000u64),
+            (Stamp::Enqueue, 2_000),
+            (Stamp::Seal, 5_000),
+            (Stamp::Dispatch, 6_000),
+            (Stamp::InferDone, 50_000),
+            (Stamp::ReplySend, 60_000),
+        ] {
+            s.mark_at(stamp, base + Duration::from_nanos(ns));
+        }
+        s
+    }
+
+    #[test]
+    fn roundtrip() {
+        let span = sample_span();
+        let wire = encode_span_block(&span);
+        let (block, used) = decode_span_block(&wire).unwrap();
+        assert_eq!(used, wire.len());
+        assert_eq!(block.len(), span.len());
+        for (stamp, off) in span.stamps() {
+            assert_eq!(block.get(stamp), Some(off), "{}", stamp.name());
+        }
+        assert_eq!(block.get(Stamp::PreprocDone), None);
+    }
+
+    #[test]
+    fn decode_consumes_only_the_block() {
+        let mut wire = encode_span_block(&sample_span());
+        let block_len = wire.len();
+        wire.extend_from_slice(&[0xAB; 100]); // trailing payload
+        let (_, used) = decode_span_block(&wire).unwrap();
+        assert_eq!(used, block_len);
+    }
+
+    #[test]
+    fn rejects_truncation_at_every_length() {
+        let wire = encode_span_block(&sample_span());
+        for cut in 0..wire.len() {
+            assert!(
+                decode_span_block(&wire[..cut]).is_err(),
+                "decoded a {cut}-byte prefix of a {}-byte block",
+                wire.len()
+            );
+        }
+    }
+
+    #[test]
+    fn rejects_malformed_blocks() {
+        // Bad version.
+        let mut bad_ver = encode_span_block(&sample_span());
+        bad_ver[0] = 99;
+        assert!(decode_span_block(&bad_ver).is_err());
+        // Count beyond the cap.
+        let huge = [SPAN_VER, (MAX_BLOCK_STAMPS + 1) as u8];
+        assert!(decode_span_block(&huge).is_err());
+        // Duplicate / out-of-order ids.
+        let mut dup = vec![SPAN_VER, 2];
+        for id in [3u8, 3u8] {
+            dup.push(id);
+            dup.extend_from_slice(&7u64.to_le_bytes());
+        }
+        assert!(decode_span_block(&dup).is_err());
+        let mut rev = vec![SPAN_VER, 2];
+        for id in [5u8, 2u8] {
+            rev.push(id);
+            rev.extend_from_slice(&7u64.to_le_bytes());
+        }
+        assert!(decode_span_block(&rev).is_err());
+    }
+
+    #[test]
+    fn keeps_unknown_ids() {
+        // A future server stamping id 31 still decodes.
+        let mut wire = vec![SPAN_VER, 1, 31];
+        wire.extend_from_slice(&42u64.to_le_bytes());
+        let (block, _) = decode_span_block(&wire).unwrap();
+        assert_eq!(block.stamps, vec![(31, 42)]);
+    }
+
+    #[test]
+    fn empty_block_roundtrips() {
+        let (block, used) = decode_span_block(&[SPAN_VER, 0]).unwrap();
+        assert!(block.is_empty());
+        assert_eq!(used, 2);
+    }
+}

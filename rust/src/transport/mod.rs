@@ -77,6 +77,16 @@ pub trait MsgTransport: Send {
     fn recv_msg(&mut self) -> Result<RecvMsg> {
         Ok(RecvMsg::Host(self.recv()?))
     }
+    /// Monotonic instant at which the *last received* message was
+    /// complete at the transport boundary (ring slot / queue / socket),
+    /// before any host bounce copy out of it — the live analogue of an
+    /// RDMA WR timestamp, used as the base of a request's trace span.
+    /// `None` when the transport does not track it (the server then
+    /// falls back to the post-receive clock, folding the bounce into
+    /// transport time).
+    fn recv_boundary(&self) -> Option<std::time::Instant> {
+        None
+    }
     /// Mechanism name for metrics/labels.
     fn kind(&self) -> &'static str;
 }
@@ -92,6 +102,10 @@ impl<T: MsgTransport + ?Sized> MsgTransport for Box<T> {
 
     fn recv_msg(&mut self) -> Result<RecvMsg> {
         (**self).recv_msg()
+    }
+
+    fn recv_boundary(&self) -> Option<std::time::Instant> {
+        (**self).recv_boundary()
     }
 
     fn kind(&self) -> &'static str {

@@ -105,6 +105,9 @@ pub struct RdmaTransport {
     /// A zero-copy slice is outstanding; its credit is returned at the
     /// next receive call.
     pending_credit: bool,
+    /// When the last received message was complete in the ring, before
+    /// any bounce copy out of it (trace-span base, §III-B WR stamps).
+    last_boundary: Option<Instant>,
 }
 
 /// Create a connected pair with `cfg` rings per direction. `gdr`
@@ -125,6 +128,7 @@ pub fn rdma_pair(cfg: RingCfg, gdr: bool) -> (RdmaTransport, RdmaTransport) {
         sent_chunks: 0,
         recv_chunks: 0,
         pending_credit: false,
+        last_boundary: None,
     };
     (mk(a_qp), mk(b_qp))
 }
@@ -207,6 +211,11 @@ impl RdmaTransport {
         }
         if total <= self.payload_capacity() {
             debug_assert_eq!(wc.byte_len, total, "single-chunk length mismatch");
+            // Single chunk: the whole message is resident in the ring
+            // right now — stamp the boundary before any bounce copy, so
+            // the copy-out cost is visible to the trace (rdma pays it,
+            // gdr does not).
+            self.last_boundary = Some(Instant::now());
             if zero_copy && self.gdr {
                 let slice =
                     RegionSlice::new(self.qp.local_mr().clone(), slot + SLOT_HDR, total);
@@ -228,6 +237,11 @@ impl RdmaTransport {
             self.bump_credit();
         }
         debug_assert_eq!(buf.len(), total, "reassembled length mismatch");
+        // Multi-chunk: the bounce copies interleave with the chunk
+        // completions, so the earliest honest boundary is reassembly
+        // completion (trace shows no separate bounce for chunked
+        // messages; the experiment rings are sized to stay single-chunk).
+        self.last_boundary = Some(Instant::now());
         Ok(RecvMsg::Host(buf))
     }
 }
@@ -268,6 +282,10 @@ impl MsgTransport for RdmaTransport {
 
     fn recv_msg(&mut self) -> Result<RecvMsg> {
         self.recv_msg_impl(true)
+    }
+
+    fn recv_boundary(&self) -> Option<Instant> {
+        self.last_boundary
     }
 
     fn kind(&self) -> &'static str {
@@ -449,6 +467,20 @@ mod tests {
         passive.send(b"yo").unwrap();
         assert_eq!(active.recv().unwrap(), b"yo");
         assert_eq!(active.kind(), "gdr");
+    }
+
+    #[test]
+    fn recv_boundary_tracks_last_message() {
+        let (mut c, mut s) = rdma_pair(RingCfg::default(), false);
+        assert!(s.recv_boundary().is_none(), "no message received yet");
+        c.send(b"one").unwrap();
+        let before = Instant::now();
+        s.recv().unwrap();
+        let b1 = s.recv_boundary().expect("boundary after recv");
+        assert!(b1 >= before && b1 <= Instant::now());
+        c.send(b"two").unwrap();
+        s.recv().unwrap();
+        assert!(s.recv_boundary().unwrap() >= b1, "boundary must advance");
     }
 
     #[test]

@@ -18,6 +18,10 @@ use super::{MsgTransport, MAX_MSG};
 pub struct ShmTransport {
     tx: mpsc::SyncSender<Vec<u8>>,
     rx: mpsc::Receiver<Vec<u8>>,
+    /// When the last message was taken off the shared queue
+    /// (trace-span base; the copy-out is not modeled, so this
+    /// coincides with the receive returning).
+    last_boundary: Option<std::time::Instant>,
 }
 
 /// Create a connected pair whose per-direction queues hold up to
@@ -27,8 +31,16 @@ pub fn shm_pair(depth: usize) -> (ShmTransport, ShmTransport) {
     let (a_tx, b_rx) = mpsc::sync_channel(depth);
     let (b_tx, a_rx) = mpsc::sync_channel(depth);
     (
-        ShmTransport { tx: a_tx, rx: a_rx },
-        ShmTransport { tx: b_tx, rx: b_rx },
+        ShmTransport {
+            tx: a_tx,
+            rx: a_rx,
+            last_boundary: None,
+        },
+        ShmTransport {
+            tx: b_tx,
+            rx: b_rx,
+            last_boundary: None,
+        },
     )
 }
 
@@ -43,7 +55,13 @@ impl MsgTransport for ShmTransport {
     }
 
     fn recv(&mut self) -> Result<Vec<u8>> {
-        self.rx.recv().map_err(|_| anyhow!("peer disconnected"))
+        let msg = self.rx.recv().map_err(|_| anyhow!("peer disconnected"))?;
+        self.last_boundary = Some(std::time::Instant::now());
+        Ok(msg)
+    }
+
+    fn recv_boundary(&self) -> Option<std::time::Instant> {
+        self.last_boundary
     }
 
     fn kind(&self) -> &'static str {

@@ -16,18 +16,28 @@ pub const MAX_FRAME: usize = super::MAX_MSG;
 /// One framed TCP connection.
 pub struct TcpTransport {
     stream: TcpStream,
+    /// When the last frame finished arriving (trace-span base; the
+    /// kernel's socket-buffer copies are invisible, so this coincides
+    /// with the receive returning).
+    last_boundary: Option<std::time::Instant>,
 }
 
 impl TcpTransport {
     pub fn connect(addr: impl ToSocketAddrs) -> Result<TcpTransport> {
         let stream = TcpStream::connect(addr).context("tcp connect")?;
         stream.set_nodelay(true).ok();
-        Ok(TcpTransport { stream })
+        Ok(TcpTransport {
+            stream,
+            last_boundary: None,
+        })
     }
 
     pub fn from_stream(stream: TcpStream) -> TcpTransport {
         stream.set_nodelay(true).ok();
-        TcpTransport { stream }
+        TcpTransport {
+            stream,
+            last_boundary: None,
+        }
     }
 
     /// Bind a listener on an ephemeral (or given) port.
@@ -56,7 +66,12 @@ impl MsgTransport for TcpTransport {
         }
         let mut buf = vec![0u8; n];
         self.stream.read_exact(&mut buf).context("frame body")?;
+        self.last_boundary = Some(std::time::Instant::now());
         Ok(buf)
+    }
+
+    fn recv_boundary(&self) -> Option<std::time::Instant> {
+        self.last_boundary
     }
 
     fn kind(&self) -> &'static str {

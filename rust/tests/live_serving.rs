@@ -31,6 +31,7 @@ fn load(model: &str, raw: bool, clients: usize, reqs: usize) -> LoadCfg {
     LoadCfg {
         model: model.into(),
         raw,
+        spans: false,
         n_clients: clients,
         requests_per_client: reqs,
         priority_client: false,
@@ -95,6 +96,7 @@ fn rdma_verbs_transport_serves() {
     let req = protocol::Request {
         model: "tiny_mobilenet".into(),
         raw: false,
+        spans: false,
         prio: 0,
         payload: protocol::f32s_to_bytes(&vec![0.25; 32 * 32 * 3]),
     };
@@ -102,12 +104,13 @@ fn rdma_verbs_transport_serves() {
         cli.send(&req.encode()).unwrap();
         let resp = protocol::Response::decode(&cli.recv().unwrap()).unwrap();
         match resp {
-            protocol::Response::Ok { payload, stages } => {
+            protocol::Response::Ok { payload, stages, .. } => {
                 let out = protocol::bytes_to_f32s(&payload).unwrap();
                 assert_eq!(out.len(), 1000);
                 assert!(stages.infer_ns > 0);
             }
             protocol::Response::Err(e) => panic!("server error: {e}"),
+            other => panic!("unexpected response: {other:?}"),
         }
     }
     drop(cli);
@@ -124,6 +127,7 @@ fn gdr_raw_pipeline_zero_copy_serves() {
     let req = protocol::Request {
         model: "tiny_mobilenet".into(),
         raw: true,
+        spans: false,
         prio: 0,
         payload: frame,
     };
@@ -133,11 +137,12 @@ fn gdr_raw_pipeline_zero_copy_serves() {
     let h = std::thread::spawn(move || accelserve::coordinator::handle_conn(srv, &e2));
     cli.send(&req.encode()).unwrap();
     let gdr_out = match protocol::Response::decode(&cli.recv().unwrap()).unwrap() {
-        protocol::Response::Ok { payload, stages } => {
+        protocol::Response::Ok { payload, stages, .. } => {
             assert!(stages.preproc_ns > 0, "raw path must preprocess");
             protocol::bytes_to_f32s(&payload).unwrap()
         }
         protocol::Response::Err(e) => panic!("{e}"),
+        other => panic!("unexpected response: {other:?}"),
     };
     drop(cli);
     h.join().unwrap();
@@ -148,6 +153,7 @@ fn gdr_raw_pipeline_zero_copy_serves() {
     let tcp_out = match protocol::Response::decode(&t.recv().unwrap()).unwrap() {
         protocol::Response::Ok { payload, .. } => protocol::bytes_to_f32s(&payload).unwrap(),
         protocol::Response::Err(e) => panic!("{e}"),
+        other => panic!("unexpected response: {other:?}"),
     };
     server.stop();
     assert_eq!(gdr_out, tcp_out, "zero-copy path must not change numerics");
@@ -181,6 +187,7 @@ fn all_transports_same_numerics() {
     let req = protocol::Request {
         model: "tiny_mobilenet".into(),
         raw: false,
+        spans: false,
         prio: 0,
         payload: protocol::f32s_to_bytes(&input),
     };
@@ -194,6 +201,7 @@ fn all_transports_same_numerics() {
                 protocol::bytes_to_f32s(&payload).unwrap()
             }
             protocol::Response::Err(e) => panic!("{e}"),
+            other => panic!("unexpected response: {other:?}"),
         };
         drop(cli);
         h.join().unwrap();
@@ -214,6 +222,7 @@ fn all_transports_same_numerics() {
     let tcp_out = match protocol::Response::decode(&t.recv().unwrap()).unwrap() {
         protocol::Response::Ok { payload, .. } => protocol::bytes_to_f32s(&payload).unwrap(),
         protocol::Response::Err(e) => panic!("{e}"),
+        other => panic!("unexpected response: {other:?}"),
     };
     server.stop();
     assert_eq!(shm_out, tcp_out);
@@ -274,6 +283,7 @@ fn server_reports_errors_gracefully() {
     let bad = protocol::Request {
         model: "no_such_model".into(),
         raw: false,
+        spans: false,
         prio: 0,
         payload: protocol::f32s_to_bytes(&[0.0; 4]),
     };

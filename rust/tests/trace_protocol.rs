@@ -1,0 +1,323 @@
+//! Protocol-v2 / trace-subsystem integration tests: span blocks over a
+//! live server, v1<->v2 compatibility in both directions, span-block
+//! validation, executor span monotonicity, and the stats opcode
+//! against the executor's own counters. Artifacts are generated on
+//! demand (`models::gen`), so every test always runs.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use accelserve::coordinator::{
+    fetch_stats, handle_conn, protocol, BatchCfg, Executor, SealReason,
+};
+use accelserve::runtime::TensorBuf;
+use accelserve::trace::{Stage, StageBreakdown, Stamp};
+use accelserve::transport::shm::shm_pair;
+use accelserve::transport::MsgTransport;
+
+const ELEMS: usize = 32 * 32 * 3;
+
+fn start_exec(streams: usize, policy: BatchCfg) -> Arc<Executor> {
+    let dir = accelserve::models::gen::ensure_test_artifacts();
+    Arc::new(
+        Executor::start(
+            dir,
+            streams,
+            policy,
+            &["tiny_mobilenet_b1", "tiny_resnet_b1", "preprocess"],
+        )
+        .expect("executor start"),
+    )
+}
+
+fn f32_payload() -> Vec<u8> {
+    protocol::f32s_to_bytes(&vec![0.5f32; ELEMS])
+}
+
+fn infer_request(spans: bool, raw: bool) -> protocol::Request {
+    protocol::Request {
+        model: "tiny_mobilenet".into(),
+        raw,
+        spans,
+        prio: 0,
+        payload: if raw {
+            accelserve::models::zoo::WorkloadData::image(64 * 64 * 3, 9).bytes
+        } else {
+            f32_payload()
+        },
+    }
+}
+
+/// Offsets of the given stamps that are present, in pipeline order.
+fn present(span: &accelserve::trace::SpanBlock, stamps: &[Stamp]) -> Vec<(Stamp, u64)> {
+    stamps
+        .iter()
+        .filter_map(|&s| span.get(s).map(|o| (s, o)))
+        .collect()
+}
+
+#[test]
+fn v2_client_gets_monotone_span_over_live_server() {
+    let exec = start_exec(1, BatchCfg::none());
+    let (mut cli, srv) = shm_pair(4);
+    let e2 = exec.clone();
+    let h = std::thread::spawn(move || handle_conn(srv, &e2));
+    let req = infer_request(true, false).encode();
+    for _ in 0..3 {
+        let t0 = Instant::now();
+        cli.send(&req).unwrap();
+        let frame = cli.recv().unwrap();
+        let total_ns = t0.elapsed().as_nanos() as u64;
+        assert_eq!(frame[0], 2, "span request must get a status-2 frame");
+        match protocol::Response::decode(&frame).unwrap() {
+            protocol::Response::Ok { span, payload, .. } => {
+                let span = span.expect("v2 response carries a span");
+                // The executor path must stamp the whole pipeline:
+                // enqueue <= seal <= dispatch <= done, plus the server
+                // and engine stamps around them.
+                let seq = present(
+                    &span,
+                    &[
+                        Stamp::RecvRing,
+                        Stamp::RecvDone,
+                        Stamp::Enqueue,
+                        Stamp::GatherStart,
+                        Stamp::Seal,
+                        Stamp::Dispatch,
+                        Stamp::H2dDone,
+                        Stamp::InferDone,
+                        Stamp::D2hDone,
+                        Stamp::ReplySend,
+                    ],
+                );
+                assert!(seq.len() >= 9, "missing stamps: {seq:?}");
+                for w in seq.windows(2) {
+                    assert!(
+                        w[0].1 <= w[1].1,
+                        "{} ({}) after {} ({})",
+                        w[0].0.name(),
+                        w[0].1,
+                        w[1].0.name(),
+                        w[1].1
+                    );
+                }
+                assert_eq!(span.get(Stamp::PreprocDone), None, "not a raw request");
+                // The derived breakdown partitions the client total.
+                let bd = StageBreakdown::from_span(&span, total_ns);
+                assert_eq!(bd.sum(), total_ns);
+                assert!(bd.get(Stage::Infer) > 0, "no infer time in {bd:?}");
+                assert_eq!(protocol::bytes_to_f32s(&payload).unwrap().len(), 1000);
+            }
+            other => panic!("unexpected response: {other:?}"),
+        }
+    }
+    drop(cli);
+    h.join().unwrap();
+}
+
+#[test]
+fn raw_request_span_includes_preproc() {
+    let exec = start_exec(1, BatchCfg::none());
+    let (mut cli, srv) = shm_pair(4);
+    let e2 = exec.clone();
+    let h = std::thread::spawn(move || handle_conn(srv, &e2));
+    let t0 = Instant::now();
+    cli.send(&infer_request(true, true).encode()).unwrap();
+    let frame = cli.recv().unwrap();
+    let total_ns = t0.elapsed().as_nanos() as u64;
+    match protocol::Response::decode(&frame).unwrap() {
+        protocol::Response::Ok { span, .. } => {
+            let span = span.expect("span requested");
+            let pre = span.get(Stamp::PreprocDone).expect("raw path preprocesses");
+            let h2d = span.get(Stamp::H2dDone).expect("staging stamped");
+            let infer = span.get(Stamp::InferDone).expect("compute stamped");
+            assert!(h2d <= pre && pre <= infer, "h2d {h2d} pre {pre} infer {infer}");
+            let bd = StageBreakdown::from_span(&span, total_ns);
+            assert!(bd.get(Stage::Preproc) > 0);
+            assert_eq!(bd.sum(), total_ns);
+        }
+        other => panic!("unexpected response: {other:?}"),
+    }
+    drop(cli);
+    h.join().unwrap();
+}
+
+#[test]
+fn v1_client_roundtrips_against_v2_server() {
+    // A span-less request (what a v1 client sends) must get back a
+    // frame a v1 parser understands: status 0, 24 bytes of stage
+    // timings, then the payload — nothing else.
+    let exec = start_exec(1, BatchCfg::none());
+    let (mut cli, srv) = shm_pair(4);
+    let e2 = exec.clone();
+    let h = std::thread::spawn(move || handle_conn(srv, &e2));
+    cli.send(&infer_request(false, false).encode()).unwrap();
+    let frame = cli.recv().unwrap();
+    assert_eq!(frame[0], 0, "v1 client must get a v1 status-0 frame");
+    // Strict v1 parse: header + payload, payload is exactly the logits.
+    assert_eq!(frame.len(), 25 + 4 * 1000);
+    let infer_ns = u64::from_le_bytes(frame[17..25].try_into().unwrap());
+    assert!(infer_ns > 0);
+    assert_eq!(protocol::bytes_to_f32s(&frame[25..]).unwrap().len(), 1000);
+    // And today's decoder agrees, with no span attached.
+    match protocol::Response::decode(&frame).unwrap() {
+        protocol::Response::Ok { span, .. } => assert_eq!(span, None),
+        other => panic!("unexpected response: {other:?}"),
+    }
+    drop(cli);
+    h.join().unwrap();
+}
+
+#[test]
+fn v2_client_accepts_v1_server_response() {
+    // Byte-for-byte what a v1 server would send: status 0, three
+    // u64 stage timings, payload. The v2 decoder must accept it and
+    // report no span.
+    let mut frame = vec![0u8];
+    for ns in [11u64, 0, 22] {
+        frame.extend_from_slice(&ns.to_le_bytes());
+    }
+    frame.extend_from_slice(&protocol::f32s_to_bytes(&[1.0, 2.0]));
+    match protocol::Response::decode(&frame).unwrap() {
+        protocol::Response::Ok {
+            stages,
+            span,
+            payload,
+        } => {
+            assert_eq!(span, None);
+            assert_eq!(stages.queue_ns, 11);
+            assert_eq!(stages.infer_ns, 22);
+            assert_eq!(protocol::bytes_to_f32s(&payload).unwrap(), vec![1.0, 2.0]);
+        }
+        other => panic!("unexpected response: {other:?}"),
+    }
+}
+
+#[test]
+fn truncated_span_block_is_rejected_not_misread() {
+    // Build a genuine v2 frame, then cut inside the span block: the
+    // decoder must error rather than slide the cut bytes into the
+    // payload.
+    let exec = start_exec(1, BatchCfg::none());
+    let (mut cli, srv) = shm_pair(4);
+    let e2 = exec.clone();
+    let h = std::thread::spawn(move || handle_conn(srv, &e2));
+    cli.send(&infer_request(true, false).encode()).unwrap();
+    let frame = cli.recv().unwrap();
+    assert_eq!(frame[0], 2);
+    for cut in [26usize, 30, 40] {
+        assert!(
+            protocol::Response::decode(&frame[..cut]).is_err(),
+            "cut at {cut} decoded"
+        );
+    }
+    // Corrupting the span version must fail loudly too.
+    let mut bad = frame.clone();
+    bad[25] = 0xEE; // span block version byte
+    assert!(protocol::Response::decode(&bad).is_err());
+    drop(cli);
+    h.join().unwrap();
+}
+
+#[test]
+fn executor_spans_are_monotone_under_batching() {
+    // Concurrent submissions under a deadline policy: jobs fuse, and
+    // every job's span still satisfies enqueue <= gather <= seal <=
+    // dispatch <= infer-done <= d2h-done.
+    let exec = start_exec(1, BatchCfg::deadline(4, 2000));
+    let rxs: Vec<_> = (0..8)
+        .map(|_| {
+            exec.submit(
+                "tiny_mobilenet",
+                false,
+                0,
+                TensorBuf::F32(vec![0.5; ELEMS]),
+            )
+        })
+        .collect();
+    let mut any_batched = false;
+    for rx in rxs {
+        let done = rx.recv().unwrap().unwrap();
+        any_batched |= done.batch > 1;
+        let span = &done.span;
+        let order = [
+            Stamp::Enqueue,
+            Stamp::GatherStart,
+            Stamp::Seal,
+            Stamp::Dispatch,
+            Stamp::H2dDone,
+            Stamp::InferDone,
+            Stamp::D2hDone,
+        ];
+        let mut prev = 0u64;
+        for s in order {
+            let off = span
+                .get(s)
+                .unwrap_or_else(|| panic!("stamp {} missing", s.name()));
+            assert!(off >= prev, "{} went backwards", s.name());
+            prev = off;
+        }
+    }
+    assert!(any_batched, "the burst never fused (streams=1, deadline)");
+}
+
+#[test]
+fn lane_stats_match_batch_counters() {
+    let exec = start_exec(2, BatchCfg::opportunistic(4));
+    for model in ["tiny_mobilenet", "tiny_resnet"] {
+        for _ in 0..5 {
+            exec.infer_sync(model, false, 0, TensorBuf::F32(vec![0.5; ELEMS]))
+                .unwrap();
+        }
+    }
+    let stats = exec.stats();
+    let (jobs, calls) = exec.batch_counters();
+    assert_eq!(jobs, 10);
+    let lane_jobs: u64 = stats.lanes.iter().map(|l| l.jobs).sum();
+    let lane_calls: u64 = stats.lanes.iter().map(|l| l.calls).sum();
+    assert_eq!(lane_jobs, jobs);
+    assert_eq!(lane_calls, calls);
+    // Lanes agree with the per-model counters, row for row.
+    let per_model = exec.model_batch_counters();
+    assert_eq!(per_model.len(), stats.lanes.len());
+    for ((m, j, c), lane) in per_model.iter().zip(&stats.lanes) {
+        assert_eq!(m, &lane.model);
+        assert_eq!(*j, lane.jobs);
+        assert_eq!(*c, lane.calls);
+        assert_eq!(lane.depth, 0, "lane {m} drained");
+        let sealed: u64 = lane.sealed.iter().sum();
+        assert!(sealed >= 1, "lane {m} never sealed");
+        assert!(sealed <= lane.calls, "lane {m}: {sealed} seals > {} calls", lane.calls);
+        // Sequential solo submissions under an opportunistic policy
+        // seal as Opportunistic, never by deadline.
+        assert_eq!(lane.sealed[SealReason::Deadline as usize], 0);
+    }
+}
+
+#[test]
+fn stats_opcode_serves_snapshot_over_wire() {
+    let exec = start_exec(1, BatchCfg::none());
+    for _ in 0..3 {
+        exec.infer_sync("tiny_mobilenet", false, 0, TensorBuf::F32(vec![0.5; ELEMS]))
+            .unwrap();
+    }
+    let expected = exec.stats();
+    let (mut cli, srv) = shm_pair(4);
+    let e2 = exec.clone();
+    let h = std::thread::spawn(move || handle_conn(srv, &e2));
+    let got = fetch_stats(&mut cli).unwrap();
+    assert_eq!(got, expected, "wire snapshot must equal the local one");
+    assert_eq!(got.lanes.len(), 1);
+    assert_eq!(got.lanes[0].model, "tiny_mobilenet");
+    assert_eq!(got.lanes[0].jobs, 3);
+    // The connection still serves inference after a stats exchange.
+    cli.send(&infer_request(false, false).encode()).unwrap();
+    match protocol::Response::decode(&cli.recv().unwrap()).unwrap() {
+        protocol::Response::Ok { payload, .. } => {
+            assert_eq!(protocol::bytes_to_f32s(&payload).unwrap().len(), 1000);
+        }
+        other => panic!("unexpected response: {other:?}"),
+    }
+    drop(cli);
+    h.join().unwrap();
+}
