@@ -61,6 +61,8 @@ fn main() -> anyhow::Result<()> {
                 priority_client: false,
                 payload_elems: 32 * 32 * 3,
                 warmup: 5,
+                deadline_us: None,
+                timeout: None,
             };
             let s = run_tcp(addr, &cfg)?;
             let lat = s.all.total.summary();
@@ -88,6 +90,8 @@ fn main() -> anyhow::Result<()> {
         priority_client: false,
         payload_elems: 64 * 64 * 3,
         warmup: 4,
+        deadline_us: None,
+        timeout: None,
     };
     let s = run_tcp(server.addr, &raw_cfg)?;
     println!(

@@ -6,7 +6,7 @@
 //! [`StageBreakdown`] and aggregated into [`LiveStats::spans`].
 
 use std::net::SocketAddr;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Result};
 
@@ -39,6 +39,16 @@ pub struct LoadCfg {
     pub payload_elems: usize,
     /// Warmup requests discarded per client.
     pub warmup: usize,
+    /// Per-request SLO budget in µs from server receipt
+    /// ([`protocol::FLAG_DEADLINE`], protocol v2). `None` keeps frames
+    /// byte-identical to v1 and exempts the traffic from deadline
+    /// shedding.
+    pub deadline_us: Option<u64>,
+    /// Connect/read/write timeout for each client connection; `None`
+    /// blocks forever (the v1 behaviour). Set it when the server may
+    /// hang — a stalled peer then surfaces as a client error instead of
+    /// wedging the calling thread.
+    pub timeout: Option<Duration>,
 }
 
 /// Aggregate results of one live run.
@@ -53,6 +63,13 @@ pub struct LiveStats {
     pub duration_s: f64,
     pub throughput_rps: f64,
     pub errors: usize,
+    /// Requests the server shed (admission control, protocol v2) —
+    /// counted across warmup too, so the total matches the executor's
+    /// per-lane shed counters exactly.
+    pub sheds: usize,
+    /// Requests actually served OK (including warmup); the goodput
+    /// numerator under overload.
+    pub served: usize,
 }
 
 /// One measured request: the Table I record plus, when the server
@@ -72,18 +89,34 @@ pub fn fetch_stats(t: &mut dyn MsgTransport) -> Result<ExecStats> {
         Response::Stats(s) => Ok(s),
         Response::Err(e) => bail!("server rejected stats request: {e}"),
         Response::Ok { .. } => bail!("server answered stats with an inference response"),
+        Response::Shed { msg, .. } => bail!("server shed a stats request: {msg}"),
     }
+}
+
+/// What one closed-loop client observed: the measured (post-warmup)
+/// records plus the served/shed tallies for goodput accounting.
+#[derive(Debug, Default)]
+pub struct ClientRun {
+    /// Post-warmup measured requests (latency records).
+    pub recs: Vec<ClientRec>,
+    /// Requests answered OK, warmup included.
+    pub oks: usize,
+    /// Requests the server shed, warmup included.
+    pub sheds: usize,
 }
 
 /// Drive a closed loop over an arbitrary connected transport. With
 /// [`LoadCfg::spans`] set, requests ask for span timelines
 /// ([`protocol::FLAG_SPANS`]); a span-less (v1) response simply yields
-/// records without breakdowns.
+/// records without breakdowns. A shed response ([`Response::Shed`]) is
+/// tallied — not a client failure — and the loop moves straight on to
+/// the next request, which is what makes the closed loop keep offering
+/// load under admission control.
 pub fn run_client_loop(
     t: &mut dyn MsgTransport,
     cfg: &LoadCfg,
     client_idx: usize,
-) -> Result<Vec<ClientRec>> {
+) -> Result<ClientRun> {
     let prio = if cfg.priority_client && client_idx == 0 {
         10
     } else {
@@ -106,11 +139,12 @@ pub fn run_client_loop(
         raw: cfg.raw,
         spans: cfg.spans,
         prio,
+        deadline_us: cfg.deadline_us,
         payload,
     }
     .encode();
 
-    let mut out = Vec::with_capacity(cfg.requests_per_client);
+    let mut out = ClientRun::default();
     for i in 0..cfg.requests_per_client {
         let t0 = Instant::now();
         t.send(&req)?;
@@ -119,7 +153,13 @@ pub fn run_client_loop(
         match Response::decode(&frame)? {
             Response::Err(e) => bail!("server error: {e}"),
             Response::Stats(_) => bail!("unsolicited stats response"),
+            Response::Shed { .. } => {
+                // Admission control said no — cheap, expected under
+                // overload. No latency record: the request wasn't served.
+                out.sheds += 1;
+            }
             Response::Ok { stages, span, .. } => {
+                out.oks += 1;
                 if i < cfg.warmup {
                     continue;
                 }
@@ -129,7 +169,7 @@ pub fn run_client_loop(
                 // processing (the paper's ZeroMQ accounting, §III-B);
                 // split evenly between request and response paths.
                 let net_ns = total_ns.saturating_sub(server_ns);
-                out.push(ClientRec {
+                out.recs.push(ClientRec {
                     rec: ReqRecord {
                         client: client_idx,
                         total: Ns(total_ns),
@@ -162,11 +202,11 @@ where
     F: Fn(usize) -> Result<T> + Sync,
 {
     let t_start = Instant::now();
-    let results: Vec<Result<Vec<ClientRec>>> = std::thread::scope(|s| {
+    let results: Vec<Result<ClientRun>> = std::thread::scope(|s| {
         let mut handles = Vec::new();
         for c in 0..cfg.n_clients {
             let connect = &connect;
-            handles.push(s.spawn(move || -> Result<Vec<ClientRec>> {
+            handles.push(s.spawn(move || -> Result<ClientRun> {
                 let mut t = connect(c)?;
                 run_client_loop(&mut t, cfg, c)
             }));
@@ -180,14 +220,14 @@ where
             .collect()
     });
     let mut stats = LiveStats::default();
-    let mut served = 0usize;
     for res in results {
         match res {
-            Ok(records) => {
+            Ok(run) => {
                 // A successful client completed its whole closed loop
                 // (warmup requests were served even though unrecorded).
-                served += cfg.requests_per_client;
-                for cr in &records {
+                stats.served += run.oks;
+                stats.sheds += run.sheds;
+                for cr in &run.recs {
                     let r = &cr.rec;
                     stats.all.push(r);
                     if r.priority {
@@ -207,11 +247,14 @@ where
         }
     }
     stats.duration_s = t_start.elapsed().as_secs_f64();
-    stats.throughput_rps = served as f64 / stats.duration_s.max(1e-9);
+    // Goodput: only requests that were actually served count — shed
+    // requests cost a round-trip but produce nothing.
+    stats.throughput_rps = stats.served as f64 / stats.duration_s.max(1e-9);
     Ok(stats)
 }
 
-/// Run the full TCP load test: spawns `n_clients` closed-loop threads.
+/// Run the full TCP load test: spawns `n_clients` closed-loop threads
+/// (honouring [`LoadCfg::timeout`] on connect and reads).
 pub fn run_tcp(addr: SocketAddr, cfg: &LoadCfg) -> Result<LiveStats> {
-    run_on(|_client| TcpTransport::connect(addr), cfg)
+    run_on(|_client| TcpTransport::connect_timed(addr, cfg.timeout), cfg)
 }

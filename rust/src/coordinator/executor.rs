@@ -62,16 +62,104 @@ use crate::trace::{SpanRec, Stamp};
 
 use super::protocol::StageNs;
 
+/// Why admission control rejected a job at submit time — the wire
+/// codes of the protocol's `Shed` status and the index into the
+/// per-lane shed counters (see [`SHED_REASON_NAMES`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum ShedReason {
+    /// The model's lane was at [`SchedCfg::queue_cap`].
+    QueueFull = 0,
+    /// The request's deadline was already unwinnable at submit time
+    /// (estimated queue + service time exceeded the remaining budget).
+    Deadline = 1,
+}
+
+/// Number of shed reasons (width of the per-lane shed counter array).
+pub const N_SHED_REASONS: usize = 2;
+
+/// Shed-reason names, indexed like the counters.
+pub const SHED_REASON_NAMES: [&str; N_SHED_REASONS] = ["queue_full", "deadline"];
+
+impl ShedReason {
+    /// Wire code (protocol `Shed` status reason byte).
+    pub fn code(self) -> u8 {
+        self as u8
+    }
+
+    /// Parse a wire code; `None` for unknown codes.
+    pub fn from_code(c: u8) -> Option<ShedReason> {
+        match c {
+            0 => Some(ShedReason::QueueFull),
+            1 => Some(ShedReason::Deadline),
+            _ => None,
+        }
+    }
+
+    /// Human-readable name (counter column label).
+    pub fn name(self) -> &'static str {
+        SHED_REASON_NAMES[self as usize]
+    }
+}
+
+/// Typed executor failure: either admission control shed the job (a
+/// load signal the client should see as the distinct wire `Shed`
+/// status) or execution genuinely failed. Kept as a real enum — not a
+/// stringly `anyhow::Error` — so the server can map the two onto
+/// different wire statuses without parsing messages.
+#[derive(Debug)]
+pub enum ExecError {
+    /// Admission control rejected the job before it was queued.
+    Shed { reason: ShedReason, msg: String },
+    /// The job was admitted but execution failed.
+    Failed(anyhow::Error),
+}
+
+impl ExecError {
+    /// Shorthand for a shed error.
+    pub fn shed(reason: ShedReason, msg: impl Into<String>) -> ExecError {
+        ExecError::Shed {
+            reason,
+            msg: msg.into(),
+        }
+    }
+
+    /// The shed reason, if this is a shed (admission) error.
+    pub fn shed_reason(&self) -> Option<ShedReason> {
+        match self {
+            ExecError::Shed { reason, .. } => Some(*reason),
+            ExecError::Failed(_) => None,
+        }
+    }
+}
+
+impl std::fmt::Display for ExecError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ExecError::Shed { reason, msg } => write!(f, "shed ({}): {msg}", reason.name()),
+            ExecError::Failed(e) => write!(f, "{e}"),
+        }
+    }
+}
+
+// Lets `?` lift an `ExecError` into `anyhow::Result` via the blanket
+// `From<E: std::error::Error>` impl, so sync callers that don't care
+// about the shed/failed distinction keep composing.
+impl std::error::Error for ExecError {}
+
 /// One queued inference job.
 pub struct Job {
     pub model: String,
     pub raw: bool,
     pub prio: u8,
     pub payload: TensorBuf,
-    pub reply: mpsc::Sender<Result<Done>>,
+    pub reply: mpsc::Sender<Result<Done, ExecError>>,
     /// The request's trace span (enqueue/gather/seal/dispatch and the
     /// engine stamps are marked as the job moves through the pipeline).
     span: SpanRec,
+    /// Absolute SLO deadline (submit time + the request's relative
+    /// `deadline_us`); `None` = no SLO, scheduled purely by WRR.
+    deadline: Option<Instant>,
     enqueued: Instant,
     seq: u64,
 }
@@ -107,14 +195,17 @@ pub enum SealReason {
     Deadline = 3,
     /// Incompatible work waited in the lane while a stream sat idle.
     Blocked = 4,
+    /// Waiting any longer would have blown the head's SLO deadline
+    /// (estimated service time ate the remaining budget).
+    Slo = 5,
 }
 
 /// Number of seal reasons (width of the per-lane counter array).
-pub const N_SEAL_REASONS: usize = 5;
+pub const N_SEAL_REASONS: usize = 6;
 
 /// Reason names, indexed like the counters.
 pub const SEAL_REASON_NAMES: [&str; N_SEAL_REASONS] =
-    ["single", "full", "opportunistic", "deadline", "blocked"];
+    ["single", "full", "opportunistic", "deadline", "blocked", "slo"];
 
 /// One lane's counter snapshot (the stats opcode's per-lane row).
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -125,10 +216,16 @@ pub struct LaneStats {
     /// Executable calls issued for this model (`jobs / calls` = mean
     /// achieved batch).
     pub calls: u64,
+    /// Cumulative execution-stream time spent on this model, in ns —
+    /// `svc_ns / jobs` is the per-job service estimate admission
+    /// control prices deadlines with.
+    pub svc_ns: u64,
     /// Jobs currently queued in the lane, not yet sealed.
     pub depth: u32,
     /// Sealed-batch counts by [`SealReason`].
     pub sealed: [u64; N_SEAL_REASONS],
+    /// Jobs shed at submit by [`ShedReason`].
+    pub shed: [u64; N_SHED_REASONS],
 }
 
 /// Executor-wide counter snapshot ([`Executor::stats`], carried over
@@ -355,6 +452,15 @@ struct Lane {
     credits: u32,
     /// Sealed-batch counts by [`SealReason`] (stats opcode).
     sealed: [u64; N_SEAL_REASONS],
+    /// Jobs shed at submit by [`ShedReason`] (stats opcode).
+    shed: [u64; N_SHED_REASONS],
+}
+
+impl Lane {
+    /// Earliest SLO deadline among the lane's queued jobs; the EDF key.
+    fn min_deadline(&self) -> Option<Instant> {
+        self.heap.iter().filter_map(|q| q.0.deadline).min()
+    }
 }
 
 /// Mutable scheduler state (behind `Shared::sched`): the lanes, the
@@ -389,8 +495,13 @@ struct Shared {
     /// Consecutive dispatches that switched model — the mixsweep's
     /// measure of cross-model concurrency.
     interleaves: AtomicU64,
-    /// Per-model `(jobs, executable_calls)` counters.
-    counters: Mutex<HashMap<String, (u64, u64)>>,
+    /// Per-model `(jobs, executable_calls, svc_ns)` counters; `svc_ns /
+    /// jobs` is the per-job service estimate admission control and the
+    /// SLO seal both price deadlines with.
+    counters: Mutex<HashMap<String, (u64, u64, u64)>>,
+    /// Execution-stream count: how many jobs drain concurrently, the
+    /// divisor in the admission-control queue-delay estimate.
+    streams: usize,
 }
 
 impl Shared {
@@ -407,8 +518,30 @@ impl Shared {
                 weight: pol.weight.max(1),
                 credits: pol.weight.max(1),
                 sealed: [0; N_SEAL_REASONS],
+                shed: [0; N_SHED_REASONS],
             }
         })
+    }
+
+    /// Per-job service-time estimate for `model` in ns (`svc_ns /
+    /// jobs`), 0 until the lane has executed anything. Caller may hold
+    /// the `sched` lock — the lock order is always sched → counters.
+    fn svc_estimate_ns(&self, model: &str) -> u64 {
+        let c = self.counters.lock().unwrap();
+        match c.get(model) {
+            Some(&(jobs, _, svc_ns)) if jobs > 0 => svc_ns / jobs,
+            _ => 0,
+        }
+    }
+
+    /// Snapshot every lane's per-job service estimate (scheduler-side
+    /// batch of [`Shared::svc_estimate_ns`]).
+    fn svc_estimates(&self) -> HashMap<String, u64> {
+        let c = self.counters.lock().unwrap();
+        c.iter()
+            .filter(|(_, &(jobs, _, _))| jobs > 0)
+            .map(|(m, &(jobs, _, svc_ns))| (m.clone(), svc_ns / jobs))
+            .collect()
     }
 }
 
@@ -464,6 +597,7 @@ impl Executor {
             batches_run: AtomicU64::new(0),
             interleaves: AtomicU64::new(0),
             counters: Mutex::new(HashMap::new()),
+            streams,
         });
         let warm: Vec<String> = warm.iter().map(|s| s.to_string()).collect();
         let mut workers = Vec::new();
@@ -521,7 +655,7 @@ impl Executor {
 
     /// Submit a job; the reply arrives on the returned channel. A full
     /// lane (more than [`SchedCfg::queue_cap`] queued jobs for this
-    /// model) rejects the job immediately on that channel instead of
+    /// model) sheds the job immediately on that channel instead of
     /// queueing it. The job gets a fresh trace span starting now; use
     /// [`Executor::submit_traced`] to carry server-side receive stamps
     /// into the executor.
@@ -531,7 +665,7 @@ impl Executor {
         raw: bool,
         prio: u8,
         payload: TensorBuf,
-    ) -> mpsc::Receiver<Result<Done>> {
+    ) -> mpsc::Receiver<Result<Done, ExecError>> {
         self.submit_traced(model, raw, prio, payload, SpanRec::begin())
     }
 
@@ -544,10 +678,35 @@ impl Executor {
         raw: bool,
         prio: u8,
         payload: TensorBuf,
+        span: SpanRec,
+    ) -> mpsc::Receiver<Result<Done, ExecError>> {
+        self.submit_deadline(model, raw, prio, payload, None, span)
+    }
+
+    /// Full submit: [`Executor::submit_traced`] plus an optional SLO
+    /// budget (relative µs from now, the wire `FLAG_DEADLINE` field).
+    /// Admission control runs here: the job is shed on its reply
+    /// channel — never queued — when the lane is at `queue_cap`
+    /// ([`ShedReason::QueueFull`]) or when the deadline is already
+    /// unwinnable ([`ShedReason::Deadline`]: estimated queue + service
+    /// time from the per-lane counters exceeds the budget). Shedding at
+    /// the submit edge is the cheap failure the paper's overload story
+    /// wants — the client learns in one RTT instead of a deadline blown
+    /// deep in the pipeline.
+    pub fn submit_deadline(
+        &self,
+        model: &str,
+        raw: bool,
+        prio: u8,
+        payload: TensorBuf,
+        deadline_us: Option<u64>,
         mut span: SpanRec,
-    ) -> mpsc::Receiver<Result<Done>> {
+    ) -> mpsc::Receiver<Result<Done, ExecError>> {
         let (tx, rx) = mpsc::channel();
         span.mark(Stamp::Enqueue);
+        let now = Instant::now();
+        let deadline =
+            deadline_us.map(|us| now + Duration::from_micros(us.min(FLUSH_US_MAX)));
         let job = Job {
             model: model.to_string(),
             raw,
@@ -555,18 +714,46 @@ impl Executor {
             payload,
             reply: tx,
             span,
-            enqueued: Instant::now(),
+            deadline,
+            enqueued: now,
             seq: self.shared.seq.fetch_add(1, Ordering::Relaxed),
         };
         {
             let mut s = self.shared.sched.lock().unwrap();
+            // Estimate before the lane borrow; lock order sched → counters.
+            let est_ns = self.shared.svc_estimate_ns(model);
             let lane = self.shared.lane(&mut s, model);
             if lane.heap.len() >= self.shared.cfg.queue_cap {
-                let _ = job.reply.send(Err(anyhow!(
+                lane.shed[ShedReason::QueueFull as usize] += 1;
+                let msg = format!(
                     "lane for model {model} is full ({} queued jobs)",
                     lane.heap.len()
-                )));
+                );
+                let _ = job
+                    .reply
+                    .send(Err(ExecError::shed(ShedReason::QueueFull, msg)));
                 return rx;
+            }
+            if let (Some(d), true) = (job.deadline, est_ns > 0) {
+                // Queue delay: the jobs ahead drain `streams`-wide, then
+                // this job itself must still run.
+                let ahead = lane.heap.len() as u64;
+                let streams = self.shared.streams.max(1) as u64;
+                let wait_ns = est_ns * (ahead / streams + 1);
+                if now + Duration::from_nanos(wait_ns) > d {
+                    lane.shed[ShedReason::Deadline as usize] += 1;
+                    let msg = format!(
+                        "deadline unwinnable for model {model}: budget {}us < estimated {}us \
+                         ({} queued ahead)",
+                        deadline_us.unwrap_or(0),
+                        wait_ns / 1_000,
+                        ahead
+                    );
+                    let _ = job
+                        .reply
+                        .send(Err(ExecError::shed(ShedReason::Deadline, msg)));
+                    return rx;
+                }
             }
             lane.heap.push(Queued(job));
         }
@@ -581,10 +768,10 @@ impl Executor {
         raw: bool,
         prio: u8,
         payload: TensorBuf,
-    ) -> Result<Done> {
+    ) -> Result<Done, ExecError> {
         self.submit(model, raw, prio, payload)
             .recv()
-            .map_err(|_| anyhow!("executor dropped the job"))?
+            .map_err(|_| ExecError::Failed(anyhow!("executor dropped the job")))?
     }
 
     /// Submit with a caller-provided trace span and wait.
@@ -595,10 +782,23 @@ impl Executor {
         prio: u8,
         payload: TensorBuf,
         span: SpanRec,
-    ) -> Result<Done> {
-        self.submit_traced(model, raw, prio, payload, span)
+    ) -> Result<Done, ExecError> {
+        self.infer_deadline(model, raw, prio, payload, None, span)
+    }
+
+    /// Submit with a trace span and an SLO budget, and wait.
+    pub fn infer_deadline(
+        &self,
+        model: &str,
+        raw: bool,
+        prio: u8,
+        payload: TensorBuf,
+        deadline_us: Option<u64>,
+        span: SpanRec,
+    ) -> Result<Done, ExecError> {
+        self.submit_deadline(model, raw, prio, payload, deadline_us, span)
             .recv()
-            .map_err(|_| anyhow!("executor dropped the job"))?
+            .map_err(|_| ExecError::Failed(anyhow!("executor dropped the job")))?
     }
 
     /// Jobs queued across all lanes, not yet sealed into a batch.
@@ -624,7 +824,7 @@ impl Executor {
         let c = self.shared.counters.lock().unwrap();
         let mut v: Vec<(String, u64, u64)> = c
             .iter()
-            .map(|(m, &(jobs, calls))| (m.clone(), jobs, calls))
+            .map(|(m, &(jobs, calls, _))| (m.clone(), jobs, calls))
             .collect();
         v.sort();
         v
@@ -650,13 +850,15 @@ impl Executor {
             .lanes
             .iter()
             .map(|(model, lane)| {
-                let (jobs, calls) = counters.get(model).copied().unwrap_or((0, 0));
+                let (jobs, calls, svc_ns) = counters.get(model).copied().unwrap_or((0, 0, 0));
                 LaneStats {
                     model: model.clone(),
                     jobs,
                     calls,
+                    svc_ns,
                     depth: lane.heap.len() as u32,
                     sealed: lane.sealed,
+                    shed: lane.shed,
                 }
             })
             .collect();
@@ -710,10 +912,11 @@ fn flush_deadline(head: &Job, cfg: BatchCfg) -> Instant {
     head.enqueued + Duration::from_micros(cfg.flush_us.min(FLUSH_US_MAX))
 }
 
-/// The continuous scheduler: seal sealable lanes onto idle workers in
-/// weighted-round-robin order; when every remaining lane is holding a
-/// gather for peers, sleep until the earliest flush deadline (or until
-/// a submission / worker-idle notification).
+/// The continuous scheduler: seal sealable lanes onto idle workers —
+/// earliest-deadline-first over lanes holding SLO work, then weighted
+/// round-robin over the rest; when every remaining lane is holding a
+/// gather for peers, sleep until the earliest flush or SLO deadline
+/// (or until a submission / worker-idle notification).
 fn scheduler_loop(sh: Arc<Shared>, manifest: Manifest) {
     let mut last_model: Option<String> = None;
     let mut s = sh.sched.lock().unwrap();
@@ -722,9 +925,12 @@ fn scheduler_loop(sh: Arc<Shared>, manifest: Manifest) {
             return;
         }
         let now = Instant::now();
+        // Per-job service estimates for the SLO seal decisions this
+        // round (lock order sched → counters, same as `stats`).
+        let est = sh.svc_estimates();
         // Dispatch until workers run out or nothing is sealable.
         while s.ready.len() < s.idle_workers {
-            let Some(batch) = pick_and_seal(&mut s, &manifest, now) else {
+            let Some(batch) = pick_and_seal(&mut s, &manifest, now, &est) else {
                 break;
             };
             if let Some(prev) = &last_model {
@@ -738,9 +944,9 @@ fn scheduler_loop(sh: Arc<Shared>, manifest: Manifest) {
         }
         // With spare workers, every nonempty lane is holding for peers
         // (anything sealable was sealed above): sleep to the earliest
-        // flush deadline. With no spare worker, sleep until one frees.
+        // flush/SLO deadline. With no spare worker, sleep until one frees.
         let wait = if s.ready.len() < s.idle_workers {
-            earliest_deadline(&s, now)
+            earliest_deadline(&s, now, &est)
         } else {
             None
         };
@@ -751,16 +957,22 @@ fn scheduler_loop(sh: Arc<Shared>, manifest: Manifest) {
     }
 }
 
-/// Earliest flush deadline over all nonempty lanes, as a wait duration
-/// from `now` (floored at 100µs so a just-expired deadline cannot spin
-/// the scheduler).
-fn earliest_deadline(s: &Sched, now: Instant) -> Option<Duration> {
+/// Earliest wake-up over all nonempty lanes — the head's flush deadline
+/// or, for lanes holding SLO work, the earliest job deadline minus the
+/// lane's estimated service time (the last moment an SLO seal can still
+/// win) — as a wait duration from `now` (floored at 100µs so a
+/// just-expired deadline cannot spin the scheduler).
+fn earliest_deadline(s: &Sched, now: Instant, est: &HashMap<String, u64>) -> Option<Duration> {
     s.lanes
-        .values()
-        .filter_map(|lane| {
-            lane.heap
-                .peek()
-                .map(|q| flush_deadline(&q.0, lane.cfg))
+        .iter()
+        .filter_map(|(name, lane)| {
+            let head = lane.heap.peek()?;
+            let mut t = flush_deadline(&head.0, lane.cfg);
+            if let Some(d) = lane.min_deadline() {
+                let svc = Duration::from_nanos(est.get(name).copied().unwrap_or(0));
+                t = t.min(d.checked_sub(svc).unwrap_or(now));
+            }
+            Some(t)
         })
         .min()
         .map(|d| {
@@ -769,25 +981,51 @@ fn earliest_deadline(s: &Sched, now: Instant) -> Option<Duration> {
         })
 }
 
-/// Weighted round-robin over the lanes: starting at the cursor, seal
-/// the first sealable lane that still has round-robin credits; if no
-/// sealable lane has credits left, refill every lane to its weight and
-/// retry once. A lane keeps the cursor until its credits run out, so a
-/// weight-2 lane dispatches two batches per cycle.
-fn pick_and_seal(s: &mut Sched, manifest: &Manifest, now: Instant) -> Option<Vec<Job>> {
+/// Pick the next batch to seal. Lanes holding SLO work are tried first,
+/// **earliest deadline first** — a tight-deadline lane preempts the
+/// round-robin cursor and does not need credits, so deadline traffic is
+/// never starved behind a heavier deadline-free lane. Deadline-free
+/// lanes then go through the weighted round-robin: starting at the
+/// cursor, seal the first sealable lane that still has round-robin
+/// credits; if no sealable lane has credits left, refill every lane to
+/// its weight and retry once. A lane keeps the cursor until its credits
+/// run out, so a weight-2 lane dispatches two batches per cycle.
+fn pick_and_seal(
+    s: &mut Sched,
+    manifest: &Manifest,
+    now: Instant,
+    est: &HashMap<String, u64>,
+) -> Option<Vec<Job>> {
     let n = s.order.len();
     if n == 0 {
         return None;
     }
+    // EDF pass over lanes with queued SLO work.
+    let mut slo_lanes: Vec<(Instant, String)> = s
+        .lanes
+        .iter()
+        .filter_map(|(name, lane)| lane.min_deadline().map(|d| (d, name.clone())))
+        .collect();
+    slo_lanes.sort_by_key(|(d, _)| *d);
+    for (_, name) in slo_lanes {
+        let est_ns = est.get(&name).copied().unwrap_or(0);
+        let lane = s.lanes.get_mut(&name).unwrap();
+        if let Some(batch) = try_seal(lane, manifest, now, est_ns) {
+            lane.credits = lane.credits.saturating_sub(1);
+            return Some(batch);
+        }
+    }
+    // WRR pass over everything else.
     for pass in 0..2 {
         for k in 0..n {
             let i = (s.cursor + k) % n;
             let name = &s.order[i];
+            let est_ns = est.get(name).copied().unwrap_or(0);
             let lane = s.lanes.get_mut(name).unwrap();
             if pass == 0 && lane.credits == 0 {
                 continue;
             }
-            if let Some(batch) = try_seal(lane, manifest, now) {
+            if let Some(batch) = try_seal(lane, manifest, now, est_ns) {
                 lane.credits = lane.credits.saturating_sub(1);
                 s.cursor = if lane.credits == 0 { (i + 1) % n } else { i };
                 return Some(batch);
@@ -807,14 +1045,22 @@ fn pick_and_seal(s: &mut Sched, manifest: &Manifest, now: Instant) -> Option<Vec
 /// non-raw — the only thing the batched executables concatenate, so a
 /// malformed request runs, and fails, alone). It seals when it fills
 /// the policy cap, under an opportunistic (`flush_us == 0`) policy,
-/// at the head's flush deadline, or early when other work waits in
-/// this lane (the caller only attempts a seal while a stream is idle —
-/// holding a flush window while blocking queued work on an idle stream
-/// would buy latency for nothing). Otherwise every popped job goes
-/// back on the heap — nothing is held outside the lane, which is what
-/// lets a later higher-priority arrival become the new head and
-/// overtake the gather.
-fn try_seal(lane: &mut Lane, manifest: &Manifest, now: Instant) -> Option<Vec<Job>> {
+/// at the head's flush deadline, when waiting any longer would blow
+/// the group's earliest SLO deadline (`est_ns` is the lane's per-job
+/// service estimate — the batch needs `est_ns × len` more ns to land),
+/// or early when other work waits in this lane (the caller only
+/// attempts a seal while a stream is idle — holding a flush window
+/// while blocking queued work on an idle stream would buy latency for
+/// nothing). Otherwise every popped job goes back on the heap —
+/// nothing is held outside the lane, which is what lets a later
+/// higher-priority arrival become the new head and overtake the
+/// gather.
+fn try_seal(
+    lane: &mut Lane,
+    manifest: &Manifest,
+    now: Instant,
+    est_ns: u64,
+) -> Option<Vec<Job>> {
     let head_prio = lane.heap.peek()?.0.prio;
     let mut head = lane.heap.pop().unwrap().0;
     // First consideration for a gather: the trace boundary between
@@ -854,12 +1100,25 @@ fn try_seal(lane: &mut Lane, manifest: &Manifest, now: Instant) -> Option<Vec<Jo
         }
     }
     let blocked_work = !spill.is_empty() || !lane.heap.is_empty();
+    // Earliest SLO deadline in the gathered group: waiting past
+    // `slo_latest` (deadline minus the time the batch itself needs to
+    // execute) guarantees a blown deadline, so seal there.
+    let slo_latest = group
+        .iter()
+        .filter_map(|j| j.deadline)
+        .min()
+        .map(|d| {
+            let run = Duration::from_nanos(est_ns.saturating_mul(group.len() as u64));
+            d.checked_sub(run).unwrap_or(now)
+        });
     let reason = if group.len() >= cap {
         Some(SealReason::Full)
     } else if lane.cfg.flush_us == 0 {
         Some(SealReason::Opportunistic)
     } else if now >= flush_deadline(&group[0], lane.cfg) {
         Some(SealReason::Deadline)
+    } else if slo_latest.is_some_and(|t| now >= t) {
+        Some(SealReason::Slo)
     } else if blocked_work {
         Some(SealReason::Blocked)
     } else {
@@ -942,15 +1201,26 @@ fn run_jobs(engine: &Engine, mut jobs: Vec<Job>, sh: &Shared) {
             artifact_chunk(engine.manifest(), &jobs[0].model, jobs.len())
         };
         let chunk: Vec<Job> = jobs.drain(..b).collect();
-        sh.jobs_run.fetch_add(chunk.len() as u64, Ordering::Relaxed);
+        let chunk_len = chunk.len() as u64;
+        sh.jobs_run.fetch_add(chunk_len, Ordering::Relaxed);
         sh.batches_run.fetch_add(1, Ordering::Relaxed);
         {
             let mut c = sh.counters.lock().unwrap();
-            let e = c.entry(model.clone()).or_insert((0, 0));
-            e.0 += chunk.len() as u64;
+            let e = c.entry(model.clone()).or_insert((0, 0, 0));
+            e.0 += chunk_len;
             e.1 += 1;
         }
+        let t0 = Instant::now();
         run_chunk(engine, chunk);
+        // Stream time accrues after the chunk so the estimate reflects
+        // completed work; the job/call counters above stay visible the
+        // moment a reply lands (tests rely on that ordering).
+        let svc_ns = t0.elapsed().as_nanos() as u64;
+        {
+            let mut c = sh.counters.lock().unwrap();
+            let e = c.entry(model.clone()).or_insert((0, 0, 0));
+            e.2 += svc_ns;
+        }
     }
 }
 
@@ -988,7 +1258,7 @@ fn run_chunk(engine: &Engine, mut jobs: Vec<Job>) {
         };
         match pre {
             Err(e) => {
-                let _ = reply.send(Err(e));
+                let _ = reply.send(Err(ExecError::Failed(e)));
             }
             Ok((pre, tm_pre)) => {
                 // Staging the raw frame onto the device is the
@@ -999,7 +1269,7 @@ fn run_chunk(engine: &Engine, mut jobs: Vec<Job>) {
                 let name = format!("{model}_b1");
                 let out = engine.infer_timed(&name, &TensorBuf::F32(pre));
                 let t2 = Instant::now();
-                let done = out.map(|(output, tm)| {
+                let done = out.map_err(ExecError::Failed).map(|(output, tm)| {
                     span.mark_after(Stamp::InferDone, t1, tm.h2d_ns + tm.compute_ns);
                     span.mark_at(Stamp::D2hDone, t2);
                     Done {
@@ -1033,7 +1303,9 @@ fn run_chunk(engine: &Engine, mut jobs: Vec<Job>) {
                 // answer every reply channel regardless: dropping a
                 // fused peer's sender would fail an innocent request.
                 for peer in &jobs {
-                    let _ = peer.reply.send(Err(anyhow!("u8 payload without raw flag")));
+                    let _ = peer
+                        .reply
+                        .send(Err(ExecError::Failed(anyhow!("u8 payload without raw flag"))));
                 }
                 return;
             }
@@ -1046,7 +1318,7 @@ fn run_chunk(engine: &Engine, mut jobs: Vec<Job>) {
         Err(e) => {
             let msg = format!("{e}");
             for j in &jobs {
-                let _ = j.reply.send(Err(anyhow!("{msg}")));
+                let _ = j.reply.send(Err(ExecError::Failed(anyhow!("{msg}"))));
             }
         }
         Ok((out, tm)) => {
@@ -1206,6 +1478,7 @@ mod tests {
                 payload: TensorBuf::F32(vec![]),
                 reply: tx.clone(),
                 span: SpanRec::begin(),
+                deadline: None,
                 enqueued: Instant::now(),
                 seq,
             })
@@ -1237,6 +1510,7 @@ mod tests {
                 payload: TensorBuf::F32(vec![0.0; 4]),
                 reply: tx.clone(),
                 span: SpanRec::begin_at(enq),
+                deadline: None,
                 enqueued: enq,
                 seq,
             })
@@ -1247,12 +1521,13 @@ mod tests {
             weight: 1,
             credits: 1,
             sealed: [0; N_SEAL_REASONS],
+            shed: [0; N_SHED_REASONS],
         };
         let now = Instant::now();
         // A lone job far from its deadline holds for peers: no seal,
         // and the job goes back without a Seal stamp.
         lane.heap.push(mk(now));
-        assert!(try_seal(&mut lane, &manifest, now).is_none());
+        assert!(try_seal(&mut lane, &manifest, now, 0).is_none());
         assert_eq!(lane.heap.len(), 1);
         assert!(!lane.heap.peek().unwrap().0.span.is_set(Stamp::Seal));
         assert!(
@@ -1263,7 +1538,7 @@ mod tests {
         for _ in 0..3 {
             lane.heap.push(mk(now));
         }
-        let batch = try_seal(&mut lane, &manifest, now).expect("full group seals");
+        let batch = try_seal(&mut lane, &manifest, now, 0).expect("full group seals");
         assert_eq!(batch.len(), 4);
         assert_eq!(lane.sealed[SealReason::Full as usize], 1);
         for j in &batch {
@@ -1275,19 +1550,19 @@ mod tests {
         lane.cfg = BatchCfg::deadline(4, 1); // 1µs flush
         lane.heap.push(mk(now));
         std::thread::sleep(Duration::from_millis(2));
-        assert!(try_seal(&mut lane, &manifest, Instant::now()).is_some());
+        assert!(try_seal(&mut lane, &manifest, Instant::now(), 0).is_some());
         assert_eq!(lane.sealed[SealReason::Deadline as usize], 1);
         // An unbatchable policy seals Single.
         lane.cfg = BatchCfg::none();
         lane.heap.push(mk(now));
-        assert!(try_seal(&mut lane, &manifest, now).is_some());
+        assert!(try_seal(&mut lane, &manifest, now, 0).is_some());
         assert_eq!(lane.sealed[SealReason::Single as usize], 1);
         // Opportunistic policy seals whatever is queued.
         lane.cfg = BatchCfg::opportunistic(4);
         lane.heap.push(mk(now));
         lane.heap.push(mk(now));
         assert_eq!(
-            try_seal(&mut lane, &manifest, now).expect("seals").len(),
+            try_seal(&mut lane, &manifest, now, 0).expect("seals").len(),
             2
         );
         assert_eq!(lane.sealed[SealReason::Opportunistic as usize], 1);
@@ -1318,6 +1593,7 @@ mod tests {
                     payload: TensorBuf::F32(vec![0.0; 4]),
                     reply: tx.clone(),
                     span: SpanRec::begin(),
+                    deadline: None,
                     enqueued: Instant::now(),
                     seq,
                 }));
@@ -1331,12 +1607,13 @@ mod tests {
                     weight: 1,
                     credits: 1,
                     sealed: [0; N_SEAL_REASONS],
+                    shed: [0; N_SHED_REASONS],
                 },
             );
         }
         let now = Instant::now();
         let mut dispatch = Vec::new();
-        while let Some(batch) = pick_and_seal(&mut s, &manifest, now) {
+        while let Some(batch) = pick_and_seal(&mut s, &manifest, now, &HashMap::new()) {
             dispatch.push(batch[0].model.clone());
         }
         // "m" seals pairs (cap 2), "solo" has no batched variants and
@@ -1371,6 +1648,7 @@ mod tests {
                     payload: TensorBuf::F32(vec![0.0; 4]),
                     reply: tx.clone(),
                     span: SpanRec::begin(),
+                    deadline: None,
                     enqueued: Instant::now(),
                     seq: i as u64,
                 }));
@@ -1383,12 +1661,13 @@ mod tests {
                     weight,
                     credits: weight,
                     sealed: [0; N_SEAL_REASONS],
+                    shed: [0; N_SHED_REASONS],
                 },
             );
         }
         let now = Instant::now();
         let mut dispatch = Vec::new();
-        while let Some(batch) = pick_and_seal(&mut s, &manifest, now) {
+        while let Some(batch) = pick_and_seal(&mut s, &manifest, now, &HashMap::new()) {
             dispatch.push(batch[0].model.clone());
         }
         assert_eq!(
@@ -1396,5 +1675,174 @@ mod tests {
             vec!["m", "m", "solo", "m", "m", "solo", "m", "m", "solo"],
             "weight-2 lane should dispatch twice per cycle"
         );
+    }
+
+    #[test]
+    fn shed_reason_codes_roundtrip() {
+        for (i, name) in SHED_REASON_NAMES.iter().enumerate() {
+            let r = ShedReason::from_code(i as u8).unwrap();
+            assert_eq!(r.code(), i as u8);
+            assert_eq!(r.name(), *name);
+        }
+        assert_eq!(ShedReason::from_code(N_SHED_REASONS as u8), None);
+        let shed = ExecError::shed(ShedReason::QueueFull, "lane full");
+        assert_eq!(shed.shed_reason(), Some(ShedReason::QueueFull));
+        assert!(shed.to_string().contains("queue_full"));
+        assert!(shed.to_string().contains("full"));
+        let failed = ExecError::Failed(anyhow!("boom"));
+        assert_eq!(failed.shed_reason(), None);
+        assert_eq!(failed.to_string(), "boom");
+    }
+
+    /// EDF lane selection without an engine: a later-submitted lane
+    /// whose job carries a tight deadline seals ahead of an earlier
+    /// deadline-free lane that the round-robin cursor would otherwise
+    /// pick first.
+    #[test]
+    fn edf_lane_overtakes_round_robin_order() {
+        let manifest = menu();
+        let (tx, _rx) = mpsc::channel();
+        let mut s = Sched {
+            lanes: HashMap::new(),
+            order: Vec::new(),
+            cursor: 0,
+            ready: VecDeque::new(),
+            idle_workers: 0,
+        };
+        let now = Instant::now();
+        let mut seq = 0u64;
+        let mut mk = |model: &str, deadline: Option<Instant>| {
+            seq += 1;
+            Queued(Job {
+                model: model.to_string(),
+                raw: false,
+                prio: 0,
+                payload: TensorBuf::F32(vec![0.0; 4]),
+                reply: tx.clone(),
+                span: SpanRec::begin(),
+                deadline,
+                enqueued: now,
+                seq,
+            })
+        };
+        // Lane "m" is first in round-robin order, deadline-free.
+        for (model, deadline) in [
+            ("m", None),
+            ("m", None),
+            ("solo", Some(now + Duration::from_micros(200))),
+        ] {
+            s.order.push(model.to_string());
+            s.order.dedup();
+            let job = mk(model, deadline);
+            let lane = s.lanes.entry(model.to_string()).or_insert(Lane {
+                heap: BinaryHeap::new(),
+                cfg: BatchCfg::opportunistic(4),
+                weight: 1,
+                credits: 1,
+                sealed: [0; N_SEAL_REASONS],
+                shed: [0; N_SHED_REASONS],
+            });
+            lane.heap.push(job);
+        }
+        let first = pick_and_seal(&mut s, &manifest, now, &HashMap::new()).expect("seals");
+        assert_eq!(
+            first[0].model, "solo",
+            "the tight-deadline lane must seal first, ahead of the cursor"
+        );
+        let second = pick_and_seal(&mut s, &manifest, now, &HashMap::new()).expect("seals");
+        assert_eq!(second[0].model, "m", "WRR resumes once SLO work drains");
+    }
+
+    /// When two lanes both hold SLO work, the earlier deadline wins
+    /// regardless of submission or round-robin order.
+    #[test]
+    fn edf_orders_slo_lanes_by_deadline() {
+        let manifest = menu();
+        let (tx, _rx) = mpsc::channel();
+        let mut s = Sched {
+            lanes: HashMap::new(),
+            order: Vec::new(),
+            cursor: 0,
+            ready: VecDeque::new(),
+            idle_workers: 0,
+        };
+        let now = Instant::now();
+        for (i, (model, deadline_us)) in [("m", 5_000u64), ("solo", 300)].into_iter().enumerate()
+        {
+            s.order.push(model.to_string());
+            let mut heap = BinaryHeap::new();
+            heap.push(Queued(Job {
+                model: model.to_string(),
+                raw: false,
+                prio: 0,
+                payload: TensorBuf::F32(vec![0.0; 4]),
+                reply: tx.clone(),
+                span: SpanRec::begin(),
+                deadline: Some(now + Duration::from_micros(deadline_us)),
+                enqueued: now,
+                seq: i as u64,
+            }));
+            s.lanes.insert(
+                model.to_string(),
+                Lane {
+                    heap,
+                    cfg: BatchCfg::opportunistic(4),
+                    weight: 1,
+                    credits: 1,
+                    sealed: [0; N_SEAL_REASONS],
+                    shed: [0; N_SHED_REASONS],
+                },
+            );
+        }
+        let first = pick_and_seal(&mut s, &manifest, now, &HashMap::new()).expect("seals");
+        assert_eq!(first[0].model, "solo", "earliest deadline first");
+        let second = pick_and_seal(&mut s, &manifest, now, &HashMap::new()).expect("seals");
+        assert_eq!(second[0].model, "m");
+    }
+
+    /// The SLO seal: a gather that would otherwise hold for its flush
+    /// window seals early (reason `Slo`) when the head's deadline minus
+    /// the estimated batch service time has arrived.
+    #[test]
+    fn slo_deadline_seals_gather_early() {
+        let manifest = menu();
+        let (tx, _rx) = mpsc::channel();
+        let now = Instant::now();
+        let mk = |seq: u64, deadline: Option<Instant>| {
+            Queued(Job {
+                model: "m".to_string(),
+                raw: false,
+                prio: 0,
+                payload: TensorBuf::F32(vec![0.0; 4]),
+                reply: tx.clone(),
+                span: SpanRec::begin_at(now),
+                deadline,
+                enqueued: now,
+                seq,
+            })
+        };
+        let mut lane = Lane {
+            heap: BinaryHeap::new(),
+            cfg: BatchCfg::deadline(4, 1_000_000), // 1s flush: never expires here
+            weight: 1,
+            credits: 1,
+            sealed: [0; N_SEAL_REASONS],
+            shed: [0; N_SHED_REASONS],
+        };
+        // Plenty of budget left (10ms) and no service estimate: hold.
+        lane.heap.push(mk(0, Some(now + Duration::from_millis(10))));
+        assert!(try_seal(&mut lane, &manifest, now, 0).is_none());
+        assert_eq!(lane.sealed[SealReason::Slo as usize], 0);
+        // With a 6ms/job estimate the 10ms budget is already critical
+        // (one more µs of gathering guarantees a miss): seal as Slo.
+        let est_ns = 6_000_000u64;
+        let batch = try_seal(&mut lane, &manifest, now + Duration::from_millis(5), est_ns)
+            .expect("critical SLO budget must seal");
+        assert_eq!(batch.len(), 1);
+        assert_eq!(lane.sealed[SealReason::Slo as usize], 1);
+        // A deadline-free gather never Slo-seals, whatever the estimate.
+        lane.heap.push(mk(1, None));
+        assert!(try_seal(&mut lane, &manifest, now, est_ns).is_none());
+        assert_eq!(lane.sealed[SealReason::Slo as usize], 1);
     }
 }

@@ -20,6 +20,8 @@ use anyhow::Result;
 use crate::transport::tcp::{TcpAcceptor, TcpTransport};
 use crate::transport::{Acceptor, MsgTransport};
 
+use super::protocol::Response;
+
 /// A running transport-generic gateway loop.
 pub struct GatewayLoop {
     stop: Arc<AtomicBool>,
@@ -58,7 +60,20 @@ where
                         let fwd = fwd2.clone();
                         std::thread::spawn(move || relay(client, upstream, &fwd));
                     }
-                    Err(_) => { /* upstream down: drop client */ }
+                    Err(e) => {
+                        // Upstream down: tell the client why before the
+                        // connection drops, instead of a silent EOF it
+                        // cannot diagnose. The client may not have sent
+                        // its request yet — an unsolicited Err frame is
+                        // still well-formed protocol, and the next recv
+                        // on the client side surfaces it.
+                        std::thread::spawn(move || {
+                            let mut client = client;
+                            let resp =
+                                Response::Err(format!("gateway: upstream unavailable: {e}"));
+                            let _ = client.send(&resp.encode());
+                        });
+                    }
                 },
                 Ok(None) => std::thread::sleep(Duration::from_millis(2)),
                 Err(_) => break,
@@ -100,15 +115,27 @@ pub fn gateway_tcp(addr: &str, upstream_addr: SocketAddr) -> Result<GatewayHandl
 }
 
 /// Synchronous request/response relay (closed-loop clients: one frame
-/// outstanding per connection, exactly the Router-Dealer pattern).
+/// outstanding per connection, exactly the Router-Dealer pattern). When
+/// the upstream leg fails mid-request, the client gets a protocol `Err`
+/// frame naming the failure before its connection closes — never a
+/// silent EOF with a request outstanding.
 fn relay(mut client: impl MsgTransport, mut upstream: impl MsgTransport, fwd: &AtomicU64) {
     loop {
         let Ok(req) = client.recv() else { return };
-        if upstream.send(&req).is_err() {
+        if let Err(e) = upstream.send(&req) {
+            let resp = Response::Err(format!("gateway: upstream send failed: {e}"));
+            let _ = client.send(&resp.encode());
             return;
         }
         fwd.fetch_add(1, Ordering::Relaxed);
-        let Ok(resp) = upstream.recv() else { return };
+        let resp = match upstream.recv() {
+            Ok(resp) => resp,
+            Err(e) => {
+                let resp = Response::Err(format!("gateway: upstream recv failed: {e}"));
+                let _ = client.send(&resp.encode());
+                return;
+            }
+        };
         if client.send(&resp).is_err() {
             return;
         }

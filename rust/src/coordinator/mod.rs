@@ -16,10 +16,11 @@ pub mod gateway;
 pub mod protocol;
 pub mod server;
 
-pub use client::{fetch_stats, run_on, run_tcp, ClientRec, LiveStats, LoadCfg};
+pub use client::{fetch_stats, run_on, run_tcp, ClientRec, ClientRun, LiveStats, LoadCfg};
 pub use executor::{
-    BatchCfg, Done, ExecStats, Executor, LaneStats, ModelPolicy, SchedCfg, SealReason,
-    N_SEAL_REASONS, SEAL_REASON_NAMES,
+    BatchCfg, Done, ExecError, ExecStats, Executor, LaneStats, ModelPolicy, SchedCfg, SealReason,
+    ShedReason, DEFAULT_QUEUE_CAP, N_SEAL_REASONS, N_SHED_REASONS, SEAL_REASON_NAMES,
+    SHED_REASON_NAMES,
 };
 pub use gateway::{gateway_on, gateway_tcp, GatewayHandle, GatewayLoop};
 pub use server::{handle_conn, serve_on, serve_tcp, ServeLoop, ServerHandle};

@@ -6,35 +6,47 @@
 //! comparison stays fair, §III-A).
 //!
 //! ```text
-//! Request:  [op u8][flags u8][prio u8][name_len u8][name][payload]
+//! Request:  [op u8][flags u8][prio u8][name_len u8][name]
+//!             [deadline_us u64, iff FLAG_DEADLINE][payload]
 //! Response: status 0 (v1 Ok):
 //!             [0][queue_ns u64][preproc_ns u64][infer_ns u64][payload]
 //!           status 1 (Err): [1][utf8 message]
 //!           status 2 (v2 Ok + span): [2][queue_ns][preproc_ns][infer_ns]
 //!             [span block][payload]   (see `trace::wire`)
 //!           status 3 (Stats): [3][ver][interleaves u64][n u8][lanes...]
+//!           status 4 (Shed): [4][reason u8][utf8 message]
 //! ```
 //!
 //! # Protocol v2 and compatibility
 //!
-//! v2 adds the request flag [`FLAG_SPANS`] and the stats opcode
-//! [`OP_STATS`], both *opt-in*, so the two directions stay mutually
-//! compatible:
+//! v2 adds the request flags [`FLAG_SPANS`] and [`FLAG_DEADLINE`], the
+//! stats opcode [`OP_STATS`], and the [`Response::Shed`] status, all
+//! *opt-in*, so the two directions stay mutually compatible:
 //!
-//! * a **v1 client against a v2 server** never sets `FLAG_SPANS`, so
-//!   the server answers with a status-0 frame — byte-identical to v1;
-//! * a **v2 client against a v1 server** sets a flag bit the old
-//!   server ignores and gets a status-0 frame back, which the v2
-//!   decoder still accepts (span absent).
+//! * a **v1 client against a v2 server** never sets `FLAG_SPANS` or
+//!   `FLAG_DEADLINE`, so its frames carry no deadline word and the
+//!   server answers with a status-0 frame — byte-identical to v1 (a
+//!   deadline-less lane is also never shed on deadline grounds);
+//! * a **v2 client against a v1 server** sets flag bits the old server
+//!   ignores and gets a status-0 frame back, which the v2 decoder
+//!   still accepts (span absent, nothing shed).
 //!
+//! The one caveat: a v2 client that sets `FLAG_DEADLINE` against a v1
+//! server would have its deadline word read as payload — deadline use
+//! therefore requires a v2 server, exactly like `OP_STATS` does.
 //! `tests/trace_protocol.rs` pins both directions.
+//!
+//! Deadlines are *relative* (microseconds from server receipt), so no
+//! client/server clock synchronisation is needed — the deadline clock
+//! starts when the request frame lands, mirroring how the paper's
+//! latency decomposition anchors on the receive boundary (§III-B).
 
 use anyhow::{bail, Result};
 
 use crate::trace::wire::decode_span_block;
 use crate::trace::{SpanBlock, SpanRec};
 
-use super::executor::{ExecStats, LaneStats, N_SEAL_REASONS};
+use super::executor::{ExecStats, LaneStats, ShedReason, N_SEAL_REASONS, N_SHED_REASONS};
 
 /// Request opcode: run inference (the v1 opcode).
 pub const OP_INFER: u8 = 1;
@@ -45,8 +57,12 @@ pub const OP_STATS: u8 = 2;
 pub const FLAG_RAW: u8 = 1;
 /// flags bit 1 (v2): client asks for the span timeline in the response.
 pub const FLAG_SPANS: u8 = 2;
-/// Stats response wire version.
-pub const STATS_VER: u8 = 1;
+/// flags bit 2 (v2): a `deadline_us` word follows the model name — the
+/// request's SLO budget, relative microseconds from server receipt.
+pub const FLAG_DEADLINE: u8 = 4;
+/// Stats response wire version (2 added `svc_ns` + shed counters and
+/// the sixth seal reason; v1 frames are rejected, stats are advisory).
+pub const STATS_VER: u8 = 2;
 
 /// A parsed inference request.
 #[derive(Debug, Clone, PartialEq)]
@@ -56,6 +72,9 @@ pub struct Request {
     /// Ask the server to return the request's span timeline (v2).
     pub spans: bool,
     pub prio: u8,
+    /// SLO budget in microseconds from server receipt (v2, opt-in via
+    /// [`FLAG_DEADLINE`]). `None` keeps the frame byte-identical to v1.
+    pub deadline_us: Option<u64>,
     pub payload: Vec<u8>,
 }
 
@@ -69,6 +88,8 @@ pub struct RequestMeta {
     /// The client set [`FLAG_SPANS`].
     pub spans: bool,
     pub prio: u8,
+    /// The client set [`FLAG_DEADLINE`]: SLO budget in µs from receipt.
+    pub deadline_us: Option<u64>,
 }
 
 /// Encode a stats request frame (v2): header only, no payload.
@@ -98,14 +119,26 @@ pub fn split_header(buf: &[u8]) -> Result<(RequestMeta, usize)> {
         bail!("truncated model name");
     }
     let model = std::str::from_utf8(&buf[4..4 + name_len])?.to_string();
+    let mut at = 4 + name_len;
+    let deadline_us = if buf[1] & FLAG_DEADLINE != 0 {
+        if buf.len() < at + 8 {
+            bail!("truncated deadline word");
+        }
+        let us = u64::from_le_bytes(buf[at..at + 8].try_into().expect("8 bytes"));
+        at += 8;
+        Some(us)
+    } else {
+        None
+    };
     Ok((
         RequestMeta {
             model,
             raw: buf[1] & FLAG_RAW != 0,
             spans: buf[1] & FLAG_SPANS != 0,
             prio: buf[2],
+            deadline_us,
         },
-        4 + name_len,
+        at,
     ))
 }
 
@@ -113,7 +146,7 @@ impl Request {
     pub fn encode(&self) -> Vec<u8> {
         let name = self.model.as_bytes();
         assert!(name.len() <= u8::MAX as usize, "model name too long");
-        let mut buf = Vec::with_capacity(4 + name.len() + self.payload.len());
+        let mut buf = Vec::with_capacity(12 + name.len() + self.payload.len());
         buf.push(OP_INFER);
         let mut flags = 0u8;
         if self.raw {
@@ -122,10 +155,16 @@ impl Request {
         if self.spans {
             flags |= FLAG_SPANS;
         }
+        if self.deadline_us.is_some() {
+            flags |= FLAG_DEADLINE;
+        }
         buf.push(flags);
         buf.push(self.prio);
         buf.push(name.len() as u8);
         buf.extend_from_slice(name);
+        if let Some(us) = self.deadline_us {
+            buf.extend_from_slice(&us.to_le_bytes());
+        }
         buf.extend_from_slice(&self.payload);
         buf
     }
@@ -137,6 +176,7 @@ impl Request {
             raw: meta.raw,
             spans: meta.spans,
             prio: meta.prio,
+            deadline_us: meta.deadline_us,
             payload: buf[payload_off..].to_vec(),
         })
     }
@@ -175,6 +215,11 @@ pub enum Response {
     Err(String),
     /// Executor per-lane counter snapshot (v2, answer to [`OP_STATS`]).
     Stats(ExecStats),
+    /// Admission control rejected the request up front (v2): the lane
+    /// was over its queue cap or the deadline was already unwinnable.
+    /// Distinct from [`Response::Err`] so clients can tell load
+    /// shedding (retry later / downgrade SLO) from real failures.
+    Shed { reason: ShedReason, msg: String },
 }
 
 impl Response {
@@ -203,6 +248,13 @@ impl Response {
                 buf
             }
             Response::Stats(stats) => encode_stats(stats),
+            Response::Shed { reason, msg } => {
+                let mut buf = Vec::with_capacity(2 + msg.len());
+                buf.push(4u8);
+                buf.push(reason.code());
+                buf.extend_from_slice(msg.as_bytes());
+                buf
+            }
         }
     }
 
@@ -239,6 +291,17 @@ impl Response {
                 String::from_utf8_lossy(&buf[1..]).to_string(),
             )),
             3 => Ok(Response::Stats(decode_stats(buf)?)),
+            4 => {
+                if buf.len() < 2 {
+                    bail!("short shed response");
+                }
+                let reason = ShedReason::from_code(buf[1])
+                    .ok_or_else(|| anyhow::anyhow!("unknown shed reason {}", buf[1]))?;
+                Ok(Response::Shed {
+                    reason,
+                    msg: String::from_utf8_lossy(&buf[2..]).to_string(),
+                })
+            }
             s => bail!("unknown response status {s}"),
         }
     }
@@ -265,8 +328,12 @@ fn encode_stats(stats: &ExecStats) -> Vec<u8> {
         buf.extend_from_slice(name);
         buf.extend_from_slice(&lane.jobs.to_le_bytes());
         buf.extend_from_slice(&lane.calls.to_le_bytes());
+        buf.extend_from_slice(&lane.svc_ns.to_le_bytes());
         buf.extend_from_slice(&lane.depth.to_le_bytes());
         for &s in &lane.sealed {
+            buf.extend_from_slice(&s.to_le_bytes());
+        }
+        for &s in &lane.shed {
             buf.extend_from_slice(&s.to_le_bytes());
         }
     }
@@ -291,7 +358,7 @@ fn decode_stats(buf: &[u8]) -> Result<ExecStats> {
             .ok_or_else(|| anyhow::anyhow!("stats truncated at lane {k}"))?
             as usize;
         at += 1;
-        let fixed = 8 + 8 + 4 + 8 * N_SEAL_REASONS;
+        let fixed = 8 + 8 + 8 + 4 + 8 * N_SEAL_REASONS + 8 * N_SHED_REASONS;
         if buf.len() < at + name_len + fixed {
             bail!("stats truncated inside lane {k}");
         }
@@ -300,10 +367,16 @@ fn decode_stats(buf: &[u8]) -> Result<ExecStats> {
         let u64_at = |i: usize| u64::from_le_bytes(buf[i..i + 8].try_into().expect("8 bytes"));
         let jobs = u64_at(at);
         let calls = u64_at(at + 8);
-        let depth = u32::from_le_bytes(buf[at + 16..at + 20].try_into().expect("4 bytes"));
-        at += 20;
+        let svc_ns = u64_at(at + 16);
+        let depth = u32::from_le_bytes(buf[at + 24..at + 28].try_into().expect("4 bytes"));
+        at += 28;
         let mut sealed = [0u64; N_SEAL_REASONS];
         for s in sealed.iter_mut() {
+            *s = u64_at(at);
+            at += 8;
+        }
+        let mut shed = [0u64; N_SHED_REASONS];
+        for s in shed.iter_mut() {
             *s = u64_at(at);
             at += 8;
         }
@@ -311,8 +384,10 @@ fn decode_stats(buf: &[u8]) -> Result<ExecStats> {
             model,
             jobs,
             calls,
+            svc_ns,
             depth,
             sealed,
+            shed,
         });
     }
     if at != buf.len() {
@@ -351,6 +426,7 @@ mod tests {
             raw: true,
             spans: false,
             prio: 7,
+            deadline_us: None,
             payload: vec![1, 2, 3, 4, 5],
         };
         assert_eq!(Request::decode(&r.encode()).unwrap(), r);
@@ -359,6 +435,16 @@ mod tests {
             ..r.clone()
         };
         assert_eq!(Request::decode(&with_spans.encode()).unwrap(), with_spans);
+        let with_deadline = Request {
+            deadline_us: Some(2_500),
+            ..r.clone()
+        };
+        let frame = with_deadline.encode();
+        assert_eq!(frame[1] & FLAG_DEADLINE, FLAG_DEADLINE);
+        assert_eq!(Request::decode(&frame).unwrap(), with_deadline);
+        // Without the flag the frame is byte-identical to v1: exactly
+        // 8 bytes (the deadline word) shorter, same payload tail.
+        assert_eq!(frame.len(), r.encode().len() + 8);
     }
 
     #[test]
@@ -368,6 +454,7 @@ mod tests {
             raw: false,
             spans: true,
             prio: 3,
+            deadline_us: Some(1_000),
             payload: vec![9; 12],
         };
         let frame = r.encode();
@@ -376,8 +463,13 @@ mod tests {
         assert!(!meta.raw);
         assert!(meta.spans);
         assert_eq!(meta.prio, 3);
+        assert_eq!(meta.deadline_us, Some(1_000));
         assert_eq!(&frame[off..], &r.payload[..]);
         assert!(split_header(&[]).is_err());
+        // A frame cut inside the deadline word is rejected, not read
+        // into the payload.
+        let header_end = 4 + "tiny_mobilenet".len();
+        assert!(split_header(&frame[..header_end + 4]).is_err());
     }
 
     #[test]
@@ -404,6 +496,28 @@ mod tests {
         }
         let e = Response::Err("boom".into());
         assert_eq!(Response::decode(&e.encode()).unwrap(), e);
+    }
+
+    #[test]
+    fn shed_roundtrip_and_validation() {
+        for reason in [ShedReason::QueueFull, ShedReason::Deadline] {
+            let r = Response::Shed {
+                reason,
+                msg: format!("lane full ({reason:?})"),
+            };
+            let frame = r.encode();
+            assert_eq!(frame[0], 4, "shed is a distinct status, not Err");
+            assert_eq!(Response::decode(&frame).unwrap(), r);
+        }
+        // Truncated (no reason byte) and unknown reason codes rejected.
+        assert!(Response::decode(&[4]).is_err());
+        assert!(Response::decode(&[4, 99]).is_err());
+        // An empty message is fine — the reason byte alone suffices.
+        let bare = Response::Shed {
+            reason: ShedReason::QueueFull,
+            msg: String::new(),
+        };
+        assert_eq!(Response::decode(&bare.encode()).unwrap(), bare);
     }
 
     #[test]
@@ -441,15 +555,19 @@ mod tests {
                     model: "tiny_mobilenet".into(),
                     jobs: 100,
                     calls: 30,
+                    svc_ns: 1_234_567,
                     depth: 3,
-                    sealed: [1, 2, 3, 4, 5],
+                    sealed: [1, 2, 3, 4, 5, 6],
+                    shed: [7, 2],
                 },
                 LaneStats {
                     model: "tiny_resnet".into(),
                     jobs: 8,
                     calls: 8,
+                    svc_ns: 99,
                     depth: 0,
-                    sealed: [8, 0, 0, 0, 0],
+                    sealed: [8, 0, 0, 0, 0, 0],
+                    shed: [0, 0],
                 },
             ],
         };
@@ -484,6 +602,7 @@ mod tests {
             raw: false,
             spans: false,
             prio: 0,
+            deadline_us: None,
             payload: vec![],
         }
         .encode();

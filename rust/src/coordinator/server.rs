@@ -24,7 +24,7 @@ use crate::trace::{SpanRec, Stamp};
 use crate::transport::tcp::{TcpAcceptor, TcpTransport};
 use crate::transport::{Acceptor, MsgTransport, RecvMsg};
 
-use super::executor::Executor;
+use super::executor::{ExecError, Executor};
 use super::protocol::{self, f32s_to_bytes, RequestMeta, Response};
 
 /// Decode one received message into request metadata plus the payload
@@ -92,7 +92,14 @@ pub fn handle_conn(mut t: impl MsgTransport, exec: &Executor) {
             Err(e) => Response::Err(format!("bad request: {e}")),
             Ok((meta, payload)) => {
                 span.mark(Stamp::RecvDone);
-                match exec.infer_traced(&meta.model, meta.raw, meta.prio, payload, span) {
+                match exec.infer_deadline(
+                    &meta.model,
+                    meta.raw,
+                    meta.prio,
+                    payload,
+                    meta.deadline_us,
+                    span,
+                ) {
                     Ok(done) => {
                         let mut span = done.span;
                         span.mark(Stamp::ReplySend);
@@ -102,7 +109,11 @@ pub fn handle_conn(mut t: impl MsgTransport, exec: &Executor) {
                             payload: f32s_to_bytes(&done.output),
                         }
                     }
-                    Err(e) => Response::Err(e.to_string()),
+                    // Admission control's rejection keeps its own wire
+                    // status so the client can tell load shedding from
+                    // a genuine failure.
+                    Err(ExecError::Shed { reason, msg }) => Response::Shed { reason, msg },
+                    Err(e @ ExecError::Failed(_)) => Response::Err(e.to_string()),
                 }
             }
         };

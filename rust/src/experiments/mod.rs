@@ -8,12 +8,14 @@
 pub mod batch_sweep;
 pub mod figs;
 pub mod mix_sweep;
+pub mod slo_sweep;
 pub mod stage_break;
 pub mod table;
 pub mod transport_matrix;
 
 pub use batch_sweep::{run_batch_sweep, SweepCfg};
 pub use mix_sweep::{run_mix_sweep, run_sim_mix, MixCfg};
+pub use slo_sweep::{run_slo_sweep, SloCfg};
 pub use stage_break::{run_sim_stage_break, run_stage_break, StageBreakCfg};
 pub use table::Table;
 pub use transport_matrix::{run_matrix, MatrixCfg};
@@ -65,6 +67,25 @@ pub(crate) fn drive_model_clients(
     warmup: usize,
     spans: bool,
 ) -> Result<LiveStats> {
+    drive_model_clients_slo(kind, exec, model, clients, requests, warmup, spans, None)
+}
+
+/// [`drive_model_clients`] plus a per-request SLO budget: every request
+/// carries `FLAG_DEADLINE` with `deadline_us`, and the returned
+/// [`LiveStats::sheds`] counts admission-control rejections (which are
+/// not client errors — the closed loops keep offering load). Used by
+/// `slosweep` to push the executor into overload.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn drive_model_clients_slo(
+    kind: TransportKind,
+    exec: &Arc<Executor>,
+    model: &str,
+    clients: usize,
+    requests: usize,
+    warmup: usize,
+    spans: bool,
+    deadline_us: Option<u64>,
+) -> Result<LiveStats> {
     let payload_elems = gen::IN_H * gen::IN_W * gen::CHANNELS;
     // Request frame = 4-byte header + model name + f32 payload; sized
     // so RDMA/GDR requests stay single-chunk.
@@ -92,6 +113,8 @@ pub(crate) fn drive_model_clients(
         priority_client: false,
         payload_elems,
         warmup,
+        deadline_us,
+        timeout: None,
     };
     let stats = run_on(
         |i| {

@@ -5,12 +5,14 @@
 //! accelserve serve   --addr 0.0.0.0:7007 --streams 4 --batch 8 --flush-us 2000 \
 //!                    --model-batch tiny_resnet=8@2000            # per-model lane override
 //! accelserve gateway --addr 0.0.0.0:7008 --upstream host:7007    # live proxy
-//! accelserve client  --addr host:7007 --model tiny_resnet -n 100 -c 4
+//! accelserve client  --addr host:7007 --model tiny_resnet -n 100 -c 4 \
+//!                    --deadline-us 5000 --timeout-ms 2000         # SLO + hang guard
 //! accelserve stats   --addr host:7007                            # per-lane executor counters
 //! accelserve matrix  --payload-kb 1024 --requests 160            # live transport matrix
 //! accelserve batchsweep --clients 8 --policies 1,8,8@2000        # transport x batch policy
 //! accelserve mixsweep --models tiny_mobilenet,tiny_resnet        # transport x model mix
 //! accelserve stagebreak --policies 1,8@2000 [--pct 99] [--sim]   # per-stage span breakdown
+//! accelserve slosweep --factors 1,2,4,8 [--deadline-us 5000]     # overload x SLO shedding
 //! accelserve sim     --model ResNet50 --transport gdr -c 16 -n 300
 //! accelserve fig     --which 5 [--requests 300] [--csv]          # regen a figure
 //! accelserve tables  --which 2|3                                 # paper tables
@@ -20,7 +22,7 @@ use std::sync::Arc;
 
 use accelserve::coordinator::{
     fetch_stats, gateway_tcp, run_tcp, serve_tcp, BatchCfg, Executor, LoadCfg, ModelPolicy,
-    SchedCfg, SEAL_REASON_NAMES,
+    SchedCfg, SEAL_REASON_NAMES, SHED_REASON_NAMES,
 };
 use accelserve::experiments::figs;
 use accelserve::gpu::Sharing;
@@ -41,6 +43,7 @@ fn main() {
         Some("batchsweep") => cmd_batchsweep(&args[1..]),
         Some("mixsweep") => cmd_mixsweep(&args[1..]),
         Some("stagebreak") => cmd_stagebreak(&args[1..]),
+        Some("slosweep") => cmd_slosweep(&args[1..]),
         Some("sim") => cmd_sim(&args[1..]),
         Some("fig") => cmd_fig(&args[1..]),
         Some("tables") => cmd_tables(&args[1..]),
@@ -53,7 +56,7 @@ fn main() {
 }
 
 const HELP: &str = "accelserve — model serving with hardware-accelerated communication
-subcommands: gen-artifacts | serve | gateway | client | stats | matrix | batchsweep | mixsweep | stagebreak | sim | fig | tables (see README.md and docs/EXPERIMENTS.md)";
+subcommands: gen-artifacts | serve | gateway | client | stats | matrix | batchsweep | mixsweep | stagebreak | slosweep | sim | fig | tables (see README.md and docs/EXPERIMENTS.md)";
 
 /// Generate the serving artifacts (HLO text + manifest.json) offline —
 /// no Python/JAX required (the rust twin of `make artifacts`).
@@ -590,9 +593,71 @@ fn cmd_stagebreak(a: &[String]) -> i32 {
     0
 }
 
+/// Overload × SLO sweep: drive the executor past service capacity with
+/// deadline-carrying clients and report goodput, admitted-tail latency,
+/// and the shed split per load factor (`accelserve slosweep`).
+fn cmd_slosweep(a: &[String]) -> i32 {
+    let mut cfg = accelserve::experiments::SloCfg::default();
+    if let Some(m) = flag(a, "--model") {
+        cfg.model = m.to_string();
+    }
+    if let Some(list) = flag(a, "--factors") {
+        let mut factors = Vec::new();
+        for spec in list.split(',') {
+            match spec.parse::<f64>() {
+                Ok(f) if f > 0.0 => factors.push(f),
+                _ => {
+                    eprintln!("bad --factors entry {spec:?} (want positive numbers like 1,2,4,8)");
+                    return 2;
+                }
+            }
+        }
+        cfg.factors = factors;
+    }
+    if let Some(n) = flag(a, "--requests").and_then(|v| v.parse::<usize>().ok()) {
+        cfg.requests = n.max(1);
+        cfg.warmup = (n / 10).max(2);
+    }
+    if let Some(n) = flag(a, "--streams").and_then(|v| v.parse::<usize>().ok()) {
+        cfg.streams = n.max(1);
+    }
+    if let Some(us) = flag(a, "--deadline-us").and_then(|v| v.parse::<u64>().ok()) {
+        cfg.deadline_us = Some(us.max(1));
+    }
+    if let Some(n) = flag(a, "--queue-cap").and_then(|v| v.parse::<usize>().ok()) {
+        cfg.queue_cap = n.max(1);
+    }
+    if let Some(dir) = flag(a, "--artifacts") {
+        cfg.artifacts_dir = Some(dir.into());
+    }
+    if let Some(list) = flag(a, "--transports") {
+        match parse_transports(list) {
+            Ok(kinds) => cfg.transports = kinds,
+            Err(e) => {
+                eprintln!("{e}");
+                return 2;
+            }
+        }
+    }
+    let t = match accelserve::experiments::run_slo_sweep(&cfg) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("slosweep: {e:#}");
+            return 1;
+        }
+    };
+    if a.iter().any(|x| x == "--csv") {
+        print!("{}", t.to_csv());
+    } else {
+        print!("{}", t.render());
+    }
+    0
+}
+
 /// Query a running server's executor counters over the stats opcode
-/// (`accelserve stats`): per-lane jobs / calls / queue depth / sealed
-/// reasons plus the cross-model interleave count.
+/// (`accelserve stats`): per-lane jobs / calls / mean service time /
+/// queue depth / sealed reasons / shed reasons plus the cross-model
+/// interleave count.
 fn cmd_stats(a: &[String]) -> i32 {
     let addr = flag_or(a, "--addr", "127.0.0.1:7007");
     let sock: std::net::SocketAddr = match addr.parse() {
@@ -602,7 +667,10 @@ fn cmd_stats(a: &[String]) -> i32 {
             return 2;
         }
     };
-    let mut t = match accelserve::transport::tcp::TcpTransport::connect(sock) {
+    let timeout = flag(a, "--timeout-ms")
+        .and_then(|v| v.parse::<u64>().ok())
+        .map(std::time::Duration::from_millis);
+    let mut t = match accelserve::transport::tcp::TcpTransport::connect_timed(sock, timeout) {
         Ok(t) => t,
         Err(e) => {
             eprintln!("connect {addr}: {e:#}");
@@ -616,8 +684,15 @@ fn cmd_stats(a: &[String]) -> i32 {
             return 1;
         }
     };
-    let mut cols: Vec<&str> = vec!["jobs", "calls", "avg_batch", "depth"];
+    let mut cols: Vec<&str> = vec!["jobs", "calls", "avg_batch", "svc_ms", "depth"];
     cols.extend(SEAL_REASON_NAMES);
+    for name in SHED_REASON_NAMES {
+        cols.push(match name {
+            "queue_full" => "shed_cap",
+            "deadline" => "shed_ddl",
+            other => other,
+        });
+    }
     let mut table = accelserve::experiments::Table::new(
         format!("executor lanes @ {addr}"),
         &cols,
@@ -627,16 +702,19 @@ fn cmd_stats(a: &[String]) -> i32 {
             lane.jobs as f64,
             lane.calls as f64,
             lane.jobs as f64 / (lane.calls.max(1)) as f64,
+            lane.svc_ns as f64 / (lane.jobs.max(1)) as f64 / 1e6,
             lane.depth as f64,
         ];
         vals.extend(lane.sealed.iter().map(|&s| s as f64));
+        vals.extend(lane.shed.iter().map(|&s| s as f64));
         table.row(lane.model.clone(), vals);
     }
     table.note(format!(
         "interleaves (dispatches that switched model): {}",
         stats.interleaves
     ));
-    table.note("sealed-reason columns count sealed batches per lane: single = unbatchable head, full = hit the policy cap, opportunistic = took what was queued, deadline = flush expired, blocked = incompatible work waited while a stream sat idle");
+    table.note("sealed-reason columns count sealed batches per lane: single = unbatchable head, full = hit the policy cap, opportunistic = took what was queued, deadline = flush expired, blocked = incompatible work waited while a stream sat idle, slo = sealed early so the head's SLO deadline survives");
+    table.note("shed columns count rejected submissions: shed_cap = lane queue at capacity, shed_ddl = deadline unwinnable at admission; svc_ms = mean per-job service time (the admission estimate)");
     if a.iter().any(|x| x == "--csv") {
         print!("{}", table.to_csv());
     } else {
@@ -774,12 +852,16 @@ fn cmd_client(a: &[String]) -> i32 {
         priority_client: false,
         payload_elems: if raw { 64 * 64 * 3 } else { 32 * 32 * 3 },
         warmup: (n / 20).max(1),
+        deadline_us: flag(a, "--deadline-us").and_then(|v| v.parse::<u64>().ok()),
+        timeout: flag(a, "--timeout-ms")
+            .and_then(|v| v.parse::<u64>().ok())
+            .map(std::time::Duration::from_millis),
     };
     match run_tcp(sock, &cfg) {
         Ok(s) => {
             let lat = s.all.total.summary();
             println!(
-                "requests={} throughput={:.1} rps  total p50={:.3} ms mean={:.3} ms  infer={:.3} ms  preproc={:.3} ms  net={:.3} ms",
+                "requests={} throughput={:.1} rps  total p50={:.3} ms mean={:.3} ms  infer={:.3} ms  preproc={:.3} ms  net={:.3} ms{}",
                 s.all.n(),
                 s.throughput_rps,
                 lat.p50,
@@ -787,6 +869,11 @@ fn cmd_client(a: &[String]) -> i32 {
                 s.all.infer.mean(),
                 s.all.preproc.mean(),
                 s.all.request.mean() + s.all.response.mean(),
+                if s.sheds > 0 {
+                    format!("  shed={} of {}", s.sheds, s.sheds + s.served)
+                } else {
+                    String::new()
+                },
             );
             0
         }

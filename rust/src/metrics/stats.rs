@@ -111,8 +111,10 @@ impl Series {
             return 0.0;
         }
         if !self.sorted {
-            self.samples
-                .sort_by(|a, b| a.partial_cmp(b).expect("NaN sample"));
+            // total_cmp is a total order over every f64 bit pattern, so
+            // a stray NaN sample sorts (to the top) instead of panicking
+            // the whole sweep mid-report.
+            self.samples.sort_by(|a, b| a.total_cmp(b));
             self.sorted = true;
         }
         let idx = ((self.samples.len() as f64 - 1.0) * q.clamp(0.0, 1.0)).round() as usize;
@@ -322,6 +324,24 @@ mod tests {
             let hi = s.max();
             assert!(lo <= hi);
         }
+    }
+
+    #[test]
+    fn quantile_survives_nan_samples() {
+        // A single NaN sample must not panic the sort; real samples
+        // stay ordered beneath it (total_cmp puts NaN above +inf).
+        let mut s = Series::new();
+        for v in [3.0, f64::NAN, 1.0, 2.0] {
+            s.push(v);
+        }
+        assert_eq!(s.quantile(0.0), 1.0);
+        // idx = round((4-1)*0.5) = 2 over sorted [1, 2, 3, NaN].
+        assert_eq!(s.quantile(0.5), 3.0);
+        assert!(s.quantile(1.0).is_nan());
+        // All-NaN input is equally panic-free.
+        let mut all_nan = Series::new();
+        all_nan.push(f64::NAN);
+        assert!(all_nan.quantile(0.5).is_nan());
     }
 
     #[test]

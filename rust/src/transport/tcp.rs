@@ -5,6 +5,7 @@
 
 use std::io::{Read, Write};
 use std::net::{TcpListener, TcpStream, ToSocketAddrs};
+use std::time::Duration;
 
 use anyhow::{bail, Context, Result};
 
@@ -26,6 +27,40 @@ impl TcpTransport {
     pub fn connect(addr: impl ToSocketAddrs) -> Result<TcpTransport> {
         let stream = TcpStream::connect(addr).context("tcp connect")?;
         stream.set_nodelay(true).ok();
+        Ok(TcpTransport {
+            stream,
+            last_boundary: None,
+        })
+    }
+
+    /// Connect with an optional timeout applied to the connect itself
+    /// and to every subsequent read/write. `None` behaves exactly like
+    /// [`TcpTransport::connect`] (block forever). With a timeout, a
+    /// peer that accepts but never replies surfaces as a `recv` error
+    /// instead of wedging the calling thread.
+    pub fn connect_timed(addr: impl ToSocketAddrs, timeout: Option<Duration>) -> Result<TcpTransport> {
+        let Some(d) = timeout else {
+            return TcpTransport::connect(addr);
+        };
+        // connect_timeout wants a resolved SocketAddr; try each in turn.
+        let mut last: Option<std::io::Error> = None;
+        let addrs = addr.to_socket_addrs().context("resolve addr")?;
+        let stream = addrs
+            .into_iter()
+            .find_map(|a| match TcpStream::connect_timeout(&a, d) {
+                Ok(s) => Some(s),
+                Err(e) => {
+                    last = Some(e);
+                    None
+                }
+            })
+            .ok_or_else(|| match last {
+                Some(e) => anyhow::anyhow!("tcp connect (timed): {e}"),
+                None => anyhow::anyhow!("no socket address resolved"),
+            })?;
+        stream.set_nodelay(true).ok();
+        stream.set_read_timeout(Some(d)).context("read timeout")?;
+        stream.set_write_timeout(Some(d)).context("write timeout")?;
         Ok(TcpTransport {
             stream,
             last_boundary: None,

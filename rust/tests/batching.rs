@@ -280,6 +280,13 @@ fn full_lane_rejects_overflow_immediately() {
     let c = exec.submit("tiny_mobilenet", false, 0, TensorBuf::F32(input(22)));
     let err = c.recv().unwrap().expect_err("third job must overflow the bounded lane");
     assert!(err.to_string().contains("full"), "unexpected error: {err}");
+    // The overflow is a typed shed (queue_full), not a stringly error —
+    // the wire layer maps it to the distinct Shed status.
+    assert_eq!(
+        err.shed_reason(),
+        Some(accelserve::coordinator::ShedReason::QueueFull),
+        "overflow must shed with the queue_full reason"
+    );
     let da = a.recv().unwrap().unwrap();
     let db = b.recv().unwrap().unwrap();
     assert_eq!(

@@ -37,6 +37,8 @@ fn load(model: &str, raw: bool, clients: usize, reqs: usize) -> LoadCfg {
         priority_client: false,
         payload_elems: if raw { 64 * 64 * 3 } else { 32 * 32 * 3 },
         warmup: 2,
+        deadline_us: None,
+        timeout: None,
     }
 }
 
@@ -98,6 +100,7 @@ fn rdma_verbs_transport_serves() {
         raw: false,
         spans: false,
         prio: 0,
+        deadline_us: None,
         payload: protocol::f32s_to_bytes(&vec![0.25; 32 * 32 * 3]),
     };
     for _ in 0..5 {
@@ -129,6 +132,7 @@ fn gdr_raw_pipeline_zero_copy_serves() {
         raw: true,
         spans: false,
         prio: 0,
+        deadline_us: None,
         payload: frame,
     };
 
@@ -189,6 +193,7 @@ fn all_transports_same_numerics() {
         raw: false,
         spans: false,
         prio: 0,
+        deadline_us: None,
         payload: protocol::f32s_to_bytes(&input),
     };
 
@@ -285,6 +290,7 @@ fn server_reports_errors_gracefully() {
         raw: false,
         spans: false,
         prio: 0,
+        deadline_us: None,
         payload: protocol::f32s_to_bytes(&[0.0; 4]),
     };
     t.send(&bad.encode()).unwrap();

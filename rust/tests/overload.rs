@@ -1,0 +1,202 @@
+//! Overload error-path integration tests: the failure modes that only
+//! show up when something in the serving chain is down, stalled, or
+//! saturated.
+//!
+//! * the gateway answers with a protocol `Err` frame — not a silent
+//!   connection drop — when its upstream is unreachable or dies
+//!   mid-request;
+//! * a client with a configured timeout gets an error from a server
+//!   that accepts but never replies, instead of blocking forever;
+//! * admission control sheds a request whose deadline is unwinnable
+//!   (typed `ExecError::Shed`, `deadline` reason, visible in the lane's
+//!   shed counters) while a winnable deadline is admitted and served.
+//!
+//! Artifacts are generated on demand (`models::gen`); nothing skips.
+
+use std::net::TcpListener;
+use std::time::{Duration, Instant};
+
+use accelserve::coordinator::{
+    gateway_tcp, protocol, run_tcp, BatchCfg, ExecError, Executor, LoadCfg, ShedReason,
+};
+use accelserve::runtime::TensorBuf;
+use accelserve::transport::tcp::TcpTransport;
+use accelserve::transport::MsgTransport;
+
+const ELEMS: usize = 32 * 32 * 3;
+
+fn infer_frame() -> Vec<u8> {
+    protocol::Request {
+        model: "tiny_mobilenet".into(),
+        raw: false,
+        spans: false,
+        prio: 0,
+        deadline_us: None,
+        payload: protocol::f32s_to_bytes(&vec![0.5f32; ELEMS]),
+    }
+    .encode()
+}
+
+/// An address that refuses connections: bind an ephemeral listener,
+/// remember its port, drop it.
+fn dead_addr() -> std::net::SocketAddr {
+    let l = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = l.local_addr().unwrap();
+    drop(l);
+    addr
+}
+
+#[test]
+fn gateway_reports_dead_upstream_instead_of_silent_drop() {
+    // The regression this pins: the gateway used to drop the client
+    // connection without a word when its upstream connect failed,
+    // leaving the client to diagnose a bare EOF. Now the client must
+    // receive a protocol Err frame naming the upstream failure.
+    let gw = gateway_tcp("127.0.0.1:0", dead_addr()).unwrap();
+    let mut cli = TcpTransport::connect(gw.addr).unwrap();
+    // The gateway notices the dead upstream at accept time and sends an
+    // unsolicited Err frame; sending first must not be required.
+    let frame = cli.recv().expect("an Err frame, not a bare close");
+    match protocol::Response::decode(&frame).unwrap() {
+        protocol::Response::Err(e) => {
+            assert!(e.contains("upstream"), "error must name the upstream: {e}");
+        }
+        other => panic!("unexpected response: {other:?}"),
+    }
+    gw.stop();
+}
+
+#[test]
+fn gateway_reports_upstream_death_mid_stream() {
+    // Upstream alive at connect time, gone before the request: the
+    // relay's upstream leg fails mid-request and the client must get a
+    // protocol Err frame for its outstanding request.
+    let upstream = TcpListener::bind("127.0.0.1:0").unwrap();
+    let up_addr = upstream.local_addr().unwrap();
+    let accepter = std::thread::spawn(move || {
+        // Accept the gateway's dealer connection, then hang up.
+        let (s, _) = upstream.accept().unwrap();
+        drop(s);
+    });
+    let gw = gateway_tcp("127.0.0.1:0", up_addr).unwrap();
+    let mut cli = TcpTransport::connect(gw.addr).unwrap();
+    accepter.join().unwrap();
+    // Give the dealer's FIN time to land so send-or-recv fails cleanly.
+    std::thread::sleep(Duration::from_millis(50));
+    cli.send(&infer_frame()).unwrap();
+    let frame = cli.recv().expect("an Err frame, not a bare close");
+    match protocol::Response::decode(&frame).unwrap() {
+        protocol::Response::Err(e) => {
+            assert!(e.contains("upstream"), "error must name the upstream: {e}");
+        }
+        other => panic!("unexpected response: {other:?}"),
+    }
+    gw.stop();
+}
+
+#[test]
+fn client_timeout_unwedges_stalled_server() {
+    // A server that accepts and then goes silent. Without a timeout the
+    // old client blocked forever in recv; with LoadCfg::timeout the
+    // whole run must come back promptly with the failure counted.
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let hold = std::thread::spawn(move || {
+        // Accept and hold the connection open, never replying, until
+        // the client gives up and the socket closes under us.
+        let (s, _) = listener.accept().unwrap();
+        let mut buf = [0u8; 4096];
+        use std::io::Read;
+        let mut s = s;
+        while matches!(s.read(&mut buf), Ok(n) if n > 0) {}
+    });
+
+    // Transport level: recv errors out within the timeout.
+    let t0 = Instant::now();
+    let mut c = TcpTransport::connect_timed(addr, Some(Duration::from_millis(200))).unwrap();
+    c.send(&infer_frame()).unwrap();
+    assert!(c.recv().is_err(), "recv from a silent server must error");
+    assert!(
+        t0.elapsed() < Duration::from_secs(5),
+        "timeout took {:?}", t0.elapsed()
+    );
+    drop(c);
+
+    // Load-generator level: the run completes with the client counted
+    // as failed instead of hanging the harness.
+    let cfg = LoadCfg {
+        model: "tiny_mobilenet".into(),
+        raw: false,
+        spans: false,
+        n_clients: 1,
+        requests_per_client: 1,
+        priority_client: false,
+        payload_elems: ELEMS,
+        warmup: 0,
+        deadline_us: None,
+        timeout: Some(Duration::from_millis(200)),
+    };
+    let t0 = Instant::now();
+    let stats = run_tcp(addr, &cfg).unwrap();
+    assert_eq!(stats.errors, 1, "the stalled client must be counted as failed");
+    assert_eq!(stats.served, 0);
+    assert!(
+        t0.elapsed() < Duration::from_secs(5),
+        "run took {:?}", t0.elapsed()
+    );
+    hold.join().unwrap();
+}
+
+#[test]
+fn unwinnable_deadline_is_shed_winnable_is_served() {
+    let dir = accelserve::models::gen::ensure_test_artifacts();
+    let exec = Executor::start(dir, 1, BatchCfg::none(), &["tiny_mobilenet_b1"]).unwrap();
+    // Prime the lane's service-time history — with no history the
+    // executor cannot price a deadline and must admit.
+    for _ in 0..3 {
+        exec.infer_sync("tiny_mobilenet", false, 0, TensorBuf::F32(vec![0.5; ELEMS]))
+            .unwrap();
+    }
+    let span = accelserve::trace::SpanRec::begin();
+    // 1µs: below any real service estimate, shed at the submit edge.
+    let err = exec
+        .infer_deadline(
+            "tiny_mobilenet",
+            false,
+            0,
+            TensorBuf::F32(vec![0.5; ELEMS]),
+            Some(1),
+            span.clone(),
+        )
+        .expect_err("a 1µs budget must be shed");
+    match &err {
+        ExecError::Shed { reason, msg } => {
+            assert_eq!(*reason, ShedReason::Deadline);
+            assert!(msg.contains("unwinnable"), "msg: {msg}");
+        }
+        other => panic!("expected a deadline shed, got: {other}"),
+    }
+    assert_eq!(err.shed_reason(), Some(ShedReason::Deadline));
+    // 1s: comfortably winnable for a tiny model on an idle lane.
+    exec.infer_deadline(
+        "tiny_mobilenet",
+        false,
+        0,
+        TensorBuf::F32(vec![0.5; ELEMS]),
+        Some(1_000_000),
+        span,
+    )
+    .expect("a generous budget must be admitted and served");
+    // The shed shows up in the lane counters exactly once, and the shed
+    // request never touched the job counters.
+    let stats = exec.stats();
+    let lane = stats
+        .lanes
+        .iter()
+        .find(|l| l.model == "tiny_mobilenet")
+        .expect("lane exists");
+    assert_eq!(lane.shed[ShedReason::Deadline as usize], 1);
+    assert_eq!(lane.shed[ShedReason::QueueFull as usize], 0);
+    assert_eq!(lane.jobs, 4, "3 primers + 1 admitted");
+    exec.shutdown();
+}

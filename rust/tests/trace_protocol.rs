@@ -40,6 +40,7 @@ fn infer_request(spans: bool, raw: bool) -> protocol::Request {
         raw,
         spans,
         prio: 0,
+        deadline_us: None,
         payload: if raw {
             accelserve::models::zoo::WorkloadData::image(64 * 64 * 3, 9).bytes
         } else {
@@ -220,6 +221,60 @@ fn truncated_span_block_is_rejected_not_misread() {
 }
 
 #[test]
+fn deadline_flag_roundtrips_and_sheds_over_live_server() {
+    // Deadline-carrying requests against a live server: a generous
+    // budget is admitted and answered with a byte-identical v1 status-0
+    // frame (the deadline word lives on the request side only); an
+    // unwinnable budget comes back as the distinct Shed status, and the
+    // lane's shed counter — fetched over the same connection via the
+    // stats opcode — agrees.
+    let exec = start_exec(1, BatchCfg::none());
+    let (mut cli, srv) = shm_pair(4);
+    let e2 = exec.clone();
+    let h = std::thread::spawn(move || handle_conn(srv, &e2));
+    // Prime the lane's service-time history (deadline-free requests
+    // never shed on deadline grounds) and measure nothing sheds.
+    for _ in 0..3 {
+        cli.send(&infer_request(false, false).encode()).unwrap();
+        assert_eq!(cli.recv().unwrap()[0], 0);
+    }
+    // Admitted: a 1-second budget dwarfs the tiny model's service time.
+    let mut req = infer_request(false, false);
+    req.deadline_us = Some(1_000_000);
+    cli.send(&req.encode()).unwrap();
+    let frame = cli.recv().unwrap();
+    assert_eq!(frame[0], 0, "admitted deadline request gets a v1 frame");
+    assert_eq!(frame.len(), 25 + 4 * 1000);
+    // Shed: a 1µs budget is below any real service estimate.
+    let mut req = infer_request(false, false);
+    req.deadline_us = Some(1);
+    cli.send(&req.encode()).unwrap();
+    match protocol::Response::decode(&cli.recv().unwrap()).unwrap() {
+        protocol::Response::Shed { reason, msg } => {
+            assert_eq!(reason, accelserve::coordinator::ShedReason::Deadline);
+            assert!(msg.contains("unwinnable"), "msg: {msg}");
+        }
+        other => panic!("unexpected response: {other:?}"),
+    }
+    // The wire status and the lane counter tell the same story.
+    let stats = fetch_stats(&mut cli).unwrap();
+    let lane = &stats.lanes[0];
+    assert_eq!(lane.model, "tiny_mobilenet");
+    assert_eq!(
+        lane.shed[accelserve::coordinator::ShedReason::Deadline as usize],
+        1
+    );
+    assert_eq!(
+        lane.shed[accelserve::coordinator::ShedReason::QueueFull as usize],
+        0
+    );
+    assert_eq!(lane.jobs, 4, "3 primers + 1 admitted; the shed never ran");
+    assert!(lane.svc_ns > 0, "service-time history accumulated");
+    drop(cli);
+    h.join().unwrap();
+}
+
+#[test]
 fn executor_spans_are_monotone_under_batching() {
     // Concurrent submissions under a deadline policy: jobs fuse, and
     // every job's span still satisfies enqueue <= gather <= seal <=
@@ -301,7 +356,20 @@ fn stats_opcode_serves_snapshot_over_wire() {
         exec.infer_sync("tiny_mobilenet", false, 0, TensorBuf::F32(vec![0.5; ELEMS]))
             .unwrap();
     }
-    let expected = exec.stats();
+    // The reply lands a hair before the worker banks the chunk's
+    // service time; settle until two consecutive snapshots agree so the
+    // expected snapshot is quiescent.
+    let expected = {
+        let mut prev = exec.stats();
+        loop {
+            std::thread::sleep(std::time::Duration::from_millis(10));
+            let next = exec.stats();
+            if next == prev {
+                break next;
+            }
+            prev = next;
+        }
+    };
     let (mut cli, srv) = shm_pair(4);
     let e2 = exec.clone();
     let h = std::thread::spawn(move || handle_conn(srv, &e2));
