@@ -62,6 +62,7 @@ fn main() -> anyhow::Result<()> {
                 payload_elems: 32 * 32 * 3,
                 warmup: 5,
                 deadline_us: None,
+                credits: false,
                 timeout: None,
             };
             let s = run_tcp(addr, &cfg)?;
@@ -91,6 +92,7 @@ fn main() -> anyhow::Result<()> {
         payload_elems: 64 * 64 * 3,
         warmup: 4,
         deadline_us: None,
+        credits: false,
         timeout: None,
     };
     let s = run_tcp(server.addr, &raw_cfg)?;
@@ -112,6 +114,8 @@ fn main() -> anyhow::Result<()> {
         raw: true,
         spans: false,
         prio: 0,
+        deadline_us: None,
+        credits: false,
         payload: accelserve::models::zoo::WorkloadData::image(64 * 64 * 3, 3).bytes,
     }
     .encode();

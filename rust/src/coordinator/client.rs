@@ -8,7 +8,7 @@
 use std::net::SocketAddr;
 use std::time::{Duration, Instant};
 
-use anyhow::{anyhow, bail, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
 use crate::metrics::stats::{ReqRecord, StageAgg};
 use crate::models::zoo::WorkloadData;
@@ -17,7 +17,7 @@ use crate::trace::{BreakdownAgg, StageBreakdown};
 use crate::transport::tcp::TcpTransport;
 use crate::transport::MsgTransport;
 
-use super::executor::ExecStats;
+use super::executor::{CreditHint, ExecStats};
 use super::protocol::{self, Request, Response};
 
 /// Load-generation configuration.
@@ -44,6 +44,13 @@ pub struct LoadCfg {
     /// byte-identical to v1 and exempts the traffic from deadline
     /// shedding.
     pub deadline_us: Option<u64>,
+    /// Honour server credit/pacing hints ([`protocol::FLAG_CREDITS`],
+    /// protocol v2): each client's closed loop feeds the returned
+    /// hints into a [`TokenPacer`] and slows down *before* admission
+    /// control would shed. Off by default — frames stay byte-identical
+    /// to v1, and a v1 server (which never sends hints) leaves the
+    /// pacer inert.
+    pub credits: bool,
     /// Connect/read/write timeout for each client connection; `None`
     /// blocks forever (the v1 behaviour). Set it when the server may
     /// hang — a stalled peer then surfaces as a client error instead of
@@ -62,7 +69,14 @@ pub struct LiveStats {
     pub spans: BreakdownAgg,
     pub duration_s: f64,
     pub throughput_rps: f64,
+    /// Clients that died mid-run (transport/decode failure). Their
+    /// tallies up to the failure still count in `served`/`sheds`, so
+    /// the totals stay reconcilable against the server's lane counters.
     pub errors: usize,
+    /// Per-request `Response::Err` frames. Unlike a client failure the
+    /// loop continues — one failed request does not discard a client's
+    /// remaining traffic.
+    pub req_errors: usize,
     /// Requests the server shed (admission control, protocol v2) —
     /// counted across warmup too, so the total matches the executor's
     /// per-lane shed counters exactly.
@@ -95,6 +109,13 @@ pub fn fetch_stats(t: &mut dyn MsgTransport) -> Result<ExecStats> {
 
 /// What one closed-loop client observed: the measured (post-warmup)
 /// records plus the served/shed tallies for goodput accounting.
+///
+/// Tallies are **always** populated, even when the client died partway
+/// through its loop — the failure lands in [`ClientRun::fatal`] instead
+/// of discarding the run. Before this, a client that errored on request
+/// k silently dropped its k−1 completed requests from the aggregate,
+/// so client-side totals could never reconcile with the server's lane
+/// counters under fault injection.
 #[derive(Debug, Default)]
 pub struct ClientRun {
     /// Post-warmup measured requests (latency records).
@@ -103,6 +124,85 @@ pub struct ClientRun {
     pub oks: usize,
     /// Requests the server shed, warmup included.
     pub sheds: usize,
+    /// Requests answered with a per-request [`Response::Err`] frame.
+    /// The loop keeps going — the server stayed up and spoke protocol,
+    /// so the rest of the traffic is still worth offering.
+    pub req_errors: usize,
+    /// The transport/decode failure that ended the loop early, if any.
+    pub fatal: Option<anyhow::Error>,
+}
+
+/// Client-side token bucket fed by server [`CreditHint`]s (the
+/// tentpole's pacing half). `credits` caps the burst the server is
+/// willing to absorb right now; `pace_ns` is the steady-state refill
+/// interval. A zero-credit hint empties the bucket outright — the
+/// server just shed on this lane and wants silence for a beat.
+///
+/// Time is passed in explicitly (`Instant` arguments) so refill math is
+/// deterministic under test; no hidden clock reads.
+#[derive(Debug)]
+pub struct TokenPacer {
+    capacity: u64,
+    tokens: u64,
+    pace_ns: u64,
+    last_refill: Instant,
+}
+
+impl TokenPacer {
+    /// A fresh pacer is permissive: one token, no pacing — the first
+    /// request always goes out immediately, and real limits arrive with
+    /// the first hint.
+    pub fn new(now: Instant) -> TokenPacer {
+        TokenPacer {
+            capacity: 1,
+            tokens: 1,
+            pace_ns: 0,
+            last_refill: now,
+        }
+    }
+
+    /// Fold a server hint into the bucket. Capacity tracks the hint's
+    /// credit grant (floored at 1 so the closed loop can always make
+    /// progress once the pace interval elapses); a zero-credit hint
+    /// additionally drains the tokens already held.
+    pub fn apply(&mut self, hint: &CreditHint) {
+        self.capacity = u64::from(hint.credits).max(1);
+        self.pace_ns = hint.pace_ns;
+        self.tokens = self.tokens.min(self.capacity);
+        if hint.credits == 0 {
+            self.tokens = 0;
+        }
+    }
+
+    /// Credit earned tokens for elapsed time. With no pace the bucket
+    /// refills instantly; otherwise one token per `pace_ns`, advancing
+    /// `last_refill` by exactly the time consumed so fractional
+    /// intervals carry over.
+    fn refill(&mut self, now: Instant) {
+        if self.pace_ns == 0 {
+            self.tokens = self.capacity;
+            self.last_refill = now;
+            return;
+        }
+        let elapsed = now.saturating_duration_since(self.last_refill).as_nanos() as u64;
+        let earned = elapsed / self.pace_ns;
+        if earned > 0 {
+            self.tokens = (self.tokens + earned).min(self.capacity);
+            self.last_refill += Duration::from_nanos(earned * self.pace_ns);
+        }
+    }
+
+    /// Try to take a token at `now`. Returns [`Duration::ZERO`] on
+    /// success (token consumed), or how long to wait before the next
+    /// token matures (nothing consumed) — callers sleep and retry.
+    pub fn acquire_at(&mut self, now: Instant) -> Duration {
+        self.refill(now);
+        if self.tokens > 0 {
+            self.tokens -= 1;
+            return Duration::ZERO;
+        }
+        (self.last_refill + Duration::from_nanos(self.pace_ns)).saturating_duration_since(now)
+    }
 }
 
 /// Drive a closed loop over an arbitrary connected transport. With
@@ -111,12 +211,17 @@ pub struct ClientRun {
 /// records without breakdowns. A shed response ([`Response::Shed`]) is
 /// tallied — not a client failure — and the loop moves straight on to
 /// the next request, which is what makes the closed loop keep offering
-/// load under admission control.
-pub fn run_client_loop(
-    t: &mut dyn MsgTransport,
-    cfg: &LoadCfg,
-    client_idx: usize,
-) -> Result<ClientRun> {
+/// load under admission control. A per-request [`Response::Err`] is
+/// likewise tallied and the loop continues; only a transport or decode
+/// failure ends the run early, and even then the partial tallies come
+/// back (in [`ClientRun`], with the failure in [`ClientRun::fatal`])
+/// rather than being discarded.
+///
+/// With [`LoadCfg::credits`] set, each request carries
+/// [`protocol::FLAG_CREDITS`] and the returned hints drive a
+/// [`TokenPacer`]: the client sleeps out its pacing debt *before*
+/// sending, converting server-side sheds into client-side delay.
+pub fn run_client_loop(t: &mut dyn MsgTransport, cfg: &LoadCfg, client_idx: usize) -> ClientRun {
     let prio = if cfg.priority_client && client_idx == 0 {
         10
     } else {
@@ -140,19 +245,59 @@ pub fn run_client_loop(
         spans: cfg.spans,
         prio,
         deadline_us: cfg.deadline_us,
+        credits: cfg.credits,
         payload,
     }
     .encode();
 
     let mut out = ClientRun::default();
+    let mut pacer = cfg.credits.then(|| TokenPacer::new(Instant::now()));
     for i in 0..cfg.requests_per_client {
+        if let Some(p) = pacer.as_mut() {
+            // Pay the pacing debt before offering the next request.
+            loop {
+                let wait = p.acquire_at(Instant::now());
+                if wait.is_zero() {
+                    break;
+                }
+                std::thread::sleep(wait);
+            }
+        }
         let t0 = Instant::now();
-        t.send(&req)?;
-        let frame = t.recv()?;
+        if let Err(e) = t.send(&req).context("client send failed") {
+            out.fatal = Some(e);
+            return out;
+        }
+        let frame = match t.recv().context("client recv failed") {
+            Ok(f) => f,
+            Err(e) => {
+                out.fatal = Some(e);
+                return out;
+            }
+        };
         let total = t0.elapsed();
-        match Response::decode(&frame)? {
-            Response::Err(e) => bail!("server error: {e}"),
-            Response::Stats(_) => bail!("unsolicited stats response"),
+        let decoded = protocol::decode_with_credit(&frame).context("client decode failed");
+        let (resp, hint) = match decoded {
+            Ok(pair) => pair,
+            Err(e) => {
+                out.fatal = Some(e);
+                return out;
+            }
+        };
+        if let (Some(p), Some(h)) = (pacer.as_mut(), hint.as_ref()) {
+            p.apply(h);
+        }
+        match resp {
+            Response::Err(e) => {
+                // The server stayed up and spoke protocol — one failed
+                // request does not condemn the rest of the loop.
+                log::warn!("client {client_idx}: server error on request {i}: {e}");
+                out.req_errors += 1;
+            }
+            Response::Stats(_) => {
+                out.fatal = Some(anyhow!("unsolicited stats response"));
+                return out;
+            }
             Response::Shed { .. } => {
                 // Admission control said no — cheap, expected under
                 // overload. No latency record: the request wasn't served.
@@ -188,7 +333,7 @@ pub fn run_client_loop(
             }
         }
     }
-    Ok(out)
+    out
 }
 
 /// Run the full load test over any transport: spawns
@@ -202,48 +347,57 @@ where
     F: Fn(usize) -> Result<T> + Sync,
 {
     let t_start = Instant::now();
-    let results: Vec<Result<ClientRun>> = std::thread::scope(|s| {
+    let results: Vec<ClientRun> = std::thread::scope(|s| {
         let mut handles = Vec::new();
         for c in 0..cfg.n_clients {
             let connect = &connect;
-            handles.push(s.spawn(move || -> Result<ClientRun> {
-                let mut t = connect(c)?;
+            handles.push(s.spawn(move || -> ClientRun {
+                let mut t = match connect(c).context("client connect failed") {
+                    Ok(t) => t,
+                    Err(e) => {
+                        return ClientRun {
+                            fatal: Some(e),
+                            ..ClientRun::default()
+                        }
+                    }
+                };
                 run_client_loop(&mut t, cfg, c)
             }));
         }
         handles
             .into_iter()
             .map(|h| {
-                h.join()
-                    .unwrap_or_else(|_| Err(anyhow!("client thread panicked")))
+                h.join().unwrap_or_else(|_| ClientRun {
+                    fatal: Some(anyhow!("client thread panicked")),
+                    ..ClientRun::default()
+                })
             })
             .collect()
     });
     let mut stats = LiveStats::default();
-    for res in results {
-        match res {
-            Ok(run) => {
-                // A successful client completed its whole closed loop
-                // (warmup requests were served even though unrecorded).
-                stats.served += run.oks;
-                stats.sheds += run.sheds;
-                for cr in &run.recs {
-                    let r = &cr.rec;
-                    stats.all.push(r);
-                    if r.priority {
-                        stats.priority.push(r);
-                    } else {
-                        stats.normal.push(r);
-                    }
-                    if let Some(b) = &cr.breakdown {
-                        stats.spans.push(b, r.total.0);
-                    }
-                }
+    for run in results {
+        // Fold the tallies from every run — including one that died
+        // partway through. Discarding a failed client's completed
+        // requests (the old behaviour) made client-side totals drift
+        // from the server's lane counters whenever anything went wrong.
+        stats.served += run.oks;
+        stats.sheds += run.sheds;
+        stats.req_errors += run.req_errors;
+        for cr in &run.recs {
+            let r = &cr.rec;
+            stats.all.push(r);
+            if r.priority {
+                stats.priority.push(r);
+            } else {
+                stats.normal.push(r);
             }
-            Err(e) => {
-                stats.errors += 1;
-                log::warn!("client failed: {e}");
+            if let Some(b) = &cr.breakdown {
+                stats.spans.push(b, r.total.0);
             }
+        }
+        if let Some(e) = run.fatal {
+            stats.errors += 1;
+            log::warn!("client failed: {e:#}");
         }
     }
     stats.duration_s = t_start.elapsed().as_secs_f64();
@@ -257,4 +411,50 @@ where
 /// (honouring [`LoadCfg::timeout`] on connect and reads).
 pub fn run_tcp(addr: SocketAddr, cfg: &LoadCfg) -> Result<LiveStats> {
     run_on(|_client| TcpTransport::connect_timed(addr, cfg.timeout), cfg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pacer_token_bucket_refills_deterministically() {
+        let t0 = Instant::now();
+        let mut p = TokenPacer::new(t0);
+        // Fresh pacer: first acquire free, second too (pace 0 refills).
+        assert_eq!(p.acquire_at(t0), Duration::ZERO);
+        assert_eq!(p.acquire_at(t0), Duration::ZERO);
+
+        // Hint: 2 credits, one token per millisecond.
+        p.apply(&CreditHint {
+            credits: 2,
+            pace_ns: 1_000_000,
+        });
+        // The apply clamps but does not grant: the bucket was emptied
+        // by the acquires above, so the next request owes a full pace
+        // interval.
+        assert_eq!(p.acquire_at(t0), Duration::from_millis(1));
+
+        // Exactly one pace interval later: one token matured.
+        let t1 = t0 + Duration::from_millis(1);
+        assert_eq!(p.acquire_at(t1), Duration::ZERO);
+        assert_eq!(p.acquire_at(t1), Duration::from_millis(1));
+
+        // 2.5 intervals elapse: earns 2 tokens (fraction carries over,
+        // capped at capacity 2), and the carry means the next token
+        // matures half an interval after the cap point.
+        let t2 = t1 + Duration::from_micros(2_500);
+        assert_eq!(p.acquire_at(t2), Duration::ZERO);
+        assert_eq!(p.acquire_at(t2), Duration::ZERO);
+        assert_eq!(p.acquire_at(t2), Duration::from_micros(500));
+
+        // Zero-credit hint drains the bucket outright.
+        let t3 = t2 + Duration::from_millis(10);
+        p.refill(t3);
+        p.apply(&CreditHint {
+            credits: 0,
+            pace_ns: 4_000_000,
+        });
+        assert!(p.acquire_at(t3) > Duration::ZERO);
+    }
 }

@@ -1,0 +1,64 @@
+//! Per-connection thread tracking for the server and gateway accept
+//! loops. Before this existed, `ServeLoop::stop`/`GatewayLoop::stop`
+//! joined only the accept thread while handler/relay threads stayed
+//! parked forever in `recv()` on idle peers — `stop()` did not actually
+//! stop serving. The tracker records every spawned connection thread
+//! together with the transport shutdown hooks
+//! ([`crate::transport::MsgTransport::shutdown_hook`]) that can unblock
+//! it, and `stop_all` fires the hooks and joins.
+
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+/// A fired-once closure that unblocks a transport's parked `recv`.
+pub(crate) type ShutdownHook = Box<dyn FnOnce() + Send>;
+
+/// One tracked connection thread plus the hooks that unblock it (a
+/// relay thread has two — the client and upstream legs).
+struct TrackedConn {
+    handle: JoinHandle<()>,
+    hooks: Vec<ShutdownHook>,
+}
+
+/// Shared registry of live connection threads. Clone-cheap (an `Arc`):
+/// the accept thread pushes, `stop_all` drains.
+#[derive(Clone, Default)]
+pub(crate) struct ConnTracker {
+    conns: Arc<Mutex<Vec<TrackedConn>>>,
+}
+
+impl ConnTracker {
+    pub(crate) fn new() -> ConnTracker {
+        ConnTracker::default()
+    }
+
+    /// Register a spawned connection thread and the shutdown hooks for
+    /// the transports it blocks on (`None` hooks are simply dropped).
+    pub(crate) fn track(
+        &self,
+        handle: JoinHandle<()>,
+        hooks: impl IntoIterator<Item = Option<ShutdownHook>>,
+    ) {
+        self.conns.lock().unwrap().push(TrackedConn {
+            handle,
+            hooks: hooks.into_iter().flatten().collect(),
+        });
+    }
+
+    /// Unblock and join every tracked connection thread. A thread whose
+    /// transports provided no hook is joined only if it already
+    /// finished; otherwise it is left detached to exit on peer close
+    /// (the pre-tracking behaviour) rather than wedging `stop()`.
+    pub(crate) fn stop_all(&self) {
+        let conns = std::mem::take(&mut *self.conns.lock().unwrap());
+        for conn in conns {
+            let hooked = !conn.hooks.is_empty();
+            for hook in conn.hooks {
+                hook();
+            }
+            if hooked || conn.handle.is_finished() {
+                let _ = conn.handle.join();
+            }
+        }
+    }
+}

@@ -238,6 +238,24 @@ pub struct ExecStats {
     pub lanes: Vec<LaneStats>,
 }
 
+/// Proactive-backpressure advice for one lane, computed by
+/// [`Executor::credit_hint`] from the same per-lane counters admission
+/// control prices deadlines with, and carried to credits-opted-in
+/// clients in the protocol's status-5 envelope
+/// (`protocol::encode_with_credit`). A well-behaved client that honours
+/// the hint slows its closed loop *before* the submit edge would have
+/// to shed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CreditHint {
+    /// In-flight window the client may keep: how many requests the lane
+    /// has queue headroom for right now. `0` means back off — the lane
+    /// shed since the last hint on this connection's model.
+    pub credits: u16,
+    /// Suggested inter-request gap in ns; `0` means no pacing needed
+    /// (the lane is draining faster than it fills).
+    pub pace_ns: u64,
+}
+
 struct Queued(Job);
 
 impl PartialEq for Queued {
@@ -454,6 +472,10 @@ struct Lane {
     sealed: [u64; N_SEAL_REASONS],
     /// Jobs shed at submit by [`ShedReason`] (stats opcode).
     shed: [u64; N_SHED_REASONS],
+    /// Shed total as of the last [`Executor::credit_hint`] call: a
+    /// nonzero delta means the lane shed since the last hint, so the
+    /// next hint demands a hard back-off (zero credits).
+    hint_shed_mark: u64,
 }
 
 impl Lane {
@@ -519,6 +541,7 @@ impl Shared {
                 credits: pol.weight.max(1),
                 sealed: [0; N_SEAL_REASONS],
                 shed: [0; N_SHED_REASONS],
+                hint_shed_mark: 0,
             }
         })
     }
@@ -739,7 +762,7 @@ impl Executor {
                 // this job itself must still run.
                 let ahead = lane.heap.len() as u64;
                 let streams = self.shared.streams.max(1) as u64;
-                let wait_ns = est_ns * (ahead / streams + 1);
+                let wait_ns = admission_wait_ns(est_ns, ahead, streams);
                 if now + Duration::from_nanos(wait_ns) > d {
                     lane.shed[ShedReason::Deadline as usize] += 1;
                     let msg = format!(
@@ -869,6 +892,52 @@ impl Executor {
         }
     }
 
+    /// Compute the proactive-backpressure hint for `model`'s lane (the
+    /// payload of the protocol's status-5 credit envelope, attached by
+    /// the server to every response of a `FLAG_CREDITS` request).
+    ///
+    /// The hint is priced from the same signals admission control uses:
+    /// * **credits** — queue headroom, capped at twice the stream count
+    ///   (a deeper in-flight window only grows the queue);
+    /// * **pace** — zero while the streams are hungry (`depth <
+    ///   streams`), else `est × depth / streams`: sending faster than
+    ///   the backlog drains is pure queueing;
+    /// * **shed pressure** — if the lane shed since the last hint, the
+    ///   hint collapses to zero credits and a pace well below the
+    ///   service rate, so the backlog actually drains before the client
+    ///   resumes. The shed delta is consumed by whichever connection's
+    ///   response is encoded next — hints are advisory and per-response,
+    ///   not a distributed reservation.
+    ///
+    /// Locking: takes `sched`, then `counters` (via the service
+    /// estimate) — the executor-wide lock order.
+    pub fn credit_hint(&self, model: &str) -> CreditHint {
+        let mut s = self.shared.sched.lock().unwrap();
+        // Estimate before the lane borrow; lock order sched → counters.
+        let est_ns = self.shared.svc_estimate_ns(model);
+        let streams = self.shared.streams.max(1) as u64;
+        let queue_cap = self.shared.cfg.queue_cap as u64;
+        let lane = self.shared.lane(&mut s, model);
+        let depth = lane.heap.len() as u64;
+        let shed_total: u64 = lane.shed.iter().sum();
+        let shed_delta = shed_total - lane.hint_shed_mark;
+        lane.hint_shed_mark = shed_total;
+        if shed_delta > 0 {
+            return CreditHint {
+                credits: 0,
+                pace_ns: 2 * est_ns.max(MIN_BACKOFF_PACE_NS),
+            };
+        }
+        let headroom = queue_cap.saturating_sub(depth);
+        let credits = headroom.min(2 * streams).min(u16::MAX as u64) as u16;
+        let pace_ns = if depth < streams {
+            0
+        } else {
+            est_ns.saturating_mul(depth) / streams
+        };
+        CreditHint { credits, pace_ns }
+    }
+
     /// Stop the scheduler and workers and join them. Sealed batches
     /// already handed to workers finish; jobs still queued in lanes are
     /// dropped and their reply channels report the executor as gone.
@@ -883,6 +952,23 @@ impl Executor {
             let _ = w.join();
         }
     }
+}
+
+/// Floor for the post-shed back-off pace in ns, used by
+/// [`Executor::credit_hint`]: keeps the back-off meaningful when a lane
+/// sheds before any service-time history exists (queue-full on a cold
+/// lane).
+const MIN_BACKOFF_PACE_NS: u64 = 100_000;
+
+/// Admission-control wait estimate in ns: the `ahead` queued jobs drain
+/// `streams`-wide in *ceil(ahead / streams)* service-time waves — a
+/// partial last wave still costs a full service time — and then the job
+/// itself must run (+1). Flooring here (the pre-fix behaviour) admitted
+/// requests whose deadlines were already unwinnable: 3 ahead on 2
+/// streams was priced at 2 service times instead of 3.
+fn admission_wait_ns(est_ns: u64, ahead: u64, streams: u64) -> u64 {
+    let streams = streams.max(1);
+    est_ns.saturating_mul(ahead.div_ceil(streams) + 1)
 }
 
 /// How many jobs a batch headed by `model` is worth gathering: capped
@@ -1522,6 +1608,7 @@ mod tests {
             credits: 1,
             sealed: [0; N_SEAL_REASONS],
             shed: [0; N_SHED_REASONS],
+            hint_shed_mark: 0,
         };
         let now = Instant::now();
         // A lone job far from its deadline holds for peers: no seal,
@@ -1608,6 +1695,7 @@ mod tests {
                     credits: 1,
                     sealed: [0; N_SEAL_REASONS],
                     shed: [0; N_SHED_REASONS],
+                    hint_shed_mark: 0,
                 },
             );
         }
@@ -1662,6 +1750,7 @@ mod tests {
                     credits: weight,
                     sealed: [0; N_SEAL_REASONS],
                     shed: [0; N_SHED_REASONS],
+                    hint_shed_mark: 0,
                 },
             );
         }
@@ -1675,6 +1764,24 @@ mod tests {
             vec!["m", "m", "solo", "m", "m", "solo", "m", "m", "solo"],
             "weight-2 lane should dispatch twice per cycle"
         );
+    }
+
+    #[test]
+    fn admission_wait_estimate_uses_ceiling_division() {
+        // The boundary the floor bug got wrong: 3 queued ahead on 2
+        // streams drain in ceil(3/2) = 2 waves, plus the job itself —
+        // 3 service times, not the floored 2 that admitted requests
+        // with already-unwinnable deadlines.
+        assert_eq!(admission_wait_ns(1_000, 3, 2), 3_000);
+        // Exact multiples are unchanged by the fix.
+        assert_eq!(admission_wait_ns(1_000, 4, 2), 3_000);
+        assert_eq!(admission_wait_ns(1_000, 0, 2), 1_000);
+        // Single stream: every queued job is a full wave.
+        assert_eq!(admission_wait_ns(500, 3, 1), 2_000);
+        // streams=0 is defensively treated as 1, and huge estimates
+        // saturate instead of wrapping.
+        assert_eq!(admission_wait_ns(1_000, 2, 0), 3_000);
+        assert_eq!(admission_wait_ns(u64::MAX, 5, 2), u64::MAX);
     }
 
     #[test]
@@ -1741,6 +1848,7 @@ mod tests {
                 credits: 1,
                 sealed: [0; N_SEAL_REASONS],
                 shed: [0; N_SHED_REASONS],
+                hint_shed_mark: 0,
             });
             lane.heap.push(job);
         }
@@ -1791,6 +1899,7 @@ mod tests {
                     credits: 1,
                     sealed: [0; N_SEAL_REASONS],
                     shed: [0; N_SHED_REASONS],
+                    hint_shed_mark: 0,
                 },
             );
         }
@@ -1828,6 +1937,7 @@ mod tests {
             credits: 1,
             sealed: [0; N_SEAL_REASONS],
             shed: [0; N_SHED_REASONS],
+            hint_shed_mark: 0,
         };
         // Plenty of budget left (10ms) and no service estimate: hold.
         lane.heap.push(mk(0, Some(now + Duration::from_millis(10))));

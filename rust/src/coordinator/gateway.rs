@@ -20,22 +20,31 @@ use anyhow::Result;
 use crate::transport::tcp::{TcpAcceptor, TcpTransport};
 use crate::transport::{Acceptor, MsgTransport};
 
+use super::conn_track::ConnTracker;
 use super::protocol::Response;
 
 /// A running transport-generic gateway loop.
 pub struct GatewayLoop {
     stop: Arc<AtomicBool>,
     accept_thread: Option<std::thread::JoinHandle<()>>,
+    conns: ConnTracker,
     /// Frames forwarded (both directions) — observability hook.
     pub forwarded: Arc<AtomicU64>,
 }
 
 impl GatewayLoop {
+    /// Stop accepting, then unblock and join the relay threads (both
+    /// legs of each relay are shut down via
+    /// [`crate::transport::MsgTransport::shutdown_hook`], so a relay
+    /// parked in `recv` on an idle client returns promptly). Before the
+    /// tracker existed only the accept thread was joined and `stop()`
+    /// left relays forwarding forever.
     pub fn stop(mut self) {
         self.stop.store(true, Ordering::SeqCst);
         if let Some(t) = self.accept_thread.take() {
             let _ = t.join();
         }
+        self.conns.stop_all();
     }
 }
 
@@ -52,13 +61,18 @@ where
     let stop2 = stop.clone();
     let forwarded = Arc::new(AtomicU64::new(0));
     let fwd2 = forwarded.clone();
+    let conns = ConnTracker::new();
+    let conns2 = conns.clone();
     let accept_thread = std::thread::spawn(move || {
         while !stop2.load(Ordering::SeqCst) {
             match acceptor.poll_accept() {
                 Ok(Some(client)) => match connect_upstream() {
                     Ok(upstream) => {
                         let fwd = fwd2.clone();
-                        std::thread::spawn(move || relay(client, upstream, &fwd));
+                        let hooks = [client.shutdown_hook(), upstream.shutdown_hook()];
+                        let handle =
+                            std::thread::spawn(move || relay(client, upstream, &fwd));
+                        conns2.track(handle, hooks);
                     }
                     Err(e) => {
                         // Upstream down: tell the client why before the
@@ -67,12 +81,14 @@ where
                         // its request yet — an unsolicited Err frame is
                         // still well-formed protocol, and the next recv
                         // on the client side surfaces it.
-                        std::thread::spawn(move || {
+                        let hook = client.shutdown_hook();
+                        let handle = std::thread::spawn(move || {
                             let mut client = client;
                             let resp =
                                 Response::Err(format!("gateway: upstream unavailable: {e}"));
                             let _ = client.send(&resp.encode());
                         });
+                        conns2.track(handle, [hook]);
                     }
                 },
                 Ok(None) => std::thread::sleep(Duration::from_millis(2)),
@@ -83,6 +99,7 @@ where
     GatewayLoop {
         stop,
         accept_thread: Some(accept_thread),
+        conns,
         forwarded,
     }
 }

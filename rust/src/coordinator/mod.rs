@@ -11,15 +11,18 @@
 //! documented in `docs/ARCHITECTURE.md`.
 
 pub mod client;
+mod conn_track;
 pub mod executor;
 pub mod gateway;
 pub mod protocol;
 pub mod server;
 
-pub use client::{fetch_stats, run_on, run_tcp, ClientRec, ClientRun, LiveStats, LoadCfg};
+pub use client::{
+    fetch_stats, run_on, run_tcp, ClientRec, ClientRun, LiveStats, LoadCfg, TokenPacer,
+};
 pub use executor::{
-    BatchCfg, Done, ExecError, ExecStats, Executor, LaneStats, ModelPolicy, SchedCfg, SealReason,
-    ShedReason, DEFAULT_QUEUE_CAP, N_SEAL_REASONS, N_SHED_REASONS, SEAL_REASON_NAMES,
+    BatchCfg, CreditHint, Done, ExecError, ExecStats, Executor, LaneStats, ModelPolicy, SchedCfg,
+    SealReason, ShedReason, DEFAULT_QUEUE_CAP, N_SEAL_REASONS, N_SHED_REASONS, SEAL_REASON_NAMES,
     SHED_REASON_NAMES,
 };
 pub use gateway::{gateway_on, gateway_tcp, GatewayHandle, GatewayLoop};

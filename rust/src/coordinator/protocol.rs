@@ -15,25 +15,34 @@
 //!             [span block][payload]   (see `trace::wire`)
 //!           status 3 (Stats): [3][ver][interleaves u64][n u8][lanes...]
 //!           status 4 (Shed): [4][reason u8][utf8 message]
+//!           status 5 (credit envelope): [5][ver][credits u16]
+//!             [pace_ns u64][inner response frame]   (see `CreditHint`)
 //! ```
 //!
 //! # Protocol v2 and compatibility
 //!
-//! v2 adds the request flags [`FLAG_SPANS`] and [`FLAG_DEADLINE`], the
-//! stats opcode [`OP_STATS`], and the [`Response::Shed`] status, all
+//! v2 adds the request flags [`FLAG_SPANS`], [`FLAG_DEADLINE`] and
+//! [`FLAG_CREDITS`], the stats opcode [`OP_STATS`], the
+//! [`Response::Shed`] status, and the status-5 credit envelope, all
 //! *opt-in*, so the two directions stay mutually compatible:
 //!
-//! * a **v1 client against a v2 server** never sets `FLAG_SPANS` or
-//!   `FLAG_DEADLINE`, so its frames carry no deadline word and the
-//!   server answers with a status-0 frame — byte-identical to v1 (a
-//!   deadline-less lane is also never shed on deadline grounds);
+//! * a **v1 client against a v2 server** never sets `FLAG_SPANS`,
+//!   `FLAG_DEADLINE` or `FLAG_CREDITS`, so its frames carry no deadline
+//!   word and the server answers with a status-0 frame — byte-identical
+//!   to v1 (a deadline-less lane is also never shed on deadline
+//!   grounds, and a credit-less request is never paced);
 //! * a **v2 client against a v1 server** sets flag bits the old server
 //!   ignores and gets a status-0 frame back, which the v2 decoder
-//!   still accepts (span absent, nothing shed).
+//!   still accepts (span absent, nothing shed, no credit hint —
+//!   [`decode_with_credit`] reports `None` and the client simply stays
+//!   unpaced).
 //!
 //! The one caveat: a v2 client that sets `FLAG_DEADLINE` against a v1
 //! server would have its deadline word read as payload — deadline use
 //! therefore requires a v2 server, exactly like `OP_STATS` does.
+//! `FLAG_CREDITS` has no such caveat (it adds no request bytes, only
+//! asks the server to wrap its response), so a credits-on client
+//! degrades gracefully against a v1 server.
 //! `tests/trace_protocol.rs` pins both directions.
 //!
 //! Deadlines are *relative* (microseconds from server receipt), so no
@@ -46,7 +55,9 @@ use anyhow::{bail, Result};
 use crate::trace::wire::decode_span_block;
 use crate::trace::{SpanBlock, SpanRec};
 
-use super::executor::{ExecStats, LaneStats, ShedReason, N_SEAL_REASONS, N_SHED_REASONS};
+use super::executor::{
+    CreditHint, ExecStats, LaneStats, ShedReason, N_SEAL_REASONS, N_SHED_REASONS,
+};
 
 /// Request opcode: run inference (the v1 opcode).
 pub const OP_INFER: u8 = 1;
@@ -60,9 +71,16 @@ pub const FLAG_SPANS: u8 = 2;
 /// flags bit 2 (v2): a `deadline_us` word follows the model name — the
 /// request's SLO budget, relative microseconds from server receipt.
 pub const FLAG_DEADLINE: u8 = 4;
+/// flags bit 3 (v2): the client wants proactive-backpressure hints —
+/// the server wraps its response in the status-5 credit envelope
+/// (adds no request bytes, so it is safe against a v1 server, which
+/// simply ignores the bit and answers unwrapped).
+pub const FLAG_CREDITS: u8 = 8;
 /// Stats response wire version (2 added `svc_ns` + shed counters and
 /// the sixth seal reason; v1 frames are rejected, stats are advisory).
 pub const STATS_VER: u8 = 2;
+/// Credit-envelope wire version ([`encode_with_credit`]).
+pub const CREDIT_VER: u8 = 1;
 
 /// A parsed inference request.
 #[derive(Debug, Clone, PartialEq)]
@@ -75,6 +93,10 @@ pub struct Request {
     /// SLO budget in microseconds from server receipt (v2, opt-in via
     /// [`FLAG_DEADLINE`]). `None` keeps the frame byte-identical to v1.
     pub deadline_us: Option<u64>,
+    /// Ask the server for credit/pacing hints ([`FLAG_CREDITS`], v2):
+    /// the response comes back wrapped in the status-5 envelope. `false`
+    /// keeps both directions byte-identical to v1.
+    pub credits: bool,
     pub payload: Vec<u8>,
 }
 
@@ -90,6 +112,9 @@ pub struct RequestMeta {
     pub prio: u8,
     /// The client set [`FLAG_DEADLINE`]: SLO budget in µs from receipt.
     pub deadline_us: Option<u64>,
+    /// The client set [`FLAG_CREDITS`]: wrap the response in the
+    /// credit envelope.
+    pub credits: bool,
 }
 
 /// Encode a stats request frame (v2): header only, no payload.
@@ -137,6 +162,7 @@ pub fn split_header(buf: &[u8]) -> Result<(RequestMeta, usize)> {
             spans: buf[1] & FLAG_SPANS != 0,
             prio: buf[2],
             deadline_us,
+            credits: buf[1] & FLAG_CREDITS != 0,
         },
         at,
     ))
@@ -158,6 +184,9 @@ impl Request {
         if self.deadline_us.is_some() {
             flags |= FLAG_DEADLINE;
         }
+        if self.credits {
+            flags |= FLAG_CREDITS;
+        }
         buf.push(flags);
         buf.push(self.prio);
         buf.push(name.len() as u8);
@@ -177,6 +206,7 @@ impl Request {
             spans: meta.spans,
             prio: meta.prio,
             deadline_us: meta.deadline_us,
+            credits: meta.credits,
             payload: buf[payload_off..].to_vec(),
         })
     }
@@ -313,6 +343,48 @@ pub fn span_to_block(span: &SpanRec) -> SpanBlock {
     SpanBlock::of(span)
 }
 
+/// Byte length of the credit-envelope header:
+/// `[5][ver][credits u16][pace_ns u64]`.
+const CREDIT_HDR: usize = 12;
+
+/// Encode a response, wrapping it in the status-5 credit envelope when
+/// a hint is attached (the server's answer to a [`FLAG_CREDITS`]
+/// request). With `hint == None` this is exactly [`Response::encode`],
+/// so flag-off traffic stays byte-identical to v1.
+pub fn encode_with_credit(resp: &Response, hint: Option<CreditHint>) -> Vec<u8> {
+    let inner = resp.encode();
+    let Some(h) = hint else { return inner };
+    let mut buf = Vec::with_capacity(CREDIT_HDR + inner.len());
+    buf.push(5u8);
+    buf.push(CREDIT_VER);
+    buf.extend_from_slice(&h.credits.to_le_bytes());
+    buf.extend_from_slice(&h.pace_ns.to_le_bytes());
+    buf.extend_from_slice(&inner);
+    buf
+}
+
+/// Decode a response that may carry the status-5 credit envelope. A
+/// bare (v1 or unwrapped v2) frame decodes with `None` — what a
+/// credits-on client sees from a v1 server, degrading to unpaced. The
+/// envelope is rejected when truncated (cut inside the header or with
+/// no inner frame), on an unknown version, and when nested (the inner
+/// frame's status 5 is unknown to [`Response::decode`]).
+pub fn decode_with_credit(buf: &[u8]) -> Result<(Response, Option<CreditHint>)> {
+    if buf.first() != Some(&5u8) {
+        return Ok((Response::decode(buf)?, None));
+    }
+    if buf.len() <= CREDIT_HDR {
+        bail!("truncated credit envelope: {} bytes", buf.len());
+    }
+    if buf[1] != CREDIT_VER {
+        bail!("unknown credit envelope version {}", buf[1]);
+    }
+    let credits = u16::from_le_bytes(buf[2..4].try_into().expect("2 bytes"));
+    let pace_ns = u64::from_le_bytes(buf[4..12].try_into().expect("8 bytes"));
+    let inner = Response::decode(&buf[CREDIT_HDR..])?;
+    Ok((inner, Some(CreditHint { credits, pace_ns })))
+}
+
 /// Encode an [`ExecStats`] snapshot as a status-3 frame.
 fn encode_stats(stats: &ExecStats) -> Vec<u8> {
     let mut buf = Vec::with_capacity(11 + stats.lanes.len() * 64);
@@ -427,6 +499,7 @@ mod tests {
             spans: false,
             prio: 7,
             deadline_us: None,
+            credits: false,
             payload: vec![1, 2, 3, 4, 5],
         };
         assert_eq!(Request::decode(&r.encode()).unwrap(), r);
@@ -445,6 +518,17 @@ mod tests {
         // Without the flag the frame is byte-identical to v1: exactly
         // 8 bytes (the deadline word) shorter, same payload tail.
         assert_eq!(frame.len(), r.encode().len() + 8);
+        // FLAG_CREDITS adds the flag bit and nothing else — same length,
+        // same bytes everywhere but the flags byte.
+        let with_credits = Request {
+            credits: true,
+            ..r.clone()
+        };
+        let cframe = with_credits.encode();
+        assert_eq!(cframe[1] & FLAG_CREDITS, FLAG_CREDITS);
+        assert_eq!(Request::decode(&cframe).unwrap(), with_credits);
+        assert_eq!(cframe.len(), r.encode().len());
+        assert_eq!(&cframe[2..], &r.encode()[2..]);
     }
 
     #[test]
@@ -455,6 +539,7 @@ mod tests {
             spans: true,
             prio: 3,
             deadline_us: Some(1_000),
+            credits: true,
             payload: vec![9; 12],
         };
         let frame = r.encode();
@@ -464,6 +549,7 @@ mod tests {
         assert!(meta.spans);
         assert_eq!(meta.prio, 3);
         assert_eq!(meta.deadline_us, Some(1_000));
+        assert!(meta.credits);
         assert_eq!(&frame[off..], &r.payload[..]);
         assert!(split_header(&[]).is_err());
         // A frame cut inside the deadline word is rejected, not read
@@ -603,6 +689,7 @@ mod tests {
             spans: false,
             prio: 0,
             deadline_us: None,
+            credits: false,
             payload: vec![],
         }
         .encode();
@@ -618,5 +705,84 @@ mod tests {
         assert!(Response::decode(&[0, 1, 2]).is_err());
         assert!(Response::decode(&[7]).is_err());
         assert!(bytes_to_f32s(&[1, 2, 3]).is_err());
+    }
+
+    #[test]
+    fn credit_envelope_roundtrips_every_inner_status() {
+        // The hint attaches uniformly: Ok, Err and Shed responses all
+        // wrap and unwrap with the hint intact and the inner response
+        // unchanged.
+        let hint = CreditHint {
+            credits: 3,
+            pace_ns: 1_500_000,
+        };
+        let inners = [
+            Response::Ok {
+                stages: StageNs {
+                    queue_ns: 1,
+                    preproc_ns: 2,
+                    infer_ns: 3,
+                },
+                span: None,
+                payload: f32s_to_bytes(&[4.5]),
+            },
+            Response::Err("boom".into()),
+            Response::Shed {
+                reason: ShedReason::Deadline,
+                msg: "unwinnable".into(),
+            },
+        ];
+        for inner in inners {
+            let frame = encode_with_credit(&inner, Some(hint));
+            assert_eq!(frame[0], 5, "credit envelope is status 5");
+            assert_eq!(frame[1], CREDIT_VER);
+            let (got, got_hint) = decode_with_credit(&frame).unwrap();
+            assert_eq!(got, inner);
+            assert_eq!(got_hint, Some(hint));
+            // The plain v1 decoder must NOT silently misread the
+            // envelope — status 5 is an error to it, which is what
+            // makes credits require explicit opt-in.
+            assert!(Response::decode(&frame).is_err());
+        }
+    }
+
+    #[test]
+    fn credit_envelope_absent_means_byte_identical_frames() {
+        // hint == None is a strict no-op: the exact bytes Response::
+        // encode produces, accepted by both decoders, hint None.
+        let inner = Response::Ok {
+            stages: StageNs::default(),
+            span: None,
+            payload: f32s_to_bytes(&[1.0, 2.0]),
+        };
+        let frame = encode_with_credit(&inner, None);
+        assert_eq!(frame, inner.encode());
+        assert_eq!(frame[0], 0, "still a v1 status-0 frame");
+        let (got, hint) = decode_with_credit(&frame).unwrap();
+        assert_eq!(got, inner);
+        assert_eq!(hint, None);
+    }
+
+    #[test]
+    fn credit_envelope_rejects_truncation_version_and_nesting() {
+        let inner = Response::Err("e".into());
+        let hint = CreditHint {
+            credits: 1,
+            pace_ns: 7,
+        };
+        let frame = encode_with_credit(&inner, Some(hint));
+        // Any cut inside the header or leaving no inner frame fails.
+        for cut in 1..=12 {
+            assert!(decode_with_credit(&frame[..cut]).is_err(), "cut {cut}");
+        }
+        // Unknown envelope version.
+        let mut bad = frame.clone();
+        bad[1] = 9;
+        assert!(decode_with_credit(&bad).is_err());
+        // A nested envelope is rejected, not recursed into.
+        let nested = encode_with_credit(&inner, Some(hint));
+        let mut outer = vec![5u8, CREDIT_VER, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0];
+        outer.extend_from_slice(&nested);
+        assert!(decode_with_credit(&outer).is_err());
     }
 }

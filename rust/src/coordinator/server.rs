@@ -24,6 +24,7 @@ use crate::trace::{SpanRec, Stamp};
 use crate::transport::tcp::{TcpAcceptor, TcpTransport};
 use crate::transport::{Acceptor, MsgTransport, RecvMsg};
 
+use super::conn_track::ConnTracker;
 use super::executor::{ExecError, Executor};
 use super::protocol::{self, f32s_to_bytes, RequestMeta, Response};
 
@@ -88,11 +89,16 @@ pub fn handle_conn(mut t: impl MsgTransport, exec: &Executor) {
             continue;
         }
         let mut span = SpanRec::begin_at(t.recv_boundary().unwrap_or_else(Instant::now));
-        let resp = match request_from_msg(msg) {
-            Err(e) => Response::Err(format!("bad request: {e}")),
+        // With FLAG_CREDITS set, every response — Ok, Shed and Err alike
+        // — carries a backpressure hint for the request's lane (the
+        // status-5 envelope); without it the frame is byte-identical to
+        // v1. A malformed request has no parsed lane to price, so its
+        // Err goes out unwrapped.
+        let (resp, credit_model) = match request_from_msg(msg) {
+            Err(e) => (Response::Err(format!("bad request: {e}")), None),
             Ok((meta, payload)) => {
                 span.mark(Stamp::RecvDone);
-                match exec.infer_deadline(
+                let resp = match exec.infer_deadline(
                     &meta.model,
                     meta.raw,
                     meta.prio,
@@ -114,10 +120,17 @@ pub fn handle_conn(mut t: impl MsgTransport, exec: &Executor) {
                     // a genuine failure.
                     Err(ExecError::Shed { reason, msg }) => Response::Shed { reason, msg },
                     Err(e @ ExecError::Failed(_)) => Response::Err(e.to_string()),
-                }
+                };
+                (resp, meta.credits.then_some(meta.model))
             }
         };
-        if t.send(&resp.encode()).is_err() {
+        let frame = match credit_model {
+            Some(model) => {
+                protocol::encode_with_credit(&resp, Some(exec.credit_hint(&model)))
+            }
+            None => resp.encode(),
+        };
+        if t.send(&frame).is_err() {
             return;
         }
     }
@@ -127,16 +140,22 @@ pub fn handle_conn(mut t: impl MsgTransport, exec: &Executor) {
 pub struct ServeLoop {
     stop: Arc<AtomicBool>,
     accept_thread: Option<std::thread::JoinHandle<()>>,
+    conns: ConnTracker,
 }
 
 impl ServeLoop {
-    /// Request shutdown (existing connections finish their in-flight
-    /// request loop on peer close).
+    /// Stop accepting, then unblock and join the per-connection handler
+    /// threads (their transports are shut down via
+    /// [`crate::transport::MsgTransport::shutdown_hook`], so a handler
+    /// parked in `recv` on an idle client returns promptly). Before the
+    /// tracker existed only the accept thread was joined and `stop()`
+    /// left handlers serving forever.
     pub fn stop(mut self) {
         self.stop.store(true, Ordering::SeqCst);
         if let Some(t) = self.accept_thread.take() {
             let _ = t.join();
         }
+        self.conns.stop_all();
     }
 }
 
@@ -150,12 +169,16 @@ impl ServeLoop {
 pub fn serve_on<A: Acceptor>(mut acceptor: A, exec: Arc<Executor>) -> ServeLoop {
     let stop = Arc::new(AtomicBool::new(false));
     let stop2 = stop.clone();
+    let conns = ConnTracker::new();
+    let conns2 = conns.clone();
     let accept_thread = std::thread::spawn(move || {
         while !stop2.load(Ordering::SeqCst) {
             match acceptor.poll_accept() {
                 Ok(Some(conn)) => {
                     let exec = exec.clone();
-                    std::thread::spawn(move || handle_conn(conn, &exec));
+                    let hook = conn.shutdown_hook();
+                    let handle = std::thread::spawn(move || handle_conn(conn, &exec));
+                    conns2.track(handle, [hook]);
                 }
                 Ok(None) => std::thread::sleep(Duration::from_millis(2)),
                 Err(_) => break,
@@ -165,6 +188,7 @@ pub fn serve_on<A: Acceptor>(mut acceptor: A, exec: Arc<Executor>) -> ServeLoop 
     ServeLoop {
         stop,
         accept_thread: Some(accept_thread),
+        conns,
     }
 }
 

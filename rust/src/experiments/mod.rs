@@ -11,6 +11,7 @@ pub mod mix_sweep;
 pub mod slo_sweep;
 pub mod stage_break;
 pub mod table;
+pub mod throttle_sweep;
 pub mod transport_matrix;
 
 pub use batch_sweep::{run_batch_sweep, SweepCfg};
@@ -18,6 +19,7 @@ pub use mix_sweep::{run_mix_sweep, run_sim_mix, MixCfg};
 pub use slo_sweep::{run_slo_sweep, SloCfg};
 pub use stage_break::{run_sim_stage_break, run_stage_break, StageBreakCfg};
 pub use table::Table;
+pub use throttle_sweep::{run_throttle_sweep, ThrottleCfg};
 pub use transport_matrix::{run_matrix, MatrixCfg};
 
 use std::sync::{Arc, Mutex};
@@ -67,14 +69,17 @@ pub(crate) fn drive_model_clients(
     warmup: usize,
     spans: bool,
 ) -> Result<LiveStats> {
-    drive_model_clients_slo(kind, exec, model, clients, requests, warmup, spans, None)
+    drive_model_clients_slo(kind, exec, model, clients, requests, warmup, spans, None, false)
 }
 
 /// [`drive_model_clients`] plus a per-request SLO budget: every request
 /// carries `FLAG_DEADLINE` with `deadline_us`, and the returned
 /// [`LiveStats::sheds`] counts admission-control rejections (which are
 /// not client errors — the closed loops keep offering load). Used by
-/// `slosweep` to push the executor into overload.
+/// `slosweep` to push the executor into overload and by `throttlesweep`
+/// to additionally opt the clients into credit pacing (`credits`:
+/// requests carry `FLAG_CREDITS` and each client paces on the server's
+/// hints).
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn drive_model_clients_slo(
     kind: TransportKind,
@@ -85,6 +90,7 @@ pub(crate) fn drive_model_clients_slo(
     warmup: usize,
     spans: bool,
     deadline_us: Option<u64>,
+    credits: bool,
 ) -> Result<LiveStats> {
     let payload_elems = gen::IN_H * gen::IN_W * gen::CHANNELS;
     // Request frame = 4-byte header + model name + f32 payload; sized
@@ -114,6 +120,7 @@ pub(crate) fn drive_model_clients_slo(
         payload_elems,
         warmup,
         deadline_us,
+        credits,
         timeout: None,
     };
     let stats = run_on(
@@ -132,10 +139,15 @@ pub(crate) fn drive_model_clients_slo(
         th.join()
             .map_err(|_| anyhow!("experiment server thread panicked"))?;
     }
-    if stats.errors > 0 {
-        // A cell with failed clients has holes in its series; 0.0
-        // quantiles would masquerade as measurements.
-        anyhow::bail!("{} client(s) failed", stats.errors);
+    if stats.errors > 0 || stats.req_errors > 0 {
+        // A cell with failed clients or per-request server errors has
+        // holes in its series; 0.0 quantiles would masquerade as
+        // measurements.
+        anyhow::bail!(
+            "{} client(s) failed, {} request error(s)",
+            stats.errors,
+            stats.req_errors
+        );
     }
     Ok(stats)
 }

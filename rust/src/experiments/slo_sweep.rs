@@ -84,8 +84,9 @@ impl Default for SloCfg {
 /// executor, in µs — the unit the load factors and the auto deadline
 /// are expressed in. The calibration requests also prime the lane's
 /// service-time counters, so admission control has an estimate from the
-/// first loaded request onward.
-fn calibrate_svc_us(exec: &Executor, model: &str, payload_elems: usize) -> Result<u64> {
+/// first loaded request onward. Shared with `throttlesweep`, which uses
+/// the same load geometry.
+pub(crate) fn calibrate_svc_us(exec: &Executor, model: &str, payload_elems: usize) -> Result<u64> {
     let reps = 5usize;
     let mut total_us = 0u64;
     for _ in 0..reps {
@@ -185,6 +186,7 @@ fn run_cell(
         cfg.warmup,
         false,
         Some(deadline_us),
+        false,
     )
     .with_context(|| format!("cell {} {factor}x", kind.name()))?;
 

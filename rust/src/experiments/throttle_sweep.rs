@@ -1,0 +1,264 @@
+//! Live-plane backpressure sweep: **credits off vs on** per transport ×
+//! offered-load factor (`accelserve throttlesweep`) — the repo's
+//! client-throttling experiment.
+//!
+//! `slosweep` showed what admission control buys once overload has
+//! already arrived at the server: unwinnable requests fail in one RTT
+//! instead of rotting in a queue. But every shed still costs a wire
+//! round-trip and a submit-edge evaluation — the server is paying to
+//! say no. This sweep measures the next step: the credit/pacing hints
+//! the server piggybacks on every response when the client opts in
+//! (`FLAG_CREDITS`, the status-5 envelope), which move the waiting to
+//! the *client* so overload never reaches the submit edge at all.
+//!
+//! Each factor runs twice under identical geometry — closed-loop
+//! clients with a tight (2× solo service time) SLO deadline — once with
+//! credits off (pure admission control, the `slosweep` condition) and
+//! once with each client pacing on the server's hints. Reading the
+//! table: at overload (`4x` and up) `shed_pct` should collapse in the
+//! `on` rows while `good_rps` holds — the same requests get served, the
+//! refusals just stop being manufactured. Every cell keeps the
+//! three-way shed-accounting cross-check (wire status vs lane counters
+//! vs client tally) from `slosweep`.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::{
+    fetch_stats, handle_conn, BatchCfg, Executor, SchedCfg, DEFAULT_QUEUE_CAP,
+};
+use crate::models::gen;
+use crate::models::manifest::Manifest;
+use crate::transport::{connected_pair, TransportKind};
+
+use super::slo_sweep::calibrate_svc_us;
+use super::{drain_executor, drive_model_clients_slo, Table};
+
+/// Throttle-sweep configuration (same load geometry as
+/// [`super::SloCfg`]; each factor is run once per credits mode).
+#[derive(Debug, Clone)]
+pub struct ThrottleCfg {
+    /// Served model (must have artifacts in the manifest).
+    pub model: String,
+    /// Offered-load multiples of service capacity; each factor yields
+    /// two rows per transport — credits `off` and `on`.
+    pub factors: Vec<f64>,
+    /// Measured requests per client.
+    pub requests: usize,
+    /// Discarded leading requests per client.
+    pub warmup: usize,
+    /// Execution streams (1 by default so overload is easy to reach).
+    pub streams: usize,
+    /// Per-request SLO budget in µs. `None` auto-calibrates to
+    /// 2× the measured solo service time (floored at 200µs).
+    pub deadline_us: Option<u64>,
+    /// Per-lane queue bound ([`SchedCfg::queue_cap`]).
+    pub queue_cap: usize,
+    pub transports: Vec<TransportKind>,
+    /// Artifact directory; `None` generates into a per-process temp dir.
+    pub artifacts_dir: Option<PathBuf>,
+}
+
+impl Default for ThrottleCfg {
+    fn default() -> ThrottleCfg {
+        ThrottleCfg {
+            model: "tiny_mobilenet".to_string(),
+            factors: vec![2.0, 4.0, 8.0],
+            requests: 30,
+            warmup: 3,
+            streams: 1,
+            deadline_us: None,
+            queue_cap: DEFAULT_QUEUE_CAP,
+            transports: vec![TransportKind::Tcp],
+            artifacts_dir: None,
+        }
+    }
+}
+
+/// Run the sweep: per transport × factor × credits mode, a fresh
+/// executor (clean counters), a calibration pass, then `ceil(factor ×
+/// streams)` closed-loop deadline-carrying clients — paced by server
+/// hints in the `on` rows.
+pub fn run_throttle_sweep(cfg: &ThrottleCfg) -> Result<Table> {
+    let dir: PathBuf = match &cfg.artifacts_dir {
+        Some(d) => d.clone(),
+        None => gen::ensure_test_artifacts().to_path_buf(),
+    };
+    gen::ensure_artifacts(&dir)?;
+    let manifest = Manifest::load(&dir)?;
+    let warm: Vec<String> = manifest
+        .batch_sizes(&cfg.model)
+        .into_iter()
+        .map(|b| format!("{}_b{b}", cfg.model))
+        .collect();
+    if warm.is_empty() {
+        anyhow::bail!(
+            "model {} has no artifacts under {} — nothing to sweep",
+            cfg.model,
+            dir.display()
+        );
+    }
+    let warm_refs: Vec<&str> = warm.iter().map(String::as_str).collect();
+    let payload_elems = gen::IN_H * gen::IN_W * gen::CHANNELS;
+
+    let mut t = Table::new(
+        format!(
+            "throttle sweep — {} credits off vs on, {} stream(s), {} requests/client",
+            cfg.model, cfg.streams, cfg.requests
+        ),
+        &["clients", "slo_ms", "p50_ms", "p99_ms", "good_rps", "shed_pct"],
+    );
+    for &kind in &cfg.transports {
+        for &factor in &cfg.factors {
+            for credits in [false, true] {
+                let sched = SchedCfg {
+                    // Batching off, as in slosweep: "offered load ×"
+                    // means exactly that many service times per second.
+                    default: BatchCfg::none(),
+                    per_model: Vec::new(),
+                    queue_cap: cfg.queue_cap,
+                };
+                let exec = Arc::new(
+                    Executor::start_with(&dir, cfg.streams, sched, &warm_refs).with_context(
+                        || format!("throttlesweep executor over {}", dir.display()),
+                    )?,
+                );
+                let cell = run_cell(kind, &exec, cfg, factor, credits, payload_elems, &mut t);
+                if !drain_executor(exec) && cell.is_ok() {
+                    anyhow::bail!("throttlesweep still holds executor clones");
+                }
+                cell?;
+            }
+        }
+    }
+    t.note("each factor runs twice under identical geometry: `off` = admission control only (the slosweep condition), `on` = clients pace on the server's credit hints (FLAG_CREDITS)");
+    t.note("shed_pct collapsing in the `on` rows while good_rps holds is the point: the waiting moved to the client, so the server stops paying round-trips to say no");
+    t.note("every cell cross-checks client-side shed tallies against the executor's per-lane shed counters fetched via the stats opcode");
+    Ok(t)
+}
+
+/// One cell: calibrate, overload (paced or not), verify the three shed
+/// views agree, append the row.
+fn run_cell(
+    kind: TransportKind,
+    exec: &Arc<Executor>,
+    cfg: &ThrottleCfg,
+    factor: f64,
+    credits: bool,
+    payload_elems: usize,
+    t: &mut Table,
+) -> Result<()> {
+    let svc_us = calibrate_svc_us(exec, &cfg.model, payload_elems)?;
+    let deadline_us = cfg.deadline_us.unwrap_or_else(|| (2 * svc_us).max(200));
+    let clients = ((factor * cfg.streams as f64).ceil() as usize).max(1);
+    let mode = if credits { "on" } else { "off" };
+    let stats = drive_model_clients_slo(
+        kind,
+        exec,
+        &cfg.model,
+        clients,
+        cfg.requests,
+        cfg.warmup,
+        false,
+        Some(deadline_us),
+        credits,
+    )
+    .with_context(|| format!("cell {} {factor}x {mode}", kind.name()))?;
+
+    // Same three-way cross-check as slosweep: wire stats == in-process
+    // snapshot, lane shed counters == client-side tally. Settle first.
+    let local = {
+        let mut prev = exec.stats();
+        loop {
+            std::thread::sleep(std::time::Duration::from_millis(10));
+            let next = exec.stats();
+            if next == prev {
+                break next;
+            }
+            prev = next;
+        }
+    };
+    let wire = {
+        let (mut client, server) = connected_pair(kind, 4096)?;
+        let e2 = exec.clone();
+        let th = std::thread::spawn(move || handle_conn(server, &e2));
+        let wire = fetch_stats(client.as_mut());
+        drop(client);
+        th.join()
+            .map_err(|_| anyhow::anyhow!("stats server thread panicked"))?;
+        wire?
+    };
+    if wire != local {
+        anyhow::bail!(
+            "stats opcode disagrees with the in-process snapshot:\nwire  {wire:?}\nlocal {local:?}"
+        );
+    }
+    let lane_sheds: u64 = wire.lanes.iter().map(|l| l.shed.iter().sum::<u64>()).sum();
+    if lane_sheds != stats.sheds as u64 {
+        anyhow::bail!(
+            "shed accounting mismatch: lanes counted {lane_sheds}, clients saw {}",
+            stats.sheds
+        );
+    }
+
+    let lat = stats.all.total.summary();
+    let offered = stats.sheds + stats.served;
+    let shed_pct = 100.0 * stats.sheds as f64 / (offered.max(1)) as f64;
+    t.row(
+        format!("{} {factor}x {mode}", kind.name()),
+        vec![
+            clients as f64,
+            deadline_us as f64 / 1_000.0,
+            lat.p50,
+            lat.p99,
+            stats.throughput_rps,
+            shed_pct,
+        ],
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn credits_cut_sheds_at_overload_without_losing_goodput() {
+        // Smoke: one 4× factor over TCP, credits off vs on. Off is the
+        // slosweep condition — four closed loops against one stream
+        // under a 2×-svc SLO must shed (admission wait = est × (ahead +
+        // 1) exceeds the deadline as soon as anyone is ahead). On, each
+        // client paces on the hints, so depth stays near the stream
+        // count and most requests that would have been refused are
+        // simply sent later — strictly fewer sheds. Goodput holds
+        // because the server was saturated either way; the tolerance
+        // absorbs CI-runner jitter.
+        let cfg = ThrottleCfg {
+            factors: vec![4.0],
+            requests: 25,
+            warmup: 3,
+            transports: vec![TransportKind::Tcp],
+            ..ThrottleCfg::default()
+        };
+        let t = run_throttle_sweep(&cfg).unwrap();
+        assert_eq!(t.rows.len(), 2);
+        let shed_off = t.get("tcp 4x off", "shed_pct").unwrap();
+        let shed_on = t.get("tcp 4x on", "shed_pct").unwrap();
+        assert!(
+            shed_off > 0.0,
+            "4x offered load without pacing must shed something"
+        );
+        assert!(
+            shed_on < shed_off,
+            "credit pacing must strictly cut sheds: on {shed_on}% vs off {shed_off}%"
+        );
+        let good_off = t.get("tcp 4x off", "good_rps").unwrap();
+        let good_on = t.get("tcp 4x on", "good_rps").unwrap();
+        assert!(
+            good_on >= good_off * 0.7,
+            "pacing should not cost goodput: on {good_on} rps vs off {good_off} rps"
+        );
+    }
+}

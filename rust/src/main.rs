@@ -6,13 +6,14 @@
 //!                    --model-batch tiny_resnet=8@2000            # per-model lane override
 //! accelserve gateway --addr 0.0.0.0:7008 --upstream host:7007    # live proxy
 //! accelserve client  --addr host:7007 --model tiny_resnet -n 100 -c 4 \
-//!                    --deadline-us 5000 --timeout-ms 2000         # SLO + hang guard
+//!                    --deadline-us 5000 --timeout-ms 2000 --credits # SLO + hang guard + pacing
 //! accelserve stats   --addr host:7007                            # per-lane executor counters
 //! accelserve matrix  --payload-kb 1024 --requests 160            # live transport matrix
 //! accelserve batchsweep --clients 8 --policies 1,8,8@2000        # transport x batch policy
 //! accelserve mixsweep --models tiny_mobilenet,tiny_resnet        # transport x model mix
 //! accelserve stagebreak --policies 1,8@2000 [--pct 99] [--sim]   # per-stage span breakdown
 //! accelserve slosweep --factors 1,2,4,8 [--deadline-us 5000]     # overload x SLO shedding
+//! accelserve throttlesweep --factors 2,4,8                       # credit backpressure off vs on
 //! accelserve sim     --model ResNet50 --transport gdr -c 16 -n 300
 //! accelserve fig     --which 5 [--requests 300] [--csv]          # regen a figure
 //! accelserve tables  --which 2|3                                 # paper tables
@@ -44,6 +45,7 @@ fn main() {
         Some("mixsweep") => cmd_mixsweep(&args[1..]),
         Some("stagebreak") => cmd_stagebreak(&args[1..]),
         Some("slosweep") => cmd_slosweep(&args[1..]),
+        Some("throttlesweep") => cmd_throttlesweep(&args[1..]),
         Some("sim") => cmd_sim(&args[1..]),
         Some("fig") => cmd_fig(&args[1..]),
         Some("tables") => cmd_tables(&args[1..]),
@@ -56,7 +58,7 @@ fn main() {
 }
 
 const HELP: &str = "accelserve — model serving with hardware-accelerated communication
-subcommands: gen-artifacts | serve | gateway | client | stats | matrix | batchsweep | mixsweep | stagebreak | slosweep | sim | fig | tables (see README.md and docs/EXPERIMENTS.md)";
+subcommands: gen-artifacts | serve | gateway | client | stats | matrix | batchsweep | mixsweep | stagebreak | slosweep | throttlesweep | sim | fig | tables (see README.md and docs/EXPERIMENTS.md)";
 
 /// Generate the serving artifacts (HLO text + manifest.json) offline —
 /// no Python/JAX required (the rust twin of `make artifacts`).
@@ -654,6 +656,68 @@ fn cmd_slosweep(a: &[String]) -> i32 {
     0
 }
 
+/// Credit-backpressure sweep: each overload factor run with credits off
+/// (admission control only) and on (clients pace on the server's
+/// credit hints), reporting the shed and goodput delta per transport
+/// (`accelserve throttlesweep`).
+fn cmd_throttlesweep(a: &[String]) -> i32 {
+    let mut cfg = accelserve::experiments::ThrottleCfg::default();
+    if let Some(m) = flag(a, "--model") {
+        cfg.model = m.to_string();
+    }
+    if let Some(list) = flag(a, "--factors") {
+        let mut factors = Vec::new();
+        for spec in list.split(',') {
+            match spec.parse::<f64>() {
+                Ok(f) if f > 0.0 => factors.push(f),
+                _ => {
+                    eprintln!("bad --factors entry {spec:?} (want positive numbers like 2,4,8)");
+                    return 2;
+                }
+            }
+        }
+        cfg.factors = factors;
+    }
+    if let Some(n) = flag(a, "--requests").and_then(|v| v.parse::<usize>().ok()) {
+        cfg.requests = n.max(1);
+        cfg.warmup = (n / 10).max(2);
+    }
+    if let Some(n) = flag(a, "--streams").and_then(|v| v.parse::<usize>().ok()) {
+        cfg.streams = n.max(1);
+    }
+    if let Some(us) = flag(a, "--deadline-us").and_then(|v| v.parse::<u64>().ok()) {
+        cfg.deadline_us = Some(us.max(1));
+    }
+    if let Some(n) = flag(a, "--queue-cap").and_then(|v| v.parse::<usize>().ok()) {
+        cfg.queue_cap = n.max(1);
+    }
+    if let Some(dir) = flag(a, "--artifacts") {
+        cfg.artifacts_dir = Some(dir.into());
+    }
+    if let Some(list) = flag(a, "--transports") {
+        match parse_transports(list) {
+            Ok(kinds) => cfg.transports = kinds,
+            Err(e) => {
+                eprintln!("{e}");
+                return 2;
+            }
+        }
+    }
+    let t = match accelserve::experiments::run_throttle_sweep(&cfg) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("throttlesweep: {e:#}");
+            return 1;
+        }
+    };
+    if a.iter().any(|x| x == "--csv") {
+        print!("{}", t.to_csv());
+    } else {
+        print!("{}", t.render());
+    }
+    0
+}
+
 /// Query a running server's executor counters over the stats opcode
 /// (`accelserve stats`): per-lane jobs / calls / mean service time /
 /// queue depth / sealed reasons / shed reasons plus the cross-model
@@ -853,6 +917,7 @@ fn cmd_client(a: &[String]) -> i32 {
         payload_elems: if raw { 64 * 64 * 3 } else { 32 * 32 * 3 },
         warmup: (n / 20).max(1),
         deadline_us: flag(a, "--deadline-us").and_then(|v| v.parse::<u64>().ok()),
+        credits: a.iter().any(|x| x == "--credits"),
         timeout: flag(a, "--timeout-ms")
             .and_then(|v| v.parse::<u64>().ok())
             .map(std::time::Duration::from_millis),
@@ -869,8 +934,13 @@ fn cmd_client(a: &[String]) -> i32 {
                 s.all.infer.mean(),
                 s.all.preproc.mean(),
                 s.all.request.mean() + s.all.response.mean(),
-                if s.sheds > 0 {
-                    format!("  shed={} of {}", s.sheds, s.sheds + s.served)
+                if s.sheds > 0 || s.req_errors > 0 {
+                    format!(
+                        "  shed={} of {}  req_errors={}",
+                        s.sheds,
+                        s.sheds + s.served,
+                        s.req_errors
+                    )
                 } else {
                     String::new()
                 },

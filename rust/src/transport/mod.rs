@@ -89,6 +89,16 @@ pub trait MsgTransport: Send {
     }
     /// Mechanism name for metrics/labels.
     fn kind(&self) -> &'static str;
+    /// A handle that, invoked from another thread, unblocks anyone
+    /// parked in [`MsgTransport::recv`] on this transport by closing
+    /// it (subsequent operations error). `None` when the transport
+    /// cannot be interrupted cross-thread — a server `stop()` then
+    /// leaves that connection's handler to exit on peer close. Used by
+    /// `coordinator::{ServeLoop, GatewayLoop}` so stopping a server
+    /// actually stops its per-connection threads.
+    fn shutdown_hook(&self) -> Option<Box<dyn FnOnce() + Send>> {
+        None
+    }
 }
 
 impl<T: MsgTransport + ?Sized> MsgTransport for Box<T> {
@@ -110,6 +120,10 @@ impl<T: MsgTransport + ?Sized> MsgTransport for Box<T> {
 
     fn kind(&self) -> &'static str {
         (**self).kind()
+    }
+
+    fn shutdown_hook(&self) -> Option<Box<dyn FnOnce() + Send>> {
+        (**self).shutdown_hook()
     }
 }
 

@@ -112,6 +112,15 @@ impl MsgTransport for TcpTransport {
     fn kind(&self) -> &'static str {
         "tcp"
     }
+
+    fn shutdown_hook(&self) -> Option<Box<dyn FnOnce() + Send>> {
+        // A cloned handle shares the underlying socket, so shutting it
+        // down errors out a concurrent blocking `read_exact` in `recv`.
+        let stream = self.stream.try_clone().ok()?;
+        Some(Box::new(move || {
+            let _ = stream.shutdown(std::net::Shutdown::Both);
+        }))
+    }
 }
 
 /// Non-blocking accept wrapper plugging a `TcpListener` into the
@@ -177,6 +186,24 @@ mod tests {
             assert_eq!(back, want, "size {size}");
         }
         server.join().unwrap();
+    }
+
+    #[test]
+    fn shutdown_hook_unblocks_parked_recv() {
+        let listener = TcpTransport::listen("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let mut client = TcpTransport::connect(addr).unwrap();
+        let (s, _) = listener.accept().unwrap();
+        let mut srv = TcpTransport::from_stream(s);
+        let hook = srv.shutdown_hook().expect("tcp is interruptible");
+        let reader = thread::spawn(move || srv.recv());
+        // Let the reader park in read_exact before firing the hook.
+        thread::sleep(Duration::from_millis(50));
+        hook();
+        let res = reader.join().unwrap();
+        assert!(res.is_err(), "shutdown must error the parked recv");
+        // The shutdown is visible to the peer as a close, not a hang.
+        assert!(client.recv().is_err());
     }
 
     #[test]

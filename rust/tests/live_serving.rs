@@ -38,6 +38,7 @@ fn load(model: &str, raw: bool, clients: usize, reqs: usize) -> LoadCfg {
         payload_elems: if raw { 64 * 64 * 3 } else { 32 * 32 * 3 },
         warmup: 2,
         deadline_us: None,
+        credits: false,
         timeout: None,
     }
 }
@@ -101,6 +102,7 @@ fn rdma_verbs_transport_serves() {
         spans: false,
         prio: 0,
         deadline_us: None,
+        credits: false,
         payload: protocol::f32s_to_bytes(&vec![0.25; 32 * 32 * 3]),
     };
     for _ in 0..5 {
@@ -133,6 +135,7 @@ fn gdr_raw_pipeline_zero_copy_serves() {
         spans: false,
         prio: 0,
         deadline_us: None,
+        credits: false,
         payload: frame,
     };
 
@@ -194,6 +197,7 @@ fn all_transports_same_numerics() {
         spans: false,
         prio: 0,
         deadline_us: None,
+        credits: false,
         payload: protocol::f32s_to_bytes(&input),
     };
 
@@ -291,6 +295,7 @@ fn server_reports_errors_gracefully() {
         spans: false,
         prio: 0,
         deadline_us: None,
+        credits: false,
         payload: protocol::f32s_to_bytes(&[0.0; 4]),
     };
     t.send(&bad.encode()).unwrap();

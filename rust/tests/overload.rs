@@ -14,12 +14,15 @@
 //! Artifacts are generated on demand (`models::gen`); nothing skips.
 
 use std::net::TcpListener;
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use accelserve::coordinator::{
-    gateway_tcp, protocol, run_tcp, BatchCfg, ExecError, Executor, LoadCfg, ShedReason,
+    gateway_tcp, protocol, run_on, run_tcp, serve_tcp, BatchCfg, ExecError, Executor, LoadCfg,
+    ShedReason,
 };
 use accelserve::runtime::TensorBuf;
+use accelserve::transport::shm::shm_pair;
 use accelserve::transport::tcp::TcpTransport;
 use accelserve::transport::MsgTransport;
 
@@ -32,9 +35,58 @@ fn infer_frame() -> Vec<u8> {
         spans: false,
         prio: 0,
         deadline_us: None,
+        credits: false,
         payload: protocol::f32s_to_bytes(&vec![0.5f32; ELEMS]),
     }
     .encode()
+}
+
+/// A minimal v1 status-0 frame: three stage words and a one-float
+/// payload — all a hand-driven server needs to answer a closed loop.
+fn ok_frame() -> Vec<u8> {
+    let mut f = vec![0u8];
+    for ns in [1u64, 0, 1] {
+        f.extend_from_slice(&ns.to_le_bytes());
+    }
+    f.extend_from_slice(&protocol::f32s_to_bytes(&[0.0]));
+    f
+}
+
+/// LoadCfg for the hand-driven-server tests: one client, no warmup,
+/// tiny payloads.
+fn tiny_cfg(requests: usize) -> LoadCfg {
+    LoadCfg {
+        model: "m".into(),
+        raw: false,
+        spans: false,
+        n_clients: 1,
+        requests_per_client: requests,
+        priority_client: false,
+        payload_elems: 8,
+        warmup: 0,
+        deadline_us: None,
+        credits: false,
+        timeout: None,
+    }
+}
+
+/// Reclaim the last executor reference after a server stop and shut it
+/// down; bounded so a leaked handler thread fails the test instead of
+/// hanging it.
+fn reclaim_and_shutdown(mut exec: Arc<Executor>) {
+    for _ in 0..500 {
+        match Arc::try_unwrap(exec) {
+            Ok(e) => {
+                e.shutdown();
+                return;
+            }
+            Err(still) => {
+                exec = still;
+                std::thread::sleep(Duration::from_millis(10));
+            }
+        }
+    }
+    panic!("a connection handler still holds the executor after stop()");
 }
 
 /// An address that refuses connections: bind an ephemeral listener,
@@ -134,6 +186,7 @@ fn client_timeout_unwedges_stalled_server() {
         payload_elems: ELEMS,
         warmup: 0,
         deadline_us: None,
+        credits: false,
         timeout: Some(Duration::from_millis(200)),
     };
     let t0 = Instant::now();
@@ -199,4 +252,228 @@ fn unwinnable_deadline_is_shed_winnable_is_served() {
     assert_eq!(lane.shed[ShedReason::QueueFull as usize], 0);
     assert_eq!(lane.jobs, 4, "3 primers + 1 admitted");
     exec.shutdown();
+}
+
+#[test]
+fn client_partial_tallies_survive_mid_run_failure() {
+    // The regression this pins: a client that died on request k used to
+    // discard its k−1 completed requests from the aggregate, so client
+    // totals could never reconcile with the server's lane counters when
+    // anything failed. A hand-driven server answers two requests and
+    // drops the connection with three still to come.
+    let (cli, mut srv) = shm_pair(8);
+    let server = std::thread::spawn(move || {
+        for _ in 0..2 {
+            srv.recv().unwrap();
+            srv.send(&ok_frame()).unwrap();
+        }
+    });
+    let slot = Mutex::new(Some(cli));
+    let stats = run_on(
+        |_| {
+            slot.lock()
+                .unwrap()
+                .take()
+                .ok_or_else(|| anyhow::anyhow!("endpoint already taken"))
+        },
+        &tiny_cfg(5),
+    )
+    .unwrap();
+    server.join().unwrap();
+    assert_eq!(stats.errors, 1, "the dead connection is still a client failure");
+    assert_eq!(stats.served, 2, "the two completed requests must be kept");
+    assert_eq!(stats.all.n(), 2, "their latency records must be kept too");
+    assert_eq!(stats.req_errors, 0);
+    assert_eq!(stats.sheds, 0);
+}
+
+#[test]
+fn per_request_err_is_tallied_not_fatal() {
+    // A per-request server Err frame is one failed request, not a dead
+    // client: the loop must tally it and keep offering the rest.
+    let (cli, mut srv) = shm_pair(8);
+    let server = std::thread::spawn(move || {
+        srv.recv().unwrap();
+        srv.send(&protocol::Response::Err("transient failure".into()).encode())
+            .unwrap();
+        for _ in 0..2 {
+            srv.recv().unwrap();
+            srv.send(&ok_frame()).unwrap();
+        }
+    });
+    let slot = Mutex::new(Some(cli));
+    let stats = run_on(
+        |_| {
+            slot.lock()
+                .unwrap()
+                .take()
+                .ok_or_else(|| anyhow::anyhow!("endpoint already taken"))
+        },
+        &tiny_cfg(3),
+    )
+    .unwrap();
+    server.join().unwrap();
+    assert_eq!(stats.errors, 0, "the client finished its loop");
+    assert_eq!(stats.req_errors, 1);
+    assert_eq!(stats.served, 2, "the requests after the Err were still offered");
+}
+
+#[test]
+fn serveloop_stop_joins_idle_connection_handlers() {
+    // The regression this pins: ServeLoop::stop joined only the accept
+    // thread, leaving every per-connection handler parked in recv() on
+    // its idle client forever — stop() did not actually stop serving.
+    // Now the tracker shuts the connection transports down and joins.
+    let dir = accelserve::models::gen::ensure_test_artifacts();
+    let exec = Arc::new(
+        Executor::start(dir, 1, BatchCfg::none(), &["tiny_mobilenet_b1"]).unwrap(),
+    );
+    let srv = serve_tcp("127.0.0.1:0", exec.clone()).unwrap();
+    let mut cli = TcpTransport::connect(srv.addr).unwrap();
+    cli.send(&infer_frame()).unwrap();
+    assert_eq!(cli.recv().unwrap()[0], 0);
+    // The client now sits idle; its handler thread is parked in recv.
+    let t0 = Instant::now();
+    srv.stop();
+    assert!(
+        t0.elapsed() < Duration::from_secs(5),
+        "stop() hung on an idle connection: {:?}",
+        t0.elapsed()
+    );
+    // With the handler joined, ours is the last executor reference —
+    // reclaimable, where before the fix the handler's clone leaked.
+    reclaim_and_shutdown(exec);
+    // And the connection was actually shut down, not abandoned.
+    assert!(cli.recv().is_err(), "the server side must be closed");
+}
+
+#[test]
+fn gatewayloop_stop_joins_idle_relay_threads() {
+    // Same leak on the gateway side: an idle client's relay thread used
+    // to survive stop() parked in recv. The dummy upstream accepts the
+    // dealer connection and reads until the gateway shuts it down.
+    let upstream = TcpListener::bind("127.0.0.1:0").unwrap();
+    let up_addr = upstream.local_addr().unwrap();
+    let hold = std::thread::spawn(move || {
+        let (mut s, _) = upstream.accept().unwrap();
+        use std::io::Read;
+        let mut buf = [0u8; 64];
+        while matches!(s.read(&mut buf), Ok(n) if n > 0) {}
+    });
+    let gw = gateway_tcp("127.0.0.1:0", up_addr).unwrap();
+    let _cli = TcpTransport::connect(gw.addr).unwrap();
+    // Let the relay spawn and park in recv on the idle client.
+    std::thread::sleep(Duration::from_millis(100));
+    let t0 = Instant::now();
+    gw.stop();
+    assert!(
+        t0.elapsed() < Duration::from_secs(5),
+        "stop() hung on an idle relay: {:?}",
+        t0.elapsed()
+    );
+    hold.join().unwrap();
+}
+
+#[test]
+fn credit_hint_tracks_shed_pressure() {
+    // The server side of the credit loop: an idle primed lane grants
+    // credits with no pacing; a shed since the last hint revokes them
+    // (zero credits, hard backoff pace); once the pressure has been
+    // reported, the next hint grants again.
+    let dir = accelserve::models::gen::ensure_test_artifacts();
+    let exec = Executor::start(dir, 1, BatchCfg::none(), &["tiny_mobilenet_b1"]).unwrap();
+    for _ in 0..3 {
+        exec.infer_sync("tiny_mobilenet", false, 0, TensorBuf::F32(vec![0.5; ELEMS]))
+            .unwrap();
+    }
+    let hint = exec.credit_hint("tiny_mobilenet");
+    assert!(hint.credits > 0, "idle lane must grant: {hint:?}");
+    assert_eq!(hint.pace_ns, 0, "idle lane needs no pacing: {hint:?}");
+    // Force a deadline shed; the next hint must revoke.
+    exec.infer_deadline(
+        "tiny_mobilenet",
+        false,
+        0,
+        TensorBuf::F32(vec![0.5; ELEMS]),
+        Some(1),
+        accelserve::trace::SpanRec::begin(),
+    )
+    .expect_err("a 1µs budget must be shed");
+    let hint = exec.credit_hint("tiny_mobilenet");
+    assert_eq!(hint.credits, 0, "shed pressure must revoke credits: {hint:?}");
+    assert!(hint.pace_ns > 0, "shed pressure must impose backoff: {hint:?}");
+    // Pressure acknowledged exactly once.
+    let hint = exec.credit_hint("tiny_mobilenet");
+    assert!(hint.credits > 0, "grant must return once reported: {hint:?}");
+    exec.shutdown();
+}
+
+#[test]
+fn credit_pacing_cuts_sheds_over_live_tcp_server() {
+    // The tentpole end to end, against the real TCP accept loop: the
+    // same 4×-overload closed-loop run with a tight SLO, once with
+    // credits off (admission control refuses the excess, one shed per
+    // refusal) and once with the clients pacing on the server's hints
+    // (the excess is never offered early enough to be refused). Every
+    // offered request must be accounted served-or-shed in both runs.
+    let dir = accelserve::models::gen::ensure_test_artifacts();
+    let mut sheds = Vec::new();
+    let mut served = Vec::new();
+    for credits in [false, true] {
+        let exec = Arc::new(
+            Executor::start(dir, 1, BatchCfg::none(), &["tiny_mobilenet_b1"]).unwrap(),
+        );
+        // Prime the service-time history and calibrate the SLO to 2×
+        // the solo service time, as slosweep does.
+        let mut svc_us = 0u64;
+        for _ in 0..3 {
+            let t0 = Instant::now();
+            exec.infer_sync("tiny_mobilenet", false, 0, TensorBuf::F32(vec![0.5; ELEMS]))
+                .unwrap();
+            svc_us += t0.elapsed().as_micros() as u64;
+        }
+        let deadline_us = (2 * svc_us / 3).max(200);
+        let srv = serve_tcp("127.0.0.1:0", exec.clone()).unwrap();
+        let cfg = LoadCfg {
+            model: "tiny_mobilenet".into(),
+            raw: false,
+            spans: false,
+            n_clients: 4,
+            requests_per_client: 20,
+            priority_client: false,
+            payload_elems: ELEMS,
+            warmup: 0,
+            deadline_us: Some(deadline_us),
+            credits,
+            timeout: None,
+        };
+        let stats = run_tcp(srv.addr, &cfg).unwrap();
+        srv.stop();
+        reclaim_and_shutdown(exec);
+        assert_eq!(stats.errors, 0);
+        assert_eq!(stats.req_errors, 0);
+        assert_eq!(
+            stats.served + stats.sheds,
+            4 * 20,
+            "every offered request must be accounted served-or-shed (credits={credits})"
+        );
+        sheds.push(stats.sheds);
+        served.push(stats.served);
+    }
+    assert!(
+        sheds[0] > 0,
+        "4x closed-loop load under a 2x-svc SLO must shed without pacing"
+    );
+    assert!(
+        sheds[1] < sheds[0],
+        "credit pacing must strictly cut sheds: on {} vs off {}",
+        sheds[1],
+        sheds[0]
+    );
+    assert!(
+        served[1] >= served[0],
+        "pacing must not cost served requests: on {} vs off {}",
+        served[1],
+        served[0]
+    );
 }

@@ -41,6 +41,7 @@ fn infer_request(spans: bool, raw: bool) -> protocol::Request {
         spans,
         prio: 0,
         deadline_us: None,
+        credits: false,
         payload: if raw {
             accelserve::models::zoo::WorkloadData::image(64 * 64 * 3, 9).bytes
         } else {
@@ -270,6 +271,55 @@ fn deadline_flag_roundtrips_and_sheds_over_live_server() {
     );
     assert_eq!(lane.jobs, 4, "3 primers + 1 admitted; the shed never ran");
     assert!(lane.svc_ns > 0, "service-time history accumulated");
+    drop(cli);
+    h.join().unwrap();
+}
+
+#[test]
+fn credits_flag_roundtrips_over_live_server_and_off_stays_v1_identical() {
+    // The tentpole's wire contract, end to end: a request without
+    // FLAG_CREDITS gets back the exact v1 status-0 frame (no envelope,
+    // no extra bytes); one with the flag gets the status-5 credit
+    // envelope wrapping the same inner response, with a sane hint for
+    // an idle lane. A v1-style unwrapped frame fed to the
+    // credit-aware decoder yields no hint (v1 server compatibility),
+    // and the envelope is invisible to a decoder that does not speak
+    // it only in the sense that it errors loudly — never misparses.
+    let exec = start_exec(1, BatchCfg::none());
+    let (mut cli, srv) = shm_pair(4);
+    let e2 = exec.clone();
+    let h = std::thread::spawn(move || handle_conn(srv, &e2));
+
+    // Flag off: byte-identical v1 framing.
+    cli.send(&infer_request(false, false).encode()).unwrap();
+    let plain = cli.recv().unwrap();
+    assert_eq!(plain[0], 0, "credit-less request must get a v1 frame");
+    assert_eq!(plain.len(), 25 + 4 * 1000);
+    let (resp, hint) = protocol::decode_with_credit(&plain).unwrap();
+    assert_eq!(hint, None, "an unwrapped frame carries no hint");
+    assert!(matches!(resp, protocol::Response::Ok { .. }));
+
+    // Flag on: the same response arrives inside a credit envelope.
+    let mut req = infer_request(false, false);
+    req.credits = true;
+    cli.send(&req.encode()).unwrap();
+    let framed = cli.recv().unwrap();
+    assert_eq!(framed[0], 5, "credit request must get a status-5 envelope");
+    assert!(
+        protocol::Response::decode(&framed).is_err(),
+        "a credit-blind decoder must reject the envelope, not misparse it"
+    );
+    let (resp, hint) = protocol::decode_with_credit(&framed).unwrap();
+    match resp {
+        protocol::Response::Ok { payload, .. } => {
+            assert_eq!(protocol::bytes_to_f32s(&payload).unwrap().len(), 1000);
+        }
+        other => panic!("unexpected inner response: {other:?}"),
+    }
+    let hint = hint.expect("credit request gets a hint");
+    assert!(hint.credits > 0, "idle lane must grant credits: {hint:?}");
+    assert_eq!(hint.pace_ns, 0, "idle lane needs no pacing: {hint:?}");
+
     drop(cli);
     h.join().unwrap();
 }
