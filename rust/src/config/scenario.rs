@@ -41,10 +41,18 @@
 //! plane) gives each served model its own lane policy — a
 //! [`BatchCfg`](crate::coordinator::BatchCfg) spec with an optional
 //! `*W` round-robin weight suffix.
+//!
+//! Three routing-tier keys (live plane, ignored by the sim like the
+//! other live knobs): `backends` (coordinator count behind the
+//! gateway), `placement` (`"hash"` or `"least-loaded"`), and
+//! `pipeline` (chained stage models after `model`, the
+//! `FLAG_PIPELINE` request form — at most
+//! [`MAX_PIPELINE_STAGES`](crate::coordinator::protocol::MAX_PIPELINE_STAGES)
+//! total stages, no duplicates).
 
 use anyhow::{bail, Context, Result};
 
-use crate::coordinator::ModelPolicy;
+use crate::coordinator::{ModelPolicy, Placement};
 use crate::gpu::Sharing;
 use crate::models::zoo::PaperModel;
 use crate::net::params::Transport;
@@ -78,6 +86,9 @@ pub fn parse_scenario(text: &str) -> Result<Scenario> {
         "flush_us",
         "model_mix",
         "model_batch",
+        "backends",
+        "placement",
+        "pipeline",
     ];
     for k in obj.keys() {
         if !KNOWN.contains(&k.as_str()) {
@@ -162,6 +173,44 @@ pub fn parse_scenario(text: &str) -> Result<Scenario> {
             bail!("model_mix must list at least one model");
         }
         sc.model_mix = mix;
+    }
+    if let Some(n) = v.get("backends").and_then(Json::as_u64) {
+        if n == 0 {
+            bail!("backends must be >= 1 (1 disables sharding)");
+        }
+        sc.backends = n as usize;
+    }
+    if let Some(p) = v.get("placement").and_then(Json::as_str) {
+        sc.placement = Some(
+            Placement::by_name(p)
+                .with_context(|| format!("bad placement {p} (hash|least-loaded)"))?,
+        );
+    }
+    if let Some(arr) = v.get("pipeline").and_then(Json::as_arr) {
+        let mut stages = Vec::new();
+        for entry in arr {
+            let name = entry
+                .as_str()
+                .context("pipeline entries must be model names")?;
+            if name.is_empty() {
+                bail!("pipeline stage names must be non-empty");
+            }
+            if stages.iter().any(|s| s == name) {
+                bail!("duplicate pipeline stage {name:?}");
+            }
+            stages.push(name.to_string());
+        }
+        if stages.is_empty() {
+            bail!("pipeline must list at least one chained stage");
+        }
+        if 1 + stages.len() > crate::coordinator::protocol::MAX_PIPELINE_STAGES {
+            bail!(
+                "pipeline of {} stages exceeds the wire cap {}",
+                1 + stages.len(),
+                crate::coordinator::protocol::MAX_PIPELINE_STAGES
+            );
+        }
+        sc.pipeline = stages;
     }
     if let Some(mb) = v.get("model_batch") {
         let obj = match mb {
@@ -276,6 +325,40 @@ mod tests {
             r#"{"model": "ResNet50", "transport": "gdr", "model_batch": {"m": "0"}}"#,
             r#"{"model": "ResNet50", "transport": "gdr", "model_batch": {"m": "8*0"}}"#,
             r#"{"model": "ResNet50", "transport": "gdr", "model_batch": {"m": 8}}"#,
+        ] {
+            assert!(parse_scenario(bad).is_err(), "accepted: {bad}");
+        }
+    }
+
+    #[test]
+    fn routing_keys_roundtrip() {
+        let sc = parse_scenario(
+            r#"{"model": "MobileNetV3", "transport": "gdr",
+                "backends": 2, "placement": "least-loaded",
+                "pipeline": ["tiny_segnet"]}"#,
+        )
+        .unwrap();
+        assert_eq!(sc.backends, 2);
+        assert_eq!(sc.placement, Some(Placement::LeastLoaded));
+        assert_eq!(sc.pipeline, vec!["tiny_segnet".to_string()]);
+        // Defaults: no sharding, no chain.
+        let plain = parse_scenario(r#"{"model": "ResNet50", "transport": "gdr"}"#).unwrap();
+        assert_eq!(plain.backends, 1);
+        assert_eq!(plain.placement, None);
+        assert!(plain.pipeline.is_empty());
+    }
+
+    #[test]
+    fn rejects_bad_routing_keys() {
+        for bad in [
+            r#"{"model": "ResNet50", "transport": "gdr", "backends": 0}"#,
+            r#"{"model": "ResNet50", "transport": "gdr", "placement": "psychic"}"#,
+            r#"{"model": "ResNet50", "transport": "gdr", "pipeline": []}"#,
+            r#"{"model": "ResNet50", "transport": "gdr", "pipeline": [""]}"#,
+            r#"{"model": "ResNet50", "transport": "gdr", "pipeline": [3]}"#,
+            r#"{"model": "ResNet50", "transport": "gdr", "pipeline": ["a", "a"]}"#,
+            r#"{"model": "ResNet50", "transport": "gdr",
+                "pipeline": ["a","b","c","d","e","f","g","h"]}"#,
         ] {
             assert!(parse_scenario(bad).is_err(), "accepted: {bad}");
         }

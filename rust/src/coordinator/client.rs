@@ -56,6 +56,12 @@ pub struct LoadCfg {
     /// hang — a stalled peer then surfaces as a client error instead of
     /// wedging the calling thread.
     pub timeout: Option<Duration>,
+    /// Chained stage models after [`LoadCfg::model`]
+    /// ([`protocol::FLAG_PIPELINE`], protocol v2): the gateway runs the
+    /// whole chain server-side and replies once. Empty keeps frames
+    /// byte-identical to v1. Only meaningful against a routing gateway
+    /// — a plain coordinator refuses to chain.
+    pub pipeline: Vec<String>,
 }
 
 /// Aggregate results of one live run.
@@ -104,6 +110,20 @@ pub fn fetch_stats(t: &mut dyn MsgTransport) -> Result<ExecStats> {
         Response::Err(e) => bail!("server rejected stats request: {e}"),
         Response::Ok { .. } => bail!("server answered stats with an inference response"),
         Response::Shed { msg, .. } => bail!("server shed a stats request: {msg}"),
+        Response::Pipeline { .. } => bail!("server answered stats with a pipeline response"),
+    }
+}
+
+/// Query a model's per-request tensor shape — `(in_elems, out_elems)`
+/// — over an open connection (the shape opcode, protocol v2). Works
+/// against a coordinator (manifest lookup) or a routing gateway
+/// (forwarded to the model's placed backend).
+pub fn fetch_shape(t: &mut dyn MsgTransport, model: &str) -> Result<(usize, usize)> {
+    t.send(&protocol::encode_shape_request(model))?;
+    match Response::decode(&t.recv()?)? {
+        Response::Ok { payload, .. } => protocol::parse_shape_payload(&payload),
+        Response::Err(e) => bail!("server rejected shape request: {e}"),
+        other => bail!("unexpected response to shape request: {other:?}"),
     }
 }
 
@@ -246,6 +266,7 @@ pub fn run_client_loop(t: &mut dyn MsgTransport, cfg: &LoadCfg, client_idx: usiz
         prio,
         deadline_us: cfg.deadline_us,
         credits: cfg.credits,
+        pipeline: cfg.pipeline.clone(),
         payload,
     }
     .encode();
@@ -329,6 +350,38 @@ pub fn run_client_loop(t: &mut dyn MsgTransport, cfg: &LoadCfg, client_idx: usiz
                     },
                     breakdown: span
                         .map(|block| StageBreakdown::from_span(&block, total_ns)),
+                });
+            }
+            Response::Pipeline { stages, .. } => {
+                // One reply for the whole chain: the gateway already ran
+                // every stage back-to-back. Decode validated stage
+                // windows are monotone, so last recv − first sent is the
+                // chain's server-side residence time.
+                out.oks += 1;
+                if i < cfg.warmup {
+                    continue;
+                }
+                let total_ns = total.as_nanos() as u64;
+                let chain_ns = match (stages.first(), stages.last()) {
+                    (Some(first), Some(last)) => last.recv_ns.saturating_sub(first.sent_ns),
+                    _ => 0,
+                };
+                let busy_ns: u64 = stages.iter().map(|s| s.recv_ns - s.sent_ns).sum();
+                let net_ns = total_ns.saturating_sub(chain_ns);
+                out.recs.push(ClientRec {
+                    rec: ReqRecord {
+                        client: client_idx,
+                        total: Ns(total_ns),
+                        request: Ns(net_ns / 2),
+                        response: Ns(net_ns - net_ns / 2),
+                        copy_h2d: Ns(0),
+                        copy_d2h: Ns(0),
+                        preproc: Ns(0),
+                        infer: Ns(busy_ns),
+                        cpu_us: 0.0,
+                        priority: prio > 0,
+                    },
+                    breakdown: None,
                 });
             }
         }

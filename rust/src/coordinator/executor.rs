@@ -56,7 +56,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
-use crate::models::manifest::Manifest;
+use crate::models::manifest::{Manifest, TensorSpec};
 use crate::runtime::{Engine, TensorBuf};
 use crate::trace::{SpanRec, Stamp};
 
@@ -574,6 +574,10 @@ pub struct Executor {
     shared: Arc<Shared>,
     scheduler: Option<std::thread::JoinHandle<()>>,
     workers: Vec<std::thread::JoinHandle<()>>,
+    /// The artifact menu, kept for shape queries ([`Executor::shape`],
+    /// the answer to the wire's `OP_SHAPE`) — the scheduler thread owns
+    /// its own copy.
+    manifest: Manifest,
 }
 
 impl Executor {
@@ -668,12 +672,34 @@ impl Executor {
             }
         }
         let sh = shared.clone();
-        let scheduler = std::thread::spawn(move || scheduler_loop(sh, manifest));
+        let sched_manifest = manifest.clone();
+        let scheduler = std::thread::spawn(move || scheduler_loop(sh, sched_manifest));
         Ok(Executor {
             shared,
             scheduler: Some(scheduler),
             workers,
+            manifest,
         })
+    }
+
+    /// Per-request tensor shape of `model`: `(input elems, output
+    /// elems)` for one sample, from the model's single-sample (`_b1`)
+    /// artifact (falling back to an exact artifact name). This is what
+    /// the server answers `OP_SHAPE` with; the routing gateway uses it
+    /// to size the inter-stage tensor bridge when chaining pipeline
+    /// stages.
+    pub fn shape(&self, model: &str) -> Result<(usize, usize)> {
+        let entry = self
+            .manifest
+            .get(&format!("{model}_b1"))
+            .or_else(|| self.manifest.get(model))
+            .ok_or_else(|| anyhow!("unknown model {model}"))?;
+        let in_elems = entry
+            .inputs
+            .first()
+            .map(TensorSpec::elems)
+            .ok_or_else(|| anyhow!("model {model} has no input spec"))?;
+        Ok((in_elems, entry.output.elems()))
     }
 
     /// Submit a job; the reply arrives on the returned channel. A full

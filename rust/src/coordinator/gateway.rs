@@ -1,19 +1,27 @@
 //! Router–Dealer gateway: the frontend proxy of the paper's proxied
-//! connection mode (§IV-B). Clients connect to the gateway; the gateway
-//! opens one upstream (dealer) connection per client and forwards
-//! frames verbatim — the store-and-forward + protocol-translation hop.
-//! To isolate networking effects it always forwards to one fixed
-//! upstream (as the paper configures it).
+//! connection mode (§IV-B), in two flavours.
 //!
-//! `gateway_on` is transport-generic on both faces: any [`Acceptor`]
-//! downstream, any connector closure upstream — so a TCP-facing
-//! gateway can dealer into an RDMA/GDR fabric, the paper's
-//! "accelerate the last hop" deployment (§V-B).
+//! * **Relay mode** ([`gateway_on`], [`gateway_tcp`]): one fixed
+//!   upstream, one dealer connection per client, frames forwarded
+//!   verbatim — the store-and-forward + protocol-translation hop the
+//!   paper measures in isolation.
+//! * **Routing mode** ([`routed_gateway_on`], [`gateway_tcp_multi`]):
+//!   a [`Router`] places each model on one of N coordinator backends
+//!   (consistent-hash or least-loaded placement over live stats),
+//!   pools upstream connections, fails over when a backend dies
+//!   (`Err`-before-drop preserved through the tier), and chains
+//!   [`FLAG_PIPELINE`](super::protocol::FLAG_PIPELINE) requests stage
+//!   to stage across backends with **no client round-trip** between
+//!   stages — the paper's multi-node proxy-hop pipeline (§I, §V-B).
+//!
+//! Both faces stay transport-generic: any [`Acceptor`] downstream, any
+//! connector upstream, so a TCP-facing gateway can dealer into an
+//! RDMA/GDR fabric — the paper's "accelerate the last hop" deployment.
 
 use std::net::SocketAddr;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
@@ -21,12 +29,15 @@ use crate::transport::tcp::{TcpAcceptor, TcpTransport};
 use crate::transport::{Acceptor, MsgTransport};
 
 use super::conn_track::ConnTracker;
-use super::protocol::Response;
+use super::protocol::{self, PipelineStage, Request, RequestMeta, Response, StageNs};
+use super::router::{fit_f32, BackendSpec, Router, RouterCfg};
 
 /// A running transport-generic gateway loop.
 pub struct GatewayLoop {
     stop: Arc<AtomicBool>,
     accept_thread: Option<std::thread::JoinHandle<()>>,
+    /// Background stats refresher (routing mode only).
+    aux_thread: Option<std::thread::JoinHandle<()>>,
     conns: ConnTracker,
     /// Frames forwarded (both directions) — observability hook.
     pub forwarded: Arc<AtomicU64>,
@@ -42,6 +53,9 @@ impl GatewayLoop {
     pub fn stop(mut self) {
         self.stop.store(true, Ordering::SeqCst);
         if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+        if let Some(t) = self.aux_thread.take() {
             let _ = t.join();
         }
         self.conns.stop_all();
@@ -99,6 +113,7 @@ where
     GatewayLoop {
         stop,
         accept_thread: Some(accept_thread),
+        aux_thread: None,
         conns,
         forwarded,
     }
@@ -158,4 +173,265 @@ fn relay(mut client: impl MsgTransport, mut upstream: impl MsgTransport, fwd: &A
         }
         fwd.fetch_add(1, Ordering::Relaxed);
     }
+}
+
+/// Start a routing-mode gateway over `router`'s backends: accepted
+/// clients get a routed request loop ([`handle_routed_conn`]) instead
+/// of a fixed relay, and a background thread refreshes backend stats on
+/// the [`RouterCfg::refresh`] cadence (the least-loaded/saturation
+/// signal). If no backend is reachable at accept time the client gets
+/// the same unsolicited `Err` frame as relay mode — never a silent EOF.
+pub fn routed_gateway_on<A: Acceptor>(mut acceptor: A, router: Arc<Router>) -> GatewayLoop {
+    let stop = Arc::new(AtomicBool::new(false));
+    let stop2 = stop.clone();
+    let forwarded = Arc::new(AtomicU64::new(0));
+    let fwd2 = forwarded.clone();
+    let conns = ConnTracker::new();
+    let conns2 = conns.clone();
+    let refresh_router = router.clone();
+    let stop3 = stop.clone();
+    let aux_thread = std::thread::spawn(move || {
+        let interval = refresh_router.cfg().refresh;
+        while !stop3.load(Ordering::SeqCst) {
+            refresh_router.refresh_now();
+            // Sleep in slices so stop() never waits a full interval.
+            let woke = Instant::now();
+            while woke.elapsed() < interval && !stop3.load(Ordering::SeqCst) {
+                std::thread::sleep(Duration::from_millis(2));
+            }
+        }
+    });
+    let accept_thread = std::thread::spawn(move || {
+        while !stop2.load(Ordering::SeqCst) {
+            match acceptor.poll_accept() {
+                Ok(Some(client)) => {
+                    if probe_any(&router) {
+                        let fwd = fwd2.clone();
+                        let r = router.clone();
+                        let hook = client.shutdown_hook();
+                        let handle =
+                            std::thread::spawn(move || handle_routed_conn(client, &r, &fwd));
+                        conns2.track(handle, [hook]);
+                    } else {
+                        let n = router.n_backends();
+                        let hook = client.shutdown_hook();
+                        let handle = std::thread::spawn(move || {
+                            let mut client = client;
+                            let resp = Response::Err(format!(
+                                "gateway: upstream unavailable: all {n} backend(s) down"
+                            ));
+                            let _ = client.send(&resp.encode());
+                        });
+                        conns2.track(handle, [hook]);
+                    }
+                }
+                Ok(None) => std::thread::sleep(Duration::from_millis(2)),
+                Err(_) => break,
+            }
+        }
+    });
+    GatewayLoop {
+        stop,
+        accept_thread: Some(accept_thread),
+        aux_thread: Some(aux_thread),
+        conns,
+        forwarded,
+    }
+}
+
+/// Start a TCP-facing routing gateway over TCP backends at
+/// `backend_addrs` (the CLI's repeatable `--backend`).
+pub fn gateway_tcp_multi(
+    addr: &str,
+    backend_addrs: &[SocketAddr],
+    cfg: RouterCfg,
+) -> Result<GatewayHandle> {
+    let listener = TcpTransport::listen(addr)?;
+    let acceptor = TcpAcceptor::new(listener)?;
+    let local = acceptor.local_addr()?;
+    let specs = backend_addrs.iter().copied().map(BackendSpec::tcp).collect();
+    let router = Arc::new(Router::new(specs, cfg));
+    let inner = routed_gateway_on(acceptor, router);
+    Ok(GatewayHandle { addr: local, inner })
+}
+
+/// Can any backend be reached right now? (Leases and returns a pooled
+/// connection, so a positive probe also warms the pool.)
+fn probe_any(router: &Router) -> bool {
+    for idx in 0..router.n_backends() {
+        if !router.is_usable(idx) {
+            continue;
+        }
+        if let Ok(conn) = router.lease(idx) {
+            router.release(idx, conn);
+            return true;
+        }
+    }
+    false
+}
+
+/// Routed request loop for one client connection: recv → place →
+/// forward (or chain) → reply, until the client hangs up. Unlike relay
+/// mode, an upstream failure answers this request with `Err` and keeps
+/// the connection open — the next request re-routes to a survivor.
+pub fn handle_routed_conn(mut client: impl MsgTransport, router: &Router, fwd: &AtomicU64) {
+    loop {
+        let Ok(frame) = client.recv() else { return };
+        let reply = routed_reply(&frame, router, fwd);
+        if client.send(&reply).is_err() {
+            return;
+        }
+    }
+}
+
+/// Build the reply for one routed request frame.
+fn routed_reply(frame: &[u8], router: &Router, fwd: &AtomicU64) -> Vec<u8> {
+    match protocol::request_opcode(frame) {
+        Err(e) => Response::Err(format!("gateway: bad request: {e}")).encode(),
+        Ok(protocol::OP_STATS) => {
+            // Fleet view: refresh every reachable backend, then merge
+            // lanes by model so one stats frame covers the whole tier.
+            router.refresh_now();
+            Response::Stats(router.merged_stats()).encode()
+        }
+        Ok(protocol::OP_SHAPE) => match protocol::decode_shape_request(frame) {
+            Err(e) => Response::Err(format!("gateway: bad request: {e}")).encode(),
+            Ok(model) => {
+                let shape = router
+                    .route(&model)
+                    .and_then(|idx| router.shape_of(&model, idx));
+                match shape {
+                    Ok((in_elems, out_elems)) => Response::Ok {
+                        stages: StageNs::default(),
+                        span: None,
+                        payload: protocol::shape_payload(in_elems, out_elems),
+                    }
+                    .encode(),
+                    Err(e) => Response::Err(format!("gateway: shape of {model}: {e}")).encode(),
+                }
+            }
+        },
+        Ok(_) => match protocol::split_header(frame) {
+            Err(e) => Response::Err(format!("gateway: bad request: {e}")).encode(),
+            Ok((meta, payload_off)) if !meta.pipeline.is_empty() => {
+                run_pipeline(router, &meta, &frame[payload_off..], fwd)
+            }
+            Ok((meta, _)) => match router.route(&meta.model) {
+                Err(e) => {
+                    Response::Err(format!("gateway: no backend for {}: {e}", meta.model)).encode()
+                }
+                // Forward the client's frame verbatim — the routed hop
+                // never re-encodes a single-stage request.
+                Ok(idx) => match exchange(router, idx, frame, fwd) {
+                    Ok(resp) => resp,
+                    Err(e) => Response::Err(format!("gateway: {e}")).encode(),
+                },
+            },
+        },
+    }
+}
+
+/// One request/response exchange with backend `idx` over a pooled
+/// connection. Any transport failure quarantines the backend
+/// ([`Router::mark_down`]) and surfaces the same `upstream …` error
+/// text relay mode uses, so failure reporting is uniform across modes.
+fn exchange(router: &Router, idx: usize, frame: &[u8], fwd: &AtomicU64) -> Result<Vec<u8>, String> {
+    let mut conn = router
+        .lease(idx)
+        .map_err(|e| format!("upstream unavailable: {e}"))?;
+    if let Err(e) = conn.send(frame) {
+        router.mark_down(idx);
+        return Err(format!("upstream send failed: {e}"));
+    }
+    fwd.fetch_add(1, Ordering::Relaxed);
+    match conn.recv() {
+        Ok(resp) => {
+            router.release(idx, conn);
+            router.note_job(idx);
+            fwd.fetch_add(1, Ordering::Relaxed);
+            Ok(resp)
+        }
+        Err(e) => {
+            router.mark_down(idx);
+            Err(format!("upstream recv failed: {e}"))
+        }
+    }
+}
+
+/// Run a pipeline chain entirely inside the gateway: stage 0 is
+/// `meta.model`, stages 1.. are `meta.pipeline`, each placed by the
+/// router and fed the previous stage's output tensor (refit via
+/// [`fit_f32`] to the stage's input shape) with **no client
+/// round-trip** between stages. Stage timestamps (`sent_ns`/`recv_ns`)
+/// share one gateway clock starting at request receipt, so the
+/// returned windows are provably back-to-back. `FLAG_RAW` applies to
+/// stage 0 only (later stages eat f32 tensors); `FLAG_CREDITS` is
+/// ignored — pacing hints are per-backend and meaningless for a chain.
+/// A deadline is forwarded to every stage (budget from each backend's
+/// receipt). A stage `Shed` propagates to the client verbatim.
+fn run_pipeline(router: &Router, meta: &RequestMeta, payload: &[u8], fwd: &AtomicU64) -> Vec<u8> {
+    let t0 = Instant::now();
+    let mut stages_out: Vec<PipelineStage> = Vec::with_capacity(1 + meta.pipeline.len());
+    let mut tensor = payload.to_vec();
+    let models: Vec<&str> = std::iter::once(meta.model.as_str())
+        .chain(meta.pipeline.iter().map(String::as_str))
+        .collect();
+    for (k, model) in models.iter().enumerate() {
+        let idx = match router.route(model) {
+            Ok(idx) => idx,
+            Err(e) => return stage_err(k, model, &e.to_string()),
+        };
+        if k > 0 {
+            let (in_elems, _) = match router.shape_of(model, idx) {
+                Ok(shape) => shape,
+                Err(e) => return stage_err(k, model, &format!("shape: {e}")),
+            };
+            tensor = match fit_f32(&tensor, in_elems) {
+                Ok(t) => t,
+                Err(e) => return stage_err(k, model, &e.to_string()),
+            };
+        }
+        let req = Request {
+            model: (*model).to_string(),
+            raw: meta.raw && k == 0,
+            spans: meta.spans,
+            prio: meta.prio,
+            deadline_us: meta.deadline_us,
+            credits: false,
+            pipeline: vec![],
+            payload: std::mem::take(&mut tensor),
+        };
+        let sent_ns = t0.elapsed().as_nanos() as u64;
+        let raw_resp = match exchange(router, idx, &req.encode(), fwd) {
+            Ok(resp) => resp,
+            Err(e) => return stage_err(k, model, &e),
+        };
+        let recv_ns = (t0.elapsed().as_nanos() as u64).max(sent_ns);
+        match Response::decode(&raw_resp) {
+            Ok(Response::Ok { span, payload, .. }) => {
+                tensor = payload;
+                stages_out.push(PipelineStage {
+                    model: (*model).to_string(),
+                    sent_ns,
+                    recv_ns,
+                    span: span.unwrap_or_default(),
+                });
+            }
+            Ok(Response::Shed { .. }) => return raw_resp,
+            Ok(Response::Err(e)) => return stage_err(k, model, &e),
+            Ok(other) => {
+                return stage_err(k, model, &format!("unexpected upstream response {other:?}"))
+            }
+            Err(e) => return stage_err(k, model, &format!("bad upstream frame: {e}")),
+        }
+    }
+    Response::Pipeline {
+        stages: stages_out,
+        payload: tensor,
+    }
+    .encode()
+}
+
+fn stage_err(k: usize, model: &str, msg: &str) -> Vec<u8> {
+    Response::Err(format!("gateway: pipeline stage {k} ({model}): {msg}")).encode()
 }

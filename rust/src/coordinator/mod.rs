@@ -2,7 +2,9 @@
 //! protocol ([`protocol`]), execution service ([`executor`]: shared
 //! stream pool + per-model priority lanes + continuous cross-request
 //! batching), server ([`serve_on`]), router-dealer gateway
-//! ([`gateway_on`]), and the closed-loop load generator ([`run_on`]).
+//! ([`gateway_on`]) with a multi-backend routing tier ([`router`],
+//! [`routed_gateway_on`]), and the closed-loop load generator
+//! ([`run_on`]).
 //! Policies here mirror the simulated world so both planes exercise
 //! the same design (DESIGN.md §3).
 //!
@@ -15,15 +17,24 @@ mod conn_track;
 pub mod executor;
 pub mod gateway;
 pub mod protocol;
+pub mod router;
 pub mod server;
 
 pub use client::{
-    fetch_stats, run_on, run_tcp, ClientRec, ClientRun, LiveStats, LoadCfg, TokenPacer,
+    fetch_shape, fetch_stats, run_client_loop, run_on, run_tcp, ClientRec, ClientRun, LiveStats,
+    LoadCfg, TokenPacer,
 };
 pub use executor::{
     BatchCfg, CreditHint, Done, ExecError, ExecStats, Executor, LaneStats, ModelPolicy, SchedCfg,
     SealReason, ShedReason, DEFAULT_QUEUE_CAP, N_SEAL_REASONS, N_SHED_REASONS, SEAL_REASON_NAMES,
     SHED_REASON_NAMES,
 };
-pub use gateway::{gateway_on, gateway_tcp, GatewayHandle, GatewayLoop};
+pub use gateway::{
+    gateway_on, gateway_tcp, gateway_tcp_multi, handle_routed_conn, routed_gateway_on,
+    GatewayHandle, GatewayLoop,
+};
+pub use router::{
+    fit_f32, merge_stats, pick_least_loaded, queue_depth, shed_total, BackendSpec, HashRing,
+    Placement, Router, RouterCfg, DEFAULT_VNODES,
+};
 pub use server::{handle_conn, serve_on, serve_tcp, ServeLoop, ServerHandle};

@@ -7,7 +7,8 @@
 //!
 //! ```text
 //! Request:  [op u8][flags u8][prio u8][name_len u8][name]
-//!             [deadline_us u64, iff FLAG_DEADLINE][payload]
+//!             [deadline_us u64, iff FLAG_DEADLINE]
+//!             [n u8][len u8][stage]... iff FLAG_PIPELINE][payload]
 //! Response: status 0 (v1 Ok):
 //!             [0][queue_ns u64][preproc_ns u64][infer_ns u64][payload]
 //!           status 1 (Err): [1][utf8 message]
@@ -17,13 +18,17 @@
 //!           status 4 (Shed): [4][reason u8][utf8 message]
 //!           status 5 (credit envelope): [5][ver][credits u16]
 //!             [pace_ns u64][inner response frame]   (see `CreditHint`)
+//!           status 6 (Pipeline): [6][n u8] then per stage
+//!             [name_len u8][name][sent_ns u64][recv_ns u64][span block],
+//!             then [payload]   (the final stage's output tensor)
 //! ```
 //!
 //! # Protocol v2 and compatibility
 //!
-//! v2 adds the request flags [`FLAG_SPANS`], [`FLAG_DEADLINE`] and
-//! [`FLAG_CREDITS`], the stats opcode [`OP_STATS`], the
-//! [`Response::Shed`] status, and the status-5 credit envelope, all
+//! v2 adds the request flags [`FLAG_SPANS`], [`FLAG_DEADLINE`],
+//! [`FLAG_CREDITS`] and [`FLAG_PIPELINE`], the stats/shape opcodes
+//! [`OP_STATS`]/[`OP_SHAPE`], the [`Response::Shed`] status, the
+//! status-5 credit envelope, and the status-6 pipeline response, all
 //! *opt-in*, so the two directions stay mutually compatible:
 //!
 //! * a **v1 client against a v2 server** never sets `FLAG_SPANS`,
@@ -43,6 +48,11 @@
 //! `FLAG_CREDITS` has no such caveat (it adds no request bytes, only
 //! asks the server to wrap its response), so a credits-on client
 //! degrades gracefully against a v1 server.
+//! `FLAG_PIPELINE` adds request bytes (the stage list) and therefore
+//! needs a peer that knows it — the routing gateway. A plain server
+//! parses the stage list but refuses to chain (it answers with a
+//! protocol `Err` directing the client at the gateway), so the bytes
+//! are never misread as payload.
 //! `tests/trace_protocol.rs` pins both directions.
 //!
 //! Deadlines are *relative* (microseconds from server receipt), so no
@@ -64,6 +74,12 @@ pub const OP_INFER: u8 = 1;
 /// Request opcode (v2): snapshot the executor's per-lane counters.
 /// Frame is the 4-byte header only (`[OP_STATS][0][0][0]`).
 pub const OP_STATS: u8 = 2;
+/// Request opcode (v2): ask for a model's per-request tensor shape —
+/// `[OP_SHAPE][0][0][name_len][name]`, answered with a v1 Ok frame
+/// whose payload is `[in_elems u32 LE][out_elems u32 LE]`. The routing
+/// gateway uses it to size the inter-stage tensor bridge of a
+/// pipeline chain without loading the manifest itself.
+pub const OP_SHAPE: u8 = 3;
 /// flags bit 0: payload is a raw uint8 camera frame (server preprocesses).
 pub const FLAG_RAW: u8 = 1;
 /// flags bit 1 (v2): client asks for the span timeline in the response.
@@ -76,6 +92,16 @@ pub const FLAG_DEADLINE: u8 = 4;
 /// (adds no request bytes, so it is safe against a v1 server, which
 /// simply ignores the bit and answers unwrapped).
 pub const FLAG_CREDITS: u8 = 8;
+/// flags bit 4 (v2): the request is a pipeline chain — an ordered
+/// stage list follows the name (and the deadline word, when both flags
+/// are set): `[n u8]` then `n` × `[len u8][stage name]`, the models of
+/// stages 1..; the header's `model` field is stage 0. Chaining is the
+/// routing gateway's job ([`Response::Pipeline`] comes back); a plain
+/// server answers such a request with a protocol `Err`.
+pub const FLAG_PIPELINE: u8 = 16;
+/// Total stage cap for a pipeline chain (head model + listed stages).
+/// Small on purpose: the gateway re-buffers every inter-stage tensor.
+pub const MAX_PIPELINE_STAGES: usize = 8;
 /// Stats response wire version (2 added `svc_ns` + shed counters and
 /// the sixth seal reason; v1 frames are rejected, stats are advisory).
 pub const STATS_VER: u8 = 2;
@@ -97,6 +123,10 @@ pub struct Request {
     /// the response comes back wrapped in the status-5 envelope. `false`
     /// keeps both directions byte-identical to v1.
     pub credits: bool,
+    /// Pipeline chain: the models of stages 1.. ([`FLAG_PIPELINE`],
+    /// v2); `model` above is stage 0. Empty keeps the frame
+    /// byte-identical to v1.
+    pub pipeline: Vec<String>,
     pub payload: Vec<u8>,
 }
 
@@ -115,11 +145,56 @@ pub struct RequestMeta {
     /// The client set [`FLAG_CREDITS`]: wrap the response in the
     /// credit envelope.
     pub credits: bool,
+    /// The client set [`FLAG_PIPELINE`]: the models of stages 1..
+    /// (stage 0 is `model`). Empty means no pipeline.
+    pub pipeline: Vec<String>,
 }
 
 /// Encode a stats request frame (v2): header only, no payload.
 pub fn encode_stats_request() -> Vec<u8> {
     vec![OP_STATS, 0, 0, 0]
+}
+
+/// Encode a shape request frame (v2): header carrying the model name,
+/// no payload.
+pub fn encode_shape_request(model: &str) -> Vec<u8> {
+    let name = model.as_bytes();
+    assert!(name.len() <= u8::MAX as usize, "model name too long");
+    let mut buf = Vec::with_capacity(4 + name.len());
+    buf.extend_from_slice(&[OP_SHAPE, 0, 0, name.len() as u8]);
+    buf.extend_from_slice(name);
+    buf
+}
+
+/// Parse a shape request frame back into the model name (server side).
+pub fn decode_shape_request(buf: &[u8]) -> Result<String> {
+    if buf.len() < 4 || buf[0] != OP_SHAPE {
+        bail!("not a shape request");
+    }
+    let name_len = buf[3] as usize;
+    if buf.len() != 4 + name_len || name_len == 0 {
+        bail!("malformed shape request ({} bytes, name_len {name_len})", buf.len());
+    }
+    Ok(std::str::from_utf8(&buf[4..])?.to_string())
+}
+
+/// Payload of a shape response: `[in_elems u32 LE][out_elems u32 LE]`
+/// inside a plain v1 Ok frame.
+pub fn shape_payload(in_elems: usize, out_elems: usize) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(8);
+    buf.extend_from_slice(&(in_elems as u32).to_le_bytes());
+    buf.extend_from_slice(&(out_elems as u32).to_le_bytes());
+    buf
+}
+
+/// Parse a shape-response payload back into `(in_elems, out_elems)`.
+pub fn parse_shape_payload(buf: &[u8]) -> Result<(usize, usize)> {
+    if buf.len() != 8 {
+        bail!("shape payload must be 8 bytes, got {}", buf.len());
+    }
+    let in_elems = u32::from_le_bytes(buf[0..4].try_into().expect("4 bytes")) as usize;
+    let out_elems = u32::from_le_bytes(buf[4..8].try_into().expect("4 bytes")) as usize;
+    Ok((in_elems, out_elems))
 }
 
 /// Opcode of a request frame (for dispatch before full parsing).
@@ -155,6 +230,42 @@ pub fn split_header(buf: &[u8]) -> Result<(RequestMeta, usize)> {
     } else {
         None
     };
+    let pipeline = if buf[1] & FLAG_PIPELINE != 0 {
+        let n = *buf
+            .get(at)
+            .ok_or_else(|| anyhow::anyhow!("truncated pipeline stage count"))?
+            as usize;
+        at += 1;
+        if n == 0 {
+            bail!("empty pipeline stage list");
+        }
+        if 1 + n > MAX_PIPELINE_STAGES {
+            bail!("pipeline of {} stages exceeds cap {MAX_PIPELINE_STAGES}", 1 + n);
+        }
+        let mut stages = Vec::with_capacity(n);
+        for k in 0..n {
+            let len = *buf
+                .get(at)
+                .ok_or_else(|| anyhow::anyhow!("pipeline truncated at stage {k}"))?
+                as usize;
+            at += 1;
+            if len == 0 {
+                bail!("pipeline stage {k} has an empty model name");
+            }
+            if buf.len() < at + len {
+                bail!("pipeline truncated inside stage {k} name");
+            }
+            let stage = std::str::from_utf8(&buf[at..at + len])?.to_string();
+            at += len;
+            if stage == model || stages.contains(&stage) {
+                bail!("duplicate pipeline stage {stage:?}");
+            }
+            stages.push(stage);
+        }
+        stages
+    } else {
+        Vec::new()
+    };
     Ok((
         RequestMeta {
             model,
@@ -163,6 +274,7 @@ pub fn split_header(buf: &[u8]) -> Result<(RequestMeta, usize)> {
             prio: buf[2],
             deadline_us,
             credits: buf[1] & FLAG_CREDITS != 0,
+            pipeline,
         },
         at,
     ))
@@ -187,12 +299,31 @@ impl Request {
         if self.credits {
             flags |= FLAG_CREDITS;
         }
+        if !self.pipeline.is_empty() {
+            flags |= FLAG_PIPELINE;
+        }
         buf.push(flags);
         buf.push(self.prio);
         buf.push(name.len() as u8);
         buf.extend_from_slice(name);
         if let Some(us) = self.deadline_us {
             buf.extend_from_slice(&us.to_le_bytes());
+        }
+        if !self.pipeline.is_empty() {
+            assert!(
+                1 + self.pipeline.len() <= MAX_PIPELINE_STAGES,
+                "pipeline too long"
+            );
+            buf.push(self.pipeline.len() as u8);
+            for stage in &self.pipeline {
+                let s = stage.as_bytes();
+                assert!(
+                    !s.is_empty() && s.len() <= u8::MAX as usize,
+                    "bad pipeline stage name"
+                );
+                buf.push(s.len() as u8);
+                buf.extend_from_slice(s);
+            }
         }
         buf.extend_from_slice(&self.payload);
         buf
@@ -207,6 +338,7 @@ impl Request {
             prio: meta.prio,
             deadline_us: meta.deadline_us,
             credits: meta.credits,
+            pipeline: meta.pipeline,
             payload: buf[payload_off..].to_vec(),
         })
     }
@@ -250,6 +382,29 @@ pub enum Response {
     /// Distinct from [`Response::Err`] so clients can tell load
     /// shedding (retry later / downgrade SLO) from real failures.
     Shed { reason: ShedReason, msg: String },
+    /// Result of a pipeline chain (v2, answer to a [`FLAG_PIPELINE`]
+    /// request): per-stage timing records on the *gateway's* clock plus
+    /// the final stage's output tensor. One clock for every stage is
+    /// what lets a client prove the chain never round-tripped through
+    /// it: stage K's `recv_ns` ≤ stage K+1's `sent_ns`, gap owned
+    /// entirely by the gateway-side bridge.
+    Pipeline {
+        stages: Vec<PipelineStage>,
+        payload: Vec<u8>,
+    },
+}
+
+/// One chained stage's record inside [`Response::Pipeline`]: when the
+/// gateway dispatched it (`sent_ns`) and got its reply (`recv_ns`),
+/// both as ns offsets from the gateway's receipt of the client
+/// request, plus the stage's own server span block (empty when the
+/// client didn't ask for spans).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PipelineStage {
+    pub model: String,
+    pub sent_ns: u64,
+    pub recv_ns: u64,
+    pub span: SpanBlock,
 }
 
 impl Response {
@@ -283,6 +438,29 @@ impl Response {
                 buf.push(4u8);
                 buf.push(reason.code());
                 buf.extend_from_slice(msg.as_bytes());
+                buf
+            }
+            Response::Pipeline { stages, payload } => {
+                let mut buf = Vec::with_capacity(2 + stages.len() * 32 + payload.len());
+                buf.push(6u8);
+                assert!(
+                    stages.len() >= 2 && stages.len() <= MAX_PIPELINE_STAGES,
+                    "pipeline response needs 2..={MAX_PIPELINE_STAGES} stages"
+                );
+                buf.push(stages.len() as u8);
+                for st in stages {
+                    let name = st.model.as_bytes();
+                    assert!(
+                        !name.is_empty() && name.len() <= u8::MAX as usize,
+                        "bad stage model name"
+                    );
+                    buf.push(name.len() as u8);
+                    buf.extend_from_slice(name);
+                    buf.extend_from_slice(&st.sent_ns.to_le_bytes());
+                    buf.extend_from_slice(&st.recv_ns.to_le_bytes());
+                    buf.extend_from_slice(&st.span.encode());
+                }
+                buf.extend_from_slice(payload);
                 buf
             }
         }
@@ -330,6 +508,60 @@ impl Response {
                 Ok(Response::Shed {
                     reason,
                     msg: String::from_utf8_lossy(&buf[2..]).to_string(),
+                })
+            }
+            6 => {
+                if buf.len() < 2 {
+                    bail!("short pipeline response");
+                }
+                let n = buf[1] as usize;
+                if !(2..=MAX_PIPELINE_STAGES).contains(&n) {
+                    bail!("pipeline response claims {n} stages (want 2..={MAX_PIPELINE_STAGES})");
+                }
+                let mut at = 2usize;
+                let mut stages: Vec<PipelineStage> = Vec::with_capacity(n);
+                for k in 0..n {
+                    let name_len = *buf
+                        .get(at)
+                        .ok_or_else(|| anyhow::anyhow!("pipeline response truncated at stage {k}"))?
+                        as usize;
+                    at += 1;
+                    if name_len == 0 {
+                        bail!("pipeline response stage {k} has an empty model name");
+                    }
+                    if buf.len() < at + name_len + 16 {
+                        bail!("pipeline response truncated inside stage {k}");
+                    }
+                    let model = std::str::from_utf8(&buf[at..at + name_len])?.to_string();
+                    at += name_len;
+                    let sent_ns =
+                        u64::from_le_bytes(buf[at..at + 8].try_into().expect("8 bytes"));
+                    let recv_ns =
+                        u64::from_le_bytes(buf[at + 8..at + 16].try_into().expect("8 bytes"));
+                    at += 16;
+                    let (span, used) = decode_span_block(&buf[at..])?;
+                    at += used;
+                    if sent_ns > recv_ns {
+                        bail!("pipeline stage {k} sent after its reply ({sent_ns} > {recv_ns})");
+                    }
+                    if let Some(prev) = stages.last() {
+                        if sent_ns < prev.recv_ns {
+                            bail!(
+                                "pipeline stage {k} dispatched before stage {} replied",
+                                k - 1
+                            );
+                        }
+                    }
+                    stages.push(PipelineStage {
+                        model,
+                        sent_ns,
+                        recv_ns,
+                        span,
+                    });
+                }
+                Ok(Response::Pipeline {
+                    stages,
+                    payload: buf[at..].to_vec(),
                 })
             }
             s => bail!("unknown response status {s}"),
@@ -500,6 +732,7 @@ mod tests {
             prio: 7,
             deadline_us: None,
             credits: false,
+            pipeline: vec![],
             payload: vec![1, 2, 3, 4, 5],
         };
         assert_eq!(Request::decode(&r.encode()).unwrap(), r);
@@ -540,6 +773,7 @@ mod tests {
             prio: 3,
             deadline_us: Some(1_000),
             credits: true,
+            pipeline: vec![],
             payload: vec![9; 12],
         };
         let frame = r.encode();
@@ -690,6 +924,7 @@ mod tests {
             prio: 0,
             deadline_us: None,
             credits: false,
+            pipeline: vec![],
             payload: vec![],
         }
         .encode();
@@ -784,5 +1019,163 @@ mod tests {
         let mut outer = vec![5u8, CREDIT_VER, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0];
         outer.extend_from_slice(&nested);
         assert!(decode_with_credit(&outer).is_err());
+    }
+
+    #[test]
+    fn pipeline_request_roundtrip_and_v1_byte_identity() {
+        let plain = Request {
+            model: "tiny_mobilenet".into(),
+            raw: false,
+            spans: false,
+            prio: 0,
+            deadline_us: None,
+            credits: false,
+            pipeline: vec![],
+            payload: vec![7; 16],
+        };
+        let chained = Request {
+            pipeline: vec!["tiny_segnet".into()],
+            ..plain.clone()
+        };
+        let frame = chained.encode();
+        assert_eq!(frame[1] & FLAG_PIPELINE, FLAG_PIPELINE);
+        assert_eq!(Request::decode(&frame).unwrap(), chained);
+        // Flag off → byte-identical to v1: the stage list (count byte +
+        // len byte + name) is the only difference.
+        let v1 = plain.encode();
+        assert_eq!(v1[1] & FLAG_PIPELINE, 0);
+        assert_eq!(frame.len(), v1.len() + 2 + "tiny_segnet".len());
+        // Same header+name prefix (bar the flags byte) and same payload
+        // tail — the stage list is the only insertion.
+        let head = 4 + "tiny_mobilenet".len();
+        assert_eq!(frame[2..head], v1[2..head]);
+        assert_eq!(frame[frame.len() - 16..], v1[v1.len() - 16..]);
+        assert_eq!(Request::decode(&v1).unwrap(), plain);
+        // Stage list composes with the deadline word: deadline first,
+        // then the stage list, then the payload.
+        let both = Request {
+            deadline_us: Some(5_000),
+            pipeline: vec!["tiny_segnet".into(), "tiny_resnet".into()],
+            ..plain.clone()
+        };
+        let bframe = both.encode();
+        assert_eq!(bframe[1] & (FLAG_DEADLINE | FLAG_PIPELINE), FLAG_DEADLINE | FLAG_PIPELINE);
+        assert_eq!(Request::decode(&bframe).unwrap(), both);
+        let (meta, off) = split_header(&bframe).unwrap();
+        assert_eq!(meta.pipeline, vec!["tiny_segnet", "tiny_resnet"]);
+        assert_eq!(&bframe[off..], &both.payload[..]);
+    }
+
+    #[test]
+    fn pipeline_stage_list_rejects_malformed() {
+        let good = Request {
+            model: "a".into(),
+            raw: false,
+            spans: false,
+            prio: 0,
+            deadline_us: None,
+            credits: false,
+            pipeline: vec!["b".into(), "c".into()],
+            payload: vec![],
+        }
+        .encode();
+        assert!(Request::decode(&good).is_ok());
+        // Truncation anywhere inside the stage list is rejected — the
+        // bytes must never be silently read as payload.
+        for cut in 4..good.len() {
+            assert!(Request::decode(&good[..cut]).is_err(), "cut {cut}");
+        }
+        // Empty stage list (flag set, count 0).
+        let empty = vec![OP_INFER, FLAG_PIPELINE, 0, 1, b'a', 0];
+        assert!(split_header(&empty).unwrap_err().to_string().contains("empty pipeline"));
+        // Empty stage name.
+        let noname = vec![OP_INFER, FLAG_PIPELINE, 0, 1, b'a', 1, 0];
+        assert!(split_header(&noname).is_err());
+        // Duplicate stage vs the head model and within the list.
+        let dup_head = vec![OP_INFER, FLAG_PIPELINE, 0, 1, b'a', 1, 1, b'a'];
+        assert!(split_header(&dup_head).unwrap_err().to_string().contains("duplicate"));
+        let dup_list =
+            vec![OP_INFER, FLAG_PIPELINE, 0, 1, b'a', 2, 1, b'b', 1, b'b'];
+        assert!(split_header(&dup_list).unwrap_err().to_string().contains("duplicate"));
+        // Over the stage cap.
+        let mut long = vec![OP_INFER, FLAG_PIPELINE, 0, 1, b'a', MAX_PIPELINE_STAGES as u8];
+        for k in 0..MAX_PIPELINE_STAGES {
+            long.push(1);
+            long.push(b'b' + k as u8);
+        }
+        assert!(split_header(&long).unwrap_err().to_string().contains("cap"));
+    }
+
+    #[test]
+    fn pipeline_response_roundtrip_and_validation() {
+        let mut span = SpanRec::begin();
+        span.mark(crate::trace::Stamp::RecvDone);
+        span.mark(crate::trace::Stamp::InferDone);
+        let block = span_to_block(&span);
+        let r = Response::Pipeline {
+            stages: vec![
+                PipelineStage {
+                    model: "tiny_mobilenet".into(),
+                    sent_ns: 1_000,
+                    recv_ns: 9_000,
+                    span: block.clone(),
+                },
+                PipelineStage {
+                    model: "tiny_segnet".into(),
+                    sent_ns: 9_500,
+                    recv_ns: 20_000,
+                    span: SpanBlock::default(), // spans off → empty block
+                },
+            ],
+            payload: f32s_to_bytes(&[1.0, 2.0, 3.0]),
+        };
+        let frame = r.encode();
+        assert_eq!(frame[0], 6, "pipeline response is status 6");
+        assert_eq!(Response::decode(&frame).unwrap(), r);
+        // Truncation anywhere inside the stage records is rejected.
+        let payload_start = frame.len() - 12;
+        for cut in 1..payload_start {
+            assert!(Response::decode(&frame[..cut]).is_err(), "cut {cut}");
+        }
+        // Fewer than two stages is not a chain.
+        let mut one = frame.clone();
+        one[1] = 1;
+        assert!(Response::decode(&one).is_err());
+        // Stage windows must be coherent on the gateway clock: a stage
+        // replying before it was sent, or a later stage dispatched
+        // before the earlier one replied, means a client round-trip
+        // (or clock abuse) sneaked in — reject both.
+        let backwards = Response::Pipeline {
+            stages: vec![
+                PipelineStage {
+                    model: "a".into(),
+                    sent_ns: 5,
+                    recv_ns: 10,
+                    span: SpanBlock::default(),
+                },
+                PipelineStage {
+                    model: "b".into(),
+                    sent_ns: 7, // dispatched before stage 0 replied
+                    recv_ns: 30,
+                    span: SpanBlock::default(),
+                },
+            ],
+            payload: vec![],
+        };
+        assert!(Response::decode(&backwards.encode()).is_err());
+    }
+
+    #[test]
+    fn shape_request_and_payload_roundtrip() {
+        let frame = encode_shape_request("tiny_segnet");
+        assert_eq!(request_opcode(&frame).unwrap(), OP_SHAPE);
+        assert_eq!(decode_shape_request(&frame).unwrap(), "tiny_segnet");
+        // The v1 parser rejects the opcode outright, like OP_STATS.
+        assert!(split_header(&frame).is_err());
+        assert!(decode_shape_request(&frame[..5]).is_err());
+        assert!(decode_shape_request(&encode_stats_request()).is_err());
+        let payload = shape_payload(3072, 21504);
+        assert_eq!(parse_shape_payload(&payload).unwrap(), (3072, 21504));
+        assert!(parse_shape_payload(&payload[..7]).is_err());
     }
 }

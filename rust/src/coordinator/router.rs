@@ -1,0 +1,728 @@
+//! Model → backend routing for the multi-coordinator gateway tier.
+//!
+//! The paper's offloaded task traverses "a multi-stage pipeline that
+//! spans across multiple compute nodes and proxies interconnected via a
+//! dedicated network fabric" (§I). This module is the placement brain
+//! of that fabric: a [`Router`] maps each model to one of N coordinator
+//! backends via a pluggable [`Placement`] policy, pools upstream
+//! connections per backend, and routes around backends that saturate
+//! (queue-depth / shed-rate signal from the stats opcode) or die
+//! (marked down, retried on a backoff).
+//!
+//! Two policies:
+//!
+//! * **Consistent hash** — a vnode ring keyed on stable backend
+//!   indices. Placement is a pure function of the model name and the
+//!   backend count, so it survives gateway restarts, and growing the
+//!   fleet from N to N+1 backends moves only ~1/(N+1) of the models.
+//! * **Least loaded** — sticky model → backend assignments, placed (and
+//!   re-placed when the home saturates or dies) on the backend with the
+//!   smallest queued depth in the latest stats snapshot.
+//!
+//! The router itself never parses payloads; the gateway forwards client
+//! frames verbatim and only consults [`Router::route`] for the hop.
+
+use std::collections::HashMap;
+use std::net::SocketAddr;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::transport::tcp::TcpTransport;
+use crate::transport::MsgTransport;
+
+use super::client::{fetch_shape, fetch_stats};
+use super::executor::{ExecStats, LaneStats, N_SEAL_REASONS, N_SHED_REASONS};
+
+/// Default vnodes per backend on the consistent-hash ring. 64 keeps the
+/// ring balanced (worst observed share ~56% on 2 backends over the
+/// 64-model synthetic set pinned in `tests/routing.rs`) while staying
+/// cheap to rebuild.
+pub const DEFAULT_VNODES: usize = 64;
+
+/// Pluggable model → backend placement policy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Placement {
+    /// Vnode hash ring: deterministic, restart-stable, minimal movement
+    /// when the backend count changes.
+    ConsistentHash,
+    /// Sticky assignment to the backend with the smallest queued depth
+    /// per the latest stats snapshots.
+    LeastLoaded,
+}
+
+impl Placement {
+    /// Parse a CLI/scenario spelling.
+    pub fn by_name(name: &str) -> Option<Placement> {
+        match name.to_ascii_lowercase().as_str() {
+            "hash" | "consistent-hash" | "consistent_hash" => Some(Placement::ConsistentHash),
+            "least-loaded" | "least_loaded" | "load" => Some(Placement::LeastLoaded),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Placement::ConsistentHash => "hash",
+            Placement::LeastLoaded => "least-loaded",
+        }
+    }
+
+    /// All policies, for sweep drivers.
+    pub fn all() -> [Placement; 2] {
+        [Placement::ConsistentHash, Placement::LeastLoaded]
+    }
+}
+
+/// FNV-1a 64 with a murmur-style avalanche finalizer. Raw FNV-1a's
+/// high bits barely avalanche on short, similar keys — vnode names
+/// differ by one digit — which skews the ring badly (a 2-backend ring
+/// placed all three tiny models on one backend without the finalizer).
+fn hash64(data: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in data {
+        h ^= u64::from(b);
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h ^= h >> 33;
+    h = h.wrapping_mul(0xff51_afd7_ed55_8ccd);
+    h ^= h >> 33;
+    h = h.wrapping_mul(0xc4ce_b9fe_1a85_ec53);
+    h ^= h >> 33;
+    h
+}
+
+/// Consistent-hash ring over backend *indices* (`backend-0`,
+/// `backend-1`, …): placement depends only on the model name and the
+/// backend count, never on addresses or construction order, so it is
+/// identical across gateway restarts.
+#[derive(Debug, Clone)]
+pub struct HashRing {
+    /// `(ring point, backend index)` sorted by point.
+    points: Vec<(u64, usize)>,
+}
+
+impl HashRing {
+    pub fn new(backends: usize, vnodes_per_backend: usize) -> HashRing {
+        assert!(backends > 0, "ring needs at least one backend");
+        assert!(vnodes_per_backend > 0, "ring needs at least one vnode");
+        let mut points = Vec::with_capacity(backends * vnodes_per_backend);
+        for idx in 0..backends {
+            for v in 0..vnodes_per_backend {
+                points.push((hash64(format!("backend-{idx}#{v}").as_bytes()), idx));
+            }
+        }
+        points.sort_unstable();
+        HashRing { points }
+    }
+
+    /// Home backend of `model`: the owner of the first vnode clockwise
+    /// from the model's hash point (wrapping past the top).
+    pub fn place(&self, model: &str) -> usize {
+        let h = hash64(model.as_bytes());
+        let i = self.points.partition_point(|&(p, _)| p < h);
+        self.points[i % self.points.len()].1
+    }
+}
+
+/// Load signal of a stats snapshot: total queued jobs across lanes.
+pub fn queue_depth(stats: &ExecStats) -> u64 {
+    stats.lanes.iter().map(|l| u64::from(l.depth)).sum()
+}
+
+/// Total sheds (all reasons) across lanes.
+pub fn shed_total(stats: &ExecStats) -> u64 {
+    stats.lanes.iter().map(|l| l.shed.iter().sum::<u64>()).sum()
+}
+
+/// Pure least-loaded choice over per-backend candidates
+/// `(saturated, queue_depth, sticky_assignments)`; `None` marks an
+/// unusable (down) backend. Ordering: non-saturated beats saturated,
+/// then lower depth, then fewer sticky assignments, then lower index.
+/// The assignment tie-break matters at cold start: every depth is 0
+/// before traffic, and without it all models would pile onto backend 0.
+pub fn pick_least_loaded(candidates: &[Option<(bool, u64, u64)>]) -> Option<usize> {
+    let mut best: Option<(bool, u64, u64, usize)> = None;
+    for (idx, cand) in candidates.iter().enumerate() {
+        let Some((sat, depth, assigned)) = *cand else {
+            continue;
+        };
+        let key = (sat, depth, assigned, idx);
+        let better = match best {
+            None => true,
+            Some(b) => key < b,
+        };
+        if better {
+            best = Some(key);
+        }
+    }
+    best.map(|(_, _, _, idx)| idx)
+}
+
+/// Sum per-backend stats snapshots into one fleet view: lanes merged by
+/// model (sorted by name), counters added. This is the gateway's answer
+/// to the stats opcode, so a client sees the same shape whether it asks
+/// one coordinator or the whole fleet.
+pub fn merge_stats<'a, I>(snaps: I) -> ExecStats
+where
+    I: IntoIterator<Item = &'a ExecStats>,
+{
+    let mut interleaves = 0u64;
+    let mut by_model: HashMap<String, LaneStats> = HashMap::new();
+    for s in snaps {
+        interleaves += s.interleaves;
+        for lane in &s.lanes {
+            let e = by_model
+                .entry(lane.model.clone())
+                .or_insert_with(|| LaneStats {
+                    model: lane.model.clone(),
+                    jobs: 0,
+                    calls: 0,
+                    svc_ns: 0,
+                    depth: 0,
+                    sealed: [0; N_SEAL_REASONS],
+                    shed: [0; N_SHED_REASONS],
+                });
+            e.jobs += lane.jobs;
+            e.calls += lane.calls;
+            e.svc_ns += lane.svc_ns;
+            e.depth += lane.depth;
+            for (dst, src) in e.sealed.iter_mut().zip(lane.sealed) {
+                *dst += src;
+            }
+            for (dst, src) in e.shed.iter_mut().zip(lane.shed) {
+                *dst += src;
+            }
+        }
+    }
+    let mut lanes: Vec<LaneStats> = by_model.into_values().collect();
+    lanes.sort_by(|a, b| a.model.cmp(&b.model));
+    ExecStats { interleaves, lanes }
+}
+
+/// Refit an f32 tensor payload to `target_elems` elements for the
+/// stage-to-stage bridge of a pipeline chain: stage K's output rarely
+/// matches stage K+1's input shape (a 1000-class logit vector feeding a
+/// 3072-element image head), so the gateway truncates long tensors and
+/// cycle-repeats short ones. Lossy on purpose — the experiments measure
+/// the transport hop, not model semantics.
+pub fn fit_f32(bytes: &[u8], target_elems: usize) -> Result<Vec<u8>> {
+    if bytes.is_empty() || bytes.len() % 4 != 0 {
+        bail!(
+            "stage output is not an f32 tensor ({} bytes)",
+            bytes.len()
+        );
+    }
+    if target_elems == 0 {
+        bail!("stage input shape is empty");
+    }
+    let want = target_elems * 4;
+    if bytes.len() == want {
+        return Ok(bytes.to_vec());
+    }
+    if bytes.len() > want {
+        return Ok(bytes[..want].to_vec());
+    }
+    let mut out = Vec::with_capacity(want);
+    while out.len() < want {
+        let need = want - out.len();
+        out.extend_from_slice(&bytes[..need.min(bytes.len())]);
+    }
+    Ok(out)
+}
+
+/// How the router reaches one backend: a label for tables/logs plus a
+/// dial closure (any [`MsgTransport`], so a TCP-facing gateway can
+/// dealer into an RDMA/GDR fabric exactly like the relay mode).
+pub struct BackendSpec {
+    pub label: String,
+    connect: Box<dyn Fn() -> Result<Box<dyn MsgTransport>> + Send + Sync>,
+}
+
+impl BackendSpec {
+    pub fn new<F>(label: impl Into<String>, connect: F) -> BackendSpec
+    where
+        F: Fn() -> Result<Box<dyn MsgTransport>> + Send + Sync + 'static,
+    {
+        BackendSpec {
+            label: label.into(),
+            connect: Box::new(connect),
+        }
+    }
+
+    /// A TCP backend at `addr`, labelled by the address.
+    pub fn tcp(addr: SocketAddr) -> BackendSpec {
+        BackendSpec::new(addr.to_string(), move || {
+            Ok(Box::new(TcpTransport::connect(addr)?) as Box<dyn MsgTransport>)
+        })
+    }
+}
+
+/// Router tuning knobs.
+pub struct RouterCfg {
+    pub placement: Placement,
+    /// Vnodes per backend on the hash ring.
+    pub vnodes: usize,
+    /// Cadence of the gateway's background stats refresh.
+    pub refresh: Duration,
+    /// A backend whose snapshot shows at least this many queued jobs is
+    /// saturated and routed around while a lighter backend exists.
+    /// `u64::MAX` disables the depth signal.
+    pub saturation_depth: u64,
+    /// Treat a backend as saturated when its shed counters grew between
+    /// consecutive snapshots (the shed-rate signal).
+    pub shed_saturates: bool,
+    /// How long a dead backend stays quarantined before an optimistic
+    /// redial.
+    pub retry_backoff: Duration,
+}
+
+impl Default for RouterCfg {
+    fn default() -> RouterCfg {
+        RouterCfg {
+            placement: Placement::ConsistentHash,
+            vnodes: DEFAULT_VNODES,
+            refresh: Duration::from_millis(50),
+            saturation_depth: u64::MAX,
+            shed_saturates: true,
+            retry_backoff: Duration::from_millis(500),
+        }
+    }
+}
+
+/// Mutable health/load view of one backend.
+struct BackendState {
+    up: bool,
+    /// Set when the backend is down: when this instant passes, the next
+    /// lease attempts an optimistic redial (half-open).
+    retry_at: Option<Instant>,
+    snapshot: Option<ExecStats>,
+    saturated: bool,
+    /// Shed total of the previous snapshot, for the delta signal.
+    shed_seen: u64,
+}
+
+struct Backend {
+    spec: BackendSpec,
+    state: Mutex<BackendState>,
+    /// Idle pooled connections, reused across requests and clients.
+    pool: Mutex<Vec<Box<dyn MsgTransport>>>,
+    /// Requests answered by this backend (job-share accounting).
+    jobs: AtomicU64,
+    /// Live sticky assignments (least-loaded tie-break).
+    assigned: AtomicU64,
+}
+
+/// The routing tier's placement + health state over N backends.
+pub struct Router {
+    cfg: RouterCfg,
+    backends: Vec<Backend>,
+    ring: HashRing,
+    /// Least-loaded sticky model → backend map.
+    sticky: Mutex<HashMap<String, usize>>,
+    /// Cached model shapes from the shape opcode (pipeline bridge).
+    shapes: Mutex<HashMap<String, (usize, usize)>>,
+    /// Routing decisions that diverged from the policy's home placement
+    /// (hash: walked off the home vnode owner; least-loaded: sticky
+    /// reassignment). Counted per request.
+    rebalances: AtomicU64,
+}
+
+impl Router {
+    pub fn new(specs: Vec<BackendSpec>, cfg: RouterCfg) -> Router {
+        assert!(!specs.is_empty(), "router needs at least one backend");
+        let ring = HashRing::new(specs.len(), cfg.vnodes);
+        let backends = specs
+            .into_iter()
+            .map(|spec| Backend {
+                spec,
+                state: Mutex::new(BackendState {
+                    up: true,
+                    retry_at: None,
+                    snapshot: None,
+                    saturated: false,
+                    shed_seen: 0,
+                }),
+                pool: Mutex::new(Vec::new()),
+                jobs: AtomicU64::new(0),
+                assigned: AtomicU64::new(0),
+            })
+            .collect();
+        Router {
+            cfg,
+            backends,
+            ring,
+            sticky: Mutex::new(HashMap::new()),
+            shapes: Mutex::new(HashMap::new()),
+            rebalances: AtomicU64::new(0),
+        }
+    }
+
+    pub fn cfg(&self) -> &RouterCfg {
+        &self.cfg
+    }
+
+    pub fn n_backends(&self) -> usize {
+        self.backends.len()
+    }
+
+    pub fn label(&self, idx: usize) -> &str {
+        &self.backends[idx].spec.label
+    }
+
+    /// Requests answered per backend (job-share accounting).
+    pub fn jobs_per_backend(&self) -> Vec<u64> {
+        self.backends
+            .iter()
+            .map(|b| b.jobs.load(Ordering::Relaxed))
+            .collect()
+    }
+
+    /// Count one answered request against backend `idx`.
+    pub fn note_job(&self, idx: usize) {
+        self.backends[idx].jobs.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn rebalances(&self) -> u64 {
+        self.rebalances.load(Ordering::Relaxed)
+    }
+
+    /// A backend is usable when up, or down but past its retry backoff
+    /// (half-open: the next lease redials it).
+    pub fn is_usable(&self, idx: usize) -> bool {
+        let st = self.backends[idx].state.lock().unwrap();
+        st.up
+            || st
+                .retry_at
+                .map(|t| Instant::now() >= t)
+                .unwrap_or(true)
+    }
+
+    fn is_saturated(&self, idx: usize) -> bool {
+        self.backends[idx].state.lock().unwrap().saturated
+    }
+
+    /// Choose the backend for one request on `model`, honouring health
+    /// and saturation. Errors only when every backend is down and still
+    /// inside its backoff window.
+    pub fn route(&self, model: &str) -> Result<usize> {
+        let n = self.backends.len();
+        match self.cfg.placement {
+            Placement::ConsistentHash => {
+                let home = self.ring.place(model);
+                let mut fallback = None;
+                for step in 0..n {
+                    let idx = (home + step) % n;
+                    if !self.is_usable(idx) {
+                        continue;
+                    }
+                    if !self.is_saturated(idx) {
+                        if idx != home {
+                            self.rebalances.fetch_add(1, Ordering::Relaxed);
+                        }
+                        return Ok(idx);
+                    }
+                    if fallback.is_none() {
+                        fallback = Some(idx);
+                    }
+                }
+                // Everything usable is saturated: the home (or nearest
+                // usable) backend still beats an error.
+                match fallback {
+                    Some(idx) => {
+                        if idx != home {
+                            self.rebalances.fetch_add(1, Ordering::Relaxed);
+                        }
+                        Ok(idx)
+                    }
+                    None => bail!("all {n} backends down for {model}"),
+                }
+            }
+            Placement::LeastLoaded => {
+                let mut sticky = self.sticky.lock().unwrap();
+                if let Some(&idx) = sticky.get(model) {
+                    if self.is_usable(idx) && !self.is_saturated(idx) {
+                        return Ok(idx);
+                    }
+                }
+                let pick = self.pick_backend(model)?;
+                self.backends[pick].assigned.fetch_add(1, Ordering::Relaxed);
+                match sticky.insert(model.to_string(), pick) {
+                    Some(prev) if prev == pick => {
+                        // Re-placed onto the same backend (e.g. every
+                        // backend saturated): undo the double count.
+                        self.backends[pick].assigned.fetch_sub(1, Ordering::Relaxed);
+                    }
+                    Some(prev) => {
+                        self.backends[prev].assigned.fetch_sub(1, Ordering::Relaxed);
+                        self.rebalances.fetch_add(1, Ordering::Relaxed);
+                    }
+                    None => {}
+                }
+                Ok(pick)
+            }
+        }
+    }
+
+    fn pick_backend(&self, model: &str) -> Result<usize> {
+        let candidates: Vec<Option<(bool, u64, u64)>> = self
+            .backends
+            .iter()
+            .enumerate()
+            .map(|(idx, b)| {
+                if !self.is_usable(idx) {
+                    return None;
+                }
+                let st = b.state.lock().unwrap();
+                let depth = st.snapshot.as_ref().map(queue_depth).unwrap_or(0);
+                Some((st.saturated, depth, b.assigned.load(Ordering::Relaxed)))
+            })
+            .collect();
+        pick_least_loaded(&candidates)
+            .ok_or_else(|| anyhow!("all {} backends down for {model}", self.backends.len()))
+    }
+
+    /// Take a connection to backend `idx` from its pool, dialing a new
+    /// one when empty. A successful dial flips a half-open backend back
+    /// up; a failed dial re-quarantines it.
+    pub fn lease(&self, idx: usize) -> Result<Box<dyn MsgTransport>> {
+        if let Some(conn) = self.backends[idx].pool.lock().unwrap().pop() {
+            return Ok(conn);
+        }
+        match (self.backends[idx].spec.connect)() {
+            Ok(conn) => {
+                let mut st = self.backends[idx].state.lock().unwrap();
+                st.up = true;
+                st.retry_at = None;
+                Ok(conn)
+            }
+            Err(e) => {
+                self.mark_down(idx);
+                Err(e)
+            }
+        }
+    }
+
+    /// Return a healthy connection to the pool for reuse.
+    pub fn release(&self, idx: usize, conn: Box<dyn MsgTransport>) {
+        self.backends[idx].pool.lock().unwrap().push(conn);
+    }
+
+    /// Quarantine a backend after a connect or I/O failure: drop its
+    /// pooled connections (they share the dead peer) and schedule an
+    /// optimistic redial after the backoff.
+    pub fn mark_down(&self, idx: usize) {
+        self.backends[idx].pool.lock().unwrap().clear();
+        let mut st = self.backends[idx].state.lock().unwrap();
+        st.up = false;
+        st.retry_at = Some(Instant::now() + self.cfg.retry_backoff);
+        st.saturated = false;
+        st.snapshot = None;
+    }
+
+    /// Install a stats snapshot for backend `idx`, deriving the
+    /// saturation flag from the depth threshold and the shed delta
+    /// against the previous snapshot. Used by [`Router::refresh_now`]
+    /// and directly by tests (no sockets needed).
+    pub fn install_stats(&self, idx: usize, stats: ExecStats) {
+        let mut st = self.backends[idx].state.lock().unwrap();
+        let sheds = shed_total(&stats);
+        let shed_grew = st.snapshot.is_some() && sheds > st.shed_seen;
+        st.shed_seen = sheds;
+        st.saturated = queue_depth(&stats) >= self.cfg.saturation_depth
+            || (self.cfg.shed_saturates && shed_grew);
+        st.snapshot = Some(stats);
+    }
+
+    /// Fetch fresh stats from every reachable backend (lease → stats
+    /// opcode → release); unreachable backends are marked down. Returns
+    /// how many backends answered. The gateway runs this on the
+    /// [`RouterCfg::refresh`] cadence; tests call it directly for
+    /// determinism.
+    pub fn refresh_now(&self) -> usize {
+        let mut answered = 0;
+        for idx in 0..self.backends.len() {
+            if !self.is_usable(idx) {
+                continue;
+            }
+            let Ok(mut conn) = self.lease(idx) else {
+                continue;
+            };
+            match fetch_stats(conn.as_mut()) {
+                Ok(stats) => {
+                    self.release(idx, conn);
+                    self.install_stats(idx, stats);
+                    answered += 1;
+                }
+                Err(_) => self.mark_down(idx),
+            }
+        }
+        answered
+    }
+
+    /// Merge the latest snapshots into one fleet view ([`merge_stats`]).
+    pub fn merged_stats(&self) -> ExecStats {
+        let snaps: Vec<ExecStats> = self
+            .backends
+            .iter()
+            .filter_map(|b| b.state.lock().unwrap().snapshot.clone())
+            .collect();
+        merge_stats(snaps.iter())
+    }
+
+    /// Resolve (and cache) `model`'s per-request tensor shape by asking
+    /// backend `idx` the shape opcode. The connection is dropped rather
+    /// than pooled on failure — an Err reply leaves it healthy but a
+    /// transport fault does not, and redialing is cheap.
+    pub fn shape_of(&self, model: &str, idx: usize) -> Result<(usize, usize)> {
+        if let Some(&shape) = self.shapes.lock().unwrap().get(model) {
+            return Ok(shape);
+        }
+        let mut conn = self.lease(idx)?;
+        match fetch_shape(conn.as_mut(), model) {
+            Ok(shape) => {
+                self.release(idx, conn);
+                self.shapes.lock().unwrap().insert(model.to_string(), shape);
+                Ok(shape)
+            }
+            Err(e) => Err(e),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lane(model: &str, depth: u32, shed: u64) -> LaneStats {
+        LaneStats {
+            model: model.to_string(),
+            jobs: 1,
+            calls: 1,
+            svc_ns: 1000,
+            depth,
+            sealed: [0; N_SEAL_REASONS],
+            shed: [shed, 0],
+        }
+    }
+
+    fn snap(lanes: Vec<LaneStats>) -> ExecStats {
+        ExecStats {
+            interleaves: 0,
+            lanes,
+        }
+    }
+
+    #[test]
+    fn ring_is_deterministic_and_covers_all_backends() {
+        let a = HashRing::new(3, DEFAULT_VNODES);
+        let b = HashRing::new(3, DEFAULT_VNODES);
+        let mut seen = [false; 3];
+        for k in 0..200 {
+            let model = format!("model-{k}");
+            let idx = a.place(&model);
+            assert_eq!(idx, b.place(&model), "placement must be pure");
+            assert!(idx < 3);
+            seen[idx] = true;
+        }
+        assert!(seen.iter().all(|&s| s), "every backend owns some models");
+    }
+
+    #[test]
+    fn pick_least_loaded_orders_by_saturation_depth_assignment_index() {
+        // Lower depth wins.
+        assert_eq!(
+            pick_least_loaded(&[Some((false, 5, 0)), Some((false, 2, 0))]),
+            Some(1)
+        );
+        // Saturation loses to any non-saturated backend, even deeper.
+        assert_eq!(
+            pick_least_loaded(&[Some((true, 0, 0)), Some((false, 9, 0))]),
+            Some(1)
+        );
+        // Depth tie: fewer sticky assignments wins (cold-start spread).
+        assert_eq!(
+            pick_least_loaded(&[Some((false, 0, 3)), Some((false, 0, 1))]),
+            Some(1)
+        );
+        // Full tie: lowest index wins; down backends are skipped.
+        assert_eq!(
+            pick_least_loaded(&[None, Some((false, 0, 0)), Some((false, 0, 0))]),
+            Some(1)
+        );
+        assert_eq!(pick_least_loaded(&[None, None]), None);
+    }
+
+    #[test]
+    fn merge_stats_sums_lanes_by_model() {
+        let a = snap(vec![lane("m0", 2, 1), lane("m1", 1, 0)]);
+        let b = snap(vec![lane("m1", 3, 2)]);
+        let merged = merge_stats([&a, &b]);
+        assert_eq!(merged.lanes.len(), 2);
+        assert_eq!(merged.lanes[0].model, "m0");
+        assert_eq!(merged.lanes[1].model, "m1");
+        assert_eq!(merged.lanes[1].jobs, 2);
+        assert_eq!(merged.lanes[1].depth, 4);
+        assert_eq!(merged.lanes[1].shed[0], 2);
+        assert_eq!(queue_depth(&merged), 6);
+        assert_eq!(shed_total(&merged), 3);
+    }
+
+    #[test]
+    fn fit_f32_truncates_repeats_and_rejects() {
+        let four = vec![1u8, 2, 3, 4];
+        assert_eq!(fit_f32(&four, 1).unwrap(), four);
+        // Truncate: 2 elems → 1.
+        let eight = vec![1u8, 2, 3, 4, 5, 6, 7, 8];
+        assert_eq!(fit_f32(&eight, 1).unwrap(), four);
+        // Cycle-repeat: 1 elem → 3, including a partial tail repeat.
+        assert_eq!(
+            fit_f32(&four, 3).unwrap(),
+            vec![1, 2, 3, 4, 1, 2, 3, 4, 1, 2, 3, 4]
+        );
+        assert!(fit_f32(&[], 1).is_err());
+        assert!(fit_f32(&[1, 2, 3], 1).is_err(), "not f32-aligned");
+        assert!(fit_f32(&four, 0).is_err());
+    }
+
+    #[test]
+    fn placement_names_round_trip() {
+        for p in Placement::all() {
+            assert_eq!(Placement::by_name(p.name()), Some(p));
+        }
+        assert_eq!(Placement::by_name("consistent_hash"), Some(Placement::ConsistentHash));
+        assert_eq!(Placement::by_name("bogus"), None);
+    }
+
+    #[test]
+    fn shed_delta_saturates_and_depth_threshold_applies() {
+        let specs = vec![
+            BackendSpec::new("a", || bail!("offline test backend")),
+            BackendSpec::new("b", || bail!("offline test backend")),
+        ];
+        let router = Router::new(
+            specs,
+            RouterCfg {
+                placement: Placement::LeastLoaded,
+                saturation_depth: 10,
+                ..RouterCfg::default()
+            },
+        );
+        // First snapshot only records the shed baseline.
+        router.install_stats(0, snap(vec![lane("m", 0, 5)]));
+        router.install_stats(1, snap(vec![lane("m", 0, 0)]));
+        assert_eq!(router.route("m").unwrap(), 0, "tie breaks to index 0");
+        // Backend 0's sheds grow → saturated → sticky assignment moves.
+        router.install_stats(0, snap(vec![lane("m", 0, 6)]));
+        assert_eq!(router.route("m").unwrap(), 1);
+        assert_eq!(router.rebalances(), 1);
+        // Depth threshold saturates backend 1; backend 0's flag cleared
+        // by a calm snapshot → moves back.
+        router.install_stats(0, snap(vec![lane("m", 0, 6)]));
+        router.install_stats(1, snap(vec![lane("m", 12, 0)]));
+        assert_eq!(router.route("m").unwrap(), 0);
+        assert_eq!(router.rebalances(), 2);
+    }
+}

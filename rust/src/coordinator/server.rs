@@ -26,7 +26,7 @@ use crate::transport::{Acceptor, MsgTransport, RecvMsg};
 
 use super::conn_track::ConnTracker;
 use super::executor::{ExecError, Executor};
-use super::protocol::{self, f32s_to_bytes, RequestMeta, Response};
+use super::protocol::{self, f32s_to_bytes, RequestMeta, Response, StageNs};
 
 /// Decode one received message into request metadata plus the payload
 /// tensor, preserving a region view for raw GDR payloads.
@@ -88,6 +88,29 @@ pub fn handle_conn(mut t: impl MsgTransport, exec: &Executor) {
             }
             continue;
         }
+        if msg_opcode(&msg) == Some(protocol::OP_SHAPE) {
+            let frame = match &msg {
+                RecvMsg::Host(v) => v.clone(),
+                RecvMsg::Region(s) => s.with(|b| b.to_vec()),
+            };
+            drop(msg);
+            // Answered from the manifest without touching the lanes —
+            // the routing gateway uses this to size pipeline bridges.
+            let resp = match protocol::decode_shape_request(&frame)
+                .and_then(|model| exec.shape(&model))
+            {
+                Ok((in_elems, out_elems)) => Response::Ok {
+                    stages: StageNs::default(),
+                    span: None,
+                    payload: protocol::shape_payload(in_elems, out_elems),
+                },
+                Err(e) => Response::Err(format!("bad shape request: {e}")),
+            };
+            if t.send(&resp.encode()).is_err() {
+                return;
+            }
+            continue;
+        }
         let mut span = SpanRec::begin_at(t.recv_boundary().unwrap_or_else(Instant::now));
         // With FLAG_CREDITS set, every response — Ok, Shed and Err alike
         // — carries a backpressure hint for the request's lane (the
@@ -96,6 +119,17 @@ pub fn handle_conn(mut t: impl MsgTransport, exec: &Executor) {
         // Err goes out unwrapped.
         let (resp, credit_model) = match request_from_msg(msg) {
             Err(e) => (Response::Err(format!("bad request: {e}")), None),
+            // A plain coordinator parses the stage list but never
+            // chains: that is the routing gateway's job, and silently
+            // running only stage 0 would corrupt pipeline results.
+            Ok((meta, _)) if !meta.pipeline.is_empty() => (
+                Response::Err(format!(
+                    "pipeline chaining requires the routing gateway ({} + {} chained stages)",
+                    meta.model,
+                    meta.pipeline.len()
+                )),
+                None,
+            ),
             Ok((meta, payload)) => {
                 span.mark(Stamp::RecvDone);
                 let resp = match exec.infer_deadline(

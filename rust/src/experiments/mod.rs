@@ -8,6 +8,7 @@
 pub mod batch_sweep;
 pub mod figs;
 pub mod mix_sweep;
+pub mod shard_sweep;
 pub mod slo_sweep;
 pub mod stage_break;
 pub mod table;
@@ -16,6 +17,7 @@ pub mod transport_matrix;
 
 pub use batch_sweep::{run_batch_sweep, SweepCfg};
 pub use mix_sweep::{run_mix_sweep, run_sim_mix, MixCfg};
+pub use shard_sweep::{run_shard_sweep, ShardCfg};
 pub use slo_sweep::{run_slo_sweep, SloCfg};
 pub use stage_break::{run_sim_stage_break, run_stage_break, StageBreakCfg};
 pub use table::Table;
@@ -122,6 +124,7 @@ pub(crate) fn drive_model_clients_slo(
         deadline_us,
         credits,
         timeout: None,
+        pipeline: vec![],
     };
     let stats = run_on(
         |i| {

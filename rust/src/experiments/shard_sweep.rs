@@ -1,0 +1,448 @@
+//! Live-plane sharding sweep: aggregate throughput and tail latency per
+//! **backend count × transport × placement policy** through the routing
+//! gateway (`accelserve shardsweep`) — the repo's multi-coordinator
+//! scaling experiment.
+//!
+//! The paper's serving pipeline "spans across multiple compute nodes
+//! and proxies interconnected via a dedicated network fabric" (§I);
+//! this sweep builds that fabric in-process. Each cell starts N fresh
+//! single-stream coordinators, fronts them with a [`Router`] under the
+//! chosen placement policy, and drives a fixed closed-loop client pool
+//! spread over three models. With one backend the shared stream is the
+//! bottleneck; with two, placement splits the models across backends
+//! and aggregate throughput should approach 2× — the scaling curve the
+//! table renders. A final pipeline row chains
+//! `tiny_mobilenet → tiny_segnet` through [`FLAG_PIPELINE`] requests:
+//! the gateway runs stage 1 on its placed backend feeding stage 0's
+//! output straight across the fabric, with **zero client round-trips**
+//! between stages — verified here by decoding a spans-on chain reply
+//! and checking the stage windows sit back-to-back on the gateway
+//! clock.
+//!
+//! [`FLAG_PIPELINE`]: crate::coordinator::protocol::FLAG_PIPELINE
+//!
+//! Every cell cross-checks the router's per-backend job accounting
+//! against the client tally: single-stage cells must satisfy
+//! `Σ backend jobs == oks`, pipeline cells `Σ backend jobs == 2 × oks`
+//! (each chained request is one job per stage).
+
+use std::path::PathBuf;
+use std::sync::atomic::AtomicU64;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::coordinator::protocol::{Request, Response};
+use crate::coordinator::router::{BackendSpec, Placement, Router, RouterCfg};
+use crate::coordinator::{
+    handle_conn, handle_routed_conn, run_client_loop, BatchCfg, Executor, LoadCfg, SchedCfg,
+    DEFAULT_QUEUE_CAP,
+};
+use crate::metrics::stats::StageAgg;
+use crate::models::gen;
+use crate::transport::{connected_pair, TransportKind};
+
+use super::{drain_executor, Table};
+
+/// The model mix every cell serves, assigned to clients round-robin.
+/// Three models over two backends forces an uneven (2:1) split under
+/// any placement — the realistic sharding shape.
+pub const SHARD_MODELS: [&str; 3] = ["tiny_mobilenet", "tiny_resnet", "tiny_segnet"];
+
+/// The chain the pipeline row exercises: stage 0 → stage 1.
+pub const PIPELINE_STAGES: [&str; 2] = ["tiny_mobilenet", "tiny_segnet"];
+
+/// Sharding-sweep configuration.
+#[derive(Debug, Clone)]
+pub struct ShardCfg {
+    /// Backend counts to sweep (one row per count × transport ×
+    /// placement).
+    pub backends: Vec<usize>,
+    pub placements: Vec<Placement>,
+    pub transports: Vec<TransportKind>,
+    /// Closed-loop clients, spread over [`SHARD_MODELS`] round-robin.
+    pub clients: usize,
+    /// Measured requests per client.
+    pub requests: usize,
+    /// Discarded leading requests per client.
+    pub warmup: usize,
+    /// Execution streams per backend (1 keeps each backend trivially
+    /// saturable, so the scaling curve is about placement, not GPUs).
+    pub streams: usize,
+    /// Append a pipeline row (2-stage chain) at the largest backend
+    /// count per transport.
+    pub pipeline: bool,
+    /// Artifact directory; `None` generates into a per-process temp dir.
+    pub artifacts_dir: Option<PathBuf>,
+}
+
+impl Default for ShardCfg {
+    fn default() -> ShardCfg {
+        ShardCfg {
+            backends: vec![1, 2],
+            placements: Placement::all().to_vec(),
+            transports: vec![TransportKind::Tcp],
+            clients: 6,
+            requests: 30,
+            warmup: 3,
+            streams: 1,
+            pipeline: true,
+            artifacts_dir: None,
+        }
+    }
+}
+
+/// Start `n` fresh single-purpose backends and wrap them in a router.
+/// Each [`BackendSpec`] dials an in-process connected pair and spawns a
+/// [`handle_conn`] server thread for it, parked in `threads` so the
+/// cell can join them once the router (and with it every pooled
+/// connection) is gone.
+fn build_router(
+    kind: TransportKind,
+    execs: &[Arc<Executor>],
+    placement: Placement,
+    hint: usize,
+    threads: &Arc<Mutex<Vec<std::thread::JoinHandle<()>>>>,
+) -> Router {
+    let specs = execs
+        .iter()
+        .enumerate()
+        .map(|(i, exec)| {
+            let exec = exec.clone();
+            let threads = threads.clone();
+            BackendSpec::new(format!("backend-{i}"), move || {
+                let (client, server) = connected_pair(kind, hint)?;
+                let e2 = exec.clone();
+                threads
+                    .lock()
+                    .unwrap()
+                    .push(std::thread::spawn(move || handle_conn(server, &e2)));
+                Ok(client)
+            })
+        })
+        .collect();
+    Router::new(
+        specs,
+        RouterCfg {
+            placement,
+            ..RouterCfg::default()
+        },
+    )
+}
+
+/// What one cell measured.
+struct CellOut {
+    agg: StageAgg,
+    /// Requests answered OK (warmup included).
+    oks: usize,
+    duration_s: f64,
+    rebalances: u64,
+}
+
+/// Drive the client pool through routed gateway connections. Every
+/// client gets a private connected pair whose server side runs
+/// [`handle_routed_conn`] against the shared router; the scope joins
+/// both halves before returning.
+fn drive_cell(
+    kind: TransportKind,
+    router: &Router,
+    cfg: &ShardCfg,
+    hint: usize,
+    pipeline: bool,
+) -> Result<CellOut> {
+    let payload_elems = gen::IN_H * gen::IN_W * gen::CHANNELS;
+    let fwd = AtomicU64::new(0);
+    let t0 = Instant::now();
+    let runs: Vec<_> = std::thread::scope(|s| -> Result<Vec<_>> {
+        let mut handles = Vec::with_capacity(cfg.clients);
+        for c in 0..cfg.clients {
+            let (mut client, server) = connected_pair(kind, hint)?;
+            let fwd_ref = &fwd;
+            s.spawn(move || handle_routed_conn(server, router, fwd_ref));
+            let lc = LoadCfg {
+                model: if pipeline {
+                    PIPELINE_STAGES[0].to_string()
+                } else {
+                    SHARD_MODELS[c % SHARD_MODELS.len()].to_string()
+                },
+                raw: false,
+                spans: false,
+                n_clients: cfg.clients,
+                requests_per_client: cfg.requests + cfg.warmup,
+                priority_client: false,
+                payload_elems,
+                warmup: cfg.warmup,
+                deadline_us: None,
+                credits: false,
+                timeout: None,
+                pipeline: if pipeline {
+                    vec![PIPELINE_STAGES[1].to_string()]
+                } else {
+                    vec![]
+                },
+            };
+            handles.push(s.spawn(move || run_client_loop(client.as_mut(), &lc, c)));
+        }
+        handles
+            .into_iter()
+            .map(|h| h.join().map_err(|_| anyhow!("shardsweep client panicked")))
+            .collect()
+    })?;
+    let duration_s = t0.elapsed().as_secs_f64();
+
+    let mut agg = StageAgg::default();
+    let mut oks = 0usize;
+    for run in runs {
+        if let Some(e) = run.fatal {
+            return Err(e.context("shardsweep client died"));
+        }
+        if run.req_errors > 0 || run.sheds > 0 {
+            bail!(
+                "unloaded shardsweep cell saw {} request error(s), {} shed(s)",
+                run.req_errors,
+                run.sheds
+            );
+        }
+        oks += run.oks;
+        for rec in &run.recs {
+            agg.push(&rec.rec);
+        }
+    }
+    Ok(CellOut {
+        agg,
+        oks,
+        duration_s,
+        rebalances: router.rebalances(),
+    })
+}
+
+/// One spans-on chained request through the router, decoded and checked
+/// for the zero-round-trip property: consecutive stage windows must sit
+/// back-to-back on the gateway clock (stage K+1 dispatched after stage
+/// K replied, with no hop back to the client in between), and each
+/// stage must carry the backend's span timeline.
+fn verify_pipeline_spans(kind: TransportKind, router: &Router, hint: usize) -> Result<()> {
+    let payload_elems = gen::IN_H * gen::IN_W * gen::CHANNELS;
+    let fwd = AtomicU64::new(0);
+    std::thread::scope(|s| -> Result<()> {
+        let (mut client, server) = connected_pair(kind, hint)?;
+        let fwd_ref = &fwd;
+        s.spawn(move || handle_routed_conn(server, router, fwd_ref));
+        let req = Request {
+            model: PIPELINE_STAGES[0].to_string(),
+            raw: false,
+            spans: true,
+            prio: 0,
+            deadline_us: None,
+            credits: false,
+            pipeline: vec![PIPELINE_STAGES[1].to_string()],
+            payload: crate::coordinator::protocol::f32s_to_bytes(&vec![0.5; payload_elems]),
+        };
+        client.send(&req.encode())?;
+        let resp = Response::decode(&client.recv()?)?;
+        drop(client);
+        let Response::Pipeline { stages, payload } = resp else {
+            bail!("pipeline probe answered with a non-pipeline response");
+        };
+        if stages.len() != PIPELINE_STAGES.len() {
+            bail!("chain ran {} stages, wanted {}", stages.len(), PIPELINE_STAGES.len());
+        }
+        for (stage, want) in stages.iter().zip(PIPELINE_STAGES) {
+            if stage.model != want {
+                bail!("stage order corrupted: got {}, wanted {want}", stage.model);
+            }
+            if stage.span.is_empty() {
+                bail!("stage {} returned no span timeline", stage.model);
+            }
+            if stage.recv_ns < stage.sent_ns {
+                bail!("stage {} window runs backwards", stage.model);
+            }
+        }
+        // The zero-round-trip acceptance check: stage 1 left the gateway
+        // only after stage 0's reply arrived, on the same clock — there
+        // is no client-side gap for a round-trip to hide in.
+        if stages[1].sent_ns < stages[0].recv_ns {
+            bail!("stage 1 dispatched before stage 0 replied");
+        }
+        if payload.is_empty() || payload.len() % 4 != 0 {
+            bail!("chain output is not an f32 tensor ({} bytes)", payload.len());
+        }
+        Ok(())
+    })
+}
+
+/// Run the sweep. Each cell: N fresh executors → router → fixed client
+/// pool → one table row. Pipeline rows ride at the largest backend
+/// count per transport and additionally verify the span timeline of a
+/// chained request.
+pub fn run_shard_sweep(cfg: &ShardCfg) -> Result<Table> {
+    let dir: PathBuf = match &cfg.artifacts_dir {
+        Some(d) => d.clone(),
+        None => gen::ensure_test_artifacts().to_path_buf(),
+    };
+    gen::ensure_artifacts(&dir)?;
+    let warm: Vec<String> = SHARD_MODELS.iter().map(|m| format!("{m}_b1")).collect();
+    let warm_refs: Vec<&str> = warm.iter().map(String::as_str).collect();
+    // Big enough for the fattest frame in the mix (the segnet output
+    // tensor), so RDMA/GDR stay single-chunk on the inter-stage hop.
+    let hint = 21504 * 4 + 96;
+
+    let mut t = Table::new(
+        format!(
+            "shard sweep — {} clients over {:?}, {} stream(s)/backend, {} requests/client",
+            cfg.clients, SHARD_MODELS, cfg.streams, cfg.requests
+        ),
+        &["backends", "clients", "p50_ms", "p99_ms", "thr_rps", "share_max", "rebal"],
+    );
+    for &kind in &cfg.transports {
+        for &placement in &cfg.placements {
+            for &n in &cfg.backends {
+                let row = format!("{} n{n} {}", kind.name(), placement.name());
+                run_cell(cfg, &dir, &warm_refs, kind, placement, n, hint, false, &row, &mut t)
+                    .with_context(|| format!("cell {row}"))?;
+            }
+        }
+        if cfg.pipeline {
+            let n = cfg.backends.iter().copied().max().unwrap_or(1);
+            let row = format!("{} pipe n{n}", kind.name());
+            run_cell(
+                cfg,
+                &dir,
+                &warm_refs,
+                kind,
+                Placement::ConsistentHash,
+                n,
+                hint,
+                true,
+                &row,
+                &mut t,
+            )
+            .with_context(|| format!("cell {row}"))?;
+        }
+    }
+    t.note("share_max = largest backend's share of answered jobs (%); rebal = routing decisions diverging from the home placement");
+    t.note("pipe rows chain tiny_mobilenet → tiny_segnet inside the gateway (FLAG_PIPELINE): one client round-trip for the whole chain; a spans-on probe verifies the stage windows are back-to-back");
+    t.note("cross-checked per cell: Σ backend jobs == oks (×2 for pipeline rows, one job per chained stage)");
+    Ok(t)
+}
+
+/// One cell: fresh executors, router, client pool, invariants, row.
+#[allow(clippy::too_many_arguments)]
+fn run_cell(
+    cfg: &ShardCfg,
+    dir: &std::path::Path,
+    warm_refs: &[&str],
+    kind: TransportKind,
+    placement: Placement,
+    n: usize,
+    hint: usize,
+    pipeline: bool,
+    row: &str,
+    t: &mut Table,
+) -> Result<()> {
+    let sched = || SchedCfg {
+        // Batching off: each backend's throughput cap is exactly
+        // streams / svc, so the scaling curve isolates placement.
+        default: BatchCfg::none(),
+        per_model: Vec::new(),
+        queue_cap: DEFAULT_QUEUE_CAP,
+    };
+    let mut execs = Vec::with_capacity(n);
+    for _ in 0..n {
+        execs.push(Arc::new(
+            Executor::start_with(dir, cfg.streams, sched(), warm_refs)
+                .with_context(|| format!("shardsweep executor over {}", dir.display()))?,
+        ));
+    }
+    let backend_threads = Arc::new(Mutex::new(Vec::new()));
+    let router = build_router(kind, &execs, placement, hint, &backend_threads);
+    let out = drive_cell(kind, &router, cfg, hint, pipeline);
+    let probe = if pipeline && out.is_ok() {
+        verify_pipeline_spans(kind, &router, hint)
+    } else {
+        Ok(())
+    };
+    // Teardown in dependency order: the router owns the pooled backend
+    // connections, so dropping it lets every parked `handle_conn`
+    // thread see the close and exit before we reclaim the executors.
+    let jobs_after = router.jobs_per_backend();
+    drop(router);
+    for th in backend_threads.lock().unwrap().drain(..) {
+        th.join().map_err(|_| anyhow!("backend server thread panicked"))?;
+    }
+    for exec in execs {
+        if !drain_executor(exec) {
+            bail!("shardsweep still holds executor clones");
+        }
+    }
+    let out = out?;
+    probe?;
+
+    // Job-share bookkeeping must reconcile with the client tally; the
+    // spans probe (pipeline rows) adds one more chained request.
+    let stages = if pipeline { 2 } else { 1 };
+    let oks_total = out.oks + usize::from(pipeline);
+    let expect = (oks_total * stages) as u64;
+    let jobs_sum: u64 = jobs_after.iter().sum();
+    if jobs_sum != expect {
+        bail!("job accounting drift: backends answered {jobs_sum}, clients saw {expect}");
+    }
+
+    let lat = out.agg.total.summary();
+    let share_max = 100.0 * jobs_after.iter().copied().max().unwrap_or(0) as f64
+        / jobs_sum.max(1) as f64;
+    t.row(
+        row.to_string(),
+        vec![
+            n as f64,
+            cfg.clients as f64,
+            lat.p50,
+            lat.p99,
+            out.oks as f64 / out.duration_s.max(f64::EPSILON),
+            share_max,
+            out.rebalances as f64,
+        ],
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shardsweep_two_backends_scale_and_pipeline_chains() {
+        // Smoke: tcp only, hash placement, 1 vs 2 backends plus the
+        // pipeline row. Two single-stream backends must clear >1.5× the
+        // aggregate throughput of one at saturation (six closed-loop
+        // clients keep both sides pinned), and the pipeline row must
+        // complete its chain — the span back-to-back check runs inside
+        // the cell and fails the sweep on any client round-trip.
+        let cfg = ShardCfg {
+            backends: vec![1, 2],
+            placements: vec![Placement::ConsistentHash],
+            transports: vec![TransportKind::Tcp],
+            requests: 25,
+            warmup: 3,
+            ..ShardCfg::default()
+        };
+        let t = run_shard_sweep(&cfg).unwrap();
+        assert_eq!(t.rows.len(), 3);
+        let thr1 = t.get("tcp n1 hash", "thr_rps").unwrap();
+        let thr2 = t.get("tcp n2 hash", "thr_rps").unwrap();
+        assert!(thr1 > 0.0);
+        assert!(
+            thr2 > 1.5 * thr1,
+            "2 backends reached only {thr2:.1} rps vs {thr1:.1} on one — not scaling"
+        );
+        // Clean cells never walk off the home placement.
+        assert_eq!(t.get("tcp n1 hash", "rebal").unwrap(), 0.0);
+        assert_eq!(t.get("tcp n2 hash", "rebal").unwrap(), 0.0);
+        // The known 2-backend split of the three models is 2:1.
+        let share = t.get("tcp n2 hash", "share_max").unwrap();
+        assert!(share < 100.0, "one backend answered everything");
+        let pipe = t.get("tcp pipe n2", "thr_rps").unwrap();
+        assert!(pipe > 0.0, "pipeline row served nothing");
+    }
+}

@@ -14,6 +14,9 @@
 //! accelserve stagebreak --policies 1,8@2000 [--pct 99] [--sim]   # per-stage span breakdown
 //! accelserve slosweep --factors 1,2,4,8 [--deadline-us 5000]     # overload x SLO shedding
 //! accelserve throttlesweep --factors 2,4,8                       # credit backpressure off vs on
+//! accelserve gateway --addr :7008 --backend h1:7007 --backend h2:7007 \
+//!                    --policy least-loaded                        # multi-backend routing tier
+//! accelserve shardsweep --backends 1,2 --placements hash,least-loaded # scaling x placement
 //! accelserve sim     --model ResNet50 --transport gdr -c 16 -n 300
 //! accelserve fig     --which 5 [--requests 300] [--csv]          # regen a figure
 //! accelserve tables  --which 2|3                                 # paper tables
@@ -22,8 +25,8 @@
 use std::sync::Arc;
 
 use accelserve::coordinator::{
-    fetch_stats, gateway_tcp, run_tcp, serve_tcp, BatchCfg, Executor, LoadCfg, ModelPolicy,
-    SchedCfg, SEAL_REASON_NAMES, SHED_REASON_NAMES,
+    fetch_stats, gateway_tcp, gateway_tcp_multi, run_tcp, serve_tcp, BatchCfg, Executor, LoadCfg,
+    ModelPolicy, Placement, RouterCfg, SchedCfg, SEAL_REASON_NAMES, SHED_REASON_NAMES,
 };
 use accelserve::experiments::figs;
 use accelserve::gpu::Sharing;
@@ -46,6 +49,7 @@ fn main() {
         Some("stagebreak") => cmd_stagebreak(&args[1..]),
         Some("slosweep") => cmd_slosweep(&args[1..]),
         Some("throttlesweep") => cmd_throttlesweep(&args[1..]),
+        Some("shardsweep") => cmd_shardsweep(&args[1..]),
         Some("sim") => cmd_sim(&args[1..]),
         Some("fig") => cmd_fig(&args[1..]),
         Some("tables") => cmd_tables(&args[1..]),
@@ -58,7 +62,7 @@ fn main() {
 }
 
 const HELP: &str = "accelserve — model serving with hardware-accelerated communication
-subcommands: gen-artifacts | serve | gateway | client | stats | matrix | batchsweep | mixsweep | stagebreak | slosweep | throttlesweep | sim | fig | tables (see README.md and docs/EXPERIMENTS.md)";
+subcommands: gen-artifacts | serve | gateway | client | stats | matrix | batchsweep | mixsweep | stagebreak | slosweep | throttlesweep | shardsweep | sim | fig | tables (see README.md and docs/EXPERIMENTS.md)";
 
 /// Generate the serving artifacts (HLO text + manifest.json) offline —
 /// no Python/JAX required (the rust twin of `make artifacts`).
@@ -718,6 +722,77 @@ fn cmd_throttlesweep(a: &[String]) -> i32 {
     0
 }
 
+/// Multi-backend sharding sweep: backend count × transport × placement
+/// policy through the routing gateway, plus a 2-stage pipeline row
+/// (`accelserve shardsweep`).
+fn cmd_shardsweep(a: &[String]) -> i32 {
+    let mut cfg = accelserve::experiments::ShardCfg::default();
+    if let Some(list) = flag(a, "--backends") {
+        let mut counts = Vec::new();
+        for spec in list.split(',') {
+            match spec.parse::<usize>() {
+                Ok(n) if n > 0 => counts.push(n),
+                _ => {
+                    eprintln!("bad --backends entry {spec:?} (want positive counts like 1,2)");
+                    return 2;
+                }
+            }
+        }
+        cfg.backends = counts;
+    }
+    if let Some(list) = flag(a, "--placements") {
+        let mut placements = Vec::new();
+        for spec in list.split(',') {
+            match Placement::by_name(spec) {
+                Some(p) => placements.push(p),
+                None => {
+                    eprintln!("bad --placements entry {spec:?} (want hash or least-loaded)");
+                    return 2;
+                }
+            }
+        }
+        cfg.placements = placements;
+    }
+    if let Some(n) = flag(a, "--clients").and_then(|v| v.parse::<usize>().ok()) {
+        cfg.clients = n.max(1);
+    }
+    if let Some(n) = flag(a, "--requests").and_then(|v| v.parse::<usize>().ok()) {
+        cfg.requests = n.max(1);
+        cfg.warmup = (n / 10).max(2);
+    }
+    if let Some(n) = flag(a, "--streams").and_then(|v| v.parse::<usize>().ok()) {
+        cfg.streams = n.max(1);
+    }
+    if a.iter().any(|x| x == "--no-pipeline") {
+        cfg.pipeline = false;
+    }
+    if let Some(dir) = flag(a, "--artifacts") {
+        cfg.artifacts_dir = Some(dir.into());
+    }
+    if let Some(list) = flag(a, "--transports") {
+        match parse_transports(list) {
+            Ok(kinds) => cfg.transports = kinds,
+            Err(e) => {
+                eprintln!("{e}");
+                return 2;
+            }
+        }
+    }
+    let t = match accelserve::experiments::run_shard_sweep(&cfg) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("shardsweep: {e:#}");
+            return 1;
+        }
+    };
+    if a.iter().any(|x| x == "--csv") {
+        print!("{}", t.to_csv());
+    } else {
+        print!("{}", t.render());
+    }
+    0
+}
+
 /// Query a running server's executor counters over the stats opcode
 /// (`accelserve stats`): per-lane jobs / calls / mean service time /
 /// queue depth / sealed reasons / shed reasons plus the cross-model
@@ -872,17 +947,64 @@ fn cmd_serve(a: &[String]) -> i32 {
 
 fn cmd_gateway(a: &[String]) -> i32 {
     let addr = flag_or(a, "--addr", "127.0.0.1:7008");
-    let upstream = flag_or(a, "--upstream", "127.0.0.1:7007");
-    let up: std::net::SocketAddr = match upstream.parse() {
-        Ok(u) => u,
-        Err(e) => {
-            eprintln!("bad upstream {upstream}: {e}");
-            return 2;
+    // Routing mode: one `--backend addr` per coordinator (repeatable).
+    // Without any, fall back to the v1 single-upstream relay.
+    let backend_flags = flags_all(a, "--backend");
+    if backend_flags.is_empty() {
+        let upstream = flag_or(a, "--upstream", "127.0.0.1:7007");
+        let up: std::net::SocketAddr = match upstream.parse() {
+            Ok(u) => u,
+            Err(e) => {
+                eprintln!("bad upstream {upstream}: {e}");
+                return 2;
+            }
+        };
+        return match gateway_tcp(addr, up) {
+            Ok(h) => {
+                println!("gateway on {} -> {up}", h.addr);
+                loop {
+                    std::thread::sleep(std::time::Duration::from_secs(3600));
+                }
+            }
+            Err(e) => {
+                eprintln!("gateway: {e:#}");
+                1
+            }
+        };
+    }
+    let mut backends = Vec::with_capacity(backend_flags.len());
+    for b in &backend_flags {
+        match b.parse::<std::net::SocketAddr>() {
+            Ok(s) => backends.push(s),
+            Err(e) => {
+                eprintln!("bad backend {b}: {e}");
+                return 2;
+            }
         }
+    }
+    let policy = flag_or(a, "--policy", "hash");
+    let Some(placement) = Placement::by_name(policy) else {
+        eprintln!("bad --policy {policy} (want hash or least-loaded)");
+        return 2;
     };
-    match gateway_tcp(addr, up) {
+    let mut rcfg = RouterCfg {
+        placement,
+        ..RouterCfg::default()
+    };
+    if let Some(ms) = flag(a, "--refresh-ms").and_then(|v| v.parse::<u64>().ok()) {
+        rcfg.refresh = std::time::Duration::from_millis(ms.max(1));
+    }
+    if let Some(d) = flag(a, "--saturation-depth").and_then(|v| v.parse::<u64>().ok()) {
+        rcfg.saturation_depth = d;
+    }
+    match gateway_tcp_multi(addr, &backends, rcfg) {
         Ok(h) => {
-            println!("gateway on {} -> {up}", h.addr);
+            println!(
+                "gateway on {} routing {} backend(s) via {}: {backends:?}",
+                h.addr,
+                backends.len(),
+                placement.name()
+            );
             loop {
                 std::thread::sleep(std::time::Duration::from_secs(3600));
             }
@@ -921,6 +1043,9 @@ fn cmd_client(a: &[String]) -> i32 {
         timeout: flag(a, "--timeout-ms")
             .and_then(|v| v.parse::<u64>().ok())
             .map(std::time::Duration::from_millis),
+        pipeline: flag(a, "--pipeline")
+            .map(|v| v.split(',').map(str::to_string).collect())
+            .unwrap_or_default(),
     };
     match run_tcp(sock, &cfg) {
         Ok(s) => {

@@ -78,6 +78,17 @@ pub struct Scenario {
     /// weight in the continuous scheduler. Like `max_batch`, a live
     /// knob the sim plane ignores.
     pub model_batch: Vec<(String, crate::coordinator::ModelPolicy)>,
+    /// Live-plane routing tier: how many coordinator backends sit
+    /// behind the gateway (`accelserve shardsweep`). 1 = no sharding.
+    /// Like the other live knobs, the sim plane ignores it.
+    pub backends: usize,
+    /// Live-plane placement policy for the routing tier; `None` uses
+    /// the router's default (consistent hash).
+    pub placement: Option<crate::coordinator::Placement>,
+    /// Live-plane pipeline chain: stage models after `model` (the
+    /// `FLAG_PIPELINE` request form run by the routing gateway). Empty
+    /// = single-stage requests.
+    pub pipeline: Vec<String>,
 }
 
 impl Scenario {
@@ -100,6 +111,9 @@ impl Scenario {
             max_batch: 1,
             flush_us: 0,
             model_batch: Vec::new(),
+            backends: 1,
+            placement: None,
+            pipeline: Vec::new(),
         }
     }
 

@@ -40,6 +40,7 @@ fn load(model: &str, raw: bool, clients: usize, reqs: usize) -> LoadCfg {
         deadline_us: None,
         credits: false,
         timeout: None,
+        pipeline: vec![],
     }
 }
 
@@ -103,6 +104,7 @@ fn rdma_verbs_transport_serves() {
         prio: 0,
         deadline_us: None,
         credits: false,
+        pipeline: vec![],
         payload: protocol::f32s_to_bytes(&vec![0.25; 32 * 32 * 3]),
     };
     for _ in 0..5 {
@@ -136,6 +138,7 @@ fn gdr_raw_pipeline_zero_copy_serves() {
         prio: 0,
         deadline_us: None,
         credits: false,
+        pipeline: vec![],
         payload: frame,
     };
 
@@ -198,6 +201,7 @@ fn all_transports_same_numerics() {
         prio: 0,
         deadline_us: None,
         credits: false,
+        pipeline: vec![],
         payload: protocol::f32s_to_bytes(&input),
     };
 
@@ -296,6 +300,7 @@ fn server_reports_errors_gracefully() {
         prio: 0,
         deadline_us: None,
         credits: false,
+        pipeline: vec![],
         payload: protocol::f32s_to_bytes(&[0.0; 4]),
     };
     t.send(&bad.encode()).unwrap();

@@ -18,8 +18,8 @@ use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use accelserve::coordinator::{
-    gateway_tcp, protocol, run_on, run_tcp, serve_tcp, BatchCfg, ExecError, Executor, LoadCfg,
-    ShedReason,
+    fetch_stats, gateway_tcp, gateway_tcp_multi, protocol, run_on, run_tcp, serve_tcp, BatchCfg,
+    ExecError, Executor, LoadCfg, RouterCfg, ShedReason,
 };
 use accelserve::runtime::TensorBuf;
 use accelserve::transport::shm::shm_pair;
@@ -36,6 +36,7 @@ fn infer_frame() -> Vec<u8> {
         prio: 0,
         deadline_us: None,
         credits: false,
+        pipeline: vec![],
         payload: protocol::f32s_to_bytes(&vec![0.5f32; ELEMS]),
     }
     .encode()
@@ -67,6 +68,7 @@ fn tiny_cfg(requests: usize) -> LoadCfg {
         deadline_us: None,
         credits: false,
         timeout: None,
+        pipeline: vec![],
     }
 }
 
@@ -146,6 +148,133 @@ fn gateway_reports_upstream_death_mid_stream() {
     gw.stop();
 }
 
+/// One request/response exchange over an open client connection.
+fn roundtrip(cli: &mut TcpTransport, frame: &[u8]) -> protocol::Response {
+    cli.send(frame).unwrap();
+    protocol::Response::decode(&cli.recv().expect("a reply frame, not a bare close")).unwrap()
+}
+
+#[test]
+fn routed_gateway_fails_over_when_a_backend_dies() {
+    // Kill one of two backends mid-run through the routing gateway. The
+    // contract: the in-flight request gets a protocol Err naming the
+    // upstream (no hang, no silent drop), the client connection stays
+    // open, and the *next* request on the same connection re-routes to
+    // the survivor and succeeds. Tallies must reconcile exactly.
+    let dir = accelserve::models::gen::ensure_test_artifacts();
+    let execs: Vec<Arc<Executor>> = (0..2)
+        .map(|_| {
+            Arc::new(Executor::start(dir, 1, BatchCfg::none(), &["tiny_mobilenet_b1"]).unwrap())
+        })
+        .collect();
+    let mut servers: Vec<Option<_>> = execs
+        .iter()
+        .map(|e| Some(serve_tcp("127.0.0.1:0", e.clone()).unwrap()))
+        .collect();
+    let addrs: Vec<_> = servers.iter().map(|s| s.as_ref().unwrap().addr).collect();
+    // Park the background refresh and the half-open redial outside the
+    // test window, so every transition happens on the request path where
+    // the assertions can see it — not masked by a lucky refresh tick.
+    let gw = gateway_tcp_multi(
+        "127.0.0.1:0",
+        &addrs,
+        RouterCfg {
+            refresh: Duration::from_secs(3600),
+            retry_backoff: Duration::from_secs(3600),
+            ..RouterCfg::default()
+        },
+    )
+    .unwrap();
+    let mut cli = TcpTransport::connect(gw.addr).unwrap();
+    let frame = infer_frame();
+    let mut oks = 0usize;
+    let mut errs = 0usize;
+
+    for _ in 0..3 {
+        match roundtrip(&mut cli, &frame) {
+            protocol::Response::Ok { .. } => oks += 1,
+            other => panic!("healthy fleet refused a request: {other:?}"),
+        }
+    }
+    // Who served them? Ask each backend directly — all three must sit on
+    // one backend (sticky placement), which is the one we now kill.
+    let jobs: Vec<u64> = addrs
+        .iter()
+        .map(|a| {
+            let mut c = TcpTransport::connect(*a).unwrap();
+            let s = fetch_stats(&mut c).unwrap();
+            s.lanes.iter().map(|l| l.jobs).sum()
+        })
+        .collect();
+    let home = (jobs[0] < jobs[1]) as usize;
+    assert_eq!(jobs[home], 3, "placement smeared traffic: {jobs:?}");
+    assert_eq!(jobs[1 - home], 0, "placement smeared traffic: {jobs:?}");
+    servers[home].take().unwrap().stop();
+
+    // In-flight failure: the gateway's pooled connection to the home
+    // backend is dead. The client must get an Err frame promptly — and
+    // keep its connection, unlike relay mode.
+    let t0 = Instant::now();
+    match roundtrip(&mut cli, &frame) {
+        protocol::Response::Err(e) => {
+            assert!(e.contains("upstream"), "error must name the upstream: {e}");
+            errs += 1;
+        }
+        other => panic!("a dead backend must surface as Err: {other:?}"),
+    }
+    assert!(
+        t0.elapsed() < Duration::from_secs(5),
+        "failover Err took {:?}",
+        t0.elapsed()
+    );
+
+    // Same connection, next requests: marked down, re-routed, served.
+    for _ in 0..3 {
+        match roundtrip(&mut cli, &frame) {
+            protocol::Response::Ok { .. } => oks += 1,
+            other => panic!("survivor must serve re-routed traffic: {other:?}"),
+        }
+    }
+    assert_eq!(oks + errs, 7, "every request must be accounted ok-or-err");
+
+    // The survivor's own lane counters confirm the re-route.
+    let mut c = TcpTransport::connect(addrs[1 - home]).unwrap();
+    let s = fetch_stats(&mut c).unwrap();
+    let survivor_jobs: u64 = s.lanes.iter().map(|l| l.jobs).sum();
+    assert_eq!(survivor_jobs, 3, "re-routed requests must land on the survivor");
+    drop(c);
+    drop(cli);
+
+    gw.stop();
+    for srv in servers.into_iter().flatten() {
+        srv.stop();
+    }
+    for exec in execs {
+        reclaim_and_shutdown(exec);
+    }
+}
+
+#[test]
+fn routed_gateway_reports_every_backend_down() {
+    // The routing-mode twin of the relay's dead-upstream test: with the
+    // whole fleet unreachable the client gets an unsolicited Err frame
+    // naming the condition, never a silent EOF.
+    let addrs = [dead_addr(), dead_addr()];
+    let gw = gateway_tcp_multi("127.0.0.1:0", &addrs, RouterCfg::default()).unwrap();
+    let mut cli = TcpTransport::connect(gw.addr).unwrap();
+    let frame = cli.recv().expect("an Err frame, not a bare close");
+    match protocol::Response::decode(&frame).unwrap() {
+        protocol::Response::Err(e) => {
+            assert!(
+                e.contains("upstream") && e.contains("down"),
+                "error must name the condition: {e}"
+            );
+        }
+        other => panic!("unexpected response: {other:?}"),
+    }
+    gw.stop();
+}
+
 #[test]
 fn client_timeout_unwedges_stalled_server() {
     // A server that accepts and then goes silent. Without a timeout the
@@ -188,6 +317,7 @@ fn client_timeout_unwedges_stalled_server() {
         deadline_us: None,
         credits: false,
         timeout: Some(Duration::from_millis(200)),
+        pipeline: vec![],
     };
     let t0 = Instant::now();
     let stats = run_tcp(addr, &cfg).unwrap();
@@ -446,6 +576,7 @@ fn credit_pacing_cuts_sheds_over_live_tcp_server() {
             deadline_us: Some(deadline_us),
             credits,
             timeout: None,
+            pipeline: vec![],
         };
         let stats = run_tcp(srv.addr, &cfg).unwrap();
         srv.stop();

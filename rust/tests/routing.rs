@@ -1,0 +1,266 @@
+//! Routing-tier integration tests: the placement contract the
+//! multi-coordinator gateway is built on.
+//!
+//! * consistent-hash placement is a pure function of the model name and
+//!   the backend count — identical across gateway restarts — and
+//!   growing the fleet moves only a bounded slice of models, all of
+//!   them onto the new backend;
+//! * least-loaded placement follows the stats snapshots (queue depth,
+//!   saturation, cold-start spread) with no sockets involved;
+//! * a live two-backend TCP gateway actually sends each model's traffic
+//!   to its placed backend: the per-backend lane counters fetched
+//!   directly from each coordinator must match the ring, and the
+//!   gateway's merged stats view must account every request.
+//!
+//! Artifacts are generated on demand (`models::gen`); nothing skips.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::Duration;
+
+use accelserve::coordinator::{
+    fetch_stats, gateway_tcp_multi, run_tcp, BackendSpec, BatchCfg, ExecStats, Executor, HashRing,
+    LaneStats, LoadCfg, Placement, Router, RouterCfg, DEFAULT_VNODES, N_SEAL_REASONS,
+    N_SHED_REASONS,
+};
+use accelserve::transport::tcp::TcpTransport;
+
+const ELEMS: usize = 32 * 32 * 3;
+
+/// The three models every live cell serves, and their pinned homes on a
+/// 2-backend ring (a pure function of the names — if these move, the
+/// hash or the vnode naming changed and every deployed placement moves
+/// with them, which is exactly what this pin is here to catch).
+const PINNED_2: [(&str, usize); 3] = [
+    ("tiny_mobilenet", 0),
+    ("tiny_resnet", 0),
+    ("tiny_segnet", 1),
+];
+
+#[test]
+fn ring_placement_is_restart_stable_and_pinned() {
+    // Two independently built rings (a "restart") place identically.
+    let a = HashRing::new(2, DEFAULT_VNODES);
+    let b = HashRing::new(2, DEFAULT_VNODES);
+    for (model, home) in PINNED_2 {
+        assert_eq!(a.place(model), b.place(model), "{model} moved across restarts");
+        assert_eq!(a.place(model), home, "{model} left its pinned home");
+    }
+}
+
+#[test]
+fn growing_the_ring_moves_a_bounded_slice_onto_the_new_backend() {
+    // The consistent-hash promise: going from N to N+1 backends remaps
+    // roughly 1/(N+1) of the models, and every remapped model lands on
+    // the new backend — nothing shuffles between the survivors.
+    let two = HashRing::new(2, DEFAULT_VNODES);
+    let three = HashRing::new(3, DEFAULT_VNODES);
+    let models: Vec<String> = (0..64).map(|k| format!("model-{k}")).collect();
+    let mut moved = 0;
+    for m in &models {
+        let before = two.place(m);
+        let after = three.place(m);
+        if before != after {
+            moved += 1;
+            assert_eq!(after, 2, "{m} moved between surviving backends ({before} → {after})");
+        }
+    }
+    // Expect ~64/3 ≈ 21 moves; accept anything clearly better than the
+    // 1/2 a modulo rehash would churn, but not zero.
+    assert!(
+        (1..=32).contains(&moved),
+        "growing 2 → 3 backends moved {moved}/64 models"
+    );
+}
+
+fn lane(model: &str, depth: u32) -> LaneStats {
+    LaneStats {
+        model: model.to_string(),
+        jobs: 1,
+        calls: 1,
+        svc_ns: 1000,
+        depth,
+        sealed: [0; N_SEAL_REASONS],
+        shed: [0; N_SHED_REASONS],
+    }
+}
+
+fn snap(lanes: Vec<LaneStats>) -> ExecStats {
+    ExecStats {
+        interleaves: 0,
+        lanes,
+    }
+}
+
+/// A router over `n` backends that can never be dialed — pure placement
+/// logic, stats installed by hand.
+fn offline_router(n: usize, cfg: RouterCfg) -> Router {
+    let specs = (0..n)
+        .map(|i| {
+            BackendSpec::new(format!("offline-{i}"), || {
+                anyhow::bail!("offline test backend")
+            })
+        })
+        .collect();
+    Router::new(specs, cfg)
+}
+
+#[test]
+fn least_loaded_spreads_cold_start_then_follows_depth() {
+    let router = offline_router(
+        3,
+        RouterCfg {
+            placement: Placement::LeastLoaded,
+            ..RouterCfg::default()
+        },
+    );
+    // Cold start: no stats at all. The sticky-assignment tie-break must
+    // spread three fresh models over three backends instead of piling
+    // everything onto index 0.
+    let spread: Vec<usize> = ["a", "b", "c"]
+        .iter()
+        .map(|m| router.route(m).unwrap())
+        .collect();
+    let mut sorted = spread.clone();
+    sorted.sort_unstable();
+    assert_eq!(sorted, vec![0, 1, 2], "cold start piled up: {spread:?}");
+    // Assignments are sticky: same model, same backend, no rebalances.
+    for (m, &home) in ["a", "b", "c"].iter().zip(&spread) {
+        assert_eq!(router.route(m).unwrap(), home);
+    }
+    assert_eq!(router.rebalances(), 0);
+
+    // With stats installed, a fresh model goes to the shallowest queue.
+    router.install_stats(0, snap(vec![lane("a", 5)]));
+    router.install_stats(1, snap(vec![lane("b", 0)]));
+    router.install_stats(2, snap(vec![lane("c", 2)]));
+    assert_eq!(router.route("fresh").unwrap(), 1, "depth signal ignored");
+}
+
+#[test]
+fn least_loaded_routes_around_a_saturated_backend() {
+    let router = offline_router(
+        2,
+        RouterCfg {
+            placement: Placement::LeastLoaded,
+            saturation_depth: 10,
+            ..RouterCfg::default()
+        },
+    );
+    router.install_stats(0, snap(vec![lane("m", 0)]));
+    router.install_stats(1, snap(vec![lane("m", 0)]));
+    assert_eq!(router.route("m").unwrap(), 0);
+    // Backend 0 blows past the depth threshold: the sticky assignment
+    // must move, and the move is counted as a rebalance.
+    router.install_stats(0, snap(vec![lane("m", 12)]));
+    assert_eq!(router.route("m").unwrap(), 1);
+    assert_eq!(router.rebalances(), 1);
+}
+
+/// Jobs answered for `model` per the backend's own lane counters.
+fn lane_jobs(stats: &ExecStats, model: &str) -> u64 {
+    stats
+        .lanes
+        .iter()
+        .find(|l| l.model == model)
+        .map(|l| l.jobs)
+        .unwrap_or(0)
+}
+
+#[test]
+fn live_two_backend_gateway_job_share_matches_placement() {
+    // The wire-level half of the placement contract: drive each model
+    // through a real TCP routing gateway over two real coordinators,
+    // then ask each coordinator *directly* who served what. The lane
+    // counters must match the ring's pinned placement exactly — the
+    // gateway may not smear traffic across backends.
+    let dir = accelserve::models::gen::ensure_test_artifacts();
+    let warm = ["tiny_mobilenet_b1", "tiny_resnet_b1", "tiny_segnet_b1"];
+    let execs: Vec<Arc<Executor>> = (0..2)
+        .map(|_| Arc::new(Executor::start(dir, 1, BatchCfg::none(), &warm).unwrap()))
+        .collect();
+    let servers: Vec<_> = execs
+        .iter()
+        .map(|e| accelserve::coordinator::serve_tcp("127.0.0.1:0", e.clone()).unwrap())
+        .collect();
+    let backend_addrs: Vec<_> = servers.iter().map(|s| s.addr).collect();
+    let gw = gateway_tcp_multi("127.0.0.1:0", &backend_addrs, RouterCfg::default()).unwrap();
+
+    const REQUESTS: usize = 4;
+    for (model, _) in PINNED_2 {
+        let cfg = LoadCfg {
+            model: model.to_string(),
+            raw: false,
+            spans: false,
+            n_clients: 1,
+            requests_per_client: REQUESTS,
+            priority_client: false,
+            payload_elems: ELEMS,
+            warmup: 0,
+            deadline_us: None,
+            credits: false,
+            timeout: Some(Duration::from_secs(10)),
+            pipeline: vec![],
+        };
+        let stats = run_tcp(gw.addr, &cfg).unwrap();
+        assert_eq!(stats.errors, 0, "{model}: client died behind the gateway");
+        assert_eq!(stats.req_errors, 0, "{model}: request errors");
+        assert_eq!(stats.served, REQUESTS, "{model}: not every request served");
+    }
+
+    // Directly interrogate each backend — no gateway in the path — and
+    // check every model's jobs sit entirely on its placed backend.
+    let mut per_backend = Vec::new();
+    for addr in &backend_addrs {
+        let mut c = TcpTransport::connect(*addr).unwrap();
+        per_backend.push(fetch_stats(&mut c).unwrap());
+    }
+    let want: HashMap<&str, usize> = PINNED_2.iter().copied().collect();
+    for (model, &home) in &want {
+        for (idx, stats) in per_backend.iter().enumerate() {
+            let expect = if idx == home { REQUESTS as u64 } else { 0 };
+            assert_eq!(
+                lane_jobs(stats, model),
+                expect,
+                "{model} jobs on backend {idx} (home {home})"
+            );
+        }
+    }
+
+    // The gateway's merged stats view accounts the same totals fleet-wide.
+    let mut c = TcpTransport::connect(gw.addr).unwrap();
+    let merged = fetch_stats(&mut c).unwrap();
+    for (model, _) in PINNED_2 {
+        assert_eq!(lane_jobs(&merged, model), REQUESTS as u64, "{model} in merged stats");
+    }
+    drop(c);
+
+    gw.stop();
+    for srv in servers {
+        srv.stop();
+    }
+    for exec in execs {
+        assert!(
+            accelserve_drain(exec),
+            "a handler still holds an executor after teardown"
+        );
+    }
+}
+
+/// Reclaim the last executor reference after the servers stop; bounded
+/// so a leaked handler thread fails the test instead of hanging it.
+fn accelserve_drain(mut exec: Arc<Executor>) -> bool {
+    for _ in 0..500 {
+        match Arc::try_unwrap(exec) {
+            Ok(e) => {
+                e.shutdown();
+                return true;
+            }
+            Err(still) => {
+                exec = still;
+                std::thread::sleep(Duration::from_millis(10));
+            }
+        }
+    }
+    false
+}

@@ -4,16 +4,18 @@
 //! against the executor's own counters. Artifacts are generated on
 //! demand (`models::gen`), so every test always runs.
 
-use std::sync::Arc;
+use std::sync::atomic::AtomicU64;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use accelserve::coordinator::{
-    fetch_stats, handle_conn, protocol, BatchCfg, Executor, SealReason,
+    fetch_shape, fetch_stats, handle_conn, handle_routed_conn, protocol, BackendSpec, BatchCfg,
+    Executor, Router, RouterCfg, SealReason,
 };
 use accelserve::runtime::TensorBuf;
 use accelserve::trace::{Stage, StageBreakdown, Stamp};
 use accelserve::transport::shm::shm_pair;
-use accelserve::transport::MsgTransport;
+use accelserve::transport::{connected_pair, MsgTransport, TransportKind};
 
 const ELEMS: usize = 32 * 32 * 3;
 
@@ -42,6 +44,7 @@ fn infer_request(spans: bool, raw: bool) -> protocol::Request {
         prio: 0,
         deadline_us: None,
         credits: false,
+        pipeline: vec![],
         payload: if raw {
             accelserve::models::zoo::WorkloadData::image(64 * 64 * 3, 9).bytes
         } else {
@@ -322,6 +325,174 @@ fn credits_flag_roundtrips_over_live_server_and_off_stays_v1_identical() {
 
     drop(cli);
     h.join().unwrap();
+}
+
+#[test]
+fn plain_coordinator_refuses_pipeline_requests() {
+    // FLAG_PIPELINE straight at a coordinator (no routing gateway in the
+    // path): the server must refuse with an Err that points the client
+    // at the gateway, and must keep the connection serving afterwards —
+    // a misdirected chain is one failed request, not a dead client.
+    let exec = start_exec(1, BatchCfg::none());
+    let (mut cli, srv) = shm_pair(4);
+    let e2 = exec.clone();
+    let h = std::thread::spawn(move || handle_conn(srv, &e2));
+    let mut req = infer_request(false, false);
+    req.pipeline = vec!["tiny_resnet".into()];
+    cli.send(&req.encode()).unwrap();
+    match protocol::Response::decode(&cli.recv().unwrap()).unwrap() {
+        protocol::Response::Err(e) => {
+            assert!(e.contains("gateway"), "refusal must point at the gateway: {e}");
+        }
+        other => panic!("a plain coordinator must refuse a chain: {other:?}"),
+    }
+    cli.send(&infer_request(false, false).encode()).unwrap();
+    assert_eq!(cli.recv().unwrap()[0], 0, "the connection must keep serving");
+    drop(cli);
+    h.join().unwrap();
+}
+
+#[test]
+fn shape_opcode_serves_model_shapes_over_wire() {
+    // The pipeline bridge's lookup: OP_SHAPE answers (in_elems,
+    // out_elems) from the manifest, an unknown model gets an Err, and
+    // the connection keeps serving inference afterwards.
+    let dir = accelserve::models::gen::ensure_test_artifacts();
+    let exec = Arc::new(
+        Executor::start(
+            dir,
+            1,
+            BatchCfg::none(),
+            &["tiny_mobilenet_b1", "tiny_segnet_b1"],
+        )
+        .unwrap(),
+    );
+    let (mut cli, srv) = shm_pair(4);
+    let e2 = exec.clone();
+    let h = std::thread::spawn(move || handle_conn(srv, &e2));
+    assert_eq!(fetch_shape(&mut cli, "tiny_mobilenet").unwrap(), (ELEMS, 1000));
+    assert_eq!(fetch_shape(&mut cli, "tiny_segnet").unwrap(), (ELEMS, 32 * 32 * 21));
+    assert!(fetch_shape(&mut cli, "no_such_model").is_err());
+    cli.send(&infer_request(false, false).encode()).unwrap();
+    assert_eq!(cli.recv().unwrap()[0], 0, "the connection must keep serving");
+    drop(cli);
+    h.join().unwrap();
+}
+
+#[test]
+fn pipeline_chains_across_backends_with_monotone_stage_spans() {
+    // The chained hop end to end: two coordinators behind a router, a
+    // spans-on FLAG_PIPELINE request tiny_mobilenet → tiny_segnet
+    // through the routed request loop. The reply must carry one window
+    // per stage, back-to-back on the gateway clock (stage 1 dispatched
+    // only after stage 0 replied — the zero-round-trip property), and
+    // each stage's span timeline must be present and internally
+    // monotone even though the stages ran on different backends.
+    let dir = accelserve::models::gen::ensure_test_artifacts();
+    let warm = ["tiny_mobilenet_b1", "tiny_segnet_b1"];
+    let execs: Vec<Arc<Executor>> = (0..2)
+        .map(|_| Arc::new(Executor::start(dir, 1, BatchCfg::none(), &warm).unwrap()))
+        .collect();
+    // Big enough for the segnet output so SHM frames stay comfortable.
+    let hint = 32 * 32 * 21 * 4 + 96;
+    let threads: Arc<Mutex<Vec<std::thread::JoinHandle<()>>>> = Arc::new(Mutex::new(Vec::new()));
+    let specs = execs
+        .iter()
+        .enumerate()
+        .map(|(i, exec)| {
+            let exec = exec.clone();
+            let threads = threads.clone();
+            BackendSpec::new(format!("backend-{i}"), move || {
+                let (client, server) = connected_pair(TransportKind::Shm, hint)?;
+                let e2 = exec.clone();
+                threads
+                    .lock()
+                    .unwrap()
+                    .push(std::thread::spawn(move || handle_conn(server, &e2)));
+                Ok(client)
+            })
+        })
+        .collect();
+    let router = Router::new(specs, RouterCfg::default());
+    let fwd = AtomicU64::new(0);
+
+    std::thread::scope(|s| {
+        let (mut cli, gw_side) = connected_pair(TransportKind::Shm, hint).unwrap();
+        let router_ref = &router;
+        let fwd_ref = &fwd;
+        s.spawn(move || handle_routed_conn(gw_side, router_ref, fwd_ref));
+        let mut req = infer_request(true, false);
+        req.pipeline = vec!["tiny_segnet".into()];
+        cli.send(&req.encode()).unwrap();
+        let frame = cli.recv().unwrap();
+        drop(cli);
+        match protocol::Response::decode(&frame).unwrap() {
+            protocol::Response::Pipeline { stages, payload } => {
+                assert_eq!(stages.len(), 2);
+                assert_eq!(stages[0].model, "tiny_mobilenet");
+                assert_eq!(stages[1].model, "tiny_segnet");
+                for stage in &stages {
+                    assert!(
+                        stage.sent_ns <= stage.recv_ns,
+                        "stage {} window runs backwards",
+                        stage.model
+                    );
+                    // Each backend's span survives the chained hop, and
+                    // stays monotone stamp to stamp.
+                    let seq = present(
+                        &stage.span,
+                        &[
+                            Stamp::Enqueue,
+                            Stamp::Seal,
+                            Stamp::Dispatch,
+                            Stamp::InferDone,
+                            Stamp::D2hDone,
+                        ],
+                    );
+                    assert!(seq.len() >= 5, "stage {} spans: {seq:?}", stage.model);
+                    for w in seq.windows(2) {
+                        assert!(
+                            w[0].1 <= w[1].1,
+                            "stage {}: {} after {}",
+                            stage.model,
+                            w[0].0.name(),
+                            w[1].0.name()
+                        );
+                    }
+                }
+                // Zero client round-trips: stage 1 left the gateway only
+                // after stage 0's reply arrived, on one shared clock.
+                assert!(
+                    stages[1].sent_ns >= stages[0].recv_ns,
+                    "stage 1 dispatched before stage 0 replied"
+                );
+                // The chain's output is the segnet tensor, not stage 0's.
+                assert_eq!(payload.len(), 32 * 32 * 21 * 4);
+            }
+            other => panic!("unexpected response: {other:?}"),
+        }
+    });
+
+    // Router owns the pooled backend connections: drop it, join the
+    // backend handlers, then the executors are reclaimable.
+    drop(router);
+    for th in threads.lock().unwrap().drain(..) {
+        th.join().unwrap();
+    }
+    for mut exec in execs {
+        for _ in 0..500 {
+            match Arc::try_unwrap(exec) {
+                Ok(e) => {
+                    e.shutdown();
+                    break;
+                }
+                Err(still) => {
+                    exec = still;
+                    std::thread::sleep(std::time::Duration::from_millis(10));
+                }
+            }
+        }
+    }
 }
 
 #[test]

@@ -9,8 +9,11 @@
 //! * zero-length messages,
 //! * peer close surfacing as `Err` from `recv`,
 //! * queued data surviving a peer close (drain, then `Err`),
-//! * pipelined sends (sender running ahead of the receiver), and
-//! * concurrent send/recv from two threads on the same side.
+//! * pipelined sends (sender running ahead of the receiver),
+//! * concurrent send/recv from two threads on the same side, and
+//! * byte-exact frame forwarding through the routing gateway's request
+//!   loop at the same chunk-boundary sizes (the routed hop must be
+//!   invisible to the payload on every transport).
 //!
 //! The paper's transport *ordering* (rdma < tcp, gdr <= rdma) is
 //! asserted by `tests/transport_matrix_ordering.rs`, kept in its own
@@ -230,6 +233,77 @@ fn pipelined_sender_runs_ahead() {
             assert_eq!(back, pattern(512, i as u8), "{name}: drain {i}");
         }
         h.join().unwrap();
+    }
+}
+
+#[test]
+fn routed_gateway_preserves_frames_at_chunk_boundaries() {
+    // The tier-crossing version of `chunk_boundary_straddling_sizes`:
+    // valid OP_INFER frames whose total wire size straddles the verbs
+    // chunk capacity, pushed through the routing gateway's request loop
+    // (client → handle_routed_conn → pooled backend connection → echo
+    // backend) on each transport. The gateway forwards single-stage
+    // frames verbatim, so the echoed payload must come back byte-exact.
+    use accelserve::coordinator::{handle_routed_conn, protocol, BackendSpec, Router, RouterCfg};
+    use std::sync::atomic::AtomicU64;
+    use std::sync::{Arc, Mutex};
+
+    let cap = RingCfg::default().chunk_capacity();
+    let sizes = [cap - 1, cap, cap + 1, 2 * cap - 1, 2 * cap, 2 * cap + 1];
+    for (name, make) in factories() {
+        let threads: Arc<Mutex<Vec<std::thread::JoinHandle<()>>>> =
+            Arc::new(Mutex::new(Vec::new()));
+        let t2 = threads.clone();
+        let spec = BackendSpec::new(name, move || {
+            let (client, mut server) = make();
+            t2.lock().unwrap().push(std::thread::spawn(move || {
+                // Echo backend: answer every inference frame with a v1
+                // Ok frame carrying the request payload verbatim.
+                while let Ok(frame) = server.recv() {
+                    let (_, off) = protocol::split_header(&frame).expect("well-formed frame");
+                    let mut resp = vec![0u8];
+                    for ns in [1u64, 0, 1] {
+                        resp.extend_from_slice(&ns.to_le_bytes());
+                    }
+                    resp.extend_from_slice(&frame[off..]);
+                    if server.send(&resp).is_err() {
+                        return;
+                    }
+                }
+            }));
+            Ok(client)
+        });
+        let router = Router::new(vec![spec], RouterCfg::default());
+        let fwd = AtomicU64::new(0);
+        std::thread::scope(|s| {
+            let (mut cli, gw_side) = make();
+            let router_ref = &router;
+            let fwd_ref = &fwd;
+            s.spawn(move || handle_routed_conn(gw_side, router_ref, fwd_ref));
+            for (i, &size) in sizes.iter().enumerate() {
+                // [op][flags][prio][name_len]"m" + payload == exactly
+                // `size` bytes on the wire through the routed hop.
+                let payload = pattern(size - 5, i as u8);
+                let mut frame = vec![protocol::OP_INFER, 0, 0, 1, b'm'];
+                frame.extend_from_slice(&payload);
+                assert_eq!(frame.len(), size);
+                cli.send(&frame).expect("client send");
+                let back = cli.recv().expect("client recv");
+                match protocol::Response::decode(&back).expect("decode") {
+                    protocol::Response::Ok { payload: echoed, .. } => {
+                        assert!(echoed == payload, "{name}: size {size} payload corrupted");
+                    }
+                    other => panic!("{name}: unexpected response: {other:?}"),
+                }
+            }
+            drop(cli);
+        });
+        // The router owns the pooled backend connection; drop it so the
+        // echo thread sees the close and can be joined.
+        drop(router);
+        for th in threads.lock().unwrap().drain(..) {
+            th.join().unwrap();
+        }
     }
 }
 
