@@ -13,7 +13,7 @@ use anyhow::{anyhow, bail, Context, Result};
 use crate::metrics::stats::{ReqRecord, StageAgg};
 use crate::models::zoo::WorkloadData;
 use crate::sim::time::Ns;
-use crate::trace::{BreakdownAgg, StageBreakdown};
+use crate::trace::{BreakdownAgg, SpanBlock, Stage, StageBreakdown};
 use crate::transport::tcp::TcpTransport;
 use crate::transport::MsgTransport;
 
@@ -90,6 +90,24 @@ pub struct LiveStats {
     /// Requests actually served OK (including warmup); the goodput
     /// numerator under overload.
     pub served: usize,
+    /// Per-request span timelines in wall-clock order per client
+    /// (protocol v2 + spans on): the raw material for Chrome-trace
+    /// export ([`crate::trace::ChromeTrace`]). Empty when spans were
+    /// off or the server answered v1.
+    pub timeline: Vec<TimelineRec>,
+}
+
+/// One request's placement on the run's wall clock: when it was sent
+/// (ns offset from the run start), how long it took end to end, and
+/// its server span block — everything the timeline exporter needs.
+#[derive(Debug, Clone)]
+pub struct TimelineRec {
+    pub client: usize,
+    /// Send instant as a ns offset from the run's start.
+    pub t0_ns: u64,
+    /// Client-observed end-to-end latency, ns.
+    pub total_ns: u64,
+    pub span: SpanBlock,
 }
 
 /// One measured request: the Table I record plus, when the server
@@ -98,6 +116,10 @@ pub struct LiveStats {
 pub struct ClientRec {
     pub rec: ReqRecord,
     pub breakdown: Option<StageBreakdown>,
+    /// When the request was sent (the client's own clock).
+    pub sent_at: Instant,
+    /// The server's span block, kept verbatim for timeline export.
+    pub span: Option<SpanBlock>,
 }
 
 /// Query a server's executor counters over an open connection (the
@@ -335,12 +357,22 @@ pub fn run_client_loop(t: &mut dyn MsgTransport, cfg: &LoadCfg, client_idx: usiz
                 // processing (the paper's ZeroMQ accounting, §III-B);
                 // split evenly between request and response paths.
                 let net_ns = total_ns.saturating_sub(server_ns);
+                let breakdown = span
+                    .as_ref()
+                    .map(|block| StageBreakdown::from_span(block, total_ns));
+                // The scheduler-residence stages come straight from the
+                // span breakdown when the server returned one; a v1
+                // span-less response leaves them zero.
+                let lane = |s: Stage| Ns(breakdown.as_ref().map_or(0, |b| b.get(s)));
                 out.recs.push(ClientRec {
                     rec: ReqRecord {
                         client: client_idx,
                         total: Ns(total_ns),
                         request: Ns(net_ns / 2),
                         response: Ns(net_ns - net_ns / 2),
+                        lane_queue: lane(Stage::LaneQueue),
+                        gather_wait: lane(Stage::GatherWait),
+                        dispatch_wait: lane(Stage::DispatchWait),
                         copy_h2d: Ns(0),
                         copy_d2h: Ns(0),
                         preproc: Ns(stages.preproc_ns),
@@ -348,8 +380,9 @@ pub fn run_client_loop(t: &mut dyn MsgTransport, cfg: &LoadCfg, client_idx: usiz
                         cpu_us: 0.0,
                         priority: prio > 0,
                     },
-                    breakdown: span
-                        .map(|block| StageBreakdown::from_span(&block, total_ns)),
+                    breakdown,
+                    sent_at: t0,
+                    span,
                 });
             }
             Response::Pipeline { stages, .. } => {
@@ -374,6 +407,9 @@ pub fn run_client_loop(t: &mut dyn MsgTransport, cfg: &LoadCfg, client_idx: usiz
                         total: Ns(total_ns),
                         request: Ns(net_ns / 2),
                         response: Ns(net_ns - net_ns / 2),
+                        lane_queue: Ns(0),
+                        gather_wait: Ns(0),
+                        dispatch_wait: Ns(0),
                         copy_h2d: Ns(0),
                         copy_d2h: Ns(0),
                         preproc: Ns(0),
@@ -382,6 +418,8 @@ pub fn run_client_loop(t: &mut dyn MsgTransport, cfg: &LoadCfg, client_idx: usiz
                         priority: prio > 0,
                     },
                     breakdown: None,
+                    sent_at: t0,
+                    span: None,
                 });
             }
         }
@@ -446,6 +484,14 @@ where
             }
             if let Some(b) = &cr.breakdown {
                 stats.spans.push(b, r.total.0);
+            }
+            if let Some(block) = &cr.span {
+                stats.timeline.push(TimelineRec {
+                    client: r.client,
+                    t0_ns: cr.sent_at.saturating_duration_since(t_start).as_nanos() as u64,
+                    total_ns: r.total.0,
+                    span: block.clone(),
+                });
             }
         }
         if let Some(e) = run.fatal {

@@ -22,7 +22,7 @@ pub mod server;
 
 pub use client::{
     fetch_shape, fetch_stats, run_client_loop, run_on, run_tcp, ClientRec, ClientRun, LiveStats,
-    LoadCfg, TokenPacer,
+    LoadCfg, TimelineRec, TokenPacer,
 };
 pub use executor::{
     BatchCfg, CreditHint, Done, ExecError, ExecStats, Executor, LaneStats, ModelPolicy, SchedCfg,

@@ -24,7 +24,7 @@
 //! paper scale (`Scenario::with_model_mix` over the paper's models)
 //! reporting per-model latency and the sim's own interleave counter.
 
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 use std::sync::Arc;
 
 use anyhow::{Context, Result};
@@ -35,8 +35,10 @@ use crate::models::manifest::Manifest;
 use crate::models::zoo::PaperModel;
 use crate::net::params::Transport;
 use crate::sim::world::{Scenario, World};
+use crate::trace::{ArgVal, ChromeTrace};
 use crate::transport::TransportKind;
 
+use super::stage_break::export_sim_cell;
 use super::{drain_executor, drive_model_clients, Table};
 
 /// Mix-sweep configuration.
@@ -63,6 +65,9 @@ pub struct MixCfg {
     pub per_model: Vec<(String, ModelPolicy)>,
     /// Artifact directory; `None` generates into a per-process temp dir.
     pub artifacts_dir: Option<PathBuf>,
+    /// Write a Chrome trace-event JSON of every cell's request
+    /// timelines here (`--trace-out`). Turns spans on for the run.
+    pub trace_out: Option<PathBuf>,
 }
 
 impl Default for MixCfg {
@@ -77,6 +82,7 @@ impl Default for MixCfg {
             policy: BatchCfg::deadline(8, 1000),
             per_model: Vec::new(),
             artifacts_dir: None,
+            trace_out: None,
         }
     }
 }
@@ -95,7 +101,8 @@ fn run_mix_cell(
             .iter()
             .map(|model| {
                 s.spawn(move || {
-                    // spans off: keep the wire conditions v1-identical.
+                    // Spans stay off (v1-identical wire conditions)
+                    // unless the run exports timelines, which need them.
                     drive_model_clients(
                         kind,
                         exec,
@@ -103,7 +110,7 @@ fn run_mix_cell(
                         cfg.clients_per_model,
                         cfg.requests,
                         cfg.warmup,
-                        false,
+                        cfg.trace_out.is_some(),
                     )
                 })
             })
@@ -185,6 +192,7 @@ pub fn run_mix_sweep(cfg: &MixCfg) -> Result<Table> {
             "interleaves",
         ],
     );
+    let mut tc = ChromeTrace::new();
     for &kind in &cfg.transports {
         // A fresh executor per transport cell, so the per-model
         // counters and the interleave count are the cell's own.
@@ -209,6 +217,23 @@ pub fn run_mix_sweep(cfg: &MixCfg) -> Result<Table> {
         };
         let interleaves = exec.interleave_count() as f64;
         let counters = exec.model_batch_counters();
+        if cfg.trace_out.is_some() {
+            // One track per model group's transport ring; the groups
+            // run concurrently, so each (model, client) pair gets its
+            // own non-overlapping track.
+            for (model, st) in cfg.models.iter().zip(&stats) {
+                for rec in &st.timeline {
+                    let track = tc.track(&format!(
+                        "ring/{}/{}/c{}",
+                        kind.name(),
+                        model,
+                        rec.client
+                    ));
+                    let args = [("client", ArgVal::U64(rec.client as u64))];
+                    tc.block(track, rec.t0_ns, &rec.span, rec.total_ns, &args);
+                }
+            }
+        }
         for (model, st) in cfg.models.iter().zip(&stats) {
             let (jobs, calls) = counters
                 .iter()
@@ -233,6 +258,14 @@ pub fn run_mix_sweep(cfg: &MixCfg) -> Result<Table> {
             anyhow::bail!("mix sweep still holds executor clones");
         }
     }
+    if let Some(path) = &cfg.trace_out {
+        tc.save(path)?;
+        t.note(format!(
+            "wrote {} timeline events to {} (load in ui.perfetto.dev)",
+            tc.len(),
+            path.display()
+        ));
+    }
     t.note("each transport cell serves every model's client group concurrently from one executor");
     t.note("avg_batch = per-model jobs / executable calls; interleaves = dispatches that switched model (per transport cell, repeated on its rows)");
     t.note("a serialized scheduler would score ~1 interleave per cell; per-model lanes + weighted round-robin score many");
@@ -240,43 +273,88 @@ pub fn run_mix_sweep(cfg: &MixCfg) -> Result<Table> {
 }
 
 /// The simulated twin (`accelserve mixsweep --sim`): the same mixed
-/// workload at paper scale on the discrete-event plane. One row per
-/// transport × paper model; clients are assigned models round-robin
-/// ([`Scenario::with_model_mix`]), `interleaves` counts inference
-/// completions that switched model.
+/// workload at paper scale on the discrete-event plane, with the sim
+/// lane model gathering batches per model lane. One row per transport
+/// × paper model; clients are assigned models round-robin
+/// ([`Scenario::with_model_mix`]), `avg_batch` is the lane's achieved
+/// batch (jobs per executable call) and `interleaves` counts
+/// executable completions that switched model.
+#[allow(clippy::too_many_arguments)]
 pub fn run_sim_mix(
     models: &[&'static PaperModel],
     transports: &[Transport],
     clients_per_model: usize,
     requests: usize,
-) -> Table {
+    streams: usize,
+    policy: BatchCfg,
+    per_model: &[(String, ModelPolicy)],
+    trace_out: Option<&Path>,
+) -> Result<Table> {
     let mut t = Table::new(
         format!(
-            "sim mix — {{{}}} × {} clients each, {} requests",
+            "sim mix — {{{}}} × {} clients each, {} requests, {} stream(s), default {}",
             models.iter().map(|m| m.name).collect::<Vec<_>>().join(", "),
             clients_per_model,
-            requests
+            requests,
+            streams,
+            policy.label()
         ),
-        &["p50_ms", "p99_ms", "mean_ms", "thr_rps", "interleaves"],
+        &[
+            "p50_ms",
+            "p99_ms",
+            "mean_ms",
+            "thr_rps",
+            "avg_batch",
+            "interleaves",
+        ],
     );
+    let mut tc = ChromeTrace::new();
     for &tr in transports {
-        let sc = Scenario::direct(models[0], tr)
+        let mut sc = Scenario::direct(models[0], tr)
             .with_model_mix(models.to_vec())
             .with_clients(clients_per_model * models.len())
-            .with_requests(requests);
+            .with_requests(requests)
+            .with_streams(streams)
+            .with_batching(policy.max_batch, policy.flush_us)
+            .with_lanes();
+        sc.model_batch = per_model.to_vec();
+        if trace_out.is_some() {
+            sc = sc.with_trace();
+        }
         let stats = World::run(sc);
-        for (name, agg) in &stats.per_model {
+        if trace_out.is_some() {
+            export_sim_cell(&mut tc, &stats, tr, policy);
+        }
+        for (i, (name, agg)) in stats.per_model.iter().enumerate() {
             let lat = agg.total.summary();
             let thr = agg.n() as f64 / stats.duration_s.max(1e-9);
+            let l = &stats.lane_stats[i];
+            let avg_batch = l.jobs as f64 / l.calls.max(1) as f64;
             t.row(
                 format!("{} {}", tr.name(), name),
-                vec![lat.p50, lat.p99, lat.mean, thr, stats.interleaves as f64],
+                vec![
+                    lat.p50,
+                    lat.p99,
+                    lat.mean,
+                    thr,
+                    avg_batch,
+                    stats.interleaves as f64,
+                ],
             );
         }
     }
-    t.note("clients round-robin over the model mix; interleaves = inference completions that switched model (per transport cell)");
+    if let Some(path) = trace_out {
+        tc.save(path)?;
+        t.note(format!(
+            "wrote {} timeline events to {} (load in ui.perfetto.dev)",
+            tc.len(),
+            path.display()
+        ));
+    }
+    t.note("clients round-robin over the model mix; the lane model gathers batches per model under the default policy");
+    t.note("avg_batch = lane jobs / executable calls; interleaves = executable completions that switched model (per transport cell)");
     t.note("per-model thr_rps counts measured requests only (warmup excluded), so it underestimates the served rate slightly");
-    t
+    Ok(t)
 }
 
 #[cfg(test)]
@@ -338,15 +416,30 @@ mod tests {
             PaperModel::by_name("MobileNetV3").unwrap(),
             PaperModel::by_name("ResNet50").unwrap(),
         ];
-        let t = run_sim_mix(&models, &[Transport::Tcp, Transport::Gdr], 4, 60);
+        let t = run_sim_mix(
+            &models,
+            &[Transport::Tcp, Transport::Gdr],
+            4,
+            60,
+            2,
+            BatchCfg::deadline(4, 2000),
+            &[],
+            None,
+        )
+        .unwrap();
         assert_eq!(t.rows.len(), 4);
+        let mut any_batched = false;
         for tr in ["tcp", "gdr"] {
             for m in ["MobileNetV3", "ResNet50"] {
                 let row = format!("{tr} {m}");
                 assert!(t.get(&row, "mean_ms").unwrap() > 0.0, "{row}");
+                let avg = t.get(&row, "avg_batch").unwrap();
+                assert!((1.0..=4.0).contains(&avg), "{row}/avg_batch = {avg}");
+                any_batched |= avg > 1.0;
             }
             let il = t.get(&format!("{tr} MobileNetV3"), "interleaves").unwrap();
             assert!(il > 0.0, "{tr}: sim mix never interleaved");
         }
+        assert!(any_batched, "no sim cell achieved any batching");
     }
 }

@@ -37,10 +37,11 @@ use crate::coordinator::protocol::{Request, Response};
 use crate::coordinator::router::{BackendSpec, Placement, Router, RouterCfg};
 use crate::coordinator::{
     handle_conn, handle_routed_conn, run_client_loop, BatchCfg, Executor, LoadCfg, SchedCfg,
-    DEFAULT_QUEUE_CAP,
+    TimelineRec, DEFAULT_QUEUE_CAP,
 };
 use crate::metrics::stats::StageAgg;
 use crate::models::gen;
+use crate::trace::{ArgVal, ChromeTrace};
 use crate::transport::{connected_pair, TransportKind};
 
 use super::{drain_executor, Table};
@@ -75,6 +76,9 @@ pub struct ShardCfg {
     pub pipeline: bool,
     /// Artifact directory; `None` generates into a per-process temp dir.
     pub artifacts_dir: Option<PathBuf>,
+    /// Write a Chrome trace-event timeline of every measured request
+    /// (all cells, one track per cell × client) to this path.
+    pub trace_out: Option<PathBuf>,
 }
 
 impl Default for ShardCfg {
@@ -89,6 +93,7 @@ impl Default for ShardCfg {
             streams: 1,
             pipeline: true,
             artifacts_dir: None,
+            trace_out: None,
         }
     }
 }
@@ -138,6 +143,9 @@ struct CellOut {
     oks: usize,
     duration_s: f64,
     rebalances: u64,
+    /// Measured-request spans for timeline export (empty unless the
+    /// sweep is tracing; pipeline replies carry no single-span block).
+    timeline: Vec<TimelineRec>,
 }
 
 /// Drive the client pool through routed gateway connections. Every
@@ -167,7 +175,7 @@ fn drive_cell(
                     SHARD_MODELS[c % SHARD_MODELS.len()].to_string()
                 },
                 raw: false,
-                spans: false,
+                spans: cfg.trace_out.is_some() && !pipeline,
                 n_clients: cfg.clients,
                 requests_per_client: cfg.requests + cfg.warmup,
                 priority_client: false,
@@ -193,6 +201,7 @@ fn drive_cell(
 
     let mut agg = StageAgg::default();
     let mut oks = 0usize;
+    let mut timeline = Vec::new();
     for run in runs {
         if let Some(e) = run.fatal {
             return Err(e.context("shardsweep client died"));
@@ -207,6 +216,14 @@ fn drive_cell(
         oks += run.oks;
         for rec in &run.recs {
             agg.push(&rec.rec);
+            if let Some(block) = &rec.span {
+                timeline.push(TimelineRec {
+                    client: rec.rec.client,
+                    t0_ns: rec.sent_at.saturating_duration_since(t0).as_nanos() as u64,
+                    total_ns: rec.rec.total.0,
+                    span: block.clone(),
+                });
+            }
         }
     }
     Ok(CellOut {
@@ -214,6 +231,7 @@ fn drive_cell(
         oks,
         duration_s,
         rebalances: router.rebalances(),
+        timeline,
     })
 }
 
@@ -295,12 +313,25 @@ pub fn run_shard_sweep(cfg: &ShardCfg) -> Result<Table> {
         ),
         &["backends", "clients", "p50_ms", "p99_ms", "thr_rps", "share_max", "rebal"],
     );
+    let mut tc = ChromeTrace::new();
     for &kind in &cfg.transports {
         for &placement in &cfg.placements {
             for &n in &cfg.backends {
                 let row = format!("{} n{n} {}", kind.name(), placement.name());
-                run_cell(cfg, &dir, &warm_refs, kind, placement, n, hint, false, &row, &mut t)
-                    .with_context(|| format!("cell {row}"))?;
+                run_cell(
+                    cfg,
+                    &dir,
+                    &warm_refs,
+                    kind,
+                    placement,
+                    n,
+                    hint,
+                    false,
+                    &row,
+                    &mut t,
+                    &mut tc,
+                )
+                .with_context(|| format!("cell {row}"))?;
             }
         }
         if cfg.pipeline {
@@ -317,9 +348,18 @@ pub fn run_shard_sweep(cfg: &ShardCfg) -> Result<Table> {
                 true,
                 &row,
                 &mut t,
+                &mut tc,
             )
             .with_context(|| format!("cell {row}"))?;
         }
+    }
+    if let Some(path) = &cfg.trace_out {
+        tc.save(path)?;
+        t.note(format!(
+            "wrote {} timeline events to {} (load in ui.perfetto.dev)",
+            tc.len(),
+            path.display()
+        ));
     }
     t.note("share_max = largest backend's share of answered jobs (%); rebal = routing decisions diverging from the home placement");
     t.note("pipe rows chain tiny_mobilenet → tiny_segnet inside the gateway (FLAG_PIPELINE): one client round-trip for the whole chain; a spans-on probe verifies the stage windows are back-to-back");
@@ -340,6 +380,7 @@ fn run_cell(
     pipeline: bool,
     row: &str,
     t: &mut Table,
+    tc: &mut ChromeTrace,
 ) -> Result<()> {
     let sched = || SchedCfg {
         // Batching off: each backend's throughput cap is exactly
@@ -378,6 +419,11 @@ fn run_cell(
     }
     let out = out?;
     probe?;
+    for rec in &out.timeline {
+        let track = tc.track(&format!("ring/{row}/c{}", rec.client));
+        let args = [("client", ArgVal::U64(rec.client as u64))];
+        tc.block(track, rec.t0_ns, &rec.span, rec.total_ns, &args);
+    }
 
     // Job-share bookkeeping must reconcile with the client tally; the
     // spans probe (pipeline rows) adds one more chained request.

@@ -20,19 +20,19 @@
 //! `infer_ms` what fusing buys back (the batching-vs-communication
 //! tradeoff the transport comparison turns on).
 
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 use std::sync::Arc;
 
 use anyhow::{Context, Result};
 
-use crate::coordinator::{BatchCfg, Executor};
+use crate::coordinator::{BatchCfg, Executor, SEAL_REASON_NAMES};
 use crate::metrics::stats::{Series, Stat};
 use crate::models::gen;
 use crate::models::manifest::Manifest;
 use crate::models::zoo::PaperModel;
 use crate::net::params::Transport;
-use crate::sim::world::{Scenario, World};
-use crate::trace::Stage;
+use crate::sim::world::{RunStats, Scenario, World};
+use crate::trace::{ArgVal, ChromeTrace, Stage};
 use crate::transport::TransportKind;
 
 use super::{drain_executor, drive_model_clients, Table};
@@ -58,6 +58,9 @@ pub struct StageBreakCfg {
     pub stat: Stat,
     /// Artifact directory; `None` generates into a per-process temp dir.
     pub artifacts_dir: Option<PathBuf>,
+    /// Write a Chrome trace-event JSON of every cell's request
+    /// timelines here (`--trace-out`; load in `ui.perfetto.dev`).
+    pub trace_out: Option<PathBuf>,
 }
 
 impl Default for StageBreakCfg {
@@ -72,6 +75,7 @@ impl Default for StageBreakCfg {
             policies: vec![BatchCfg::none(), BatchCfg::deadline(8, 2000)],
             stat: Stat::Mean,
             artifacts_dir: None,
+            trace_out: None,
         }
     }
 }
@@ -130,6 +134,7 @@ pub fn run_stage_break(cfg: &StageBreakCfg) -> Result<Table> {
         ),
         &stage_columns(),
     );
+    let mut tc = ChromeTrace::new();
     for &policy in &cfg.policies {
         let exec = Arc::new(
             Executor::start(&dir, cfg.streams, policy, &warm_refs)
@@ -164,6 +169,20 @@ pub fn run_stage_break(cfg: &StageBreakCfg) -> Result<Table> {
             }
             let stages: Vec<&Series> =
                 Stage::ALL.iter().map(|&s| stats.spans.stage(s)).collect();
+            if cfg.trace_out.is_some() {
+                // One track per transport ring (client connection),
+                // namespaced by cell so policies don't overlap.
+                for rec in &stats.timeline {
+                    let track = tc.track(&format!(
+                        "ring/{}/{}/c{}",
+                        kind.name(),
+                        policy.label(),
+                        rec.client
+                    ));
+                    let args = [("client", ArgVal::U64(rec.client as u64))];
+                    tc.block(track, rec.t0_ns, &rec.span, rec.total_ns, &args);
+                }
+            }
             t.row(
                 format!("{} {}", kind.name(), policy.label()),
                 row_values(&stages, &stats.spans.total, cfg.stat),
@@ -179,6 +198,14 @@ pub fn run_stage_break(cfg: &StageBreakCfg) -> Result<Table> {
             return Err(e);
         }
     }
+    if let Some(path) = &cfg.trace_out {
+        tc.save(path)?;
+        t.note(format!(
+            "wrote {} timeline events to {} (load in ui.perfetto.dev)",
+            tc.len(),
+            path.display()
+        ));
+    }
     t.note("stage columns derive from wire-carried span timelines (protocol v2); sum_ms is their sum and matches e2e_ms exactly under the mean statistic");
     t.note("req/resp include the client wire halves; req also carries the receive-side host bounce that GDR eliminates (Fig 2b)");
     t.note("queue = lane wait before first gather consideration; gather = flush-window wait; disp = sealed-batch wait for a stream");
@@ -187,51 +214,120 @@ pub fn run_stage_break(cfg: &StageBreakCfg) -> Result<Table> {
 
 /// The simulated twin (`accelserve stagebreak --sim`): identical
 /// columns from the sim plane's per-request records, at paper scale.
-/// The sim models per-request execution (no lane machinery), so the
-/// `queue/gather/disp` columns are structurally zero and its
-/// stream-slot queueing lands in `infer_ms` — rows are labeled `b1`
-/// for cell-for-cell comparison against the live table's unbatched
-/// rows.
+/// The sim lane model is always on here, so the `queue/gather/disp`
+/// columns carry real scheduler residence — one row per transport ×
+/// policy, cell-for-cell comparable against the live table. With
+/// `trace_out`, the sim's request timelines and per-stream batch
+/// windows export in the same Chrome-trace format as the live run.
+#[allow(clippy::too_many_arguments)]
 pub fn run_sim_stage_break(
     model: &'static PaperModel,
     transports: &[Transport],
+    policies: &[BatchCfg],
     clients: usize,
     requests: usize,
+    streams: usize,
     stat: Stat,
-) -> Table {
+    trace_out: Option<&Path>,
+) -> Result<Table> {
     let mut t = Table::new(
         format!(
-            "sim stage breakdown ({}) — {} × {} clients, {} requests",
+            "sim stage breakdown ({}) — {} × {} clients, {} requests, {} stream(s)",
             stat.name(),
             model.name,
             clients,
-            requests
+            requests,
+            streams
         ),
         &stage_columns(),
     );
-    let zero = Series::new();
-    for &tr in transports {
-        let sc = Scenario::direct(model, tr)
-            .with_clients(clients)
-            .with_requests(requests);
-        let stats = World::run(sc);
-        let a = &stats.all;
-        let stages: Vec<&Series> = vec![
-            &a.request,  // request-transport
-            &zero,       // lane-queue (live-plane machinery)
-            &zero,       // gather-wait
-            &zero,       // dispatch-wait
-            &a.copy_h2d, // copy-h2d
-            &a.preproc,  // preproc
-            &a.infer,    // infer (incl. stream-slot queueing)
-            &a.copy_d2h, // copy-d2h
-            &a.response, // response-transport
-        ];
-        t.row(format!("{} b1", tr.name()), row_values(&stages, &a.total, stat));
+    let mut tc = ChromeTrace::new();
+    for &policy in policies {
+        for &tr in transports {
+            let mut sc = Scenario::direct(model, tr)
+                .with_clients(clients)
+                .with_requests(requests)
+                .with_streams(streams)
+                .with_batching(policy.max_batch, policy.flush_us)
+                .with_lanes();
+            if trace_out.is_some() {
+                sc = sc.with_trace();
+            }
+            let stats = World::run(sc);
+            if trace_out.is_some() {
+                export_sim_cell(&mut tc, &stats, tr, policy);
+            }
+            let a = &stats.all;
+            let stages: Vec<&Series> = vec![
+                &a.request,
+                &a.lane_queue,
+                &a.gather_wait,
+                &a.dispatch_wait,
+                &a.copy_h2d,
+                &a.preproc,
+                &a.infer,
+                &a.copy_d2h,
+                &a.response,
+            ];
+            t.row(
+                format!("{} {}", tr.name(), policy.label()),
+                row_values(&stages, &a.total, stat),
+            );
+        }
     }
-    t.note("sim models per-request execution: queue/gather/disp are structurally zero and stream queueing lands in infer_ms");
-    t.note("compare against the live table's b1 rows cell-for-cell (same columns, same stage semantics)");
-    t
+    if let Some(path) = trace_out {
+        tc.save(path)?;
+        t.note(format!(
+            "wrote {} timeline events to {} (load in ui.perfetto.dev)",
+            tc.len(),
+            path.display()
+        ));
+    }
+    t.note("sim lane model on: queue/gather/disp carry scheduler residence under the row's policy");
+    t.note("compare against the live table cell-for-cell (same columns, same stage semantics)");
+    Ok(t)
+}
+
+/// Export one sim cell into `tc`: per-client request timelines (nine
+/// stage tiles each) plus one event per executed batch on its stream's
+/// track. Shared with the other sim sweeps (`mixsweep --sim`).
+pub(crate) fn export_sim_cell(
+    tc: &mut ChromeTrace,
+    stats: &RunStats,
+    tr: Transport,
+    policy: BatchCfg,
+) {
+    for span in &stats.timeline {
+        let track = tc.track(&format!(
+            "sim/{}/{}/c{}",
+            tr.name(),
+            policy.label(),
+            span.client
+        ));
+        let args = [("client", ArgVal::U64(span.client as u64))];
+        tc.record(track, span.t_sent.0, &span.rec, &args);
+    }
+    let mut streams: Vec<usize> = stats.batches.iter().map(|b| b.stream).collect();
+    streams.sort_unstable();
+    streams.dedup();
+    for s in streams {
+        let track = tc.track(&format!("stream/{}/{}/s{s}", tr.name(), policy.label()));
+        for b in stats.batches.iter().filter(|b| b.stream == s) {
+            let seal = SEAL_REASON_NAMES[b.reason as usize];
+            let args = [
+                ("batch", ArgVal::U64(b.size as u64)),
+                ("seal", ArgVal::Str(seal.to_string())),
+            ];
+            tc.event(
+                track,
+                &b.model,
+                "batch",
+                b.dispatch.0,
+                b.done.0.saturating_sub(b.dispatch.0),
+                &args,
+            );
+        }
+    }
 }
 
 #[cfg(test)]
@@ -292,22 +388,32 @@ mod tests {
         let t = run_sim_stage_break(
             model,
             &[Transport::Tcp, Transport::Rdma, Transport::Gdr],
+            &[BatchCfg::none(), BatchCfg::deadline(4, 500)],
             2,
             80,
+            0,
             Stat::Mean,
-        );
+            None,
+        )
+        .unwrap();
         assert_eq!(t.columns, stage_columns());
-        assert_eq!(t.rows.len(), 3);
-        for tr in ["tcp", "rdma", "gdr"] {
-            let row = format!("{tr} b1");
-            let sum = t.get(&row, "sum_ms").unwrap();
-            let e2e = t.get(&row, "e2e_ms").unwrap();
-            assert!(
-                (sum - e2e).abs() / e2e < 0.05,
-                "{row}: stages sum to {sum} but e2e is {e2e}"
-            );
-            assert_eq!(t.get(&row, "queue_ms"), Some(0.0), "{row}");
+        assert_eq!(t.rows.len(), 6);
+        for policy in ["b1", "b4@500us"] {
+            for tr in ["tcp", "rdma", "gdr"] {
+                let row = format!("{tr} {policy}");
+                let sum = t.get(&row, "sum_ms").unwrap();
+                let e2e = t.get(&row, "e2e_ms").unwrap();
+                assert!(
+                    (sum - e2e).abs() / e2e < 0.05,
+                    "{row}: stages sum to {sum} but e2e is {e2e}"
+                );
+            }
         }
+        // Unbatched with ample streams: zero scheduler residence.
+        assert_eq!(t.get("tcp b1", "queue_ms"), Some(0.0));
+        assert_eq!(t.get("tcp b1", "gather_ms"), Some(0.0));
+        // A flush window makes batch heads wait for peers.
+        assert!(t.get("tcp b4@500us", "gather_ms").unwrap() > 0.0);
         // The sim's structural property: GDR has no copies, RDMA does.
         assert_eq!(t.get("gdr b1", "h2d_ms"), Some(0.0));
         assert!(t.get("rdma b1", "h2d_ms").unwrap() > 0.0);

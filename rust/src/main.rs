@@ -12,6 +12,7 @@
 //! accelserve batchsweep --clients 8 --policies 1,8,8@2000        # transport x batch policy
 //! accelserve mixsweep --models tiny_mobilenet,tiny_resnet        # transport x model mix
 //! accelserve stagebreak --policies 1,8@2000 [--pct 99] [--sim]   # per-stage span breakdown
+//! accelserve traceexport --out trace.json [--sim]                # Chrome trace timeline (Perfetto)
 //! accelserve slosweep --factors 1,2,4,8 [--deadline-us 5000]     # overload x SLO shedding
 //! accelserve throttlesweep --factors 2,4,8                       # credit backpressure off vs on
 //! accelserve gateway --addr :7008 --backend h1:7007 --backend h2:7007 \
@@ -47,6 +48,7 @@ fn main() {
         Some("batchsweep") => cmd_batchsweep(&args[1..]),
         Some("mixsweep") => cmd_mixsweep(&args[1..]),
         Some("stagebreak") => cmd_stagebreak(&args[1..]),
+        Some("traceexport") => cmd_traceexport(&args[1..]),
         Some("slosweep") => cmd_slosweep(&args[1..]),
         Some("throttlesweep") => cmd_throttlesweep(&args[1..]),
         Some("shardsweep") => cmd_shardsweep(&args[1..]),
@@ -62,7 +64,7 @@ fn main() {
 }
 
 const HELP: &str = "accelserve — model serving with hardware-accelerated communication
-subcommands: gen-artifacts | serve | gateway | client | stats | matrix | batchsweep | mixsweep | stagebreak | slosweep | throttlesweep | shardsweep | sim | fig | tables (see README.md and docs/EXPERIMENTS.md)";
+subcommands: gen-artifacts | serve | gateway | client | stats | matrix | batchsweep | mixsweep | stagebreak | traceexport | slosweep | throttlesweep | shardsweep | sim | fig | tables (see README.md and docs/EXPERIMENTS.md)";
 
 /// Generate the serving artifacts (HLO text + manifest.json) offline —
 /// no Python/JAX required (the rust twin of `make artifacts`).
@@ -330,6 +332,9 @@ fn cmd_mixsweep(a: &[String]) -> i32 {
         let mut transports: Vec<Transport> = vec![Transport::Tcp, Transport::Rdma, Transport::Gdr];
         let mut clients = 4usize;
         let mut requests = 200usize;
+        let mut streams = 0usize;
+        let mut policy = BatchCfg::none();
+        let mut per_model: Vec<(String, ModelPolicy)> = Vec::new();
         if let Some(path) = flag(a, "--config") {
             match accelserve::config::load_scenario(path) {
                 Ok(sc) => {
@@ -343,6 +348,11 @@ fn cmd_mixsweep(a: &[String]) -> i32 {
                     // The scenario's client count is the total across
                     // the mix; run_sim_mix takes clients per model.
                     clients = (sc.n_clients / models.len().max(1)).max(1);
+                    policy = BatchCfg {
+                        max_batch: sc.max_batch.max(1),
+                        flush_us: sc.flush_us,
+                    };
+                    per_model = sc.model_batch.clone();
                 }
                 Err(e) => {
                     eprintln!("config: {e:#}");
@@ -385,7 +395,46 @@ fn cmd_mixsweep(a: &[String]) -> i32 {
         if let Some(n) = flag(a, "--requests").and_then(|v| v.parse::<usize>().ok()) {
             requests = n.max(1);
         }
-        let t = accelserve::experiments::run_sim_mix(&models, &transports, clients, requests);
+        // 0 streams = one per client (ample); smaller counts create the
+        // contention that makes the lane model's batching visible.
+        if let Some(n) = flag(a, "--streams").and_then(|v| v.parse::<usize>().ok()) {
+            streams = n;
+        }
+        if let Some(spec) = flag(a, "--policy") {
+            match BatchCfg::parse(spec) {
+                Some(p) => policy = p,
+                None => {
+                    eprintln!("bad --policy {spec:?} (want N, or N@FLUSH_US like 8@2000)");
+                    return 2;
+                }
+            }
+        }
+        match parse_model_batch(a) {
+            Ok(pm) if pm.is_empty() => {}
+            Ok(pm) => per_model = pm,
+            Err(e) => {
+                eprintln!("{e}");
+                return 2;
+            }
+        }
+        warn_unbatched_flush("mixsweep", &policy, &per_model);
+        let trace_out = flag(a, "--trace-out").map(std::path::PathBuf::from);
+        let t = match accelserve::experiments::run_sim_mix(
+            &models,
+            &transports,
+            clients,
+            requests,
+            streams,
+            policy,
+            &per_model,
+            trace_out.as_deref(),
+        ) {
+            Ok(t) => t,
+            Err(e) => {
+                eprintln!("mixsweep: {e:#}");
+                return 1;
+            }
+        };
         if csv {
             print!("{}", t.to_csv());
         } else {
@@ -464,6 +513,9 @@ fn cmd_mixsweep(a: &[String]) -> i32 {
         }
     }
     warn_unbatched_flush("mixsweep", &cfg.policy, &cfg.per_model);
+    if let Some(p) = flag(a, "--trace-out") {
+        cfg.trace_out = Some(p.into());
+    }
     let t = match accelserve::experiments::run_mix_sweep(&cfg) {
         Ok(t) => t,
         Err(e) => {
@@ -495,16 +547,13 @@ fn cmd_stagebreak(a: &[String]) -> i32 {
         },
     };
     if a.iter().any(|x| x == "--sim") {
-        // The sim twin models per-request execution only: no lanes, no
-        // batching, no artifacts. Say so instead of silently dropping
-        // live-only flags and inviting an apples-to-oranges comparison.
-        for live_only in ["--policies", "--streams", "--artifacts"] {
-            if flag(a, live_only).is_some() {
-                eprintln!(
-                    "stagebreak: {live_only} is a live-plane knob — the sim twin \
-                     models per-request (b1) execution and ignores it"
-                );
-            }
+        // The sim twin runs the same lane model as the live executor
+        // (--policies / --streams apply); only artifacts are live-only.
+        if flag(a, "--artifacts").is_some() {
+            eprintln!(
+                "stagebreak: --artifacts is a live-plane knob — the sim twin \
+                 generates no artifacts and ignores it"
+            );
         }
         let model = flag_or(a, "--model", "MobileNetV3");
         let Some(model) = PaperModel::by_name(model) else {
@@ -532,9 +581,41 @@ fn cmd_stagebreak(a: &[String]) -> i32 {
             .and_then(|v| v.parse::<usize>().ok())
             .unwrap_or(200)
             .max(1);
-        let t = accelserve::experiments::run_sim_stage_break(
-            model, &transports, clients, requests, stat,
-        );
+        // 0 streams = one per client (ample); smaller counts create the
+        // contention that fills the queue/disp lane columns.
+        let streams = flag(a, "--streams")
+            .and_then(|v| v.parse::<usize>().ok())
+            .unwrap_or(0);
+        let mut policies = vec![BatchCfg::none(), BatchCfg::deadline(8, 2000)];
+        if let Some(list) = flag(a, "--policies") {
+            policies.clear();
+            for spec in list.split(',') {
+                match BatchCfg::parse(spec) {
+                    Some(p) => policies.push(p),
+                    None => {
+                        eprintln!("bad batch policy {spec:?} (want N, or N@FLUSH_US like 8@2000)");
+                        return 2;
+                    }
+                }
+            }
+        }
+        let trace_out = flag(a, "--trace-out").map(std::path::PathBuf::from);
+        let t = match accelserve::experiments::run_sim_stage_break(
+            model,
+            &transports,
+            &policies,
+            clients,
+            requests,
+            streams,
+            stat,
+            trace_out.as_deref(),
+        ) {
+            Ok(t) => t,
+            Err(e) => {
+                eprintln!("stagebreak: {e:#}");
+                return 1;
+            }
+        };
         if csv {
             print!("{}", t.to_csv());
         } else {
@@ -584,6 +665,9 @@ fn cmd_stagebreak(a: &[String]) -> i32 {
         }
         cfg.policies = policies;
     }
+    if let Some(p) = flag(a, "--trace-out") {
+        cfg.trace_out = Some(p.into());
+    }
     let t = match accelserve::experiments::run_stage_break(&cfg) {
         Ok(t) => t,
         Err(e) => {
@@ -597,6 +681,23 @@ fn cmd_stagebreak(a: &[String]) -> i32 {
         print!("{}", t.render());
     }
     0
+}
+
+/// Export a Chrome trace-event timeline to a file (`accelserve
+/// traceexport`): a spans-on stagebreak run — live by default, the
+/// simulated lane-model twin with `--sim` — whose per-request stage
+/// timelines land in `--out` (default `trace.json`) instead of only
+/// the summary table. Load the file in `ui.perfetto.dev` or
+/// `chrome://tracing`; every stagebreak flag (`--model`, `--clients`,
+/// `--requests`, `--transports`, `--policies`, `--streams`, `--pct`)
+/// applies.
+fn cmd_traceexport(a: &[String]) -> i32 {
+    let mut args = a.to_vec();
+    if flag(a, "--trace-out").is_none() {
+        args.push("--trace-out".to_string());
+        args.push(flag_or(a, "--out", "trace.json").to_string());
+    }
+    cmd_stagebreak(&args)
 }
 
 /// Overload × SLO sweep: drive the executor past service capacity with
@@ -768,6 +869,9 @@ fn cmd_shardsweep(a: &[String]) -> i32 {
     }
     if let Some(dir) = flag(a, "--artifacts") {
         cfg.artifacts_dir = Some(dir.into());
+    }
+    if let Some(p) = flag(a, "--trace-out") {
+        cfg.trace_out = Some(p.into());
     }
     if let Some(list) = flag(a, "--transports") {
         match parse_transports(list) {

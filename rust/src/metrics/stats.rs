@@ -16,6 +16,13 @@ pub struct ReqRecord {
     pub request: Ns,
     /// Server-to-client transport.
     pub response: Ns,
+    /// Waiting in the model lane before the scheduler first considered
+    /// the request for a gather (zero when the lane model is off).
+    pub lane_queue: Ns,
+    /// Waiting while the request's batch gathered peers (flush window).
+    pub gather_wait: Ns,
+    /// Sealed batch waiting for an execution stream.
+    pub dispatch_wait: Ns,
     /// Host-to-device staging copy (zero for GDR/local).
     pub copy_h2d: Ns,
     /// Device-to-host staging copy (zero for GDR/local).
@@ -208,6 +215,9 @@ pub struct StageAgg {
     pub total: Series,
     pub request: Series,
     pub response: Series,
+    pub lane_queue: Series,
+    pub gather_wait: Series,
+    pub dispatch_wait: Series,
     pub copy_h2d: Series,
     pub copy_d2h: Series,
     pub preproc: Series,
@@ -225,6 +235,9 @@ impl StageAgg {
         self.total.push_ns(r.total);
         self.request.push_ns(r.request);
         self.response.push_ns(r.response);
+        self.lane_queue.push_ns(r.lane_queue);
+        self.gather_wait.push_ns(r.gather_wait);
+        self.dispatch_wait.push_ns(r.dispatch_wait);
         self.copy_h2d.push_ns(r.copy_h2d);
         self.copy_d2h.push_ns(r.copy_d2h);
         self.preproc.push_ns(r.preproc);

@@ -18,9 +18,10 @@
 //! slots, link serialization) lands in the stage where it occurred.
 
 use std::cmp::Reverse;
-use std::collections::BinaryHeap;
+use std::collections::{BinaryHeap, HashMap, VecDeque};
 use std::sync::Arc;
 
+use crate::coordinator::{BatchCfg, SealReason, N_SEAL_REASONS};
 use crate::gpu::{CopyDir, GpuConfig, GpuEv, GpuNotify, GpuSim, JobSpec, KernelSpec, Sharing};
 use crate::metrics::stats::{ReqRecord, StageAgg};
 use crate::models::zoo::{PaperModel, KERNEL_GAP_US};
@@ -64,19 +65,19 @@ pub struct Scenario {
     /// --config`). The sim plane itself models `transport` above and
     /// ignores this knob.
     pub live_transport: Option<crate::transport::TransportKind>,
-    /// Live-plane dynamic batching: largest batch the executor may
-    /// coalesce (1 disables). Like `live_transport`, this configures
-    /// the live coordinator (`accelserve serve` / `batchsweep
-    /// --config`); the sim plane models per-request execution and
-    /// ignores it.
+    /// Dynamic batching: largest batch a model lane may coalesce (1
+    /// disables). Configures the live coordinator (`accelserve serve` /
+    /// `batchsweep --config`) and, with [`Scenario::lanes`] on, the
+    /// sim's lane model too; a lane-less sim run models per-request
+    /// execution and ignores it.
     pub max_batch: usize,
-    /// Live-plane flush deadline (µs): how long a batch head may wait
-    /// for peers before the executor seals a partial batch.
+    /// Flush deadline (µs): how long a batch head may wait for peers
+    /// before the scheduler seals a partial batch (both planes, like
+    /// `max_batch`).
     pub flush_us: u64,
-    /// Live-plane per-model batching overrides (the scenario
-    /// `model_batch` key): each model lane's policy and round-robin
-    /// weight in the continuous scheduler. Like `max_batch`, a live
-    /// knob the sim plane ignores.
+    /// Per-model batching overrides (the scenario `model_batch` key):
+    /// each model lane's policy and weighted-round-robin share in the
+    /// continuous scheduler (both planes, like `max_batch`).
     pub model_batch: Vec<(String, crate::coordinator::ModelPolicy)>,
     /// Live-plane routing tier: how many coordinator backends sit
     /// behind the gateway (`accelserve shardsweep`). 1 = no sharding.
@@ -89,6 +90,19 @@ pub struct Scenario {
     /// `FLAG_PIPELINE` request form run by the routing gateway). Empty
     /// = single-stage requests.
     pub pipeline: Vec<String>,
+    /// Model the executor's per-model lanes in the sim plane: requests
+    /// queue per model, gather into batches under `max_batch` /
+    /// `flush_us` / `model_batch`, and sealed batches dispatch WRR+EDF
+    /// onto the stream pool — filling the lane-queue / gather-wait /
+    /// dispatch-wait stages the per-request pipeline leaves zero. Off
+    /// by default, which keeps every lane-less run bit-identical to
+    /// earlier sims. `Local` transport bypasses the lanes either way
+    /// (the on-device lower bound has no scheduler in front of it).
+    pub lanes: bool,
+    /// Record per-request timelines ([`RunStats::timeline`]) and
+    /// per-batch windows ([`RunStats::batches`]) for Chrome-trace
+    /// export. Off by default (the vectors stay empty).
+    pub trace: bool,
 }
 
 impl Scenario {
@@ -114,6 +128,8 @@ impl Scenario {
             backends: 1,
             placement: None,
             pipeline: Vec::new(),
+            lanes: false,
+            trace: false,
         }
     }
 
@@ -171,10 +187,23 @@ impl Scenario {
         self
     }
 
-    /// Live-plane batching policy (see `max_batch` / `flush_us`).
+    /// Batching policy (see `max_batch` / `flush_us`; modeled by the
+    /// sim when [`Scenario::lanes`] is on, live-plane config otherwise).
     pub fn with_batching(mut self, max_batch: usize, flush_us: u64) -> Scenario {
         self.max_batch = max_batch.max(1);
         self.flush_us = flush_us;
+        self
+    }
+
+    /// Turn on the sim-plane lane model (see [`Scenario::lanes`]).
+    pub fn with_lanes(mut self) -> Scenario {
+        self.lanes = true;
+        self
+    }
+
+    /// Record timelines/batches for export (see [`Scenario::trace`]).
+    pub fn with_trace(mut self) -> Scenario {
+        self.trace = true;
         self
     }
 
@@ -249,6 +278,53 @@ pub struct RunStats {
     /// interleave counter (nonzero = models were served concurrently,
     /// not phase-by-phase).
     pub interleaves: u64,
+    /// Per-lane scheduler counters, parallel to `per_model` (empty when
+    /// [`Scenario::lanes`] is off) — the sim twin of the live
+    /// executor's `LaneStats`.
+    pub lane_stats: Vec<SimLaneStats>,
+    /// Measured requests in completion order with their full stage
+    /// records, for Chrome-trace export ([`Scenario::trace`] on).
+    pub timeline: Vec<SimSpan>,
+    /// Executed batches in completion order ([`Scenario::trace`] on):
+    /// the gather/seal/dispatch windows behind the per-request stages.
+    pub batches: Vec<SimBatch>,
+}
+
+/// One sim lane's counters: jobs executed, executable calls issued
+/// (`jobs / calls` = mean achieved batch) and sealed-batch counts by
+/// [`SealReason`]. The `Blocked`/`Slo` slots stay zero — the sim's
+/// uniform-shape, SLO-less traffic never seals for those reasons.
+#[derive(Debug, Clone)]
+pub struct SimLaneStats {
+    pub model: String,
+    pub jobs: u64,
+    pub calls: u64,
+    pub sealed: [u64; N_SEAL_REASONS],
+}
+
+/// One measured request's placement on the sim clock plus its stage
+/// record — everything the timeline exporter needs.
+#[derive(Debug, Clone)]
+pub struct SimSpan {
+    pub client: usize,
+    pub model: String,
+    pub t_sent: Ns,
+    pub rec: ReqRecord,
+}
+
+/// One executed batch: which lane/stream ran it, how many requests it
+/// fused, and the scheduler window timestamps.
+#[derive(Debug, Clone)]
+pub struct SimBatch {
+    pub model: String,
+    pub stream: usize,
+    pub size: usize,
+    /// When the gather window over the batch head opened.
+    pub gather_open: Ns,
+    pub seal: Ns,
+    pub dispatch: Ns,
+    pub done: Ns,
+    pub reason: SealReason,
 }
 
 #[derive(Debug, Clone, Copy)]
@@ -265,6 +341,10 @@ enum Ev {
     RespAtGw { req: usize },
     /// Response arrived at the client: request complete.
     RespAtClient { req: usize },
+    /// A lane's gather-window flush deadline expired (lane model only).
+    /// Stale timers (the window already sealed) carry an old `epoch`
+    /// and are ignored.
+    LaneFlush { lane: usize, epoch: u64 },
 }
 
 #[derive(Debug, Clone, Copy, Default)]
@@ -273,11 +353,60 @@ struct Req {
     measured: bool,
     t_sent: Ns,
     t_at_server: Ns,
+    /// Lane-model stamps (all zero when [`Scenario::lanes`] is off):
+    /// first gather consideration, batch seal, stream dispatch.
+    t_gather: Ns,
+    t_seal: Ns,
+    t_dispatch: Ns,
+    gathered: bool,
     t_h2d_done: Ns,
     t_preproc_done: Ns,
     t_infer_done: Ns,
     t_d2h_done: Ns,
     cpu_us: f64,
+}
+
+/// One simulated model lane (the sim twin of the live executor's lane):
+/// a FIFO of waiting requests, an open gather window over the head
+/// group, and a one-deep sealed slot — sealed work waits here for a
+/// stream, which is exactly the live `dispatch-wait` stage.
+struct SimLane {
+    cfg: BatchCfg,
+    weight: u32,
+    credits: u32,
+    q: VecDeque<usize>,
+    /// When the current gather window opened (sealed slot empty only).
+    window_open: Option<Ns>,
+    /// The head's flush deadline (enqueue + `flush_us`), if any.
+    window_deadline: Option<Ns>,
+    /// Bumped at each seal; stale [`Ev::LaneFlush`] timers no-op.
+    epoch: u64,
+    sealed: Option<SealedBatch>,
+    jobs: u64,
+    calls: u64,
+    sealed_counts: [u64; N_SEAL_REASONS],
+}
+
+/// A sealed batch parked in its lane, waiting for a free stream.
+struct SealedBatch {
+    members: Vec<usize>,
+    reason: SealReason,
+    /// The head's flush deadline, the EDF key once expired.
+    deadline: Option<Ns>,
+    gather_open: Ns,
+    t_seal: Ns,
+}
+
+/// A dispatched batch executing on the GPU, keyed by its leader
+/// request (the member whose id rides the GPU events).
+struct InFlight {
+    lane: usize,
+    stream: usize,
+    members: Vec<usize>,
+    gather_open: Ns,
+    t_seal: Ns,
+    t_dispatch: Ns,
+    reason: SealReason,
 }
 
 struct HeapEntry {
@@ -328,6 +457,19 @@ pub struct World {
     /// Model index of the last completed inference (cross-model
     /// interleave accounting).
     last_infer_model: Option<usize>,
+    /// Per-model lanes, parallel to `models` (empty when the lane
+    /// model is off).
+    lanes: Vec<SimLane>,
+    /// WRR cursor over `lanes` (stays on a lane until its credits run
+    /// out, mirroring the live scheduler).
+    wrr_cursor: usize,
+    /// Free stream slots (lane model only; initialized in reverse so
+    /// `pop()` hands out the lowest id first).
+    free_streams: Vec<usize>,
+    /// Executing batches by leader request id (lane model only).
+    in_flight: HashMap<usize, InFlight>,
+    /// Memoized batched job specs by (model index, batch size).
+    batch_specs: HashMap<(usize, usize), Arc<JobSpec>>,
     stats: RunStats,
     events: u64,
 }
@@ -364,11 +506,53 @@ impl World {
         for m in &models {
             stats.per_model.push((m.name.to_string(), StageAgg::new()));
         }
+        let lanes = if sc.lanes {
+            models
+                .iter()
+                .map(|m| {
+                    // Per-model policy override first, scenario default
+                    // otherwise — same resolution as the live executor.
+                    let (cfg, weight) = sc
+                        .model_batch
+                        .iter()
+                        .find(|(name, _)| name == m.name)
+                        .map(|(_, p)| (p.cfg, p.weight))
+                        .unwrap_or((
+                            BatchCfg {
+                                max_batch: sc.max_batch.max(1),
+                                flush_us: sc.flush_us,
+                            },
+                            1,
+                        ));
+                    SimLane {
+                        cfg,
+                        weight: weight.max(1),
+                        credits: weight.max(1),
+                        q: VecDeque::new(),
+                        window_open: None,
+                        window_deadline: None,
+                        epoch: 0,
+                        sealed: None,
+                        jobs: 0,
+                        calls: 0,
+                        sealed_counts: [0; N_SEAL_REASONS],
+                    }
+                })
+                .collect()
+        } else {
+            Vec::new()
+        };
+        let free_streams: Vec<usize> = (0..sc.effective_streams()).rev().collect();
         World {
             mix_assign,
             models,
             job_specs,
             last_infer_model: None,
+            lanes,
+            wrr_cursor: 0,
+            free_streams,
+            in_flight: HashMap::new(),
+            batch_specs: HashMap::new(),
             rng: Rng::new(sc.seed),
             gpu,
             now: Ns::ZERO,
@@ -482,6 +666,12 @@ impl World {
             }
             Ev::RespAtGw { req } => self.on_resp_at_gw(req),
             Ev::RespAtClient { req } => self.on_resp_at_client(req),
+            Ev::LaneFlush { lane, epoch } => {
+                if self.lanes[lane].epoch == epoch {
+                    self.lane_service(lane);
+                    self.lane_dispatch();
+                }
+            }
         }
     }
 
@@ -550,6 +740,11 @@ impl World {
 
     fn on_req_at_server(&mut self, req: usize) {
         self.reqs[req].t_at_server = self.now;
+        if self.sc.lanes {
+            self.lane_enqueue(req);
+            self.lane_dispatch();
+            return;
+        }
         let m = self.model_of(req);
         if self.sc.transport.needs_gpu_copies() {
             // Fig 2(a) steps 3: stage into GPU memory via the copy engine.
@@ -570,16 +765,304 @@ impl World {
         self.gpu.submit_job(self.now, req, prio, spec);
     }
 
+    // ------------------------------------------------------ lane model
+
+    /// Queue `req` into its model's lane (priority requests queue ahead
+    /// of normal ones, stable among peers — the live lane's
+    /// priority-ordered insertion), then service the lane.
+    fn lane_enqueue(&mut self, req: usize) {
+        let lane = self.model_idx(self.reqs[req].client);
+        let prio = self.prio_of(self.reqs[req].client);
+        let pos = if prio > 0 {
+            self.lanes[lane]
+                .q
+                .iter()
+                .position(|&r| self.prio_of(self.reqs[r].client) < prio)
+                .unwrap_or(self.lanes[lane].q.len())
+        } else {
+            self.lanes[lane].q.len()
+        };
+        self.lanes[lane].q.insert(pos, req);
+        self.lane_service(lane);
+    }
+
+    /// Open/refresh the lane's gather window and seal when a seal
+    /// condition holds — the sim twin of the live executor's
+    /// `try_seal`. The window only forms while the sealed slot is
+    /// empty (the scheduler considers one head group at a time), and
+    /// the head's flush deadline counts from its *enqueue*, so a head
+    /// that already waited out its flush seals on first consideration.
+    fn lane_service(&mut self, lane: usize) {
+        if self.lanes[lane].sealed.is_some() || self.lanes[lane].q.is_empty() {
+            return;
+        }
+        let cap = self.lanes[lane].cfg.max_batch.max(1);
+        let flush = self.lanes[lane].cfg.flush_us;
+        if self.lanes[lane].window_open.is_none() {
+            let head = self.lanes[lane].q[0];
+            let deadline = if flush > 0 {
+                Some(self.reqs[head].t_at_server + Ns::from_us(flush as f64))
+            } else {
+                None
+            };
+            self.lanes[lane].window_open = Some(self.now);
+            self.lanes[lane].window_deadline = deadline;
+            if let Some(d) = deadline {
+                if d > self.now {
+                    let epoch = self.lanes[lane].epoch;
+                    self.push(d, Ev::LaneFlush { lane, epoch });
+                }
+            }
+        }
+        // Everything the head group would take is "in gather" now:
+        // lane-queue ends (first consideration), gather-wait begins.
+        let gathering: Vec<usize> = self.lanes[lane].q.iter().take(cap).copied().collect();
+        for r in gathering {
+            if !self.reqs[r].gathered {
+                self.reqs[r].gathered = true;
+                self.reqs[r].t_gather = self.now;
+            }
+        }
+        let qlen = self.lanes[lane].q.len();
+        let reason = if qlen >= cap {
+            // Live taxonomy: a cap-1 policy seals "single" (unbatchable
+            // head), a wider cap that filled seals "full".
+            if cap == 1 {
+                SealReason::Single
+            } else {
+                SealReason::Full
+            }
+        } else if flush == 0 {
+            SealReason::Opportunistic
+        } else if self.lanes[lane].window_deadline.is_some_and(|d| self.now >= d) {
+            SealReason::Deadline
+        } else {
+            return; // the flush timer (or the next enqueue) re-checks
+        };
+        let take = cap.min(qlen);
+        let mut members = Vec::with_capacity(take);
+        for _ in 0..take {
+            members.push(self.lanes[lane].q.pop_front().expect("take <= qlen"));
+        }
+        for &r in &members {
+            self.reqs[r].t_seal = self.now;
+        }
+        let gather_open = self.lanes[lane].window_open.take().expect("window open");
+        let deadline = self.lanes[lane].window_deadline.take();
+        self.lanes[lane].sealed = Some(SealedBatch {
+            members,
+            reason,
+            deadline,
+            gather_open,
+            t_seal: self.now,
+        });
+        self.lanes[lane].sealed_counts[reason as usize] += 1;
+        self.lanes[lane].epoch += 1;
+    }
+
+    /// Pick the lane whose sealed batch dispatches next: EDF over
+    /// sealed batches whose flush deadline already expired (late work
+    /// drains earliest-deadline-first), then weighted round-robin with
+    /// two credit passes — the live scheduler's pick order.
+    fn pick_lane(&mut self) -> Option<usize> {
+        let n = self.lanes.len();
+        let edf = (0..n)
+            .filter_map(|i| {
+                self.lanes[i]
+                    .sealed
+                    .as_ref()
+                    .and_then(|s| s.deadline)
+                    .filter(|&d| self.now >= d)
+                    .map(|d| (d, i))
+            })
+            .min();
+        if let Some((_, i)) = edf {
+            return Some(i);
+        }
+        for pass in 0..2 {
+            for k in 0..n {
+                let i = (self.wrr_cursor + k) % n;
+                if self.lanes[i].sealed.is_some() && self.lanes[i].credits > 0 {
+                    self.wrr_cursor = i;
+                    return Some(i);
+                }
+            }
+            if pass == 0 {
+                for l in &mut self.lanes {
+                    l.credits = l.weight.max(1);
+                }
+            }
+        }
+        None
+    }
+
+    /// Dispatch sealed batches onto free streams until one side runs
+    /// out. Each dispatch immediately re-services its lane, so the
+    /// next head group starts gathering (one-sealed-ahead, exactly the
+    /// window the live `dispatch-wait` stage measures).
+    fn lane_dispatch(&mut self) {
+        while !self.free_streams.is_empty() {
+            let Some(lane) = self.pick_lane() else { return };
+            let stream = self.free_streams.pop().expect("checked non-empty");
+            let sealed = self.lanes[lane].sealed.take().expect("picked lane sealed");
+            let size = sealed.members.len();
+            self.lanes[lane].jobs += size as u64;
+            self.lanes[lane].calls += 1;
+            // EDF picks of expired-deadline work ride free, like the
+            // live scheduler's deadline lanes; WRR picks pay a credit.
+            let expired = sealed.deadline.is_some_and(|d| self.now >= d);
+            if !expired && self.lanes[lane].credits > 0 {
+                self.lanes[lane].credits -= 1;
+                if self.lanes[lane].credits == 0 {
+                    self.wrr_cursor = (lane + 1) % self.lanes.len();
+                }
+            }
+            for &r in &sealed.members {
+                self.reqs[r].t_dispatch = self.now;
+            }
+            let leader = sealed.members[0];
+            let members = sealed.members.clone();
+            self.in_flight.insert(
+                leader,
+                InFlight {
+                    lane,
+                    stream,
+                    members: sealed.members,
+                    gather_open: sealed.gather_open,
+                    t_seal: sealed.t_seal,
+                    t_dispatch: self.now,
+                    reason: sealed.reason,
+                },
+            );
+            self.lane_service(lane);
+            // Start the batch: one fused staging copy on copy
+            // transports (batched rows move together), GDR goes
+            // straight to compute.
+            if self.sc.transport.needs_gpu_copies() {
+                let bytes = self.model_of(leader).request_bytes(self.sc.raw_input) * size as u64;
+                self.gpu.submit_copy(self.now, leader, CopyDir::H2D, bytes);
+                self.reqs[leader].cpu_us += 5.0;
+            } else {
+                for &r in &members {
+                    self.reqs[r].t_h2d_done = self.now;
+                }
+                self.submit_batch_job(leader);
+            }
+        }
+    }
+
+    /// Submit the fused GPU job for the batch led by `leader` (batch
+    /// priority = highest member priority, like the live chunk).
+    fn submit_batch_job(&mut self, leader: usize) {
+        let (lane, members) = {
+            let fl = &self.in_flight[&leader];
+            (fl.lane, fl.members.clone())
+        };
+        let prio = members
+            .iter()
+            .map(|&r| self.prio_of(self.reqs[r].client))
+            .max()
+            .unwrap_or(0);
+        let spec = self.batch_spec(lane, members.len());
+        self.gpu.submit_job(self.now, leader, prio, spec);
+    }
+
+    /// Shared job spec for a `size`-batch of lane `lane`'s model:
+    /// kernel block counts scale with the batch rows (the fused `_bN`
+    /// executable's shape), memoized per (model, size).
+    fn batch_spec(&mut self, lane: usize, size: usize) -> Arc<JobSpec> {
+        if size == 1 {
+            return self.job_specs[lane].clone();
+        }
+        if let Some(s) = self.batch_specs.get(&(lane, size)) {
+            return s.clone();
+        }
+        let mut spec = Self::build_job_spec(&self.sc, self.models[lane]);
+        for k in &mut spec.kernels {
+            k.blocks *= size as u32;
+        }
+        let spec = Arc::new(spec);
+        self.batch_specs.insert((lane, size), spec.clone());
+        spec
+    }
+
+    /// A batch finished its last device stage: stamp every member,
+    /// send the responses, record the batch, free the stream and let
+    /// the scheduler run again.
+    fn finish_batch(&mut self, leader: usize) {
+        let fl = self.in_flight.remove(&leader).expect("batch in flight");
+        for &r in &fl.members {
+            self.reqs[r].t_d2h_done = self.now;
+            self.send_response(r);
+        }
+        if self.sc.trace {
+            self.stats.batches.push(SimBatch {
+                model: self.models[fl.lane].name.to_string(),
+                stream: fl.stream,
+                size: fl.members.len(),
+                gather_open: fl.gather_open,
+                seal: fl.t_seal,
+                dispatch: fl.t_dispatch,
+                done: self.now,
+                reason: fl.reason,
+            });
+        }
+        self.free_streams.push(fl.stream);
+        self.lane_dispatch();
+    }
+
     fn on_gpu_notify(&mut self, n: GpuNotify) {
         match n {
             GpuNotify::CopyDone { req, dir: CopyDir::H2D } => {
-                self.reqs[req].t_h2d_done = self.now;
-                self.submit_job(req);
+                if self.in_flight.contains_key(&req) {
+                    // Batch leader: the fused staging copy landed.
+                    let members = self.in_flight[&req].members.clone();
+                    for &r in &members {
+                        self.reqs[r].t_h2d_done = self.now;
+                    }
+                    self.submit_batch_job(req);
+                } else {
+                    self.reqs[req].t_h2d_done = self.now;
+                    self.submit_job(req);
+                }
             }
             GpuNotify::PreprocDone { req } => {
-                self.reqs[req].t_preproc_done = self.now;
+                if self.in_flight.contains_key(&req) {
+                    let members = self.in_flight[&req].members.clone();
+                    for &r in &members {
+                        self.reqs[r].t_preproc_done = self.now;
+                    }
+                } else {
+                    self.reqs[req].t_preproc_done = self.now;
+                }
             }
             GpuNotify::InferDone { req } => {
+                if self.in_flight.contains_key(&req) {
+                    let (lane, members) = {
+                        let fl = &self.in_flight[&req];
+                        (fl.lane, fl.members.clone())
+                    };
+                    // One interleave per executable call, like the live
+                    // counter (lanes are parallel to models).
+                    if self.last_infer_model.is_some_and(|last| last != lane) {
+                        self.stats.interleaves += 1;
+                    }
+                    self.last_infer_model = Some(lane);
+                    for &r in &members {
+                        self.reqs[r].t_infer_done = self.now;
+                        if !self.sc.raw_input {
+                            self.reqs[r].t_preproc_done = self.reqs[r].t_h2d_done;
+                        }
+                    }
+                    if self.sc.transport.needs_gpu_copies() {
+                        let bytes = self.model_of(req).response_bytes() * members.len() as u64;
+                        self.gpu.submit_copy(self.now, req, CopyDir::D2H, bytes);
+                        self.reqs[req].cpu_us += 5.0;
+                    } else {
+                        self.finish_batch(req);
+                    }
+                    return;
+                }
                 self.reqs[req].t_infer_done = self.now;
                 let midx = self.model_idx(self.reqs[req].client);
                 if self.last_infer_model.is_some_and(|last| last != midx) {
@@ -599,8 +1082,12 @@ impl World {
                 }
             }
             GpuNotify::CopyDone { req, dir: CopyDir::D2H } => {
-                self.reqs[req].t_d2h_done = self.now;
-                self.send_response(req);
+                if self.in_flight.contains_key(&req) {
+                    self.finish_batch(req);
+                } else {
+                    self.reqs[req].t_d2h_done = self.now;
+                    self.send_response(req);
+                }
             }
         }
     }
@@ -648,7 +1135,10 @@ impl World {
             total,
             request: r.t_at_server.saturating_sub(r.t_sent),
             response: self.now.saturating_sub(r.t_d2h_done),
-            copy_h2d: r.t_h2d_done.saturating_sub(r.t_at_server),
+            lane_queue: r.t_gather.saturating_sub(r.t_at_server),
+            gather_wait: r.t_seal.saturating_sub(r.t_gather),
+            dispatch_wait: r.t_dispatch.saturating_sub(r.t_seal),
+            copy_h2d: r.t_h2d_done.saturating_sub(r.t_dispatch.max(r.t_at_server)),
             copy_d2h: r.t_d2h_done.saturating_sub(r.t_infer_done),
             preproc: r.t_preproc_done.saturating_sub(r.t_h2d_done),
             infer: if self.sc.raw_input {
@@ -668,6 +1158,14 @@ impl World {
             } else {
                 self.stats.normal.push(&rec);
             }
+            if self.sc.trace {
+                self.stats.timeline.push(SimSpan {
+                    client: r.client,
+                    model: self.models[midx].name.to_string(),
+                    t_sent: r.t_sent,
+                    rec,
+                });
+            }
         }
         // Closed loop: next request immediately.
         self.push(self.now, Ev::Send { client: r.client });
@@ -682,6 +1180,14 @@ impl World {
             / (self.now.0.max(1) as f64 * self.gpu.cfg.n_engines as f64);
         self.stats.copy_busy_s = self.gpu.copy_busy_ns() as f64 / 1e9;
         self.stats.events = self.events;
+        for (lane, l) in self.lanes.iter().enumerate() {
+            self.stats.lane_stats.push(SimLaneStats {
+                model: self.models[lane].name.to_string(),
+                jobs: l.jobs,
+                calls: l.calls,
+                sealed: l.sealed_counts,
+            });
+        }
         self.stats
     }
 }
@@ -907,5 +1413,82 @@ mod tests {
         );
         assert!(s.gpu_util > 0.3, "util {}", s.gpu_util);
         assert!(s.gpu_util <= 1.01, "util {}", s.gpu_util);
+    }
+
+    #[test]
+    fn lane_model_b1_noop_matches_classic_run() {
+        // With max_batch 1, no flush window and ample streams the lane
+        // model adds zero residence and consumes no extra randomness:
+        // the run must be bit-identical to the lane-less pipeline.
+        let base = Scenario::direct(model("ResNet50"), Transport::Tcp)
+            .with_clients(3)
+            .with_requests(60)
+            .with_seed(9);
+        let classic = World::run(base.clone());
+        let laned = World::run(base.with_lanes());
+        assert_eq!(classic.all.total.mean(), laned.all.total.mean());
+        assert_eq!(classic.events, laned.events);
+        assert_eq!(laned.all.lane_queue.mean(), 0.0);
+        assert_eq!(laned.all.gather_wait.mean(), 0.0);
+        assert_eq!(laned.all.dispatch_wait.mean(), 0.0);
+        assert_eq!(laned.lane_stats.len(), 1);
+        assert_eq!(laned.lane_stats[0].jobs, laned.lane_stats[0].calls);
+    }
+
+    #[test]
+    fn lane_columns_fill_under_contention() {
+        // Four clients share one stream under batch-1: requests wait in
+        // the lane (queue) and sealed heads wait for the stream
+        // (dispatch), and the nine stages still partition the total.
+        let s = World::run(
+            Scenario::direct(model("ResNet50"), Transport::Tcp)
+                .with_clients(4)
+                .with_streams(1)
+                .with_requests(40)
+                .with_lanes(),
+        );
+        assert!(s.all.lane_queue.mean() > 0.0, "no lane-queue residence");
+        assert!(s.all.dispatch_wait.mean() > 0.0, "no dispatch residence");
+        let sum = s.all.request.mean()
+            + s.all.lane_queue.mean()
+            + s.all.gather_wait.mean()
+            + s.all.dispatch_wait.mean()
+            + s.all.copy_mean()
+            + s.all.preproc.mean()
+            + s.all.infer.mean()
+            + s.all.response.mean();
+        let total = s.all.total.mean();
+        assert!(
+            (sum - total).abs() / total < 1e-6,
+            "stages {sum} vs total {total}"
+        );
+    }
+
+    #[test]
+    fn lane_batches_gather_under_flush_policy() {
+        // Four clients, one stream, batch-4 with a 2 ms flush window:
+        // heads wait for peers (gather-wait), multi-request batches
+        // execute (jobs > calls) and the trace records every batch.
+        let s = World::run(
+            Scenario::direct(model("ResNet50"), Transport::Tcp)
+                .with_clients(4)
+                .with_streams(1)
+                .with_requests(40)
+                .with_batching(4, 2000)
+                .with_lanes()
+                .with_trace(),
+        );
+        assert!(s.all.gather_wait.mean() > 0.0, "no gather residence");
+        let l = &s.lane_stats[0];
+        assert!(l.jobs > l.calls, "{} jobs / {} calls", l.jobs, l.calls);
+        assert!(l.sealed[SealReason::Full as usize] > 0, "no full seals");
+        assert_eq!(l.sealed.iter().sum::<u64>(), l.calls);
+        assert_eq!(s.timeline.len(), s.all.n());
+        let batched: u64 = s.batches.iter().map(|b| b.size as u64).sum();
+        assert_eq!(batched, l.jobs);
+        for b in &s.batches {
+            assert!(b.gather_open <= b.seal && b.seal <= b.dispatch);
+            assert!(b.dispatch <= b.done, "batch windows out of order");
+        }
     }
 }

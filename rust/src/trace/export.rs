@@ -1,0 +1,362 @@
+//! Chrome trace-event export: serialize collected span timelines as a
+//! JSON file loadable in `ui.perfetto.dev` (or `chrome://tracing`).
+//!
+//! The paper's profiling story (§III-B) is a *timeline* story — CUDA
+//! events and WR timestamps bracketing every stage of every request —
+//! but our reporting so far collapses those stamps into aggregate
+//! tables. This module keeps the per-request resolution: each request
+//! becomes nine complete events (`"ph":"X"`, one per [`Stage`]) tiled
+//! back to back so the track reads exactly like Fig 2's pipeline
+//! diagram, one track (`tid`) per lane/stream/transport ring.
+//!
+//! The JSON is hand-rolled: the tree is offline/vendored (no serde) and
+//! the golden-fixture test wants byte-stable output, so timestamps are
+//! formatted with pure integer math (`ns/1000.ns%1000` microseconds,
+//! three fixed decimals) — no float formatting is involved anywhere.
+//!
+//! Both planes feed the same exporter: the live plane via
+//! [`ChromeTrace::block`] (a wire [`SpanBlock`] collapsed through
+//! [`StageBreakdown::from_span`]) and the sim plane via
+//! [`ChromeTrace::record`] (a [`ReqRecord`] whose fields already *are*
+//! the stage durations).
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::metrics::stats::ReqRecord;
+use crate::trace::{SpanBlock, Stage, StageBreakdown};
+
+/// One typed event argument (the `args` object of a trace event).
+#[derive(Debug, Clone)]
+pub enum ArgVal {
+    U64(u64),
+    Str(String),
+}
+
+/// One complete ("X") event on one track.
+#[derive(Debug, Clone)]
+struct EvRec {
+    name: String,
+    cat: &'static str,
+    tid: usize,
+    ts_ns: u64,
+    dur_ns: u64,
+    args: Vec<(&'static str, ArgVal)>,
+}
+
+/// A Chrome trace-event document under construction: interned tracks
+/// (each becomes a named thread via a `thread_name` metadata event) and
+/// a flat list of complete events.
+#[derive(Debug, Clone, Default)]
+pub struct ChromeTrace {
+    tracks: Vec<String>,
+    events: Vec<EvRec>,
+}
+
+impl ChromeTrace {
+    pub fn new() -> ChromeTrace {
+        ChromeTrace::default()
+    }
+
+    /// Intern a track by exact name; the returned id is the event `tid`.
+    /// Repeated calls with the same name return the same id.
+    pub fn track(&mut self, name: &str) -> usize {
+        if let Some(i) = self.tracks.iter().position(|t| t == name) {
+            return i;
+        }
+        self.tracks.push(name.to_string());
+        self.tracks.len() - 1
+    }
+
+    /// Append one complete event to `track` (a [`ChromeTrace::track`] id).
+    pub fn event(
+        &mut self,
+        track: usize,
+        name: &str,
+        cat: &'static str,
+        ts_ns: u64,
+        dur_ns: u64,
+        args: &[(&'static str, ArgVal)],
+    ) {
+        self.events.push(EvRec {
+            name: name.to_string(),
+            cat,
+            tid: track,
+            ts_ns,
+            dur_ns,
+            args: args.to_vec(),
+        });
+    }
+
+    /// Tile one request's nine-stage breakdown onto `track` starting at
+    /// `start_ns`. Zero-duration stages are emitted too (every [`Stage`]
+    /// name appears on every request), and because a breakdown
+    /// partitions the end-to-end latency exactly, the tiles end at
+    /// `start_ns + total`.
+    pub fn stages(
+        &mut self,
+        track: usize,
+        start_ns: u64,
+        b: &StageBreakdown,
+        args: &[(&'static str, ArgVal)],
+    ) {
+        let mut t = start_ns;
+        for s in Stage::ALL {
+            let d = b.get(s);
+            self.event(track, s.name(), "stage", t, d, args);
+            t += d;
+        }
+    }
+
+    /// Live-plane entry point: collapse a wire span block onto the nine
+    /// stages and tile it (see [`StageBreakdown::from_span`]).
+    pub fn block(
+        &mut self,
+        track: usize,
+        start_ns: u64,
+        span: &SpanBlock,
+        total_ns: u64,
+        args: &[(&'static str, ArgVal)],
+    ) {
+        let b = StageBreakdown::from_span(span, total_ns);
+        self.stages(track, start_ns, &b, args);
+    }
+
+    /// Sim-plane entry point: a [`ReqRecord`]'s fields map onto the
+    /// stage taxonomy directly (same order, same names), so the sim's
+    /// timelines export in the identical format as live span blocks.
+    pub fn record(
+        &mut self,
+        track: usize,
+        start_ns: u64,
+        r: &ReqRecord,
+        args: &[(&'static str, ArgVal)],
+    ) {
+        let durs: [u64; super::N_STAGES] = [
+            r.request.0,
+            r.lane_queue.0,
+            r.gather_wait.0,
+            r.dispatch_wait.0,
+            r.copy_h2d.0,
+            r.preproc.0,
+            r.infer.0,
+            r.copy_d2h.0,
+            r.response.0,
+        ];
+        let mut t = start_ns;
+        for (s, d) in Stage::ALL.iter().zip(durs) {
+            self.event(track, s.name(), "stage", t, d, args);
+            t += d;
+        }
+    }
+
+    /// Number of data events collected (metadata events not counted).
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Sanity-check the document: within each track, events must not
+    /// overlap (`ts + dur <= next ts` in append order). The exporters
+    /// above append per-request tiles in request-start order per track,
+    /// so a violation means a caller interleaved concurrent requests on
+    /// one track.
+    pub fn validate(&self) -> Result<()> {
+        let mut last_end = vec![0u64; self.tracks.len()];
+        for e in &self.events {
+            if e.ts_ns < last_end[e.tid] {
+                bail!(
+                    "track '{}': event '{}' starts at {}ns before previous end {}ns",
+                    self.tracks[e.tid],
+                    e.name,
+                    e.ts_ns,
+                    last_end[e.tid]
+                );
+            }
+            last_end[e.tid] = e.ts_ns + e.dur_ns;
+        }
+        Ok(())
+    }
+
+    /// Serialize to Chrome trace-event JSON (deterministic, one event
+    /// per line): a `process_name` metadata event, one `thread_name`
+    /// metadata event per track, then every data event in append order.
+    pub fn to_json(&self) -> String {
+        let mut lines = Vec::with_capacity(1 + self.tracks.len() + self.events.len());
+        lines.push(
+            r#"{"name":"process_name","ph":"M","pid":1,"tid":0,"args":{"name":"accelserve"}}"#
+                .to_string(),
+        );
+        for (tid, name) in self.tracks.iter().enumerate() {
+            lines.push(format!(
+                r#"{{"name":"thread_name","ph":"M","pid":1,"tid":{tid},"args":{{"name":"{}"}}}}"#,
+                escape(name)
+            ));
+        }
+        for e in &self.events {
+            let mut args = String::new();
+            for (i, (k, v)) in e.args.iter().enumerate() {
+                if i > 0 {
+                    args.push(',');
+                }
+                match v {
+                    ArgVal::U64(n) => args.push_str(&format!(r#""{k}":{n}"#)),
+                    ArgVal::Str(s) => args.push_str(&format!(r#""{k}":"{}""#, escape(s))),
+                }
+            }
+            lines.push(format!(
+                r#"{{"name":"{}","cat":"{}","ph":"X","ts":{},"dur":{},"pid":1,"tid":{},"args":{{{args}}}}}"#,
+                escape(&e.name),
+                e.cat,
+                fmt_us(e.ts_ns),
+                fmt_us(e.dur_ns),
+                e.tid,
+            ));
+        }
+        format!(
+            "{{\"displayTimeUnit\":\"ns\",\"traceEvents\":[\n{}\n]}}\n",
+            lines.join(",\n")
+        )
+    }
+
+    /// Validate and write the document to `path`.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        self.validate()?;
+        std::fs::write(path, self.to_json())
+            .with_context(|| format!("writing trace to {}", path.display()))
+    }
+}
+
+/// Nanoseconds as fixed-point microseconds (`ts`/`dur` are in us in the
+/// trace-event format); integer math keeps the output byte-stable.
+fn fmt_us(ns: u64) -> String {
+    format!("{}.{:03}", ns / 1000, ns % 1000)
+}
+
+/// Minimal JSON string escaper (quotes, backslashes, control chars).
+fn escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::time::Ns;
+    use crate::trace::{SpanRec, Stamp};
+    use std::time::{Duration, Instant};
+
+    #[test]
+    fn fmt_us_is_fixed_point() {
+        assert_eq!(fmt_us(0), "0.000");
+        assert_eq!(fmt_us(999), "0.999");
+        assert_eq!(fmt_us(1_000), "1.000");
+        assert_eq!(fmt_us(1_234_567), "1234.567");
+    }
+
+    #[test]
+    fn escape_handles_specials() {
+        assert_eq!(escape(r#"a"b\c"#), r#"a\"b\\c"#);
+        assert_eq!(escape("x\ny\u{1}"), "x\\ny\\u0001");
+    }
+
+    #[test]
+    fn tracks_intern_by_name() {
+        let mut t = ChromeTrace::new();
+        let a = t.track("lane/m0");
+        let b = t.track("lane/m1");
+        let a2 = t.track("lane/m0");
+        assert_eq!(a, a2);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn stage_tiles_cover_total_and_validate() {
+        let base = Instant::now();
+        let mut span = SpanRec::begin_at(base);
+        for (stamp, off) in [
+            (Stamp::RecvDone, 1_000u64),
+            (Stamp::Dispatch, 2_000),
+            (Stamp::InferDone, 5_000),
+            (Stamp::ReplySend, 6_000),
+        ] {
+            span.mark_at(stamp, base + Duration::from_nanos(off));
+        }
+        let block = SpanBlock::of(&span);
+        let mut t = ChromeTrace::new();
+        let track = t.track("ring/tcp/c0");
+        t.block(track, 500, &block, 8_000, &[("req", ArgVal::U64(0))]);
+        // nine tiles, ending exactly at start + total
+        assert_eq!(t.len(), crate::trace::N_STAGES);
+        let last = t.events.last().unwrap();
+        assert_eq!(last.ts_ns + last.dur_ns, 500 + 8_000);
+        t.validate().unwrap();
+        // every stage name serialized
+        let json = t.to_json();
+        for s in Stage::ALL {
+            assert!(json.contains(s.name()), "missing {}", s.name());
+        }
+    }
+
+    #[test]
+    fn record_tiles_match_stage_order() {
+        let r = ReqRecord {
+            request: Ns(1_000),
+            lane_queue: Ns(500),
+            gather_wait: Ns(250),
+            dispatch_wait: Ns(250),
+            infer: Ns(2_000),
+            response: Ns(1_000),
+            total: Ns(5_000),
+            ..Default::default()
+        };
+        let mut t = ChromeTrace::new();
+        let track = t.track("sim/c0");
+        t.record(track, 0, &r, &[]);
+        assert_eq!(t.len(), crate::trace::N_STAGES);
+        let last = t.events.last().unwrap();
+        assert_eq!(last.ts_ns + last.dur_ns, 5_000);
+        t.validate().unwrap();
+    }
+
+    #[test]
+    fn validate_rejects_overlap() {
+        let mut t = ChromeTrace::new();
+        let track = t.track("x");
+        t.event(track, "a", "stage", 0, 100, &[]);
+        t.event(track, "b", "stage", 50, 10, &[]);
+        assert!(t.validate().is_err());
+    }
+
+    #[test]
+    fn json_shape_is_wellformed() {
+        let mut t = ChromeTrace::new();
+        let track = t.track("lane/\"odd\"");
+        let args = [("req", ArgVal::U64(3))];
+        t.event(track, "infer", "stage", 1_500, 250, &args);
+        let json = t.to_json();
+        assert!(json.starts_with("{\"displayTimeUnit\":\"ns\",\"traceEvents\":[\n"));
+        assert!(json.ends_with("\n]}\n"));
+        assert!(json.contains(r#""ts":1.500,"dur":0.250"#));
+        assert!(json.contains(r#"\"odd\""#));
+        // balanced braces (no string content interferes after escaping)
+        let opens = json.matches('{').count();
+        let closes = json.matches('}').count();
+        assert_eq!(opens, closes);
+    }
+}

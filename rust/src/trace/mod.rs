@@ -37,10 +37,12 @@
 //! latency *exactly* (`accelserve stagebreak` asserts this).
 
 pub mod breakdown;
+pub mod export;
 pub mod span;
 pub mod wire;
 
 pub use breakdown::{BreakdownAgg, StageBreakdown};
+pub use export::{ArgVal, ChromeTrace};
 pub use span::{SpanRec, Stamp, N_STAMPS};
 pub use wire::{decode_span_block, encode_span_block, SpanBlock, SPAN_VER};
 

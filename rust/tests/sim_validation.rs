@@ -1,0 +1,101 @@
+//! Cross-plane validation: the live stagebreak table against its
+//! simulated twin at identical geometry (clients, streams, batch
+//! policies, transport). The sim lane model must behave like the live
+//! scheduler *structurally* — same columns, the same columns going
+//! non-zero under the same policies, and both planes' stage columns
+//! partitioning their end-to-end latency — without asserting absolute
+//! magnitudes (one plane times a real engine, the other a model).
+//!
+//! Artifacts are generated on demand (`models::gen`); nothing skips.
+
+use accelserve::coordinator::BatchCfg;
+use accelserve::experiments::stage_break::{
+    run_sim_stage_break, run_stage_break, stage_columns, StageBreakCfg,
+};
+use accelserve::metrics::stats::Stat;
+use accelserve::models::zoo::PaperModel;
+use accelserve::net::params::Transport;
+use accelserve::transport::TransportKind;
+
+const CLIENTS: usize = 4;
+const STREAMS: usize = 1;
+
+fn policies() -> Vec<BatchCfg> {
+    vec![BatchCfg::none(), BatchCfg::deadline(4, 500)]
+}
+
+#[test]
+fn live_and_sim_stagebreak_agree_structurally() {
+    // Live plane: tcp, four closed-loop clients over one stream — the
+    // contention that makes lane residence (queue/gather/disp) visible.
+    let cfg = StageBreakCfg {
+        clients: CLIENTS,
+        requests: 10,
+        warmup: 2,
+        streams: STREAMS,
+        transports: vec![TransportKind::Tcp],
+        policies: policies(),
+        ..StageBreakCfg::default()
+    };
+    let live = run_stage_break(&cfg).unwrap();
+    // Sim twin at the same geometry (clients, streams, policies,
+    // transport); more requests only steadies the sim means — cheap.
+    let model = PaperModel::by_name("MobileNetV3").unwrap();
+    let sim = run_sim_stage_break(
+        model,
+        &[Transport::Tcp],
+        &policies(),
+        CLIENTS,
+        80,
+        STREAMS,
+        Stat::Mean,
+        None,
+    )
+    .unwrap();
+
+    assert_eq!(live.columns, stage_columns());
+    assert_eq!(sim.columns, stage_columns());
+    assert_eq!(live.rows.len(), 2);
+    assert_eq!(sim.rows.len(), 2);
+
+    for row in ["tcp b1", "tcp b4@500us"] {
+        // Both planes: the nine stage columns partition the e2e mean.
+        for (plane, t) in [("live", &live), ("sim", &sim)] {
+            let sum = t.get(row, "sum_ms").unwrap();
+            let e2e = t.get(row, "e2e_ms").unwrap();
+            assert!(e2e > 0.0, "{plane} {row}: e2e {e2e}");
+            assert!(
+                (sum - e2e).abs() / e2e < 0.05,
+                "{plane} {row}: stages sum to {sum} but e2e is {e2e}"
+            );
+        }
+        // Wherever the live plane shows real lane residence, the sim's
+        // lane model must show some too, column for column. 0.25 ms
+        // filters scheduler noise on loaded CI runners.
+        for col in ["queue_ms", "gather_ms", "disp_ms"] {
+            let l = live.get(row, col).unwrap();
+            let s = sim.get(row, col).unwrap();
+            if l > 0.25 {
+                assert!(s > 0.0, "{row} {col}: live shows {l:.3} ms but sim shows none");
+            }
+        }
+    }
+
+    // Four clients contending for one stream: the live executor must
+    // report real scheduler residence (queue + gather + disp together),
+    // and the sim lane model must reproduce the contention.
+    for (plane, t, floor) in [("live", &live, 0.05), ("sim", &sim, 0.0)] {
+        for row in ["tcp b1", "tcp b4@500us"] {
+            let resid = t.get(row, "queue_ms").unwrap()
+                + t.get(row, "gather_ms").unwrap()
+                + t.get(row, "disp_ms").unwrap();
+            assert!(resid > floor, "{plane} {row}: lane residence {resid:.4} ms");
+        }
+    }
+
+    // The flush window is the one effect that must appear in *both*
+    // planes unconditionally: b4@500us gathers peers, b1 cannot.
+    assert!(live.get("tcp b4@500us", "gather_ms").unwrap() > 0.0);
+    assert!(sim.get("tcp b4@500us", "gather_ms").unwrap() > 0.0);
+    assert_eq!(sim.get("tcp b1", "gather_ms"), Some(0.0));
+}

@@ -1,0 +1,117 @@
+//! Golden-fixture lockdown of the Chrome trace exporter: a hand-built
+//! set of span records must serialize byte-for-byte to the checked-in
+//! fixture (`fixtures/trace_golden.json`), plus structural checks on
+//! the fixture itself — balanced braces, every stage name present,
+//! `ts`/`dur` tiling forward per track. Any byte drift in the exporter
+//! (field order, timestamp formatting, envelope shape) fails here, so
+//! regenerating the fixture is a deliberate, reviewed act.
+
+use std::time::{Duration, Instant};
+
+use accelserve::trace::{ArgVal, ChromeTrace, SpanBlock, SpanRec, Stage, Stamp, N_STAGES};
+
+const GOLDEN: &str = include_str!("fixtures/trace_golden.json");
+
+/// A span block with the given `(stamp, ns-offset)` marks
+/// ([`Stamp::RecvRing`] lands at offset 0 by construction).
+fn span(stamps: &[(Stamp, u64)]) -> SpanBlock {
+    let base = Instant::now();
+    let mut s = SpanRec::begin_at(base);
+    for &(stamp, ns) in stamps {
+        s.mark_at(stamp, base + Duration::from_nanos(ns));
+    }
+    SpanBlock::of(&s)
+}
+
+/// The document the fixture pins: one tcp ring track, two requests.
+/// Request 0 carries every stamp (all nine stages non-zero, 60 us of
+/// server span inside a 70 us round trip); request 1 is a sparse
+/// preprocessed-input span whose missing stamps must collapse to
+/// zero-duration tiles, not shift the timeline.
+fn golden_trace() -> ChromeTrace {
+    let mut tc = ChromeTrace::new();
+    let track = tc.track("ring/tcp/c0");
+    let full = span(&[
+        (Stamp::RecvDone, 1_000),
+        (Stamp::GatherStart, 3_000),
+        (Stamp::Seal, 5_000),
+        (Stamp::Dispatch, 6_000),
+        (Stamp::H2dDone, 8_000),
+        (Stamp::PreprocDone, 10_000),
+        (Stamp::InferDone, 50_000),
+        (Stamp::D2hDone, 52_000),
+        (Stamp::ReplySend, 60_000),
+    ]);
+    let args = [("req", ArgVal::U64(0)), ("client", ArgVal::U64(0))];
+    tc.block(track, 1_000_000, &full, 70_000, &args);
+    let sparse = span(&[
+        (Stamp::RecvDone, 500),
+        (Stamp::Dispatch, 1_000),
+        (Stamp::InferDone, 3_000),
+        (Stamp::ReplySend, 3_500),
+    ]);
+    let args = [("req", ArgVal::U64(1)), ("client", ArgVal::U64(0))];
+    tc.block(track, 2_000_000, &sparse, 4_500, &args);
+    tc
+}
+
+/// Value of `"key":` in one serialized event line, if present.
+fn field<'a>(line: &'a str, key: &str) -> Option<&'a str> {
+    let pat = format!("\"{key}\":");
+    let at = line.find(&pat)? + pat.len();
+    let rest = &line[at..];
+    let end = rest.find([',', '}']).unwrap_or(rest.len());
+    Some(&rest[..end])
+}
+
+/// A fixed-point `us.nnn` timestamp back to integer nanoseconds.
+fn ns(v: &str) -> u64 {
+    let (us, frac) = v.split_once('.').expect("us.nnn timestamp");
+    us.parse::<u64>().unwrap() * 1_000 + frac.parse::<u64>().unwrap()
+}
+
+#[test]
+fn exporter_matches_golden_fixture_byte_for_byte() {
+    let tc = golden_trace();
+    tc.validate().unwrap();
+    assert_eq!(tc.len(), 2 * N_STAGES);
+    assert_eq!(tc.to_json(), GOLDEN);
+}
+
+#[test]
+fn fixture_is_structurally_wellformed() {
+    assert!(GOLDEN.starts_with("{\"displayTimeUnit\":\"ns\",\"traceEvents\":[\n"));
+    assert!(GOLDEN.ends_with("\n]}\n"));
+    assert_eq!(GOLDEN.matches('{').count(), GOLDEN.matches('}').count());
+    // Every stage of the taxonomy appears by its exported name.
+    for s in Stage::ALL {
+        let name = format!("\"name\":\"{}\"", s.name());
+        assert!(GOLDEN.contains(&name), "missing {}", s.name());
+    }
+    // One process_name plus one thread_name per track, then exactly
+    // nine complete events per request.
+    let metas = GOLDEN.matches("\"ph\":\"M\"").count();
+    let events = GOLDEN.matches("\"ph\":\"X\"").count();
+    assert_eq!(metas, 2);
+    assert_eq!(events, 2 * N_STAGES);
+    // Per track, events tile forward (`ts + dur <= next ts`) and every
+    // event sits on a declared track.
+    let tracks = metas - 1;
+    let mut last_end: Vec<u64> = vec![0; tracks];
+    for line in GOLDEN.lines().filter(|l| l.contains("\"ph\":\"X\"")) {
+        let tid: usize = field(line, "tid").unwrap().parse().unwrap();
+        let ts = ns(field(line, "ts").unwrap());
+        let dur = ns(field(line, "dur").unwrap());
+        assert!(tid < tracks, "event on undeclared track {tid}");
+        assert!(
+            ts >= last_end[tid],
+            "track {tid}: event at {ts}ns starts before previous end {}ns",
+            last_end[tid]
+        );
+        last_end[tid] = ts + dur;
+    }
+    // The two requests end where their stamp math says they must:
+    // 1070 us for request 0, 2004.5 us for request 1.
+    assert_eq!(last_end[0], 2_004_500);
+    assert!(GOLDEN.contains("\"ts\":1057.000,\"dur\":13.000"));
+}

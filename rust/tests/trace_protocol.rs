@@ -6,14 +6,16 @@
 
 use std::sync::atomic::AtomicU64;
 use std::sync::{Arc, Mutex};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use accelserve::coordinator::{
     fetch_shape, fetch_stats, handle_conn, handle_routed_conn, protocol, BackendSpec, BatchCfg,
     Executor, Router, RouterCfg, SealReason,
 };
 use accelserve::runtime::TensorBuf;
-use accelserve::trace::{Stage, StageBreakdown, Stamp};
+use accelserve::trace::{
+    decode_span_block, encode_span_block, SpanRec, Stage, StageBreakdown, Stamp, N_STAMPS,
+};
 use accelserve::transport::shm::shm_pair;
 use accelserve::transport::{connected_pair, MsgTransport, TransportKind};
 
@@ -222,6 +224,59 @@ fn truncated_span_block_is_rejected_not_misread() {
     assert!(protocol::Response::decode(&bad).is_err());
     drop(cli);
     h.join().unwrap();
+}
+
+#[test]
+fn stamp_wire_ids_roundtrip_exhaustively() {
+    // Every possible wire byte: ids below N_STAMPS map to exactly one
+    // stamp and back unchanged; everything else is rejected — no
+    // aliasing anywhere in the u8 space.
+    for id in 0..=u8::MAX {
+        match Stamp::from_id(id) {
+            Some(s) => {
+                assert!((id as usize) < N_STAMPS, "id {id} out of range");
+                assert_eq!(s.id(), id, "{} aliased", s.name());
+                assert_eq!(Stamp::ALL[id as usize], s);
+            }
+            None => assert!(id as usize >= N_STAMPS, "id {id} unmapped"),
+        }
+    }
+    // Names stay distinct — they are the exporter's event vocabulary.
+    let mut names: Vec<&str> = Stamp::ALL.iter().map(|s| s.name()).collect();
+    names.sort_unstable();
+    names.dedup();
+    assert_eq!(names.len(), N_STAMPS);
+}
+
+#[test]
+fn span_block_decode_rejects_every_truncation_without_panicking() {
+    // A fully-stamped span — the largest canonical block the live
+    // server can emit (version + count + nine bytes per stamp).
+    let base = Instant::now();
+    let mut span = SpanRec::begin_at(base);
+    for (i, &stamp) in Stamp::ALL.iter().enumerate() {
+        span.mark_at(stamp, base + Duration::from_nanos(i as u64 * 1_000));
+    }
+    let wire = encode_span_block(&span);
+    assert_eq!(wire.len(), 2 + N_STAMPS * 9);
+    let (block, used) = decode_span_block(&wire).unwrap();
+    assert_eq!(used, wire.len());
+    assert_eq!(block.len(), N_STAMPS);
+    // Every proper prefix must come back as an error — never a panic,
+    // never a short decode that silently drops trailing stamps.
+    for cut in 0..wire.len() {
+        assert!(
+            decode_span_block(&wire[..cut]).is_err(),
+            "a {cut}-byte prefix of a {}-byte block decoded",
+            wire.len()
+        );
+    }
+    // Bytes beyond the block are the response payload, not an error:
+    // the decoder must consume exactly the block and no more.
+    let mut padded = wire.clone();
+    padded.extend_from_slice(&[0x5A; 33]);
+    let (_, used) = decode_span_block(&padded).unwrap();
+    assert_eq!(used, wire.len());
 }
 
 #[test]
