@@ -11,6 +11,7 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::metrics::stats::{ReqRecord, StageAgg};
+use crate::metrics::telemetry::MetricsReport;
 use crate::models::zoo::WorkloadData;
 use crate::sim::time::Ns;
 use crate::trace::{BreakdownAgg, SpanBlock, Stage, StageBreakdown};
@@ -133,6 +134,22 @@ pub fn fetch_stats(t: &mut dyn MsgTransport) -> Result<ExecStats> {
         Response::Ok { .. } => bail!("server answered stats with an inference response"),
         Response::Shed { msg, .. } => bail!("server shed a stats request: {msg}"),
         Response::Pipeline { .. } => bail!("server answered stats with a pipeline response"),
+        Response::Metrics(_) => bail!("server answered stats with a metrics response"),
+    }
+}
+
+/// Query a server's telemetry plane — registry snapshot plus sampler
+/// ring — over an open connection (the metrics opcode, protocol v2).
+/// Works against a coordinator (local registry) or a routing gateway
+/// (fleet-merged snapshot, empty ring). A server predating the opcode
+/// answers with an error response, surfaced here as `Err` — callers
+/// degrade by omitting histogram-derived columns.
+pub fn fetch_metrics(t: &mut dyn MsgTransport) -> Result<MetricsReport> {
+    t.send(&protocol::encode_metrics_request())?;
+    match Response::decode(&t.recv()?)? {
+        Response::Metrics(m) => Ok(m),
+        Response::Err(e) => bail!("server rejected metrics request: {e}"),
+        other => bail!("unexpected response to metrics request: {other:?}"),
     }
 }
 
@@ -337,8 +354,8 @@ pub fn run_client_loop(t: &mut dyn MsgTransport, cfg: &LoadCfg, client_idx: usiz
                 log::warn!("client {client_idx}: server error on request {i}: {e}");
                 out.req_errors += 1;
             }
-            Response::Stats(_) => {
-                out.fatal = Some(anyhow!("unsolicited stats response"));
+            Response::Stats(_) | Response::Metrics(_) => {
+                out.fatal = Some(anyhow!("unsolicited stats/metrics response"));
                 return out;
             }
             Response::Shed { .. } => {

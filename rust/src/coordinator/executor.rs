@@ -56,6 +56,10 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
+use crate::metrics::telemetry::{
+    labeled, Counter, Gauge, HistoHandle, MetricsReport, Registry, Sample, Sampler,
+    DEFAULT_RING_CAP, DEFAULT_SAMPLE_MS,
+};
 use crate::models::manifest::{Manifest, TensorSpec};
 use crate::runtime::{Engine, TensorBuf};
 use crate::trace::{SpanRec, Stamp};
@@ -501,6 +505,126 @@ struct Sched {
     idle_workers: usize,
 }
 
+/// Pre-resolved handles into the always-on telemetry registry, built
+/// once at startup so every hot-path event is an O(atomic add) — no
+/// name lookup, no registry lock. Stage histograms are fed from the
+/// same [`SpanRec`] stamps the trace plane uses, so the telemetry
+/// plane's latency decomposition and an exported timeline agree by
+/// construction.
+struct ExecMetrics {
+    reg: Arc<Registry>,
+    /// `accel_jobs_total` — jobs executed.
+    jobs: Counter,
+    /// `accel_batches_total` — executable calls issued.
+    batches: Counter,
+    /// `accel_interleaves_total` — dispatches that switched model.
+    interleaves: Counter,
+    /// `accel_queue_depth` — jobs queued across all lanes right now.
+    depth: Gauge,
+    /// `accel_batch_size` — executed chunk size in jobs.
+    batch_size: HistoHandle,
+    /// `accel_svc_ns` — stream time per executable call.
+    svc_ns: HistoHandle,
+    /// `accel_seal_total{reason=…}`, indexed by [`SealReason`].
+    sealed: [Counter; N_SEAL_REASONS],
+    /// `accel_shed_total{reason=…}`, indexed by [`ShedReason`].
+    shed: [Counter; N_SHED_REASONS],
+    /// `accel_credit_grants_total` — credit hints computed.
+    credit_grants: Counter,
+    /// `accel_credit_tokens_total` — credit tokens granted.
+    credit_tokens: Counter,
+    /// `accel_stage_ns{stage=…}` — executor-visible pipeline stages.
+    lane_queue_ns: HistoHandle,
+    gather_wait_ns: HistoHandle,
+    dispatch_wait_ns: HistoHandle,
+    copy_h2d_ns: HistoHandle,
+    preproc_ns: HistoHandle,
+    infer_ns: HistoHandle,
+    copy_d2h_ns: HistoHandle,
+    /// `accel_exec_ns{model=…}` — enqueue→device-done latency per
+    /// model, resolved lazily (once per model, per-chunk lookup).
+    exec_ns: Mutex<HashMap<String, HistoHandle>>,
+}
+
+impl ExecMetrics {
+    fn new(reg: Arc<Registry>) -> ExecMetrics {
+        let stage = |s: &str| reg.histo(&labeled("accel_stage_ns", "stage", s));
+        ExecMetrics {
+            jobs: reg.counter("accel_jobs_total"),
+            batches: reg.counter("accel_batches_total"),
+            interleaves: reg.counter("accel_interleaves_total"),
+            depth: reg.gauge("accel_queue_depth"),
+            batch_size: reg.histo("accel_batch_size"),
+            svc_ns: reg.histo("accel_svc_ns"),
+            sealed: std::array::from_fn(|i| {
+                reg.counter(&labeled("accel_seal_total", "reason", SEAL_REASON_NAMES[i]))
+            }),
+            shed: std::array::from_fn(|i| {
+                reg.counter(&labeled("accel_shed_total", "reason", SHED_REASON_NAMES[i]))
+            }),
+            credit_grants: reg.counter("accel_credit_grants_total"),
+            credit_tokens: reg.counter("accel_credit_tokens_total"),
+            lane_queue_ns: stage("lane-queue"),
+            gather_wait_ns: stage("gather-wait"),
+            dispatch_wait_ns: stage("dispatch-wait"),
+            copy_h2d_ns: stage("copy-h2d"),
+            preproc_ns: stage("preproc"),
+            infer_ns: stage("infer"),
+            copy_d2h_ns: stage("copy-d2h"),
+            exec_ns: Mutex::new(HashMap::new()),
+            reg,
+        }
+    }
+
+    /// The per-model end-to-end histogram, resolved once per model.
+    fn exec_histo(&self, model: &str) -> HistoHandle {
+        let mut m = self.exec_ns.lock().unwrap();
+        if let Some(h) = m.get(model) {
+            return Arc::clone(h);
+        }
+        let h = self.reg.histo(&labeled("accel_exec_ns", "model", model));
+        m.insert(model.to_string(), Arc::clone(&h));
+        h
+    }
+
+    /// Feed a completed job's span stamps into the stage histograms.
+    /// Every interval is between stamps the executor itself marks, so
+    /// a fully-run job observes all of them (preproc only on the raw
+    /// path, where the stamp exists).
+    fn observe_span(&self, exec_h: &HistoHandle, span: &SpanRec) {
+        let g = |s: Stamp| span.get(s);
+        let iv = |a: Option<u64>, b: Option<u64>| match (a, b) {
+            (Some(a), Some(b)) => Some(b.saturating_sub(a)),
+            _ => None,
+        };
+        if let Some(d) = iv(g(Stamp::Enqueue), g(Stamp::GatherStart)) {
+            self.lane_queue_ns.observe(d);
+        }
+        if let Some(d) = iv(g(Stamp::GatherStart), g(Stamp::Seal)) {
+            self.gather_wait_ns.observe(d);
+        }
+        if let Some(d) = iv(g(Stamp::Seal), g(Stamp::Dispatch)) {
+            self.dispatch_wait_ns.observe(d);
+        }
+        if let Some(d) = iv(g(Stamp::Dispatch), g(Stamp::H2dDone)) {
+            self.copy_h2d_ns.observe(d);
+        }
+        if let Some(d) = iv(g(Stamp::H2dDone), g(Stamp::PreprocDone)) {
+            self.preproc_ns.observe(d);
+        }
+        let pre_infer = g(Stamp::PreprocDone).or_else(|| g(Stamp::H2dDone));
+        if let Some(d) = iv(pre_infer, g(Stamp::InferDone)) {
+            self.infer_ns.observe(d);
+        }
+        if let Some(d) = iv(g(Stamp::InferDone), g(Stamp::D2hDone)) {
+            self.copy_d2h_ns.observe(d);
+        }
+        if let Some(d) = iv(g(Stamp::Enqueue), g(Stamp::D2hDone)) {
+            exec_h.observe(d);
+        }
+    }
+}
+
 struct Shared {
     sched: Mutex<Sched>,
     /// Wakes the scheduler: new submission, or a worker went idle.
@@ -524,6 +648,8 @@ struct Shared {
     /// Execution-stream count: how many jobs drain concurrently, the
     /// divisor in the admission-control queue-delay estimate.
     streams: usize,
+    /// Always-on telemetry handles (registry + pre-resolved series).
+    tm: ExecMetrics,
 }
 
 impl Shared {
@@ -578,6 +704,9 @@ pub struct Executor {
     /// the answer to the wire's `OP_SHAPE`) — the scheduler thread owns
     /// its own copy.
     manifest: Manifest,
+    /// Background telemetry sampler feeding the counter-track ring
+    /// (joined in [`Executor::shutdown`], or on drop).
+    sampler: Option<Sampler>,
 }
 
 impl Executor {
@@ -594,12 +723,25 @@ impl Executor {
     }
 
     /// Start with a full [`SchedCfg`] — per-model policy overrides and
-    /// a per-lane queue bound on top of the global default.
+    /// a per-lane queue bound on top of the global default. Telemetry
+    /// samples at the default period ([`DEFAULT_SAMPLE_MS`]).
     pub fn start_with(
         artifact_dir: impl Into<PathBuf>,
         streams: usize,
         sched: SchedCfg,
         warm: &[&str],
+    ) -> Result<Executor> {
+        Executor::start_full(artifact_dir, streams, sched, warm, DEFAULT_SAMPLE_MS)
+    }
+
+    /// [`Executor::start_with`] plus the telemetry sampler period in
+    /// milliseconds (the CLI's `--sample-ms`).
+    pub fn start_full(
+        artifact_dir: impl Into<PathBuf>,
+        streams: usize,
+        sched: SchedCfg,
+        warm: &[&str],
+        sample_ms: u64,
     ) -> Result<Executor> {
         assert!(streams >= 1);
         let dir: PathBuf = artifact_dir.into();
@@ -607,6 +749,7 @@ impl Executor {
         // long a gather is worth holding; loading the manifest here
         // also fails fast on an unusable artifact directory.
         let manifest = Manifest::load(&dir)?;
+        let telemetry = Arc::new(Registry::new());
         let shared = Arc::new(Shared {
             sched: Mutex::new(Sched {
                 lanes: HashMap::new(),
@@ -625,6 +768,7 @@ impl Executor {
             interleaves: AtomicU64::new(0),
             counters: Mutex::new(HashMap::new()),
             streams,
+            tm: ExecMetrics::new(Arc::clone(&telemetry)),
         });
         let warm: Vec<String> = warm.iter().map(|s| s.to_string()).collect();
         let mut workers = Vec::new();
@@ -674,11 +818,13 @@ impl Executor {
         let sh = shared.clone();
         let sched_manifest = manifest.clone();
         let scheduler = std::thread::spawn(move || scheduler_loop(sh, sched_manifest));
+        let sampler = Sampler::start(telemetry, sample_ms, DEFAULT_RING_CAP);
         Ok(Executor {
             shared,
             scheduler: Some(scheduler),
             workers,
             manifest,
+            sampler: Some(sampler),
         })
     }
 
@@ -774,6 +920,7 @@ impl Executor {
             let lane = self.shared.lane(&mut s, model);
             if lane.heap.len() >= self.shared.cfg.queue_cap {
                 lane.shed[ShedReason::QueueFull as usize] += 1;
+                self.shared.tm.shed[ShedReason::QueueFull as usize].inc();
                 let msg = format!(
                     "lane for model {model} is full ({} queued jobs)",
                     lane.heap.len()
@@ -791,6 +938,7 @@ impl Executor {
                 let wait_ns = admission_wait_ns(est_ns, ahead, streams);
                 if now + Duration::from_nanos(wait_ns) > d {
                     lane.shed[ShedReason::Deadline as usize] += 1;
+                    self.shared.tm.shed[ShedReason::Deadline as usize].inc();
                     let msg = format!(
                         "deadline unwinnable for model {model}: budget {}us < estimated {}us \
                          ({} queued ahead)",
@@ -805,6 +953,7 @@ impl Executor {
                 }
             }
             lane.heap.push(Queued(job));
+            self.shared.tm.depth.add(1);
         }
         self.shared.sched_cv.notify_one();
         rx
@@ -949,6 +1098,7 @@ impl Executor {
         let shed_delta = shed_total - lane.hint_shed_mark;
         lane.hint_shed_mark = shed_total;
         if shed_delta > 0 {
+            self.shared.tm.credit_grants.inc();
             return CreditHint {
                 credits: 0,
                 pace_ns: 2 * est_ns.max(MIN_BACKOFF_PACE_NS),
@@ -961,7 +1111,33 @@ impl Executor {
         } else {
             est_ns.saturating_mul(depth) / streams
         };
+        self.shared.tm.credit_grants.inc();
+        self.shared.tm.credit_tokens.add(credits as u64);
         CreditHint { credits, pace_ns }
+    }
+
+    /// Shared handle to the always-on telemetry registry — counters,
+    /// gauges and mergeable histograms stamped on the live execution
+    /// path. Experiments read it directly; the wire serves it through
+    /// [`Executor::metrics_report`].
+    pub fn telemetry(&self) -> Arc<Registry> {
+        Arc::clone(&self.shared.tm.reg)
+    }
+
+    /// The sampler's ring of timestamped counter deltas (oldest first),
+    /// feeding `"ph":"C"` counter tracks in timeline exports. Empty if
+    /// the sampler has not ticked yet.
+    pub fn sample_ring(&self) -> Vec<Sample> {
+        self.sampler.as_ref().map(|s| s.ring()).unwrap_or_default()
+    }
+
+    /// What the metrics opcode serves over the wire: the registry
+    /// snapshot plus the sampler ring.
+    pub fn metrics_report(&self) -> MetricsReport {
+        MetricsReport {
+            snap: self.shared.tm.reg.snapshot(),
+            ring: self.sample_ring(),
+        }
     }
 
     /// Stop the scheduler and workers and join them. Sealed batches
@@ -976,6 +1152,9 @@ impl Executor {
         }
         for w in self.workers.drain(..) {
             let _ = w.join();
+        }
+        if let Some(mut sm) = self.sampler.take() {
+            sm.stop();
         }
     }
 }
@@ -1042,12 +1221,13 @@ fn scheduler_loop(sh: Arc<Shared>, manifest: Manifest) {
         let est = sh.svc_estimates();
         // Dispatch until workers run out or nothing is sealable.
         while s.ready.len() < s.idle_workers {
-            let Some(batch) = pick_and_seal(&mut s, &manifest, now, &est) else {
+            let Some(batch) = pick_and_seal(&mut s, &manifest, now, &est, &sh.tm) else {
                 break;
             };
             if let Some(prev) = &last_model {
                 if *prev != batch[0].model {
                     sh.interleaves.fetch_add(1, Ordering::Relaxed);
+                    sh.tm.interleaves.inc();
                 }
             }
             last_model = Some(batch[0].model.clone());
@@ -1107,6 +1287,7 @@ fn pick_and_seal(
     manifest: &Manifest,
     now: Instant,
     est: &HashMap<String, u64>,
+    tm: &ExecMetrics,
 ) -> Option<Vec<Job>> {
     let n = s.order.len();
     if n == 0 {
@@ -1122,7 +1303,7 @@ fn pick_and_seal(
     for (_, name) in slo_lanes {
         let est_ns = est.get(&name).copied().unwrap_or(0);
         let lane = s.lanes.get_mut(&name).unwrap();
-        if let Some(batch) = try_seal(lane, manifest, now, est_ns) {
+        if let Some(batch) = try_seal(lane, manifest, now, est_ns, tm) {
             lane.credits = lane.credits.saturating_sub(1);
             return Some(batch);
         }
@@ -1137,7 +1318,7 @@ fn pick_and_seal(
             if pass == 0 && lane.credits == 0 {
                 continue;
             }
-            if let Some(batch) = try_seal(lane, manifest, now, est_ns) {
+            if let Some(batch) = try_seal(lane, manifest, now, est_ns, tm) {
                 lane.credits = lane.credits.saturating_sub(1);
                 s.cursor = if lane.credits == 0 { (i + 1) % n } else { i };
                 return Some(batch);
@@ -1172,6 +1353,7 @@ fn try_seal(
     manifest: &Manifest,
     now: Instant,
     est_ns: u64,
+    tm: &ExecMetrics,
 ) -> Option<Vec<Job>> {
     let head_prio = lane.heap.peek()?.0.prio;
     let mut head = lane.heap.pop().unwrap().0;
@@ -1188,6 +1370,8 @@ fn try_seal(
     if cap <= 1 {
         head.span.mark(Stamp::Seal);
         lane.sealed[SealReason::Single as usize] += 1;
+        tm.sealed[SealReason::Single as usize].inc();
+        tm.depth.sub(1);
         return Some(vec![head]);
     }
     let mut group = vec![head];
@@ -1242,6 +1426,8 @@ fn try_seal(
     match reason {
         Some(r) => {
             lane.sealed[r as usize] += 1;
+            tm.sealed[r as usize].inc();
+            tm.depth.sub(group.len() as u64);
             let t_seal = Instant::now();
             for j in &mut group {
                 j.span.mark_at(Stamp::Seal, t_seal);
@@ -1306,6 +1492,7 @@ fn artifact_chunk(manifest: &Manifest, model: &str, n: usize) -> usize {
 /// executables (a 7-job batch runs as `_b4` + `_b2` + `_b1`).
 fn run_jobs(engine: &Engine, mut jobs: Vec<Job>, sh: &Shared) {
     let model = jobs[0].model.clone();
+    let exec_h = sh.tm.exec_histo(&model);
     while !jobs.is_empty() {
         let b = if jobs[0].raw {
             1
@@ -1316,6 +1503,9 @@ fn run_jobs(engine: &Engine, mut jobs: Vec<Job>, sh: &Shared) {
         let chunk_len = chunk.len() as u64;
         sh.jobs_run.fetch_add(chunk_len, Ordering::Relaxed);
         sh.batches_run.fetch_add(1, Ordering::Relaxed);
+        sh.tm.jobs.add(chunk_len);
+        sh.tm.batches.inc();
+        sh.tm.batch_size.observe(chunk_len);
         {
             let mut c = sh.counters.lock().unwrap();
             let e = c.entry(model.clone()).or_insert((0, 0, 0));
@@ -1323,11 +1513,12 @@ fn run_jobs(engine: &Engine, mut jobs: Vec<Job>, sh: &Shared) {
             e.1 += 1;
         }
         let t0 = Instant::now();
-        run_chunk(engine, chunk);
+        run_chunk(engine, chunk, &sh.tm, &exec_h);
         // Stream time accrues after the chunk so the estimate reflects
         // completed work; the job/call counters above stay visible the
         // moment a reply lands (tests rely on that ordering).
         let svc_ns = t0.elapsed().as_nanos() as u64;
+        sh.tm.svc_ns.observe(svc_ns);
         {
             let mut c = sh.counters.lock().unwrap();
             let e = c.entry(model.clone()).or_insert((0, 0, 0));
@@ -1336,7 +1527,7 @@ fn run_jobs(engine: &Engine, mut jobs: Vec<Job>, sh: &Shared) {
     }
 }
 
-fn run_chunk(engine: &Engine, mut jobs: Vec<Job>) {
+fn run_chunk(engine: &Engine, mut jobs: Vec<Job>, tm: &ExecMetrics, exec_h: &HistoHandle) {
     // Chunk execution starts now: the trace boundary between
     // dispatch-wait (rendezvous + earlier chunks of the same sealed
     // batch) and the engine stages.
@@ -1395,6 +1586,9 @@ fn run_chunk(engine: &Engine, mut jobs: Vec<Job>) {
                         span,
                     }
                 });
+                if let Ok(d) = &done {
+                    tm.observe_span(exec_h, &d.span);
+                }
                 let _ = reply.send(done);
             }
         }
@@ -1447,6 +1641,7 @@ fn run_chunk(engine: &Engine, mut jobs: Vec<Job>) {
                 span.mark_at(Stamp::H2dDone, t_h2d);
                 span.mark_at(Stamp::InferDone, t_infer);
                 span.mark_at(Stamp::D2hDone, t_d2h);
+                tm.observe_span(exec_h, &span);
                 let _ = reply.send(Ok(Done {
                     output: out[i * per..(i + 1) * per].to_vec(),
                     stages: StageNs {
@@ -1487,6 +1682,12 @@ mod tests {
             std::path::PathBuf::from("/tmp"),
         )
         .unwrap()
+    }
+
+    /// A standalone telemetry sink for tests that call `try_seal` /
+    /// `pick_and_seal` outside a running executor.
+    fn test_tm() -> ExecMetrics {
+        ExecMetrics::new(Arc::new(Registry::new()))
     }
 
     #[test]
@@ -1640,7 +1841,7 @@ mod tests {
         // A lone job far from its deadline holds for peers: no seal,
         // and the job goes back without a Seal stamp.
         lane.heap.push(mk(now));
-        assert!(try_seal(&mut lane, &manifest, now, 0).is_none());
+        assert!(try_seal(&mut lane, &manifest, now, 0, &test_tm()).is_none());
         assert_eq!(lane.heap.len(), 1);
         assert!(!lane.heap.peek().unwrap().0.span.is_set(Stamp::Seal));
         assert!(
@@ -1651,7 +1852,7 @@ mod tests {
         for _ in 0..3 {
             lane.heap.push(mk(now));
         }
-        let batch = try_seal(&mut lane, &manifest, now, 0).expect("full group seals");
+        let batch = try_seal(&mut lane, &manifest, now, 0, &test_tm()).expect("full group seals");
         assert_eq!(batch.len(), 4);
         assert_eq!(lane.sealed[SealReason::Full as usize], 1);
         for j in &batch {
@@ -1663,19 +1864,19 @@ mod tests {
         lane.cfg = BatchCfg::deadline(4, 1); // 1µs flush
         lane.heap.push(mk(now));
         std::thread::sleep(Duration::from_millis(2));
-        assert!(try_seal(&mut lane, &manifest, Instant::now(), 0).is_some());
+        assert!(try_seal(&mut lane, &manifest, Instant::now(), 0, &test_tm()).is_some());
         assert_eq!(lane.sealed[SealReason::Deadline as usize], 1);
         // An unbatchable policy seals Single.
         lane.cfg = BatchCfg::none();
         lane.heap.push(mk(now));
-        assert!(try_seal(&mut lane, &manifest, now, 0).is_some());
+        assert!(try_seal(&mut lane, &manifest, now, 0, &test_tm()).is_some());
         assert_eq!(lane.sealed[SealReason::Single as usize], 1);
         // Opportunistic policy seals whatever is queued.
         lane.cfg = BatchCfg::opportunistic(4);
         lane.heap.push(mk(now));
         lane.heap.push(mk(now));
         assert_eq!(
-            try_seal(&mut lane, &manifest, now, 0).expect("seals").len(),
+            try_seal(&mut lane, &manifest, now, 0, &test_tm()).expect("seals").len(),
             2
         );
         assert_eq!(lane.sealed[SealReason::Opportunistic as usize], 1);
@@ -1727,7 +1928,7 @@ mod tests {
         }
         let now = Instant::now();
         let mut dispatch = Vec::new();
-        while let Some(batch) = pick_and_seal(&mut s, &manifest, now, &HashMap::new()) {
+        while let Some(batch) = pick_and_seal(&mut s, &manifest, now, &HashMap::new(), &test_tm()) {
             dispatch.push(batch[0].model.clone());
         }
         // "m" seals pairs (cap 2), "solo" has no batched variants and
@@ -1782,7 +1983,7 @@ mod tests {
         }
         let now = Instant::now();
         let mut dispatch = Vec::new();
-        while let Some(batch) = pick_and_seal(&mut s, &manifest, now, &HashMap::new()) {
+        while let Some(batch) = pick_and_seal(&mut s, &manifest, now, &HashMap::new(), &test_tm()) {
             dispatch.push(batch[0].model.clone());
         }
         assert_eq!(
@@ -1878,12 +2079,14 @@ mod tests {
             });
             lane.heap.push(job);
         }
-        let first = pick_and_seal(&mut s, &manifest, now, &HashMap::new()).expect("seals");
+        let first =
+            pick_and_seal(&mut s, &manifest, now, &HashMap::new(), &test_tm()).expect("seals");
         assert_eq!(
             first[0].model, "solo",
             "the tight-deadline lane must seal first, ahead of the cursor"
         );
-        let second = pick_and_seal(&mut s, &manifest, now, &HashMap::new()).expect("seals");
+        let second =
+            pick_and_seal(&mut s, &manifest, now, &HashMap::new(), &test_tm()).expect("seals");
         assert_eq!(second[0].model, "m", "WRR resumes once SLO work drains");
     }
 
@@ -1929,9 +2132,11 @@ mod tests {
                 },
             );
         }
-        let first = pick_and_seal(&mut s, &manifest, now, &HashMap::new()).expect("seals");
+        let first =
+            pick_and_seal(&mut s, &manifest, now, &HashMap::new(), &test_tm()).expect("seals");
         assert_eq!(first[0].model, "solo", "earliest deadline first");
-        let second = pick_and_seal(&mut s, &manifest, now, &HashMap::new()).expect("seals");
+        let second =
+            pick_and_seal(&mut s, &manifest, now, &HashMap::new(), &test_tm()).expect("seals");
         assert_eq!(second[0].model, "m");
     }
 
@@ -1967,18 +2172,19 @@ mod tests {
         };
         // Plenty of budget left (10ms) and no service estimate: hold.
         lane.heap.push(mk(0, Some(now + Duration::from_millis(10))));
-        assert!(try_seal(&mut lane, &manifest, now, 0).is_none());
+        assert!(try_seal(&mut lane, &manifest, now, 0, &test_tm()).is_none());
         assert_eq!(lane.sealed[SealReason::Slo as usize], 0);
         // With a 6ms/job estimate the 10ms budget is already critical
         // (one more µs of gathering guarantees a miss): seal as Slo.
         let est_ns = 6_000_000u64;
-        let batch = try_seal(&mut lane, &manifest, now + Duration::from_millis(5), est_ns)
-            .expect("critical SLO budget must seal");
+        let batch =
+            try_seal(&mut lane, &manifest, now + Duration::from_millis(5), est_ns, &test_tm())
+                .expect("critical SLO budget must seal");
         assert_eq!(batch.len(), 1);
         assert_eq!(lane.sealed[SealReason::Slo as usize], 1);
         // A deadline-free gather never Slo-seals, whatever the estimate.
         lane.heap.push(mk(1, None));
-        assert!(try_seal(&mut lane, &manifest, now, est_ns).is_none());
+        assert!(try_seal(&mut lane, &manifest, now, est_ns, &test_tm()).is_none());
         assert_eq!(lane.sealed[SealReason::Slo as usize], 1);
     }
 }

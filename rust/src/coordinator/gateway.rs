@@ -294,6 +294,13 @@ fn routed_reply(frame: &[u8], router: &Router, fwd: &AtomicU64) -> Vec<u8> {
             router.refresh_now();
             Response::Stats(router.merged_stats()).encode()
         }
+        Ok(protocol::OP_METRICS) => {
+            // Fleet telemetry: bucket-wise histogram sums across every
+            // backend that speaks the metrics opcode (rings dropped —
+            // per-backend cadences don't merge meaningfully).
+            router.refresh_metrics_now();
+            Response::Metrics(router.merged_metrics()).encode()
+        }
         Ok(protocol::OP_SHAPE) => match protocol::decode_shape_request(frame) {
             Err(e) => Response::Err(format!("gateway: bad request: {e}")).encode(),
             Ok(model) => {

@@ -21,8 +21,8 @@ pub mod router;
 pub mod server;
 
 pub use client::{
-    fetch_shape, fetch_stats, run_client_loop, run_on, run_tcp, ClientRec, ClientRun, LiveStats,
-    LoadCfg, TimelineRec, TokenPacer,
+    fetch_metrics, fetch_shape, fetch_stats, run_client_loop, run_on, run_tcp, ClientRec,
+    ClientRun, LiveStats, LoadCfg, TimelineRec, TokenPacer,
 };
 pub use executor::{
     BatchCfg, CreditHint, Done, ExecError, ExecStats, Executor, LaneStats, ModelPolicy, SchedCfg,

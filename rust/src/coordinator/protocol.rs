@@ -21,6 +21,9 @@
 //!           status 6 (Pipeline): [6][n u8] then per stage
 //!             [name_len u8][name][sent_ns u64][recv_ns u64][span block],
 //!             then [payload]   (the final stage's output tensor)
+//!           status 7 (Metrics): [7][ver] then the telemetry snapshot
+//!             (counter/gauge/histogram lists) and the sample ring —
+//!             see `encode_metrics`
 //! ```
 //!
 //! # Protocol v2 and compatibility
@@ -62,6 +65,7 @@
 
 use anyhow::{bail, Result};
 
+use crate::metrics::telemetry::{HistoSnap, MetricsReport, Sample, Snapshot, N_BUCKETS};
 use crate::trace::wire::decode_span_block;
 use crate::trace::{SpanBlock, SpanRec};
 
@@ -80,6 +84,11 @@ pub const OP_STATS: u8 = 2;
 /// gateway uses it to size the inter-stage tensor bridge of a
 /// pipeline chain without loading the manifest itself.
 pub const OP_SHAPE: u8 = 3;
+/// Request opcode (v2): snapshot the always-on telemetry plane — the
+/// metric registry plus the sampler ring. Frame is the 4-byte header
+/// only (`[OP_METRICS][0][0][0]`), answered with a status-7 frame.
+/// Like `OP_STATS`, a gateway answers it with the fleet-merged view.
+pub const OP_METRICS: u8 = 4;
 /// flags bit 0: payload is a raw uint8 camera frame (server preprocesses).
 pub const FLAG_RAW: u8 = 1;
 /// flags bit 1 (v2): client asks for the span timeline in the response.
@@ -107,6 +116,8 @@ pub const MAX_PIPELINE_STAGES: usize = 8;
 pub const STATS_VER: u8 = 2;
 /// Credit-envelope wire version ([`encode_with_credit`]).
 pub const CREDIT_VER: u8 = 1;
+/// Metrics response wire version ([`Response::Metrics`]).
+pub const METRICS_VER: u8 = 1;
 
 /// A parsed inference request.
 #[derive(Debug, Clone, PartialEq)]
@@ -153,6 +164,11 @@ pub struct RequestMeta {
 /// Encode a stats request frame (v2): header only, no payload.
 pub fn encode_stats_request() -> Vec<u8> {
     vec![OP_STATS, 0, 0, 0]
+}
+
+/// Encode a metrics request frame (v2): header only, no payload.
+pub fn encode_metrics_request() -> Vec<u8> {
+    vec![OP_METRICS, 0, 0, 0]
 }
 
 /// Encode a shape request frame (v2): header carrying the model name,
@@ -392,6 +408,10 @@ pub enum Response {
         stages: Vec<PipelineStage>,
         payload: Vec<u8>,
     },
+    /// Telemetry-plane snapshot + sample ring (v2, answer to
+    /// [`OP_METRICS`]). A gateway answers with the fleet-merged
+    /// snapshot and an empty ring.
+    Metrics(MetricsReport),
 }
 
 /// One chained stage's record inside [`Response::Pipeline`]: when the
@@ -463,6 +483,7 @@ impl Response {
                 buf.extend_from_slice(payload);
                 buf
             }
+            Response::Metrics(report) => encode_metrics(report),
         }
     }
 
@@ -564,6 +585,7 @@ impl Response {
                     payload: buf[at..].to_vec(),
                 })
             }
+            7 => Ok(Response::Metrics(decode_metrics(buf)?)),
             s => bail!("unknown response status {s}"),
         }
     }
@@ -698,6 +720,177 @@ fn decode_stats(buf: &[u8]) -> Result<ExecStats> {
         bail!("stats frame has {} trailing bytes", buf.len() - at);
     }
     Ok(ExecStats { interleaves, lanes })
+}
+
+/// Encode a [`MetricsReport`] as a status-7 frame:
+///
+/// ```text
+/// [7][METRICS_VER]
+/// [nc u16 LE] then nc × [name_len u8][name][value u64]      counters
+/// [ng u16]    then ng × [name_len u8][name][value u64]      gauges
+/// [nh u16]    then nh × [name_len u8][name][count u64]
+///               [sum u64][nb u8] then nb × [idx u8][c u64]  histograms
+/// [ns u16]    then ns × [at_ms u64][counter list][gauge list] samples
+/// ```
+///
+/// Histogram buckets travel sparse (only non-zero buckets, indices
+/// strictly increasing into the shared [`N_BUCKETS`] layout) because a
+/// live histogram typically populates a narrow band of the 128-bucket
+/// range.
+fn encode_metrics(report: &MetricsReport) -> Vec<u8> {
+    fn push_kv(buf: &mut Vec<u8>, kvs: &[(String, u64)]) {
+        assert!(kvs.len() <= u16::MAX as usize, "too many series");
+        buf.extend_from_slice(&(kvs.len() as u16).to_le_bytes());
+        for (name, v) in kvs {
+            let n = name.as_bytes();
+            assert!(!n.is_empty() && n.len() <= u8::MAX as usize, "bad series name");
+            buf.push(n.len() as u8);
+            buf.extend_from_slice(n);
+            buf.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+    let mut buf = Vec::with_capacity(64 + report.snap.histos.len() * 128);
+    buf.push(7u8);
+    buf.push(METRICS_VER);
+    push_kv(&mut buf, &report.snap.counters);
+    push_kv(&mut buf, &report.snap.gauges);
+    assert!(report.snap.histos.len() <= u16::MAX as usize, "too many histograms");
+    buf.extend_from_slice(&(report.snap.histos.len() as u16).to_le_bytes());
+    for (name, h) in &report.snap.histos {
+        let n = name.as_bytes();
+        assert!(!n.is_empty() && n.len() <= u8::MAX as usize, "bad histogram name");
+        buf.push(n.len() as u8);
+        buf.extend_from_slice(n);
+        buf.extend_from_slice(&h.count.to_le_bytes());
+        buf.extend_from_slice(&h.sum.to_le_bytes());
+        let nonzero: Vec<(usize, u64)> = h
+            .buckets
+            .iter()
+            .enumerate()
+            .take(N_BUCKETS)
+            .filter(|(_, &c)| c != 0)
+            .map(|(i, &c)| (i, c))
+            .collect();
+        assert!(nonzero.len() <= u8::MAX as usize, "bucket list too long");
+        buf.push(nonzero.len() as u8);
+        for (i, c) in nonzero {
+            buf.push(i as u8);
+            buf.extend_from_slice(&c.to_le_bytes());
+        }
+    }
+    assert!(report.ring.len() <= u16::MAX as usize, "sample ring too long");
+    buf.extend_from_slice(&(report.ring.len() as u16).to_le_bytes());
+    for s in &report.ring {
+        buf.extend_from_slice(&s.at_ms.to_le_bytes());
+        push_kv(&mut buf, &s.counters);
+        push_kv(&mut buf, &s.gauges);
+    }
+    buf
+}
+
+/// Decode a status-7 metrics frame (rejects truncation anywhere, bad
+/// versions, out-of-range or non-increasing bucket indices, and
+/// trailing bytes).
+fn decode_metrics(buf: &[u8]) -> Result<MetricsReport> {
+    fn read_u16(buf: &[u8], at: &mut usize) -> Result<usize> {
+        if buf.len() < *at + 2 {
+            bail!("metrics frame truncated at a list count");
+        }
+        let v = u16::from_le_bytes(buf[*at..*at + 2].try_into().expect("2 bytes")) as usize;
+        *at += 2;
+        Ok(v)
+    }
+    fn read_u64(buf: &[u8], at: &mut usize) -> Result<u64> {
+        if buf.len() < *at + 8 {
+            bail!("metrics frame truncated at a u64 word");
+        }
+        let v = u64::from_le_bytes(buf[*at..*at + 8].try_into().expect("8 bytes"));
+        *at += 8;
+        Ok(v)
+    }
+    fn read_name(buf: &[u8], at: &mut usize) -> Result<String> {
+        let len = *buf
+            .get(*at)
+            .ok_or_else(|| anyhow::anyhow!("metrics frame truncated at a name length"))?
+            as usize;
+        *at += 1;
+        if len == 0 {
+            bail!("metrics frame has an empty series name");
+        }
+        if buf.len() < *at + len {
+            bail!("metrics frame truncated inside a series name");
+        }
+        let name = std::str::from_utf8(&buf[*at..*at + len])?.to_string();
+        *at += len;
+        Ok(name)
+    }
+    fn read_kv(buf: &[u8], at: &mut usize) -> Result<Vec<(String, u64)>> {
+        let n = read_u16(buf, at)?;
+        let mut out = Vec::with_capacity(n.min(1024));
+        for _ in 0..n {
+            let name = read_name(buf, at)?;
+            let v = read_u64(buf, at)?;
+            out.push((name, v));
+        }
+        Ok(out)
+    }
+
+    if buf.len() < 2 {
+        bail!("short metrics response: {} bytes", buf.len());
+    }
+    if buf[1] != METRICS_VER {
+        bail!("unknown metrics version {}", buf[1]);
+    }
+    let mut at = 2usize;
+    let counters = read_kv(buf, &mut at)?;
+    let gauges = read_kv(buf, &mut at)?;
+    let nh = read_u16(buf, &mut at)?;
+    let mut histos = Vec::with_capacity(nh.min(1024));
+    for _ in 0..nh {
+        let name = read_name(buf, &mut at)?;
+        let count = read_u64(buf, &mut at)?;
+        let sum = read_u64(buf, &mut at)?;
+        let nb = *buf
+            .get(at)
+            .ok_or_else(|| anyhow::anyhow!("metrics frame truncated at a bucket count"))?
+            as usize;
+        at += 1;
+        let mut buckets = vec![0u64; N_BUCKETS];
+        let mut prev: Option<usize> = None;
+        for _ in 0..nb {
+            let idx = *buf
+                .get(at)
+                .ok_or_else(|| anyhow::anyhow!("metrics frame truncated at a bucket index"))?
+                as usize;
+            at += 1;
+            if idx >= N_BUCKETS {
+                bail!("histogram bucket index {idx} out of range");
+            }
+            if let Some(p) = prev {
+                if idx <= p {
+                    bail!("histogram bucket indices must strictly increase");
+                }
+            }
+            prev = Some(idx);
+            buckets[idx] = read_u64(buf, &mut at)?;
+        }
+        histos.push((name, HistoSnap { count, sum, buckets }));
+    }
+    let ns = read_u16(buf, &mut at)?;
+    let mut ring = Vec::with_capacity(ns.min(1024));
+    for _ in 0..ns {
+        let at_ms = read_u64(buf, &mut at)?;
+        let counters = read_kv(buf, &mut at)?;
+        let gauges = read_kv(buf, &mut at)?;
+        ring.push(Sample { at_ms, counters, gauges });
+    }
+    if at != buf.len() {
+        bail!("metrics frame has {} trailing bytes", buf.len() - at);
+    }
+    Ok(MetricsReport {
+        snap: Snapshot { counters, gauges, histos },
+        ring,
+    })
 }
 
 /// f32 slice -> LE bytes.
@@ -1163,6 +1356,92 @@ mod tests {
             payload: vec![],
         };
         assert!(Response::decode(&backwards.encode()).is_err());
+    }
+
+    #[test]
+    fn metrics_roundtrip_and_validation() {
+        use crate::metrics::telemetry::{labeled, Registry};
+        let reg = Registry::new();
+        reg.counter("accel_jobs_total").add(12);
+        reg.counter(&labeled("accel_seal_total", "reason", "full")).add(3);
+        reg.gauge("accel_queue_depth").set(5);
+        let h = reg.histo(&labeled("accel_exec_ns", "model", "tiny_mobilenet"));
+        for v in [150u64, 150, 9_000, 2_000_000] {
+            h.observe(v);
+        }
+        let mut ring = crate::metrics::telemetry::SampleRing::new(4);
+        ring.push(100, &reg.snapshot());
+        reg.counter("accel_jobs_total").add(8);
+        ring.push(200, &reg.snapshot());
+        let report = MetricsReport {
+            snap: reg.snapshot(),
+            ring: ring.samples(),
+        };
+
+        let r = Response::Metrics(report.clone());
+        let frame = r.encode();
+        assert_eq!(frame[0], 7, "metrics response is status 7");
+        assert_eq!(frame[1], METRICS_VER);
+        assert_eq!(Response::decode(&frame).unwrap(), r);
+
+        // Truncation anywhere inside the frame is rejected.
+        for cut in 1..frame.len() {
+            assert!(Response::decode(&frame[..cut]).is_err(), "cut {cut}");
+        }
+        // Trailing garbage is rejected.
+        let mut long = frame.clone();
+        long.push(0);
+        assert!(Response::decode(&long).is_err());
+        // Bad version is rejected.
+        let mut bad = frame.clone();
+        bad[1] = 9;
+        assert!(Response::decode(&bad).is_err());
+
+        // An empty report (fresh registry, no samples) round-trips too.
+        let empty = Response::Metrics(MetricsReport::default());
+        assert_eq!(Response::decode(&empty.encode()).unwrap(), empty);
+    }
+
+    #[test]
+    fn metrics_decode_rejects_bad_bucket_indices() {
+        // Hand-build a frame with one histogram whose bucket index is
+        // out of range, then one whose indices do not increase.
+        fn base(bucket_bytes: &[u8]) -> Vec<u8> {
+            let mut f = vec![7u8, METRICS_VER];
+            f.extend_from_slice(&0u16.to_le_bytes()); // counters
+            f.extend_from_slice(&0u16.to_le_bytes()); // gauges
+            f.extend_from_slice(&1u16.to_le_bytes()); // one histogram
+            f.push(1);
+            f.push(b'h');
+            f.extend_from_slice(&2u64.to_le_bytes()); // count
+            f.extend_from_slice(&10u64.to_le_bytes()); // sum
+            f.extend_from_slice(bucket_bytes);
+            f.extend_from_slice(&0u16.to_le_bytes()); // samples
+            f
+        }
+        let mut out_of_range = vec![1u8, N_BUCKETS as u8];
+        out_of_range.extend_from_slice(&2u64.to_le_bytes());
+        assert!(Response::decode(&base(&out_of_range)).is_err());
+        let mut dup = vec![2u8, 5];
+        dup.extend_from_slice(&1u64.to_le_bytes());
+        dup.push(5);
+        dup.extend_from_slice(&1u64.to_le_bytes());
+        assert!(Response::decode(&base(&dup)).is_err());
+        // A well-formed sparse list decodes.
+        let mut ok = vec![2u8, 5];
+        ok.extend_from_slice(&1u64.to_le_bytes());
+        ok.push(9);
+        ok.extend_from_slice(&1u64.to_le_bytes());
+        assert!(Response::decode(&base(&ok)).is_ok());
+    }
+
+    #[test]
+    fn metrics_request_is_dispatchable() {
+        let frame = encode_metrics_request();
+        assert_eq!(request_opcode(&frame).unwrap(), OP_METRICS);
+        // The v1 parser rejects it, like OP_STATS/OP_SHAPE — the client
+        // surface treats that as "metrics unsupported".
+        assert!(split_header(&frame).is_err());
     }
 
     #[test]

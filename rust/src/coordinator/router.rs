@@ -33,8 +33,10 @@ use anyhow::{anyhow, bail, Result};
 use crate::transport::tcp::TcpTransport;
 use crate::transport::MsgTransport;
 
-use super::client::{fetch_shape, fetch_stats};
+use super::client::{fetch_metrics, fetch_shape, fetch_stats};
 use super::executor::{ExecStats, LaneStats, N_SEAL_REASONS, N_SHED_REASONS};
+
+use crate::metrics::telemetry::MetricsReport;
 
 /// Default vnodes per backend on the consistent-hash ring. 64 keeps the
 /// ring balanced (worst observed share ~56% on 2 backends over the
@@ -302,6 +304,9 @@ struct BackendState {
     saturated: bool,
     /// Shed total of the previous snapshot, for the delta signal.
     shed_seen: u64,
+    /// Latest telemetry report (metrics opcode). `None` until the first
+    /// successful metrics refresh — a v1 backend simply never fills it.
+    metrics: Option<MetricsReport>,
 }
 
 struct Backend {
@@ -344,6 +349,7 @@ impl Router {
                     snapshot: None,
                     saturated: false,
                     shed_seen: 0,
+                    metrics: None,
                 }),
                 pool: Mutex::new(Vec::new()),
                 jobs: AtomicU64::new(0),
@@ -520,6 +526,7 @@ impl Router {
         st.retry_at = Some(Instant::now() + self.cfg.retry_backoff);
         st.saturated = false;
         st.snapshot = None;
+        st.metrics = None;
     }
 
     /// Install a stats snapshot for backend `idx`, deriving the
@@ -570,6 +577,53 @@ impl Router {
             .filter_map(|b| b.state.lock().unwrap().snapshot.clone())
             .collect();
         merge_stats(snaps.iter())
+    }
+
+    /// Install a telemetry report for backend `idx`. Used by
+    /// [`Router::refresh_metrics_now`] and directly by tests.
+    pub fn install_metrics(&self, idx: usize, report: MetricsReport) {
+        self.backends[idx].state.lock().unwrap().metrics = Some(report);
+    }
+
+    /// Fetch fresh telemetry from every reachable backend (lease →
+    /// metrics opcode → release). A backend that answers with a
+    /// protocol-level error (e.g. predates the opcode) is left healthy
+    /// with no report — only health, not metrics support, gates routing.
+    /// Returns how many backends answered.
+    pub fn refresh_metrics_now(&self) -> usize {
+        let mut answered = 0;
+        for idx in 0..self.backends.len() {
+            if !self.is_usable(idx) {
+                continue;
+            }
+            let Ok(mut conn) = self.lease(idx) else {
+                continue;
+            };
+            match fetch_metrics(conn.as_mut()) {
+                Ok(report) => {
+                    self.release(idx, conn);
+                    self.install_metrics(idx, report);
+                    answered += 1;
+                }
+                // Drop the connection (its stream state is unknown) but
+                // do not quarantine: an Err reply proves the peer is up.
+                Err(_) => {}
+            }
+        }
+        answered
+    }
+
+    /// Merge the latest telemetry reports into one fleet snapshot —
+    /// bucket-wise histogram sums, counter/gauge sums, rings dropped
+    /// ([`MetricsReport::merged`]). The gateway's answer to the metrics
+    /// opcode.
+    pub fn merged_metrics(&self) -> MetricsReport {
+        let reports: Vec<MetricsReport> = self
+            .backends
+            .iter()
+            .filter_map(|b| b.state.lock().unwrap().metrics.clone())
+            .collect();
+        MetricsReport::merged(reports.iter())
     }
 
     /// Resolve (and cache) `model`'s per-request tensor shape by asking

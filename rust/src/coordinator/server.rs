@@ -88,6 +88,15 @@ pub fn handle_conn(mut t: impl MsgTransport, exec: &Executor) {
             }
             continue;
         }
+        if msg_opcode(&msg) == Some(protocol::OP_METRICS) {
+            drop(msg);
+            // Registry snapshot + sampler ring; like stats, answered
+            // without touching the lanes.
+            if t.send(&Response::Metrics(exec.metrics_report()).encode()).is_err() {
+                return;
+            }
+            continue;
+        }
         if msg_opcode(&msg) == Some(protocol::OP_SHAPE) {
             let frame = match &msg {
                 RecvMsg::Host(v) => v.clone(),

@@ -33,13 +33,13 @@ use std::time::Instant;
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use crate::coordinator::protocol::{Request, Response};
+use crate::coordinator::protocol::{PipelineStage, Request, Response};
 use crate::coordinator::router::{BackendSpec, Placement, Router, RouterCfg};
 use crate::coordinator::{
     handle_conn, handle_routed_conn, run_client_loop, BatchCfg, Executor, LoadCfg, SchedCfg,
     TimelineRec, DEFAULT_QUEUE_CAP,
 };
-use crate::metrics::stats::StageAgg;
+use crate::metrics::telemetry::{Histo, HistoSnap};
 use crate::models::gen;
 use crate::trace::{ArgVal, ChromeTrace};
 use crate::transport::{connected_pair, TransportKind};
@@ -138,7 +138,10 @@ fn build_router(
 
 /// What one cell measured.
 struct CellOut {
-    agg: StageAgg,
+    /// End-to-end latency histogram (ns) — the telemetry plane's
+    /// mergeable bucket layout, so the row's p50/p99 read through the
+    /// same quantile path the live Prometheus export uses.
+    total: HistoSnap,
     /// Requests answered OK (warmup included).
     oks: usize,
     duration_s: f64,
@@ -199,7 +202,7 @@ fn drive_cell(
     })?;
     let duration_s = t0.elapsed().as_secs_f64();
 
-    let mut agg = StageAgg::default();
+    let total_h = Histo::new();
     let mut oks = 0usize;
     let mut timeline = Vec::new();
     for run in runs {
@@ -215,7 +218,7 @@ fn drive_cell(
         }
         oks += run.oks;
         for rec in &run.recs {
-            agg.push(&rec.rec);
+            total_h.observe(rec.rec.total.0);
             if let Some(block) = &rec.span {
                 timeline.push(TimelineRec {
                     client: rec.rec.client,
@@ -227,7 +230,7 @@ fn drive_cell(
         }
     }
     Ok(CellOut {
-        agg,
+        total: total_h.snap(),
         oks,
         duration_s,
         rebalances: router.rebalances(),
@@ -239,11 +242,17 @@ fn drive_cell(
 /// for the zero-round-trip property: consecutive stage windows must sit
 /// back-to-back on the gateway clock (stage K+1 dispatched after stage
 /// K replied, with no hop back to the client in between), and each
-/// stage must carry the backend's span timeline.
-fn verify_pipeline_spans(kind: TransportKind, router: &Router, hint: usize) -> Result<()> {
+/// stage must carry the backend's span timeline. Returns the verified
+/// stage records — the raw material for the cross-tier timeline
+/// (gateway window tiles + backend span tiles + flow arrows).
+fn verify_pipeline_spans(
+    kind: TransportKind,
+    router: &Router,
+    hint: usize,
+) -> Result<Vec<PipelineStage>> {
     let payload_elems = gen::IN_H * gen::IN_W * gen::CHANNELS;
     let fwd = AtomicU64::new(0);
-    std::thread::scope(|s| -> Result<()> {
+    std::thread::scope(|s| -> Result<Vec<PipelineStage>> {
         let (mut client, server) = connected_pair(kind, hint)?;
         let fwd_ref = &fwd;
         s.spawn(move || handle_routed_conn(server, router, fwd_ref));
@@ -286,8 +295,36 @@ fn verify_pipeline_spans(kind: TransportKind, router: &Router, hint: usize) -> R
         if payload.is_empty() || payload.len() % 4 != 0 {
             bail!("chain output is not an f32 tensor ({} bytes)", payload.len());
         }
-        Ok(())
+        Ok(stages)
     })
+}
+
+/// Export the verified pipeline probe as a cross-tier timeline: one
+/// gateway track tiling each stage's send→recv window, one backend
+/// track per stage tiling the backend's own span inside that window,
+/// and an `"s"`/`"f"` flow arrow per stage tying the gateway tile to
+/// its backend counterpart — Fig 2's multi-node pipeline, drawn.
+fn export_pipeline_flows(tc: &mut ChromeTrace, row: &str, stages: &[PipelineStage]) {
+    let gw = tc.track(&format!("gateway/{row}"));
+    for (i, st) in stages.iter().enumerate() {
+        let dur = st.recv_ns.saturating_sub(st.sent_ns);
+        tc.event(
+            gw,
+            &st.model,
+            "stage",
+            st.sent_ns,
+            dur,
+            &[("stage", ArgVal::U64(i as u64))],
+        );
+    }
+    for (i, st) in stages.iter().enumerate() {
+        let be = tc.track(&format!("backend/{row}/{}", st.model));
+        let dur = st.recv_ns.saturating_sub(st.sent_ns);
+        tc.block(be, st.sent_ns, &st.span, dur, &[("stage", ArgVal::U64(i as u64))]);
+        let id = i as u64 + 1;
+        tc.flow_start(gw, &st.model, st.sent_ns, id);
+        tc.flow_finish(be, &st.model, st.sent_ns + dur / 2, id);
+    }
 }
 
 /// Run the sweep. Each cell: N fresh executors → router → fixed client
@@ -400,9 +437,9 @@ fn run_cell(
     let router = build_router(kind, &execs, placement, hint, &backend_threads);
     let out = drive_cell(kind, &router, cfg, hint, pipeline);
     let probe = if pipeline && out.is_ok() {
-        verify_pipeline_spans(kind, &router, hint)
+        verify_pipeline_spans(kind, &router, hint).map(Some)
     } else {
-        Ok(())
+        Ok(None)
     };
     // Teardown in dependency order: the router owns the pooled backend
     // connections, so dropping it lets every parked `handle_conn`
@@ -418,11 +455,14 @@ fn run_cell(
         }
     }
     let out = out?;
-    probe?;
+    let probe_stages = probe?;
     for rec in &out.timeline {
         let track = tc.track(&format!("ring/{row}/c{}", rec.client));
         let args = [("client", ArgVal::U64(rec.client as u64))];
         tc.block(track, rec.t0_ns, &rec.span, rec.total_ns, &args);
+    }
+    if let (Some(stages), true) = (&probe_stages, cfg.trace_out.is_some()) {
+        export_pipeline_flows(tc, row, stages);
     }
 
     // Job-share bookkeeping must reconcile with the client tally; the
@@ -435,7 +475,6 @@ fn run_cell(
         bail!("job accounting drift: backends answered {jobs_sum}, clients saw {expect}");
     }
 
-    let lat = out.agg.total.summary();
     let share_max = 100.0 * jobs_after.iter().copied().max().unwrap_or(0) as f64
         / jobs_sum.max(1) as f64;
     t.row(
@@ -443,8 +482,8 @@ fn run_cell(
         vec![
             n as f64,
             cfg.clients as f64,
-            lat.p50,
-            lat.p99,
+            out.total.quantile(0.5) as f64 / 1e6,
+            out.total.quantile(0.99) as f64 / 1e6,
             out.oks as f64 / out.duration_s.max(f64::EPSILON),
             share_max,
             out.rebalances as f64,

@@ -188,6 +188,9 @@ pub fn run_stage_break(cfg: &StageBreakCfg) -> Result<Table> {
                 row_values(&stages, &stats.spans.total, cfg.stat),
             );
         }
+        if cfg.trace_out.is_some() && failed.is_none() {
+            export_counter_tracks(&mut tc, &exec, &policy.label());
+        }
         // Drain before propagating any cell error — bailing first would
         // park the stream workers forever (same discipline as the other
         // sweeps).
@@ -210,6 +213,31 @@ pub fn run_stage_break(cfg: &StageBreakCfg) -> Result<Table> {
     t.note("req/resp include the client wire halves; req also carries the receive-side host bounce that GDR eliminates (Fig 2b)");
     t.note("queue = lane wait before first gather consideration; gather = flush-window wait; disp = sealed-batch wait for a stream");
     Ok(t)
+}
+
+/// Export one executor's telemetry as a counter track
+/// (`counters/{label}`): per-tick counter deltas and gauge levels from
+/// the sampler ring, closed by the current gauge levels read straight
+/// from the registry — so every export carries at least one `"ph":"C"`
+/// sample even when the run finished inside the first sampler period.
+pub(crate) fn export_counter_tracks(tc: &mut ChromeTrace, exec: &Executor, label: &str) {
+    let track = tc.track(&format!("counters/{label}"));
+    let mut last_ms = 0;
+    for s in exec.sample_ring() {
+        let ts_ns = s.at_ms * 1_000_000;
+        for (name, delta) in &s.counters {
+            tc.counter(track, name, ts_ns, *delta);
+        }
+        for (name, level) in &s.gauges {
+            tc.counter(track, name, ts_ns, *level);
+        }
+        last_ms = s.at_ms;
+    }
+    let snap = exec.telemetry().snapshot();
+    let ts_ns = (last_ms + 1) * 1_000_000;
+    for (name, level) in &snap.gauges {
+        tc.counter(track, name, ts_ns, *level);
+    }
 }
 
 /// The simulated twin (`accelserve stagebreak --sim`): identical

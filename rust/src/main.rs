@@ -8,6 +8,7 @@
 //! accelserve client  --addr host:7007 --model tiny_resnet -n 100 -c 4 \
 //!                    --deadline-us 5000 --timeout-ms 2000 --credits # SLO + hang guard + pacing
 //! accelserve stats   --addr host:7007                            # per-lane executor counters
+//! accelserve metrics --addr host:7007 [--watch 2] [--prom-out m.prom] # Prometheus exposition
 //! accelserve matrix  --payload-kb 1024 --requests 160            # live transport matrix
 //! accelserve batchsweep --clients 8 --policies 1,8,8@2000        # transport x batch policy
 //! accelserve mixsweep --models tiny_mobilenet,tiny_resnet        # transport x model mix
@@ -26,8 +27,9 @@
 use std::sync::Arc;
 
 use accelserve::coordinator::{
-    fetch_stats, gateway_tcp, gateway_tcp_multi, run_tcp, serve_tcp, BatchCfg, Executor, LoadCfg,
-    ModelPolicy, Placement, RouterCfg, SchedCfg, SEAL_REASON_NAMES, SHED_REASON_NAMES,
+    fetch_metrics, fetch_stats, gateway_tcp, gateway_tcp_multi, run_tcp, serve_tcp, BatchCfg,
+    Executor, LoadCfg, ModelPolicy, Placement, RouterCfg, SchedCfg, SEAL_REASON_NAMES,
+    SHED_REASON_NAMES,
 };
 use accelserve::experiments::figs;
 use accelserve::gpu::Sharing;
@@ -44,6 +46,7 @@ fn main() {
         Some("gateway") => cmd_gateway(&args[1..]),
         Some("client") => cmd_client(&args[1..]),
         Some("stats") => cmd_stats(&args[1..]),
+        Some("metrics") => cmd_metrics(&args[1..]),
         Some("matrix") => cmd_matrix(&args[1..]),
         Some("batchsweep") => cmd_batchsweep(&args[1..]),
         Some("mixsweep") => cmd_mixsweep(&args[1..]),
@@ -64,7 +67,7 @@ fn main() {
 }
 
 const HELP: &str = "accelserve — model serving with hardware-accelerated communication
-subcommands: gen-artifacts | serve | gateway | client | stats | matrix | batchsweep | mixsweep | stagebreak | traceexport | slosweep | throttlesweep | shardsweep | sim | fig | tables (see README.md and docs/EXPERIMENTS.md)";
+subcommands: gen-artifacts | serve | gateway | client | stats | metrics | matrix | batchsweep | mixsweep | stagebreak | traceexport | slosweep | throttlesweep | shardsweep | sim | fig | tables (see README.md and docs/EXPERIMENTS.md)";
 
 /// Generate the serving artifacts (HLO text + manifest.json) offline —
 /// no Python/JAX required (the rust twin of `make artifacts`).
@@ -920,14 +923,24 @@ fn cmd_stats(a: &[String]) -> i32 {
             return 1;
         }
     };
-    let stats = match fetch_stats(&mut t) {
+    let mut stats = match fetch_stats(&mut t) {
         Ok(s) => s,
         Err(e) => {
             eprintln!("stats: {e:#}");
             return 1;
         }
     };
+    // Deterministic output regardless of lane creation order.
+    stats.lanes.sort_by(|a, b| a.model.cmp(&b.model));
+    // Best-effort enrichment from the telemetry plane: per-model
+    // enqueue→done latency quantiles. A v1 server without OP_METRICS
+    // answers with an error; render the table without the columns.
+    let metrics = fetch_metrics(&mut t).ok();
     let mut cols: Vec<&str> = vec!["jobs", "calls", "avg_batch", "svc_ms", "depth"];
+    if metrics.is_some() {
+        cols.push("p50_ms");
+        cols.push("p99_ms");
+    }
     cols.extend(SEAL_REASON_NAMES);
     for name in SHED_REASON_NAMES {
         cols.push(match name {
@@ -948,6 +961,19 @@ fn cmd_stats(a: &[String]) -> i32 {
             lane.svc_ns as f64 / (lane.jobs.max(1)) as f64 / 1e6,
             lane.depth as f64,
         ];
+        if let Some(m) = &metrics {
+            let name =
+                accelserve::metrics::telemetry::labeled("accel_exec_ns", "model", &lane.model);
+            let (p50, p99) = match m.snap.histo(&name) {
+                Some(h) => (
+                    h.quantile(0.5) as f64 / 1e6,
+                    h.quantile(0.99) as f64 / 1e6,
+                ),
+                None => (0.0, 0.0),
+            };
+            vals.push(p50);
+            vals.push(p99);
+        }
         vals.extend(lane.sealed.iter().map(|&s| s as f64));
         vals.extend(lane.shed.iter().map(|&s| s as f64));
         table.row(lane.model.clone(), vals);
@@ -958,12 +984,73 @@ fn cmd_stats(a: &[String]) -> i32 {
     ));
     table.note("sealed-reason columns count sealed batches per lane: single = unbatchable head, full = hit the policy cap, opportunistic = took what was queued, deadline = flush expired, blocked = incompatible work waited while a stream sat idle, slo = sealed early so the head's SLO deadline survives");
     table.note("shed columns count rejected submissions: shed_cap = lane queue at capacity, shed_ddl = deadline unwinnable at admission; svc_ms = mean per-job service time (the admission estimate)");
+    if metrics.is_some() {
+        table.note("p50_ms/p99_ms: enqueue→device-done latency quantiles from the telemetry histograms (bucket upper bounds, <=25% over)");
+    }
     if a.iter().any(|x| x == "--csv") {
         print!("{}", table.to_csv());
     } else {
         print!("{}", table.render());
     }
     0
+}
+
+/// Scrape a running server (or gateway, which merges its fleet) over
+/// the metrics opcode and render Prometheus text exposition
+/// (`accelserve metrics`). `--watch SECS` re-scrapes in a loop;
+/// `--prom-out FILE` writes the exposition to a file instead of
+/// stdout (node_exporter textfile-collector style).
+fn cmd_metrics(a: &[String]) -> i32 {
+    let addr = flag_or(a, "--addr", "127.0.0.1:7007");
+    let sock: std::net::SocketAddr = match addr.parse() {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("bad addr {addr}: {e}");
+            return 2;
+        }
+    };
+    let timeout = flag(a, "--timeout-ms")
+        .and_then(|v| v.parse::<u64>().ok())
+        .map(std::time::Duration::from_millis);
+    let watch: Option<u64> = flag(a, "--watch").and_then(|v| v.parse().ok());
+    let prom_out = flag(a, "--prom-out");
+    loop {
+        let mut t = match accelserve::transport::tcp::TcpTransport::connect_timed(sock, timeout) {
+            Ok(t) => t,
+            Err(e) => {
+                eprintln!("connect {addr}: {e:#}");
+                return 1;
+            }
+        };
+        let report = match fetch_metrics(&mut t) {
+            Ok(r) => r,
+            Err(e) => {
+                eprintln!("metrics: {e:#}");
+                return 1;
+            }
+        };
+        let text = accelserve::metrics::expose::render(&report.snap);
+        match prom_out {
+            Some(path) => {
+                if let Err(e) = std::fs::write(path, &text) {
+                    eprintln!("write {path}: {e}");
+                    return 1;
+                }
+                println!(
+                    "wrote {} series ({} samples ringed) to {path}",
+                    report.snap.counters.len()
+                        + report.snap.gauges.len()
+                        + report.snap.histos.len(),
+                    report.ring.len()
+                );
+            }
+            None => print!("{text}"),
+        }
+        match watch {
+            Some(secs) => std::thread::sleep(std::time::Duration::from_secs(secs)),
+            None => return 0,
+        }
+    }
 }
 
 fn cmd_serve(a: &[String]) -> i32 {
@@ -989,6 +1076,9 @@ fn cmd_serve(a: &[String]) -> i32 {
     let streams: usize = flag_or(a, "--streams", "4").parse().unwrap_or(4);
     let batch: usize = flag_or(a, "--batch", "1").parse().unwrap_or(1).max(1);
     let flush_us: u64 = flag_or(a, "--flush-us", "0").parse().unwrap_or(0);
+    let sample_ms: u64 = flag(a, "--sample-ms")
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(accelserve::metrics::telemetry::DEFAULT_SAMPLE_MS);
     let dir = flag_or(a, "--artifacts", "artifacts");
     // Self-provision: serving should work out of the box, with no
     // Python AOT step required.
@@ -1015,7 +1105,7 @@ fn cmd_serve(a: &[String]) -> i32 {
         per_model: per_model.clone(),
         ..SchedCfg::uniform(policy)
     };
-    let exec = match Executor::start_with(dir, streams, sched, &[]) {
+    let exec = match Executor::start_full(dir, streams, sched, &[], sample_ms) {
         Ok(e) => Arc::new(e),
         Err(e) => {
             eprintln!("executor: {e:#}");

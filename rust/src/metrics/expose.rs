@@ -1,0 +1,184 @@
+//! Prometheus text exposition for telemetry [`Snapshot`]s.
+//!
+//! Series names in the registry already embed their labels
+//! (`accel_seal_total{reason="full"}`), so rendering splits each name
+//! into `(family, labels)` at the first `{` and emits the standard
+//! `# HELP` / `# TYPE` header once per family. Histograms expand into
+//! the conventional `_bucket{le=…}` / `_sum` / `_count` series; only
+//! buckets that change the cumulative count are listed (plus the
+//! mandatory `le="+Inf"`), which keeps the output compact while
+//! remaining a valid cumulative histogram. All values are integers and
+//! inputs arrive sorted by name, so the rendering is byte-deterministic.
+
+use crate::metrics::telemetry::{HistoSnap, Snapshot, BUCKET_BOUNDS, N_BUCKETS};
+
+/// Split a registry series name into its family and label body:
+/// `a_total{x="y"}` → `("a_total", "x=\"y\"")`; unlabeled names get an
+/// empty label body.
+pub fn split_labels(name: &str) -> (&str, &str) {
+    match name.find('{') {
+        Some(i) => (&name[..i], name[i + 1..].trim_end_matches('}')),
+        None => (name, ""),
+    }
+}
+
+/// Re-attach a label body, optionally appending one extra label.
+fn series(family: &str, labels: &str, extra: Option<(&str, &str)>) -> String {
+    match (labels.is_empty(), extra) {
+        (true, None) => family.to_string(),
+        (true, Some((k, v))) => format!("{family}{{{k}=\"{v}\"}}"),
+        (false, None) => format!("{family}{{{labels}}}"),
+        (false, Some((k, v))) => format!("{family}{{{labels},{k}=\"{v}\"}}"),
+    }
+}
+
+fn help_for(family: &str) -> &'static str {
+    match family {
+        "accel_jobs_total" => "Jobs executed by the local executor.",
+        "accel_batches_total" => "Engine calls (sealed batches) executed.",
+        "accel_interleaves_total" => "Cross-model interleaves observed by the scheduler.",
+        "accel_seal_total" => "Batches sealed, by seal reason.",
+        "accel_shed_total" => "Requests shed at admission, by reason.",
+        "accel_credit_grants_total" => "Credit envelopes granted to clients.",
+        "accel_credit_tokens_total" => "Credit tokens granted to clients.",
+        "accel_queue_depth" => "Jobs currently queued across all lanes.",
+        "accel_batch_size" => "Executed chunk size in jobs.",
+        "accel_svc_ns" => "Engine service time per call, ns.",
+        "accel_stage_ns" => "Executor pipeline stage latency, ns, by stage.",
+        "accel_exec_ns" => "Enqueue-to-device-done latency, ns, by model.",
+        _ => "accelserve telemetry series.",
+    }
+}
+
+fn push_header(out: &mut String, done: &mut Vec<String>, family: &str, kind: &str) {
+    if done.iter().any(|f| f == family) {
+        return;
+    }
+    out.push_str(&format!("# HELP {family} {}\n", help_for(family)));
+    out.push_str(&format!("# TYPE {family} {kind}\n"));
+    done.push(family.to_string());
+}
+
+fn push_histo(out: &mut String, name: &str, h: &HistoSnap) {
+    let (family, labels) = split_labels(name);
+    let bucket_family = format!("{family}_bucket");
+    let mut cum = 0u64;
+    for i in 0..N_BUCKETS {
+        let c = h.buckets.get(i).copied().unwrap_or(0);
+        if c == 0 {
+            continue;
+        }
+        cum += c;
+        if BUCKET_BOUNDS[i] == u64::MAX {
+            // Counts landing in the catch-all are covered by +Inf below.
+            continue;
+        }
+        let le = BUCKET_BOUNDS[i].to_string();
+        out.push_str(&format!(
+            "{} {}\n",
+            series(&bucket_family, labels, Some(("le", &le))),
+            cum
+        ));
+    }
+    out.push_str(&format!(
+        "{} {}\n",
+        series(&bucket_family, labels, Some(("le", "+Inf"))),
+        h.count
+    ));
+    out.push_str(&format!("{} {}\n", series(&format!("{family}_sum"), labels, None), h.sum));
+    out.push_str(&format!(
+        "{} {}\n",
+        series(&format!("{family}_count"), labels, None),
+        h.count
+    ));
+}
+
+/// Render a snapshot in Prometheus text exposition format.
+pub fn render(snap: &Snapshot) -> String {
+    let mut out = String::new();
+    let mut done: Vec<String> = Vec::new();
+    for (name, v) in &snap.counters {
+        let (family, labels) = split_labels(name);
+        push_header(&mut out, &mut done, family, "counter");
+        out.push_str(&format!("{} {}\n", series(family, labels, None), v));
+    }
+    for (name, v) in &snap.gauges {
+        let (family, labels) = split_labels(name);
+        push_header(&mut out, &mut done, family, "gauge");
+        out.push_str(&format!("{} {}\n", series(family, labels, None), v));
+    }
+    for (name, h) in &snap.histos {
+        let (family, _) = split_labels(name);
+        push_header(&mut out, &mut done, family, "histogram");
+        push_histo(&mut out, name, h);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::telemetry::{labeled, Registry};
+
+    #[test]
+    fn split_labels_round_trips() {
+        assert_eq!(split_labels("a_total"), ("a_total", ""));
+        assert_eq!(
+            split_labels(&labeled("a_total", "k", "v")),
+            ("a_total", "k=\"v\"")
+        );
+    }
+
+    #[test]
+    fn render_emits_headers_once_per_family_and_valid_lines() {
+        let reg = Registry::new();
+        reg.counter(&labeled("accel_seal_total", "reason", "full")).add(3);
+        reg.counter(&labeled("accel_seal_total", "reason", "flush")).add(1);
+        reg.gauge("accel_queue_depth").set(7);
+        let h = reg.histo("accel_svc_ns");
+        h.observe(1);
+        h.observe(100);
+        h.observe(100);
+        let text = render(&reg.snapshot());
+
+        assert_eq!(text.matches("# TYPE accel_seal_total counter").count(), 1);
+        assert!(text.contains("accel_seal_total{reason=\"flush\"} 1\n"));
+        assert!(text.contains("accel_seal_total{reason=\"full\"} 3\n"));
+        assert!(text.contains("# TYPE accel_queue_depth gauge"));
+        assert!(text.contains("accel_queue_depth 7\n"));
+        assert!(text.contains("# TYPE accel_svc_ns histogram"));
+        assert!(text.contains("accel_svc_ns_bucket{le=\"1\"} 1\n"));
+        assert!(text.contains("accel_svc_ns_bucket{le=\"+Inf\"} 3\n"));
+        assert!(text.contains("accel_svc_ns_sum 201\n"));
+        assert!(text.contains("accel_svc_ns_count 3\n"));
+
+        // Cumulative bucket counts must be non-decreasing.
+        let mut prev = 0u64;
+        for line in text.lines().filter(|l| l.starts_with("accel_svc_ns_bucket")) {
+            let v: u64 = line.rsplit(' ').next().unwrap().parse().unwrap();
+            assert!(v >= prev, "cumulative must not decrease: {line}");
+            prev = v;
+        }
+
+        // Every line is a header or `name[{labels}] value` — the same
+        // shape the CI checker pins.
+        for line in text.lines() {
+            if line.starts_with("# HELP ") || line.starts_with("# TYPE ") {
+                continue;
+            }
+            let (series, value) = line.rsplit_once(' ').expect("series line");
+            assert!(value.parse::<u64>().is_ok(), "integer value: {line}");
+            assert!(
+                series
+                    .chars()
+                    .next()
+                    .map(|c| c.is_ascii_alphabetic() || c == '_')
+                    .unwrap_or(false),
+                "series name: {line}"
+            );
+        }
+
+        // Deterministic: rendering the same snapshot twice is identical.
+        assert_eq!(text, render(&reg.snapshot()));
+    }
+}

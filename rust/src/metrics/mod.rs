@@ -12,6 +12,12 @@
 //! | Memory    | memory-usage       | `cpu::MemSample`              |
 
 pub mod cpu;
+pub mod expose;
 pub mod stats;
+pub mod telemetry;
 
 pub use stats::{ReqRecord, Series, StageAgg};
+pub use telemetry::{
+    Counter, Gauge, Histo, HistoHandle, HistoSnap, MetricsReport, Registry, Sample, SampleRing,
+    Sampler, Snapshot,
+};

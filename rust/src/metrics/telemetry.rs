@@ -1,0 +1,801 @@
+//! Always-on telemetry plane: a lock-light registry of named counters,
+//! gauges, and log-bucketed mergeable histograms, plus a background
+//! sampler that turns the registry into a bounded ring of timestamped
+//! deltas.
+//!
+//! Design constraints, in order:
+//!
+//! - **O(atomic add) per event.** Hot-path call sites resolve their
+//!   [`Counter`]/[`Gauge`]/[`HistoHandle`] once at startup; recording
+//!   an event is one or three `fetch_add`s on `Relaxed` atomics. The
+//!   registry's interior mutex guards only the name→handle map and is
+//!   taken on registration and snapshot, never per event.
+//! - **Mergeable across a fleet.** Histograms use one fixed, global
+//!   bucket layout ([`BUCKET_BOUNDS`]: ~1.25× growth per bucket), so
+//!   merging snapshots from many backends is a bucket-wise add and a
+//!   quantile read off the merged histogram has the same bounded
+//!   relative error (one bucket width, ≤ 25%) as a local read.
+//! - **No wall clock.** Sample timestamps are milliseconds since the
+//!   sampler started (monotonic), which is all a counter track needs.
+//!
+//! Label convention: series names embed Prometheus-style labels
+//! directly, e.g. `accel_seal_total{reason="full"}` — see [`labeled`].
+//! The exposition layer ([`crate::metrics::expose`]) splits the family
+//! name back out; nothing else needs a structured label model.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread;
+use std::time::{Duration, Instant};
+
+/// Number of histogram buckets, shared by every histogram in the
+/// process and across the fleet (merge is index-wise).
+pub const N_BUCKETS: usize = 128;
+
+/// Upper bounds (inclusive) of the shared log-bucket layout. Bounds
+/// grow by `max(prev + prev/4, prev + 1)` from 1, so consecutive
+/// bounds differ by at most 25% once past the exact small-integer
+/// range, and the last bucket is a `u64::MAX` catch-all. In
+/// nanoseconds the layout spans 1 ns to ~45 min, which covers every
+/// duration this crate measures.
+pub const BUCKET_BOUNDS: [u64; N_BUCKETS] = bucket_bounds();
+
+const fn bucket_bounds() -> [u64; N_BUCKETS] {
+    let mut b = [0u64; N_BUCKETS];
+    b[0] = 1;
+    let mut i = 1;
+    while i < N_BUCKETS - 1 {
+        let prev = b[i - 1];
+        let grown = prev + prev / 4;
+        b[i] = if grown > prev { grown } else { prev + 1 };
+        i += 1;
+    }
+    b[N_BUCKETS - 1] = u64::MAX;
+    b
+}
+
+/// Index of the bucket whose range contains `v`.
+pub fn bucket_idx(v: u64) -> usize {
+    BUCKET_BOUNDS.partition_point(|&b| b < v).min(N_BUCKETS - 1)
+}
+
+/// Finite display value for a bucket's upper bound (the catch-all
+/// bucket reports the largest finite bound).
+fn finite_bound(i: usize) -> u64 {
+    if BUCKET_BOUNDS[i] == u64::MAX {
+        BUCKET_BOUNDS[N_BUCKETS - 2]
+    } else {
+        BUCKET_BOUNDS[i]
+    }
+}
+
+/// Build a labeled series name, e.g.
+/// `labeled("accel_seal_total", "reason", "full")` →
+/// `accel_seal_total{reason="full"}`.
+pub fn labeled(family: &str, key: &str, val: &str) -> String {
+    format!("{family}{{{key}=\"{val}\"}}")
+}
+
+/// A live histogram: fixed log buckets of `Relaxed` atomics.
+pub struct Histo {
+    buckets: [AtomicU64; N_BUCKETS],
+    count: AtomicU64,
+    sum: AtomicU64,
+}
+
+impl Histo {
+    /// An empty histogram. Standalone use (sweep-side quantiles) as
+    /// well as [`Registry::histo`] go through here.
+    pub fn new() -> Histo {
+        Histo {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one observation. Three relaxed atomic adds.
+    pub fn observe(&self, v: u64) {
+        self.buckets[bucket_idx(v)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+    }
+
+    /// Copy the current state out (best-effort consistent: concurrent
+    /// observes may be partially visible, which only shifts the
+    /// snapshot boundary by a single event).
+    pub fn snap(&self) -> HistoSnap {
+        HistoSnap {
+            count: self.count.load(Ordering::Relaxed),
+            sum: self.sum.load(Ordering::Relaxed),
+            buckets: self
+                .buckets
+                .iter()
+                .map(|b| b.load(Ordering::Relaxed))
+                .collect(),
+        }
+    }
+}
+
+impl Default for Histo {
+    fn default() -> Histo {
+        Histo::new()
+    }
+}
+
+/// A point-in-time copy of a [`Histo`]; the unit that merges and
+/// travels on the wire.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct HistoSnap {
+    /// Total observations.
+    pub count: u64,
+    /// Sum of observed values.
+    pub sum: u64,
+    /// Per-bucket counts; always [`N_BUCKETS`] long.
+    pub buckets: Vec<u64>,
+}
+
+impl Default for HistoSnap {
+    fn default() -> HistoSnap {
+        HistoSnap {
+            count: 0,
+            sum: 0,
+            buckets: vec![0; N_BUCKETS],
+        }
+    }
+}
+
+impl HistoSnap {
+    /// Bucket-wise add. Because every histogram shares
+    /// [`BUCKET_BOUNDS`], this is exact: merging fleet snapshots then
+    /// reading a quantile equals reading the quantile of the union.
+    pub fn merge(&mut self, other: &HistoSnap) {
+        self.buckets.resize(N_BUCKETS, 0);
+        for (i, &c) in other.buckets.iter().enumerate().take(N_BUCKETS) {
+            self.buckets[i] += c;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+    }
+
+    /// Nearest-rank quantile (same rank convention as
+    /// `Series::quantile`), reported as the upper bound of the bucket
+    /// holding the ranked observation — an overestimate by at most one
+    /// bucket width (≤ 25% relative).
+    pub fn quantile(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let rank = ((self.count - 1) as f64 * q.clamp(0.0, 1.0)).round() as u64;
+        let mut cum = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            cum += c;
+            if cum > rank {
+                return finite_bound(i);
+            }
+        }
+        finite_bound(N_BUCKETS - 1)
+    }
+
+    /// Mean of observed values (0.0 when empty).
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+
+    /// True when nothing has been observed.
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+}
+
+/// Handle to a registered counter. Cheap to clone; all clones share
+/// one atomic cell.
+#[derive(Clone)]
+pub struct Counter(Arc<AtomicU64>);
+
+impl Counter {
+    /// Add 1.
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Add `n`.
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Current value.
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Handle to a registered gauge (an instantaneous level, e.g. queue
+/// depth). Backed by a `u64`; `sub` saturates at zero so a transient
+/// imbalance cannot wrap the exposition output.
+#[derive(Clone)]
+pub struct Gauge(Arc<AtomicU64>);
+
+impl Gauge {
+    /// Set the level.
+    pub fn set(&self, v: u64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    /// Raise the level by `n`.
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Lower the level by `n`, saturating at zero.
+    pub fn sub(&self, n: u64) {
+        let _ = self
+            .0
+            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |v| {
+                Some(v.saturating_sub(n))
+            });
+    }
+
+    /// Current level.
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Shared handle to a registered histogram.
+pub type HistoHandle = Arc<Histo>;
+
+/// The process-wide metric registry. Series are created on first use
+/// and live forever; reads and writes after registration never touch
+/// the registry lock.
+#[derive(Default)]
+pub struct Registry {
+    counters: Mutex<BTreeMap<String, Arc<AtomicU64>>>,
+    gauges: Mutex<BTreeMap<String, Arc<AtomicU64>>>,
+    histos: Mutex<BTreeMap<String, Arc<Histo>>>,
+}
+
+impl Registry {
+    /// Fresh, empty registry.
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    /// Get or create the counter named `name`.
+    pub fn counter(&self, name: &str) -> Counter {
+        let mut map = self.counters.lock().unwrap();
+        Counter(Arc::clone(
+            map.entry(name.to_string()).or_default(),
+        ))
+    }
+
+    /// Get or create the gauge named `name`.
+    pub fn gauge(&self, name: &str) -> Gauge {
+        let mut map = self.gauges.lock().unwrap();
+        Gauge(Arc::clone(map.entry(name.to_string()).or_default()))
+    }
+
+    /// Get or create the histogram named `name`.
+    pub fn histo(&self, name: &str) -> HistoHandle {
+        let mut map = self.histos.lock().unwrap();
+        Arc::clone(
+            map.entry(name.to_string())
+                .or_insert_with(|| Arc::new(Histo::new())),
+        )
+    }
+
+    /// Copy every series out, sorted by name.
+    pub fn snapshot(&self) -> Snapshot {
+        let counters = self
+            .counters
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, v)| (k.clone(), v.load(Ordering::Relaxed)))
+            .collect();
+        let gauges = self
+            .gauges
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, v)| (k.clone(), v.load(Ordering::Relaxed)))
+            .collect();
+        let histos = self
+            .histos
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, v)| (k.clone(), v.snap()))
+            .collect();
+        Snapshot {
+            counters,
+            gauges,
+            histos,
+        }
+    }
+}
+
+/// A point-in-time copy of a [`Registry`]: every series, sorted by
+/// name. The unit the wire carries and the gateway merges.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct Snapshot {
+    /// `(name, value)` counters, sorted by name.
+    pub counters: Vec<(String, u64)>,
+    /// `(name, level)` gauges, sorted by name.
+    pub gauges: Vec<(String, u64)>,
+    /// `(name, state)` histograms, sorted by name.
+    pub histos: Vec<(String, HistoSnap)>,
+}
+
+fn merge_kv(dst: &mut Vec<(String, u64)>, src: &[(String, u64)]) {
+    let mut out: Vec<(String, u64)> = Vec::with_capacity(dst.len() + src.len());
+    let (mut i, mut j) = (0, 0);
+    while i < dst.len() && j < src.len() {
+        match dst[i].0.cmp(&src[j].0) {
+            std::cmp::Ordering::Less => {
+                out.push(dst[i].clone());
+                i += 1;
+            }
+            std::cmp::Ordering::Greater => {
+                out.push(src[j].clone());
+                j += 1;
+            }
+            std::cmp::Ordering::Equal => {
+                out.push((dst[i].0.clone(), dst[i].1 + src[j].1));
+                i += 1;
+                j += 1;
+            }
+        }
+    }
+    out.extend_from_slice(&dst[i..]);
+    out.extend_from_slice(&src[j..]);
+    *dst = out;
+}
+
+impl Snapshot {
+    /// Merge another snapshot in: counters and gauges add by name
+    /// (gauges add because fleet-wide depth is the sum of per-backend
+    /// depths), histograms add bucket-wise. Associative and
+    /// commutative, so fleet merge order does not matter.
+    pub fn merge(&mut self, other: &Snapshot) {
+        merge_kv(&mut self.counters, &other.counters);
+        merge_kv(&mut self.gauges, &other.gauges);
+        let mut out: Vec<(String, HistoSnap)> =
+            Vec::with_capacity(self.histos.len() + other.histos.len());
+        let (mut i, mut j) = (0, 0);
+        while i < self.histos.len() && j < other.histos.len() {
+            match self.histos[i].0.cmp(&other.histos[j].0) {
+                std::cmp::Ordering::Less => {
+                    out.push(self.histos[i].clone());
+                    i += 1;
+                }
+                std::cmp::Ordering::Greater => {
+                    out.push(other.histos[j].clone());
+                    j += 1;
+                }
+                std::cmp::Ordering::Equal => {
+                    let mut h = self.histos[i].1.clone();
+                    h.merge(&other.histos[j].1);
+                    out.push((self.histos[i].0.clone(), h));
+                    i += 1;
+                    j += 1;
+                }
+            }
+        }
+        out.extend_from_slice(&self.histos[i..]);
+        out.extend_from_slice(&other.histos[j..]);
+        self.histos = out;
+    }
+
+    /// Value of a counter, if present.
+    pub fn counter(&self, name: &str) -> Option<u64> {
+        self.counters
+            .iter()
+            .find(|(k, _)| k == name)
+            .map(|(_, v)| *v)
+    }
+
+    /// Level of a gauge, if present.
+    pub fn gauge(&self, name: &str) -> Option<u64> {
+        self.gauges
+            .iter()
+            .find(|(k, _)| k == name)
+            .map(|(_, v)| *v)
+    }
+
+    /// State of a histogram, if present.
+    pub fn histo(&self, name: &str) -> Option<&HistoSnap> {
+        self.histos
+            .iter()
+            .find(|(k, _)| k == name)
+            .map(|(_, h)| h)
+    }
+
+    /// True when no series is present.
+    pub fn is_empty(&self) -> bool {
+        self.counters.is_empty() && self.gauges.is_empty() && self.histos.is_empty()
+    }
+}
+
+/// One sampler tick: counter **deltas** since the previous tick and
+/// gauge **levels** at the tick, stamped with milliseconds since the
+/// sampler started. The shape a timeline counter track wants.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct Sample {
+    /// Milliseconds since the sampler started.
+    pub at_ms: u64,
+    /// `(name, delta)` counter increments over the tick, sorted by name.
+    pub counters: Vec<(String, u64)>,
+    /// `(name, level)` gauge levels at the tick, sorted by name.
+    pub gauges: Vec<(String, u64)>,
+}
+
+/// Bounded ring of [`Sample`]s with the previous-tick counter state
+/// needed to compute deltas. Synchronous — the [`Sampler`] thread owns
+/// one behind a mutex, and tests drive it directly.
+pub struct SampleRing {
+    cap: usize,
+    prev: BTreeMap<String, u64>,
+    ring: VecDeque<Sample>,
+}
+
+impl SampleRing {
+    /// Ring holding at most `cap` samples (oldest evicted first).
+    pub fn new(cap: usize) -> SampleRing {
+        SampleRing {
+            cap: cap.max(1),
+            prev: BTreeMap::new(),
+            ring: VecDeque::new(),
+        }
+    }
+
+    /// Record one tick from a registry snapshot.
+    pub fn push(&mut self, at_ms: u64, snap: &Snapshot) {
+        let mut counters = Vec::with_capacity(snap.counters.len());
+        for (name, v) in &snap.counters {
+            let before = self.prev.get(name).copied().unwrap_or(0);
+            counters.push((name.clone(), v.saturating_sub(before)));
+            self.prev.insert(name.clone(), *v);
+        }
+        let sample = Sample {
+            at_ms,
+            counters,
+            gauges: snap.gauges.clone(),
+        };
+        if self.ring.len() == self.cap {
+            self.ring.pop_front();
+        }
+        self.ring.push_back(sample);
+    }
+
+    /// Samples oldest-first.
+    pub fn samples(&self) -> Vec<Sample> {
+        self.ring.iter().cloned().collect()
+    }
+
+    /// Number of samples held.
+    pub fn len(&self) -> usize {
+        self.ring.len()
+    }
+
+    /// True when no sample has been recorded.
+    pub fn is_empty(&self) -> bool {
+        self.ring.is_empty()
+    }
+}
+
+/// Default sampler period (ms) — `serve --sample-ms` overrides.
+pub const DEFAULT_SAMPLE_MS: u64 = 100;
+
+/// Default ring capacity: one minute of history at the default period.
+pub const DEFAULT_RING_CAP: usize = 600;
+
+struct SamplerInner {
+    reg: Arc<Registry>,
+    ring: Mutex<SampleRing>,
+    stop: AtomicBool,
+    started: Instant,
+}
+
+/// Background thread that snapshots a registry every `every_ms` into a
+/// bounded [`SampleRing`]. Stops (and joins) on [`Sampler::stop`] or
+/// drop.
+pub struct Sampler {
+    inner: Arc<SamplerInner>,
+    handle: Option<thread::JoinHandle<()>>,
+}
+
+impl Sampler {
+    /// Start sampling `reg` every `every_ms` ms, keeping `cap` samples.
+    pub fn start(reg: Arc<Registry>, every_ms: u64, cap: usize) -> Sampler {
+        let inner = Arc::new(SamplerInner {
+            reg,
+            ring: Mutex::new(SampleRing::new(cap)),
+            stop: AtomicBool::new(false),
+            started: Instant::now(),
+        });
+        let th = Arc::clone(&inner);
+        let every = Duration::from_millis(every_ms.max(5));
+        let handle = thread::Builder::new()
+            .name("telemetry-sampler".into())
+            .spawn(move || {
+                let slice = Duration::from_millis(5);
+                let mut next = th.started + every;
+                loop {
+                    while Instant::now() < next {
+                        if th.stop.load(Ordering::Relaxed) {
+                            return;
+                        }
+                        thread::sleep(slice.min(next - Instant::now()));
+                    }
+                    if th.stop.load(Ordering::Relaxed) {
+                        return;
+                    }
+                    let snap = th.reg.snapshot();
+                    let at_ms = th.started.elapsed().as_millis() as u64;
+                    th.ring.lock().unwrap().push(at_ms, &snap);
+                    next += every;
+                }
+            })
+            .expect("spawn telemetry sampler");
+        Sampler {
+            inner,
+            handle: Some(handle),
+        }
+    }
+
+    /// Copy the sample ring out, oldest-first.
+    pub fn ring(&self) -> Vec<Sample> {
+        self.inner.ring.lock().unwrap().samples()
+    }
+
+    /// Milliseconds since the sampler started (the `at_ms` clock).
+    pub fn elapsed_ms(&self) -> u64 {
+        self.inner.started.elapsed().as_millis() as u64
+    }
+
+    /// Stop the thread and join it. Idempotent.
+    pub fn stop(&mut self) {
+        self.inner.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Sampler {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+/// What `OP_METRICS` serves: the current snapshot plus the sample
+/// ring. A gateway-merged report carries an empty ring (per-backend
+/// rings are on different clocks and do not merge meaningfully).
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct MetricsReport {
+    /// Current registry snapshot.
+    pub snap: Snapshot,
+    /// Sampler ring, oldest-first.
+    pub ring: Vec<Sample>,
+}
+
+impl MetricsReport {
+    /// Merge per-backend reports into one fleet report: snapshots
+    /// merge series-wise ([`Snapshot::merge`]), the ring is dropped.
+    pub fn merged<'a, I: IntoIterator<Item = &'a MetricsReport>>(reports: I) -> MetricsReport {
+        let mut snap = Snapshot::default();
+        for r in reports {
+            snap.merge(&r.snap);
+        }
+        MetricsReport { snap, ring: Vec::new() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::Series;
+
+    #[test]
+    fn bucket_bounds_are_strictly_increasing_and_bounded_growth() {
+        for i in 1..N_BUCKETS - 1 {
+            assert!(
+                BUCKET_BOUNDS[i] > BUCKET_BOUNDS[i - 1],
+                "bounds must increase at {i}"
+            );
+            // Growth never exceeds 25% + the integer-rounding unit.
+            assert!(
+                BUCKET_BOUNDS[i] <= BUCKET_BOUNDS[i - 1] + BUCKET_BOUNDS[i - 1] / 4 + 1,
+                "growth too fast at {i}"
+            );
+        }
+        assert_eq!(BUCKET_BOUNDS[N_BUCKETS - 1], u64::MAX);
+        // The finite range must cover multi-minute latencies in ns.
+        assert!(BUCKET_BOUNDS[N_BUCKETS - 2] > 120_000_000_000);
+    }
+
+    #[test]
+    fn bucket_idx_places_values_on_bound_edges() {
+        assert_eq!(bucket_idx(0), 0);
+        assert_eq!(bucket_idx(1), 0);
+        assert_eq!(bucket_idx(2), 1);
+        for i in 0..N_BUCKETS - 1 {
+            assert_eq!(bucket_idx(BUCKET_BOUNDS[i]), i, "bound {i} maps to itself");
+            assert_eq!(
+                bucket_idx(BUCKET_BOUNDS[i] + 1),
+                i + 1,
+                "bound {i}+1 maps up"
+            );
+        }
+        assert_eq!(bucket_idx(u64::MAX), N_BUCKETS - 1);
+    }
+
+    #[test]
+    fn histogram_quantile_error_is_within_one_bucket_of_exact() {
+        // Satellite: histogram-vs-exact quantile relative error must
+        // stay within one bucket width (25%) on a known sample set.
+        let mut series = Series::new();
+        let h = Histo::new();
+        let mut v: u64 = 3;
+        for i in 0..500 {
+            v = (v * 17 + i) % 2_000_000 + 1;
+            series.push(v as f64);
+            h.observe(v);
+        }
+        let snap = h.snap();
+        for q in [0.5, 0.9, 0.99] {
+            let exact = series.quantile(q);
+            let est = snap.quantile(q) as f64;
+            assert!(est >= exact, "q{q}: histogram must overestimate");
+            assert!(
+                est <= exact * 1.25 + 1.0,
+                "q{q}: est {est} vs exact {exact} exceeds one bucket width"
+            );
+        }
+        assert!((snap.mean() - series.mean()).abs() < 1.0);
+    }
+
+    fn snap_of(pairs: &[(&str, &[u64])]) -> Snapshot {
+        let reg = Registry::new();
+        for (name, vals) in pairs {
+            let h = reg.histo(name);
+            for &v in *vals {
+                h.observe(v);
+            }
+            reg.counter(&format!("{name}_events")).add(vals.len() as u64);
+            reg.gauge(&format!("{name}_level")).set(vals.len() as u64);
+        }
+        reg.snapshot()
+    }
+
+    #[test]
+    fn snapshot_merge_is_associative_and_commutative() {
+        let a = snap_of(&[("h_a", &[1, 50, 900]), ("h_b", &[7])]);
+        let b = snap_of(&[("h_b", &[7, 7000]), ("h_c", &[123_456])]);
+        let c = snap_of(&[("h_a", &[2]), ("h_c", &[9])]);
+
+        // (a+b)+c == a+(b+c)
+        let mut left = a.clone();
+        left.merge(&b);
+        left.merge(&c);
+        let mut bc = b.clone();
+        bc.merge(&c);
+        let mut right = a.clone();
+        right.merge(&bc);
+        assert_eq!(left, right, "merge must be associative");
+
+        // a+b == b+a
+        let mut ab = a.clone();
+        ab.merge(&b);
+        let mut ba = b.clone();
+        ba.merge(&a);
+        assert_eq!(ab, ba, "merge must be commutative");
+
+        // Merged totals are the union's totals.
+        assert_eq!(left.histo("h_a").unwrap().count, 4);
+        assert_eq!(left.histo("h_b").unwrap().count, 3);
+        assert_eq!(left.counter("h_b_events"), Some(3));
+        assert_eq!(left.gauge("h_c_level"), Some(2));
+    }
+
+    #[test]
+    fn merged_fleet_quantile_equals_quantile_of_union() {
+        let h1 = Histo::new();
+        let h2 = Histo::new();
+        let all = Histo::new();
+        for i in 0..400u64 {
+            let v = i * 37 % 100_000 + 1;
+            if i % 2 == 0 { h1.observe(v) } else { h2.observe(v) }
+            all.observe(v);
+        }
+        let mut merged = h1.snap();
+        merged.merge(&h2.snap());
+        assert_eq!(merged, all.snap());
+        assert_eq!(merged.quantile(0.99), all.snap().quantile(0.99));
+    }
+
+    #[test]
+    fn registry_handles_share_state_and_snapshot_sorts() {
+        let reg = Registry::new();
+        let c1 = reg.counter("z_total");
+        let c2 = reg.counter("z_total");
+        c1.inc();
+        c2.add(2);
+        assert_eq!(c1.get(), 3);
+        reg.counter("a_total").inc();
+        let g = reg.gauge("depth");
+        g.add(5);
+        g.sub(2);
+        assert_eq!(g.get(), 3);
+        g.sub(100);
+        assert_eq!(g.get(), 0, "gauge sub saturates");
+        let snap = reg.snapshot();
+        let names: Vec<&str> = snap.counters.iter().map(|(k, _)| k.as_str()).collect();
+        assert_eq!(names, vec!["a_total", "z_total"]);
+    }
+
+    #[test]
+    fn sample_ring_deltas_and_wraparound() {
+        let reg = Registry::new();
+        let c = reg.counter("jobs_total");
+        let g = reg.gauge("depth");
+        let mut ring = SampleRing::new(3);
+        for tick in 1..=5u64 {
+            c.add(10);
+            g.set(tick);
+            ring.push(tick * 100, &reg.snapshot());
+        }
+        let samples = ring.samples();
+        assert_eq!(samples.len(), 3, "ring must cap at 3");
+        // Oldest two ticks were evicted.
+        assert_eq!(samples[0].at_ms, 300);
+        assert_eq!(samples[2].at_ms, 500);
+        for s in &samples {
+            assert_eq!(s.counters, vec![("jobs_total".to_string(), 10)]);
+        }
+        assert_eq!(samples[2].gauges, vec![("depth".to_string(), 5)]);
+    }
+
+    #[test]
+    fn sampler_thread_ticks_and_stops() {
+        let reg = Arc::new(Registry::new());
+        reg.counter("ticks_total").add(7);
+        let mut s = Sampler::start(Arc::clone(&reg), 5, 8);
+        let deadline = Instant::now() + Duration::from_secs(2);
+        while s.ring().is_empty() && Instant::now() < deadline {
+            thread::sleep(Duration::from_millis(2));
+        }
+        s.stop();
+        let ring = s.ring();
+        assert!(!ring.is_empty(), "sampler must tick within 2s");
+        assert_eq!(ring[0].counters, vec![("ticks_total".to_string(), 7)]);
+        assert!(ring.len() <= 8);
+        s.stop(); // idempotent
+    }
+
+    #[test]
+    fn merged_report_sums_snaps_and_drops_rings() {
+        let mut r1 = MetricsReport::default();
+        r1.snap = snap_of(&[("lat_ns", &[10, 20])]);
+        r1.ring = vec![Sample { at_ms: 1, ..Default::default() }];
+        let mut r2 = MetricsReport::default();
+        r2.snap = snap_of(&[("lat_ns", &[30])]);
+        let m = MetricsReport::merged([&r1, &r2]);
+        assert_eq!(m.snap.histo("lat_ns").unwrap().count, 3);
+        assert!(m.ring.is_empty(), "merged report carries no ring");
+    }
+
+    #[test]
+    fn labeled_formats_prometheus_style() {
+        assert_eq!(
+            labeled("accel_seal_total", "reason", "full"),
+            "accel_seal_total{reason=\"full\"}"
+        );
+    }
+}

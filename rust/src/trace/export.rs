@@ -34,7 +34,18 @@ pub enum ArgVal {
     Str(String),
 }
 
-/// One complete ("X") event on one track.
+/// Trace-event phase: complete tiles (`"X"`), counter-track samples
+/// (`"C"`), and flow arrows (`"s"` start / `"f"` finish) tying one
+/// request's tiles together across tracks.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Phase {
+    Complete,
+    Counter,
+    FlowStart,
+    FlowFinish,
+}
+
+/// One event on one track.
 #[derive(Debug, Clone)]
 struct EvRec {
     name: String,
@@ -42,6 +53,10 @@ struct EvRec {
     tid: usize,
     ts_ns: u64,
     dur_ns: u64,
+    ph: Phase,
+    /// Flow-binding id (`"ph":"s"`/`"f"` pairs share it); unused by
+    /// complete and counter events.
+    id: u64,
     args: Vec<(&'static str, ArgVal)>,
 }
 
@@ -85,7 +100,58 @@ impl ChromeTrace {
             tid: track,
             ts_ns,
             dur_ns,
+            ph: Phase::Complete,
+            id: 0,
             args: args.to_vec(),
+        });
+    }
+
+    /// Append one counter-track sample (`"ph":"C"`): at `ts_ns` the
+    /// series `name` has `value`. Consecutive samples on the same name
+    /// render as a stacked area chart in the trace viewer — the standard
+    /// presentation for sampler-ring deltas (queue depth, sheds/s).
+    pub fn counter(&mut self, track: usize, name: &str, ts_ns: u64, value: u64) {
+        self.events.push(EvRec {
+            name: name.to_string(),
+            cat: "counter",
+            tid: track,
+            ts_ns,
+            dur_ns: 0,
+            ph: Phase::Counter,
+            id: 0,
+            args: vec![("value", ArgVal::U64(value))],
+        });
+    }
+
+    /// Open a flow arrow `id` at `ts_ns` on `track` (`"ph":"s"`). The
+    /// viewer draws an arrow from here to the matching
+    /// [`ChromeTrace::flow_finish`] — used to link one pipeline
+    /// request's tiles across the gateway and backend tracks.
+    pub fn flow_start(&mut self, track: usize, name: &str, ts_ns: u64, id: u64) {
+        self.events.push(EvRec {
+            name: name.to_string(),
+            cat: "flow",
+            tid: track,
+            ts_ns,
+            dur_ns: 0,
+            ph: Phase::FlowStart,
+            id,
+            args: Vec::new(),
+        });
+    }
+
+    /// Close flow arrow `id` at `ts_ns` on `track` (`"ph":"f"`, binding
+    /// point `"e"` so the arrow lands on the enclosing tile).
+    pub fn flow_finish(&mut self, track: usize, name: &str, ts_ns: u64, id: u64) {
+        self.events.push(EvRec {
+            name: name.to_string(),
+            cat: "flow",
+            tid: track,
+            ts_ns,
+            dur_ns: 0,
+            ph: Phase::FlowFinish,
+            id,
+            args: Vec::new(),
         });
     }
 
@@ -160,14 +226,18 @@ impl ChromeTrace {
         self.events.is_empty()
     }
 
-    /// Sanity-check the document: within each track, events must not
-    /// overlap (`ts + dur <= next ts` in append order). The exporters
-    /// above append per-request tiles in request-start order per track,
-    /// so a violation means a caller interleaved concurrent requests on
-    /// one track.
+    /// Sanity-check the document: within each track, complete events
+    /// must not overlap (`ts + dur <= next ts` in append order). The
+    /// exporters above append per-request tiles in request-start order
+    /// per track, so a violation means a caller interleaved concurrent
+    /// requests on one track. Counter samples and flow endpoints are
+    /// instants layered over the tiles — exempt by design.
     pub fn validate(&self) -> Result<()> {
         let mut last_end = vec![0u64; self.tracks.len()];
         for e in &self.events {
+            if e.ph != Phase::Complete {
+                continue;
+            }
             if e.ts_ns < last_end[e.tid] {
                 bail!(
                     "track '{}': event '{}' starts at {}ns before previous end {}ns",
@@ -208,14 +278,39 @@ impl ChromeTrace {
                     ArgVal::Str(s) => args.push_str(&format!(r#""{k}":"{}""#, escape(s))),
                 }
             }
-            lines.push(format!(
-                r#"{{"name":"{}","cat":"{}","ph":"X","ts":{},"dur":{},"pid":1,"tid":{},"args":{{{args}}}}}"#,
-                escape(&e.name),
-                e.cat,
-                fmt_us(e.ts_ns),
-                fmt_us(e.dur_ns),
-                e.tid,
-            ));
+            lines.push(match e.ph {
+                Phase::Complete => format!(
+                    r#"{{"name":"{}","cat":"{}","ph":"X","ts":{},"dur":{},"pid":1,"tid":{},"args":{{{args}}}}}"#,
+                    escape(&e.name),
+                    e.cat,
+                    fmt_us(e.ts_ns),
+                    fmt_us(e.dur_ns),
+                    e.tid,
+                ),
+                Phase::Counter => format!(
+                    r#"{{"name":"{}","cat":"{}","ph":"C","ts":{},"pid":1,"tid":{},"args":{{{args}}}}}"#,
+                    escape(&e.name),
+                    e.cat,
+                    fmt_us(e.ts_ns),
+                    e.tid,
+                ),
+                Phase::FlowStart => format!(
+                    r#"{{"name":"{}","cat":"{}","ph":"s","ts":{},"pid":1,"tid":{},"id":{},"args":{{{args}}}}}"#,
+                    escape(&e.name),
+                    e.cat,
+                    fmt_us(e.ts_ns),
+                    e.tid,
+                    e.id,
+                ),
+                Phase::FlowFinish => format!(
+                    r#"{{"name":"{}","cat":"{}","ph":"f","bp":"e","ts":{},"pid":1,"tid":{},"id":{},"args":{{{args}}}}}"#,
+                    escape(&e.name),
+                    e.cat,
+                    fmt_us(e.ts_ns),
+                    e.tid,
+                    e.id,
+                ),
+            });
         }
         format!(
             "{{\"displayTimeUnit\":\"ns\",\"traceEvents\":[\n{}\n]}}\n",
@@ -332,6 +427,45 @@ mod tests {
         let last = t.events.last().unwrap();
         assert_eq!(last.ts_ns + last.dur_ns, 5_000);
         t.validate().unwrap();
+    }
+
+    #[test]
+    fn counter_events_pin_json_and_skip_validation() {
+        let mut t = ChromeTrace::new();
+        let track = t.track("counters/batch");
+        t.counter(track, "accel_queue_depth", 1_500, 4);
+        t.counter(track, "accel_queue_depth", 2_500, 2);
+        // Counters are instants: two at ascending ts validate even with
+        // a complete tile spanning them.
+        t.event(track, "infer", "stage", 0, 10_000, &[]);
+        t.validate().unwrap();
+        let json = t.to_json();
+        assert!(json.contains(
+            r#"{"name":"accel_queue_depth","cat":"counter","ph":"C","ts":1.500,"pid":1,"tid":0,"args":{"value":4}}"#
+        ));
+        assert!(json.contains(
+            r#"{"name":"accel_queue_depth","cat":"counter","ph":"C","ts":2.500,"pid":1,"tid":0,"args":{"value":2}}"#
+        ));
+        assert_eq!(json, t.to_json(), "deterministic");
+    }
+
+    #[test]
+    fn flow_pair_pins_json_and_links_tracks() {
+        let mut t = ChromeTrace::new();
+        let gw = t.track("gateway/pipe");
+        let be = t.track("backend/m0");
+        t.event(gw, "stage0", "stage", 0, 1_000, &[]);
+        t.flow_start(gw, "req0", 500, 7);
+        t.event(be, "infer", "stage", 600, 300, &[]);
+        t.flow_finish(be, "req0", 700, 7);
+        t.validate().unwrap();
+        let json = t.to_json();
+        assert!(json.contains(
+            r#"{"name":"req0","cat":"flow","ph":"s","ts":0.500,"pid":1,"tid":0,"id":7,"args":{}}"#
+        ));
+        assert!(json.contains(
+            r#"{"name":"req0","cat":"flow","ph":"f","bp":"e","ts":0.700,"pid":1,"tid":1,"id":7,"args":{}}"#
+        ));
     }
 
     #[test]

@@ -19,10 +19,11 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use accelserve::coordinator::{
-    fetch_stats, gateway_tcp_multi, run_tcp, BackendSpec, BatchCfg, ExecStats, Executor, HashRing,
-    LaneStats, LoadCfg, Placement, Router, RouterCfg, DEFAULT_VNODES, N_SEAL_REASONS,
-    N_SHED_REASONS,
+    fetch_metrics, fetch_stats, gateway_tcp_multi, run_tcp, BackendSpec, BatchCfg, ExecStats,
+    Executor, HashRing, LaneStats, LoadCfg, Placement, Router, RouterCfg, DEFAULT_VNODES,
+    N_SEAL_REASONS, N_SHED_REASONS,
 };
+use accelserve::metrics::telemetry::labeled;
 use accelserve::transport::tcp::TcpTransport;
 
 const ELEMS: usize = 32 * 32 * 3;
@@ -234,6 +235,101 @@ fn live_two_backend_gateway_job_share_matches_placement() {
         assert_eq!(lane_jobs(&merged, model), REQUESTS as u64, "{model} in merged stats");
     }
     drop(c);
+
+    gw.stop();
+    for srv in servers {
+        srv.stop();
+    }
+    for exec in execs {
+        assert!(
+            accelserve_drain(exec),
+            "a handler still holds an executor after teardown"
+        );
+    }
+}
+
+#[test]
+fn live_gateway_merges_fleet_metrics() {
+    // The telemetry half of the fleet contract: the gateway's metrics
+    // answer must equal the bucket-wise sum of what each coordinator
+    // reports on its own — merging snapshots then reading is the same
+    // as reading then adding.
+    let dir = accelserve::models::gen::ensure_test_artifacts();
+    let warm = ["tiny_mobilenet_b1", "tiny_resnet_b1", "tiny_segnet_b1"];
+    let execs: Vec<Arc<Executor>> = (0..2)
+        .map(|_| Arc::new(Executor::start(dir, 1, BatchCfg::none(), &warm).unwrap()))
+        .collect();
+    let servers: Vec<_> = execs
+        .iter()
+        .map(|e| accelserve::coordinator::serve_tcp("127.0.0.1:0", e.clone()).unwrap())
+        .collect();
+    let backend_addrs: Vec<_> = servers.iter().map(|s| s.addr).collect();
+    let gw = gateway_tcp_multi("127.0.0.1:0", &backend_addrs, RouterCfg::default()).unwrap();
+
+    const REQUESTS: usize = 4;
+    for (model, _) in PINNED_2 {
+        let cfg = LoadCfg {
+            model: model.to_string(),
+            raw: false,
+            spans: false,
+            n_clients: 1,
+            requests_per_client: REQUESTS,
+            priority_client: false,
+            payload_elems: ELEMS,
+            warmup: 0,
+            deadline_us: None,
+            credits: false,
+            timeout: Some(Duration::from_secs(10)),
+            pipeline: vec![],
+        };
+        let stats = run_tcp(gw.addr, &cfg).unwrap();
+        assert_eq!(stats.errors, 0, "{model}: client died behind the gateway");
+    }
+
+    // Let each backend's counters go quiescent (the worker banks the
+    // last chunk's service time a hair after the reply lands).
+    for exec in &execs {
+        let mut prev = exec.telemetry().snapshot();
+        loop {
+            std::thread::sleep(Duration::from_millis(10));
+            let next = exec.telemetry().snapshot();
+            if next == prev {
+                break;
+            }
+            prev = next;
+        }
+    }
+
+    // Per-backend reports fetched directly — no gateway in the path.
+    let mut reports = Vec::new();
+    for addr in &backend_addrs {
+        let mut c = TcpTransport::connect(*addr).unwrap();
+        reports.push(fetch_metrics(&mut c).unwrap());
+    }
+    let local_merge = accelserve::metrics::telemetry::MetricsReport::merged(reports.iter());
+
+    // The gateway's answer must be the bucket-wise sum of the two.
+    let mut c = TcpTransport::connect(gw.addr).unwrap();
+    let merged = fetch_metrics(&mut c).unwrap();
+    drop(c);
+    assert_eq!(
+        merged.snap, local_merge.snap,
+        "gateway-merged snapshot != sum of per-backend snapshots"
+    );
+    let total_jobs = PINNED_2.len() as u64 * REQUESTS as u64;
+    assert_eq!(merged.snap.counter("accel_jobs_total"), Some(total_jobs));
+    for (model, home) in PINNED_2 {
+        let name = labeled("accel_exec_ns", "model", model);
+        let fleet = merged.snap.histo(&name).expect("merged exec histogram");
+        assert_eq!(fleet.count, REQUESTS as u64, "{model}: fleet count");
+        // The model's observations all sit on its placed backend, and
+        // the fleet buckets are exactly that backend's buckets.
+        let own = reports[home].snap.histo(&name).expect("home histogram");
+        assert_eq!(own.buckets, fleet.buckets, "{model}: fleet != home buckets");
+        let other = &reports[1 - home].snap;
+        let strays = other.histo(&name).map(|h| h.count).unwrap_or(0);
+        assert_eq!(strays, 0, "{model}: observations on the wrong backend");
+    }
 
     gw.stop();
     for srv in servers {

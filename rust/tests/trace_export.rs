@@ -115,3 +115,31 @@ fn fixture_is_structurally_wellformed() {
     assert_eq!(last_end[0], 2_004_500);
     assert!(GOLDEN.contains("\"ts\":1057.000,\"dur\":13.000"));
 }
+
+#[test]
+fn counter_and_flow_phases_leave_complete_tiles_byte_identical() {
+    // Telemetry counter tracks and flow arrows ride in the same
+    // document as the span tiles; adding them must not perturb a
+    // single byte of the "ph":"X" serialization the fixture pins.
+    let mut tc = golden_trace();
+    let counters = tc.track("counters/tcp");
+    tc.counter(counters, "accel_queue_depth", 1_500_000, 3);
+    let ring = 0; // the golden track
+    tc.flow_start(ring, "req0", 1_000_000, 42);
+    tc.flow_finish(ring, "req0", 1_030_000, 42);
+    tc.validate().unwrap();
+    let json = tc.to_json();
+    assert_eq!(json.matches("\"ph\":\"C\"").count(), 1);
+    assert_eq!(json.matches("\"ph\":\"s\"").count(), 1);
+    assert_eq!(json.matches("\"ph\":\"f\"").count(), 1);
+    assert!(json.contains("\"bp\":\"e\""), "flow finish must bind enclosing");
+    // Every complete-event line survives unchanged from the fixture.
+    for line in json.lines().filter(|l| l.contains("\"ph\":\"X\"")) {
+        let pinned = line.trim_end_matches(',');
+        assert!(
+            GOLDEN.contains(pinned),
+            "X tile drifted from the golden fixture: {line}"
+        );
+    }
+    assert_eq!(json.matches("\"ph\":\"X\"").count(), 2 * N_STAGES);
+}

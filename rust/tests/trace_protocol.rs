@@ -665,3 +665,58 @@ fn stats_opcode_serves_snapshot_over_wire() {
     drop(cli);
     h.join().unwrap();
 }
+
+#[test]
+fn metrics_opcode_serves_telemetry_over_wire() {
+    let exec = start_exec(1, BatchCfg::none());
+    for _ in 0..4 {
+        exec.infer_sync("tiny_mobilenet", false, 0, TensorBuf::F32(vec![0.5; ELEMS]))
+            .unwrap();
+    }
+    // Same settle dance as the stats test: the worker banks the last
+    // chunk's service time a hair after the reply lands.
+    let expected = {
+        let mut prev = exec.telemetry().snapshot();
+        loop {
+            std::thread::sleep(Duration::from_millis(10));
+            let next = exec.telemetry().snapshot();
+            if next == prev {
+                break next;
+            }
+            prev = next;
+        }
+    };
+    let (mut cli, srv) = shm_pair(4);
+    let e2 = exec.clone();
+    let h = std::thread::spawn(move || handle_conn(srv, &e2));
+    let got = accelserve::coordinator::fetch_metrics(&mut cli).unwrap();
+    assert_eq!(
+        got.snap, expected,
+        "wire snapshot must equal the local registry"
+    );
+    assert_eq!(got.snap.counter("accel_jobs_total"), Some(4));
+    assert_eq!(got.snap.counter("accel_batches_total"), Some(4));
+    assert_eq!(got.snap.gauge("accel_queue_depth"), Some(0));
+    let exec_h = got
+        .snap
+        .histo(&accelserve::metrics::telemetry::labeled(
+            "accel_exec_ns",
+            "model",
+            "tiny_mobilenet",
+        ))
+        .expect("per-model exec histogram registered");
+    assert_eq!(exec_h.count, 4);
+    assert!(exec_h.quantile(0.5) > 0, "latency quantile must be nonzero");
+    let svc = got.snap.histo("accel_svc_ns").expect("svc histogram");
+    assert_eq!(svc.count, 4);
+    // The connection still serves inference after a metrics exchange.
+    cli.send(&infer_request(false, false).encode()).unwrap();
+    match protocol::Response::decode(&cli.recv().unwrap()).unwrap() {
+        protocol::Response::Ok { payload, .. } => {
+            assert_eq!(protocol::bytes_to_f32s(&payload).unwrap().len(), 1000);
+        }
+        other => panic!("unexpected response: {other:?}"),
+    }
+    drop(cli);
+    h.join().unwrap();
+}
